@@ -1,0 +1,22 @@
+//! Fig 2 reproduction: the DDP deadlock with raw variable-length videos,
+//! and BLoad completing the same epoch with equal per-rank schedules.
+//!
+//! ```bash
+//! cargo run --release --example deadlock_demo
+//! ```
+
+use bload::harness::deadlock;
+
+fn main() -> bload::Result<()> {
+    // 2 ranks × batch 2 — the exact Fig 2 topology.
+    let demo = deadlock::run(2, 2, 3, 400)?;
+    println!("{}", deadlock::render(&demo));
+    assert!(demo.raw_error.is_some(), "raw batching should deadlock");
+    assert!(demo.packed_completed, "bload must complete");
+
+    // And at the paper's full topology: 8 ranks.
+    let demo8 = deadlock::run(8, 2, 7, 400)?;
+    println!("— 8-rank topology (the paper's 8×A100 box) —");
+    println!("{}", deadlock::render(&demo8));
+    Ok(())
+}

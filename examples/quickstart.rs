@@ -1,0 +1,43 @@
+//! Quickstart: the paper's Fig 1 → Fig 5 walk-through on the toy dataset.
+//!
+//! Generates the 8-video toy dataset (Fig 1), packs it with all four
+//! strategies, prints the layouts and the Table-I-style stats, and shows
+//! the reset table the recurrent model consumes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use bload::config::{ExperimentConfig, StrategyName};
+use bload::dataset::synthetic::{generate, tiny_config};
+use bload::packing::{pack, validate::validate, viz};
+
+fn main() -> bload::Result<()> {
+    // Fig 1: a dataset of 8 short videos (2–6 frames).
+    let ds = generate(&tiny_config(), 0);
+    println!("— Fig 1: the dataset —");
+    println!("{}", viz::render_dataset(&ds.train, 10));
+
+    let mut pcfg = ExperimentConfig::default_config().packing;
+    pcfg.t_max = 6; // longest toy video
+    pcfg.t_block = 3;
+    pcfg.t_mix = 3;
+
+    for strategy in StrategyName::all() {
+        let packed = pack(strategy, &ds.train, &pcfg, 0)?;
+        validate(&packed, &ds.train, strategy == StrategyName::MixPad)?;
+        println!("— {} —", strategy);
+        println!("{}", viz::render_packed(&packed, &ds.train, 12));
+    }
+
+    // The reset table in detail, for the first BLoad block.
+    let packed = pack(StrategyName::BLoad, &ds.train, &pcfg, 0)?;
+    let block = &packed.blocks[0];
+    println!("block 0 reset table (paper Fig 7 `block_reset`): {:?}",
+             block.reset_table());
+    println!("block 0 segment ids (model input):              {:?}",
+             block.seg_ids());
+    println!("block 0 frame mask:                             {:?}",
+             block.frame_mask());
+    Ok(())
+}

@@ -1,0 +1,28 @@
+//! Strategy comparison — regenerates Table I.
+//!
+//! By default only the (fast, paper-exact) pipeline accounting level runs;
+//! pass `--full` to also train DDS-lite per strategy and measure epoch
+//! time + recall@20 through the PJRT stack (requires `make artifacts`).
+//!
+//! ```bash
+//! cargo run --release --example strategy_compare [-- --full]
+//! ```
+
+use bload::harness::table1::{render, run, Table1Options};
+
+fn main() -> bload::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let opts = Table1Options {
+        train: full,
+        ..Table1Options::default()
+    };
+    let report = run(&opts)?;
+    println!("{}", render(&report));
+    if !full {
+        println!(
+            "(pipeline accounting only — rerun with `-- --full` for \
+             measured epoch time and recall@20)"
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Streaming-ingestion scenario: the loader as a standalone data service.
+//!
+//! Demonstrates the pipeline a downstream user adopts when *their* trainer
+//! is external: generate an AG-Synth shard, persist it with the CRC-checked
+//! binary store, re-open it, pack it with BLoad, and stream device batches
+//! through the threaded prefetcher with backpressure — reporting
+//! end-to-end loader throughput (frames/s) per worker count.
+//!
+//! ```bash
+//! cargo run --release --example streaming_ingest
+//! ```
+
+use std::sync::Arc;
+
+use bload::config::{ExperimentConfig, StrategyName};
+use bload::dataset::store::{read_store, StoreWriter};
+use bload::dataset::synthetic::generate;
+use bload::loader::{EpochPlan, Prefetcher};
+use bload::packing::pack;
+use bload::util::humanize::{bytes, commas, rate};
+
+fn main() -> bload::Result<()> {
+    let cfg = ExperimentConfig::default_config();
+    let dcfg = cfg.dataset.scaled(0.05); // ~370 videos, ~8k frames
+    let ds = generate(&dcfg, 0);
+    println!(
+        "generated {} videos / {} frames",
+        commas(ds.train.videos.len() as u64),
+        commas(ds.train.total_frames() as u64)
+    );
+
+    // Persist a shard with the binary store and read it back (integrity
+    // check via the CRC footer happens inside read_store).
+    let path = std::env::temp_dir().join("bload_ingest_demo.blds");
+    let mut w = StoreWriter::create(
+        &path,
+        0,
+        (dcfg.objects as u32, dcfg.feat_dim as u32, dcfg.classes as u32),
+        ds.train.videos.len() as u32,
+    )?;
+    let t0 = std::time::Instant::now();
+    for v in &ds.train.videos {
+        w.append(&ds.train.spec.materialize(*v))?;
+    }
+    w.finish()?;
+    let size = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "store written: {} in {:.2}s",
+        bytes(size),
+        t0.elapsed().as_secs_f64()
+    );
+    let t0 = std::time::Instant::now();
+    let (_seed, videos) = read_store(&path)?;
+    println!(
+        "store re-read + CRC verified: {} videos in {:.2}s",
+        videos.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    std::fs::remove_file(&path).ok();
+
+    // Pack and stream through the prefetcher at several worker counts.
+    let packed = Arc::new(pack(StrategyName::BLoad, &ds.train, &cfg.packing,
+                               0)?);
+    println!("{}", packed.stats);
+    let split = Arc::new(ds.train);
+    for workers in [1usize, 2, 4, 8] {
+        let plan = EpochPlan::new(&packed, 1, 0, 2, true, 0, 0);
+        let mut pf = Prefetcher::spawn(Arc::clone(&split),
+                                       Arc::clone(&packed), &plan, workers,
+                                       4);
+        let t0 = std::time::Instant::now();
+        let mut frames = 0usize;
+        let mut batches = 0usize;
+        while let Some(b) = pf.next() {
+            let b = b?;
+            frames += b.real_frames;
+            batches += 1;
+        }
+        pf.shutdown();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "workers={workers}: {batches} batches, {} frames in {dt:.2}s \
+             ({})",
+            commas(frames as u64),
+            rate(frames as f64, dt)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,204 @@
+"""AOT compiler: lower DDS-lite to HLO *text* artifacts for the Rust runtime.
+
+Interchange is HLO text, NOT serialized ``HloModuleProto`` — jax ≥ 0.5 emits
+protos with 64-bit instruction ids that the image's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from ``python/``):
+
+    python -m compile.aot --out-dir ../artifacts [--profiles tiny,small,full]
+
+Emits, per profile ``<p>``::
+
+    artifacts/<p>/grad_step.hlo.txt
+    artifacts/<p>/infer_step.hlo.txt
+    artifacts/<p>/apply_update.hlo.txt
+    artifacts/<p>/init_params.f32          raw little-endian f32[P] init dump
+    artifacts/manifest.json                shapes + param layout, all profiles
+
+Python never runs after this; the Rust binary loads the text artifacts via
+``HloModuleProto::from_text_file`` and executes them on the PJRT CPU client.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    ModelConfig,
+    apply_update,
+    flatten_params,
+    grad_step,
+    infer_step,
+    init_params,
+    param_order,
+)
+
+# One artifact set per profile. `tiny` keeps rust unit/integration tests
+# fast; `small` drives the examples; `full` matches the paper's T_max=94
+# Action-Genome geometry for the Table I runs.
+PROFILES = {
+    "tiny": ModelConfig(batch=2, block_len=12, objects=4, feat_dim=12,
+                        model_dim=32, classes=10, state_dim=32,
+                        head_hidden=32),
+    "small": ModelConfig(batch=2, block_len=24, objects=6, feat_dim=20,
+                         model_dim=64, classes=26, state_dim=64,
+                         head_hidden=64),
+    "full": ModelConfig(batch=2, block_len=94, objects=6, feat_dim=20,
+                        model_dim=64, classes=26, state_dim=64,
+                        head_hidden=64),
+    # mix pad's native block length at paper scale (T_mix = 22); sampling's
+    # native length (24) is served by the `small` profile.
+    "mix22": ModelConfig(batch=2, block_len=22, objects=6, feat_dim=20,
+                         model_dim=64, classes=26, state_dim=64,
+                         head_hidden=64),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def lower_profile(cfg: ModelConfig):
+    b, t, o, f = cfg.batch, cfg.block_len, cfg.objects, cfg.feat_dim
+    c, s, p = cfg.classes, cfg.state_dim, cfg.param_count
+
+    grad_lowered = jax.jit(grad_step(cfg)).lower(
+        _spec(p), _spec(b, t, o, f), _spec(b, t, o, c), _spec(b, t),
+        _spec(b, t), _spec(b, s),
+    )
+    infer_lowered = jax.jit(infer_step(cfg)).lower(
+        _spec(p), _spec(b, t, o, f), _spec(b, t), _spec(b, t), _spec(b, s),
+    )
+    update_lowered = jax.jit(apply_update()).lower(
+        _spec(p), _spec(p), _spec(p), _spec(), _spec(),
+    )
+    return {
+        "grad_step": to_hlo_text(grad_lowered),
+        "infer_step": to_hlo_text(infer_lowered),
+        "apply_update": to_hlo_text(update_lowered),
+    }
+
+
+def param_layout(cfg: ModelConfig):
+    out, off = [], 0
+    for name in param_order(cfg):
+        shape = cfg.shapes[name]
+        size = 1
+        for d in shape:
+            size *= d
+        out.append({"name": name, "shape": list(shape), "offset": off,
+                    "size": size})
+        off += size
+    return out
+
+
+def manifest_entry(name: str, cfg: ModelConfig):
+    return {
+        "profile": name,
+        "batch": cfg.batch,
+        "block_len": cfg.block_len,
+        "objects": cfg.objects,
+        "feat_dim": cfg.feat_dim,
+        "model_dim": cfg.model_dim,
+        "classes": cfg.classes,
+        "state_dim": cfg.state_dim,
+        "head_hidden": cfg.head_hidden,
+        "param_count": cfg.param_count,
+        "params": param_layout(cfg),
+        "artifacts": {
+            "grad_step": f"{name}/grad_step.hlo.txt",
+            "infer_step": f"{name}/infer_step.hlo.txt",
+            "apply_update": f"{name}/apply_update.hlo.txt",
+            "init_params": f"{name}/init_params.f32",
+        },
+        "io": {
+            "grad_step": {
+                "inputs": ["params[P]", "feats[B,T,O,F]", "labels[B,T,O,C]",
+                           "frame_mask[B,T]", "seg_ids[B,T]", "state_in[B,S]"],
+                "outputs": ["loss[]", "grads[P]", "state_out[B,S]"],
+            },
+            "infer_step": {
+                "inputs": ["params[P]", "feats[B,T,O,F]", "frame_mask[B,T]",
+                           "seg_ids[B,T]", "state_in[B,S]"],
+                "outputs": ["logits[B,T,O,C]", "state_out[B,S]"],
+            },
+            "apply_update": {
+                "inputs": ["params[P]", "mom[P]", "grads[P]", "lr[]",
+                           "momentum[]"],
+                "outputs": ["params[P]", "mom[P]"],
+            },
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--profiles", default="tiny,small",
+                    help="comma list from: " + ",".join(PROFILES))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"format": 1, "profiles": {}}
+    # Keep pre-existing profiles (e.g. `full` built on demand) in the
+    # manifest if their artifact dirs still exist.
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    if os.path.exists(man_path):
+        try:
+            with open(man_path) as fh:
+                old = json.load(fh)
+            for k, v in old.get("profiles", {}).items():
+                d = os.path.join(args.out_dir, k)
+                if os.path.isdir(d):
+                    manifest["profiles"][k] = v
+        except (json.JSONDecodeError, OSError):
+            pass
+
+    for name in args.profiles.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        cfg = PROFILES[name]
+        print(f"[aot] lowering profile '{name}' "
+              f"(P={cfg.param_count}, B={cfg.batch}, T={cfg.block_len})")
+        texts = lower_profile(cfg)
+        pdir = os.path.join(args.out_dir, name)
+        os.makedirs(pdir, exist_ok=True)
+        for art, text in texts.items():
+            path = os.path.join(pdir, f"{art}.hlo.txt")
+            with open(path, "w") as fh:
+                fh.write(text)
+            print(f"[aot]   wrote {path} ({len(text)} chars)")
+        flat = flatten_params(cfg, init_params(cfg, seed=args.seed))
+        import numpy as np
+
+        with open(os.path.join(pdir, "init_params.f32"), "wb") as fh:
+            fh.write(np.asarray(flat, dtype="<f4").tobytes())
+        manifest["profiles"][name] = manifest_entry(name, cfg)
+
+    with open(man_path, "w") as fh:
+        json.dump(manifest, fh, indent=2, sort_keys=True)
+    print(f"[aot] wrote {man_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for the Pallas kernels and the DDS-lite model pieces.
+
+Everything in this file is the *correctness reference*: slow, obvious,
+numpy-style JAX with no tiling or fusion tricks. `pytest python/tests`
+checks the Pallas kernels (and the full model forward) against these
+functions over hypothesis-generated shape/dtype/seed sweeps.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def segment_attention_ref(q, k, v, seg_ids):
+    """Reference packed-segment attention.
+
+    Causal attention restricted to the query's own segment: inside a packed
+    BLoad block, frame *i* may only attend to frames *j ≤ i* that belong to
+    the same source video (``seg_ids[i] == seg_ids[j]``). Padding slots have
+    ``seg_ids == -1`` and produce zero output rows.
+
+    Args:
+      q, k, v: ``[T, D]`` float arrays.
+      seg_ids: ``[T]`` int32; ``-1`` marks padding slots.
+
+    Returns:
+      ``[T, D]`` attention output.
+    """
+    t = q.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = (q @ k.T) * scale  # [T, T]
+    i = jnp.arange(t)[:, None]
+    j = jnp.arange(t)[None, :]
+    same_seg = seg_ids[:, None] == seg_ids[None, :]
+    valid_q = (seg_ids >= 0)[:, None]
+    valid_k = (seg_ids >= 0)[None, :]
+    mask = same_seg & (j <= i) & valid_q & valid_k
+    scores = jnp.where(mask, scores, NEG_INF)
+    # Rows that are fully masked (padding queries) would softmax over -inf;
+    # normalize safely and zero them at the end.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, 1e-20)
+    out = p @ v
+    return jnp.where((seg_ids >= 0)[:, None], out, 0.0)
+
+
+def segment_attention_batched_ref(q, k, v, seg_ids):
+    """Batched reference: q/k/v ``[B, T, D]``, seg_ids ``[B, T]``."""
+    import jax
+
+    return jax.vmap(segment_attention_ref)(q, k, v, seg_ids)
+
+
+def reset_gated_update_ref(state, frame_emb, new_seq, w_z, b_z, w_h, b_h):
+    """Reference reset-gated recurrent update (the DDS `oE_{t-1}` feedback).
+
+    ``state`` is zeroed whenever ``new_seq`` is 1 (a new source video starts
+    at this slot, per the BLoad reset table), then a GRU-flavoured update is
+    applied.
+
+    Args:
+      state:     ``[B, S]`` carried feedback embedding.
+      frame_emb: ``[B, S]`` current frame context embedding.
+      new_seq:   ``[B]`` float 0/1, 1 ⇒ reset the carried state.
+      w_z, w_h:  ``[2S, S]`` gate / candidate weights; b_z, b_h: ``[S]``.
+
+    Returns:
+      ``[B, S]`` updated state.
+    """
+    keep = (1.0 - new_seq)[:, None]
+    prev = state * keep
+    x = jnp.concatenate([prev, frame_emb], axis=-1)
+    z = jnp.tanh(x @ w_z + b_z) * 0.5 + 0.5  # sigmoid-ish gate in [0, 1]
+    h = jnp.tanh(x @ w_h + b_h)
+    return (1.0 - z) * prev + z * h
+
+
+def masked_bce_ref(logits, labels, frame_mask):
+    """Reference masked multi-label BCE.
+
+    Args:
+      logits:     ``[B, T, O, C]``.
+      labels:     ``[B, T, O, C]`` in {0, 1}.
+      frame_mask: ``[B, T]`` 1 for real frames, 0 for padding.
+
+    Returns:
+      scalar mean BCE over valid (frame, object, class) entries.
+    """
+    # Numerically-stable BCE-with-logits.
+    per = jnp.maximum(logits, 0.0) - logits * labels + jnp.log1p(
+        jnp.exp(-jnp.abs(logits))
+    )
+    w = frame_mask[:, :, None, None]
+    total = jnp.sum(per * w)
+    count = jnp.maximum(jnp.sum(w) * per.shape[2] * per.shape[3], 1.0)
+    return total / count

@@ -1,0 +1,187 @@
+"""Pallas packed-segment attention — the L1 hot-spot of the BLoad stack.
+
+Inside a BLoad-packed block several unrelated videos share one time axis.
+Temporal attention must therefore be *block-diagonal*: frame ``i`` attends
+only to frames ``j ≤ i`` with the same segment id (same source video).
+Segment ids are derived from the packing reset table by the Rust
+coordinator (layer 3) and ride along with every batch.
+
+TPU idiom (see DESIGN.md §Hardware-Adaptation): flash-attention streaming
+structure — a grid over (batch, query tiles), an online-softmax loop over
+KV tiles, Q·Kᵀ and P·V as MXU-shaped matmuls, the segment/causal mask as a
+VPU select. On this image the kernel always runs with ``interpret=True``
+(CPU PJRT cannot execute Mosaic custom-calls); tile shapes are still chosen
+as they would be for VMEM, and §Perf estimates TPU utilization from them.
+
+The public entry point :func:`segment_attention` is differentiable via
+``jax.custom_vjp``: forward = Pallas kernel, backward = recompute-based
+closed-form softmax backward (see ``ref.py`` for the math oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF, segment_attention_batched_ref
+
+# Query-tile length. 32 keeps the per-program VMEM footprint at
+#   q tile        32·D·4 B
+#   k, v          Tp·D·4 B each
+#   scores tile   32·KV_TILE·4 B
+# ≈ 120 kB at T=96, D=128 — far under the ~16 MB VMEM budget, leaving room
+# for double buffering on real hardware.
+Q_TILE = 32
+KV_TILE = 32
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _attn_kernel(seg_ref, q_ref, k_ref, v_ref, o_ref, *, kv_tiles: int):
+    """One (batch, q-tile) program: online-softmax over KV tiles."""
+    qi = pl.program_id(1)
+    q = q_ref[0, :, :]  # [Q_TILE, D]
+    seg = seg_ref[0, :]  # [Tp] int32 — full segment-id row for this batch
+    d = q.shape[-1]
+    scale = (1.0 / (d ** 0.5)).__float__()
+
+    q_pos = qi * Q_TILE + lax.iota(jnp.int32, Q_TILE)  # absolute query rows
+    q_seg = lax.dynamic_slice(seg, (qi * Q_TILE,), (Q_TILE,))
+
+    def body(t, carry):
+        m_prev, l_prev, acc = carry
+        k_t = lax.dynamic_slice(k_ref[0, :, :], (t * KV_TILE, 0), (KV_TILE, d))
+        v_t = lax.dynamic_slice(v_ref[0, :, :], (t * KV_TILE, 0), (KV_TILE, d))
+        k_seg = lax.dynamic_slice(seg, (t * KV_TILE,), (KV_TILE,))
+        k_pos = t * KV_TILE + lax.iota(jnp.int32, KV_TILE)
+
+        # MXU matmul: [Q_TILE, D] x [D, KV_TILE].
+        s = jnp.dot(q, k_t.T, preferred_element_type=jnp.float32) * scale
+        mask = (
+            (q_seg[:, None] == k_seg[None, :])
+            & (k_pos[None, :] <= q_pos[:, None])
+            & (q_seg >= 0)[:, None]
+            & (k_seg >= 0)[None, :]
+        )
+        s = jnp.where(mask, s, NEG_INF)
+
+        # Online softmax (flash-attention recurrence).
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, v_t, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc
+
+    m0 = jnp.full((Q_TILE,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((Q_TILE,), jnp.float32)
+    a0 = jnp.zeros((Q_TILE, d), jnp.float32)
+    # Causality: KV tiles strictly after the query tile contribute nothing,
+    # so the loop is bounded by qi + 1 rather than kv_tiles.
+    upper = jnp.minimum(qi + 1, kv_tiles)
+    m, l, acc = lax.fori_loop(0, upper, body, (m0, l0, a0))
+
+    out = acc / jnp.maximum(l, 1e-20)[:, None]
+    out = jnp.where((q_seg >= 0)[:, None], out, 0.0)
+    o_ref[0, :, :] = out.astype(o_ref.dtype)
+
+
+def _segment_attention_fwd_pallas(q, k, v, seg_ids):
+    """Pallas forward over padded-to-tile inputs. q/k/v: [B,T,D], seg: [B,T]."""
+    b, t, d = q.shape
+    tp = _ceil_to(t, Q_TILE)
+    if tp != t:
+        pad = tp - t
+        zpad = ((0, 0), (0, pad), (0, 0))
+        q = jnp.pad(q, zpad)
+        k = jnp.pad(k, zpad)
+        v = jnp.pad(v, zpad)
+        seg_ids = jnp.pad(seg_ids, ((0, 0), (0, pad)), constant_values=-1)
+
+    kv_tiles = tp // KV_TILE
+    grid = (b, tp // Q_TILE)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, kv_tiles=kv_tiles),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tp), lambda bi, qi: (bi, 0)),  # seg ids
+            pl.BlockSpec((1, Q_TILE, d), lambda bi, qi: (bi, qi, 0)),  # q
+            pl.BlockSpec((1, tp, d), lambda bi, qi: (bi, 0, 0)),  # k
+            pl.BlockSpec((1, tp, d), lambda bi, qi: (bi, 0, 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((1, Q_TILE, d), lambda bi, qi: (bi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, tp, d), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(seg_ids, q, k, v)
+    return out[:, :t, :]
+
+
+@jax.custom_vjp
+def segment_attention(q, k, v, seg_ids):
+    """Differentiable packed-segment attention.
+
+    Args:
+      q, k, v: ``[B, T, D]`` float32.
+      seg_ids: ``[B, T]`` int32 segment ids; ``-1`` marks padding slots.
+
+    Returns:
+      ``[B, T, D]`` — causal attention restricted to each query's segment.
+    """
+    return _segment_attention_fwd_pallas(q, k, v, seg_ids)
+
+
+def _fwd(q, k, v, seg_ids):
+    out = _segment_attention_fwd_pallas(q, k, v, seg_ids)
+    return out, (q, k, v, seg_ids)
+
+
+def _bwd(res, g):
+    """Closed-form softmax backward by recomputation (memory-light).
+
+    Matches the math of ``ref.segment_attention_ref``; the probabilities are
+    rebuilt from q/k/seg instead of being saved, the standard flash-attention
+    backward trade.
+    """
+    q, k, v, seg_ids = res
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    t = q.shape[1]
+    i = jnp.arange(t)[:, None]
+    j = jnp.arange(t)[None, :]
+    same = seg_ids[:, :, None] == seg_ids[:, None, :]
+    valid = (seg_ids >= 0)[:, :, None] & (seg_ids >= 0)[:, None, :]
+    mask = same & (j <= i)[None, :, :] & valid
+
+    s = jnp.einsum("bid,bjd->bij", q, k) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-20)
+    p = p / denom
+
+    g = jnp.where((seg_ids >= 0)[:, :, None], g, 0.0)
+    dv = jnp.einsum("bij,bid->bjd", p, g)
+    dp = jnp.einsum("bid,bjd->bij", g, v)
+    row = jnp.sum(dp * p, axis=-1, keepdims=True)
+    ds = p * (dp - row)
+    dq = jnp.einsum("bij,bjd->bid", ds, k) * scale
+    dk = jnp.einsum("bij,bid->bjd", ds, q) * scale
+    return dq, dk, dv, None
+
+
+segment_attention.defvjp(_fwd, _bwd)
+
+
+def segment_attention_reference(q, k, v, seg_ids):
+    """Re-export of the pure-jnp oracle (for tests and L2 fallback)."""
+    return segment_attention_batched_ref(q, k, v, seg_ids)

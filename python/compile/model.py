@@ -1,0 +1,264 @@
+"""DDS-lite — the L2 JAX model of the BLoad stack.
+
+A compact analogue of the DDS (Decoupled Dynamic Scene-graph) network the
+BLoad paper trains (its Fig 6): a recurrent video scene-graph model where
+the output embedding of frame *t−1* (``oE_{t-1}``) feeds back into frame
+*t*. BLoad's reset table exists precisely so this feedback can be zeroed at
+source-video boundaries inside a packed block.
+
+Structure per block (``[B, T]`` time slots, ``O`` object detections/frame):
+
+  1. object encoder   — MLP over per-object features + slot embedding
+  2. temporal context — packed-segment attention over frame embeddings
+                        (the Pallas L1 kernel; mask from BLoad seg ids)
+  3. feedback state   — reset-gated GRU-flavoured scan along T carrying
+                        ``oE_{t-1}``; reset whenever seg id changes
+  4. predicate head   — per (object, predicate) logits ``[B, T, O, C]``
+  5. loss             — masked multi-label BCE over real frames
+
+The Rust coordinator only ever sees *flat* f32 parameter vectors; this
+module owns the pytree layout and flattens/unflattens inside the traced
+functions (see ``flatten_params``). All exported entry points are pure
+functions of arrays, ready for ``jax.jit(...).lower`` in ``aot.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import masked_bce_ref
+from .kernels.segment_attention import (
+    segment_attention,
+    segment_attention_reference,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static shape/hyperparameter bundle (one AOT artifact set each)."""
+
+    batch: int = 2          # B — blocks per device step
+    block_len: int = 24     # T — packed block length (T_max of the packer)
+    objects: int = 6        # O — object detections per frame
+    feat_dim: int = 20      # F — raw per-object feature size
+    model_dim: int = 64     # D — embedding width
+    classes: int = 26       # C — predicate vocabulary (Action Genome: 26)
+    state_dim: int = 64     # S — feedback embedding width (== D here)
+    head_hidden: int = 64   # H — head MLP hidden width
+    use_pallas: bool = True # False -> pure-jnp oracle path (for A/B tests)
+
+    @property
+    def shapes(self) -> Dict[str, Tuple[int, ...]]:
+        d, f, o, c, s, h = (
+            self.model_dim,
+            self.feat_dim,
+            self.objects,
+            self.classes,
+            self.state_dim,
+            self.head_hidden,
+        )
+        return {
+            # object encoder
+            "enc_w": (f, d),
+            "enc_b": (d,),
+            "slot_emb": (o, d),
+            # temporal attention projections
+            "wq": (d, d),
+            "wk": (d, d),
+            "wv": (d, d),
+            "wo": (d, d),
+            # reset-gated recurrence (inputs: [state, ctx] -> 2S wide)
+            "gru_wz": (2 * s, s),
+            "gru_bz": (s,),
+            "gru_wh": (2 * s, s),
+            "gru_bh": (s,),
+            # predicate head: [token, ctx, state] -> hidden -> classes
+            "head_w1": (d + d + s, h),
+            "head_b1": (h,),
+            "head_w2": (h, c),
+            "head_b2": (c,),
+        }
+
+    @property
+    def param_count(self) -> int:
+        return sum(int(jnp.prod(jnp.asarray(v))) for v in self.shapes.values())
+
+
+# --------------------------------------------------------------------------
+# Parameter flattening — the Rust side handles exactly one f32[P] buffer.
+# --------------------------------------------------------------------------
+
+def param_order(cfg: ModelConfig):
+    return sorted(cfg.shapes.keys())
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """He-style init, deterministic in ``seed``."""
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for name in param_order(cfg):
+        shape = cfg.shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith("_b") or name.endswith("_bz") or name.endswith("_bh"):
+            out[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            scale = (2.0 / max(fan_in, 1)) ** 0.5
+            out[name] = scale * jax.random.normal(sub, shape, jnp.float32)
+    return out
+
+
+def flatten_params(cfg: ModelConfig, params: Dict[str, jnp.ndarray]):
+    return jnp.concatenate(
+        [params[n].reshape(-1) for n in param_order(cfg)], axis=0
+    )
+
+
+def unflatten_params(cfg: ModelConfig, flat):
+    out, off = {}, 0
+    for name in param_order(cfg):
+        shape = cfg.shapes[name]
+        size = 1
+        for s in shape:
+            size *= s
+        out[name] = flat[off : off + size].reshape(shape)
+        off += size
+    return out
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+def _encode_objects(p, feats):
+    """[B,T,O,F] -> object tokens [B,T,O,D] and frame embedding [B,T,D]."""
+    tok = jnp.tanh(feats @ p["enc_w"] + p["enc_b"])  # [B,T,O,D]
+    tok = tok + p["slot_emb"][None, None, :, :]
+    frame = jnp.mean(tok, axis=2)  # [B,T,D]
+    return tok, frame
+
+
+def _temporal_context(cfg, p, frame_emb, seg_ids):
+    """Packed-segment attention over the time axis (the Pallas kernel)."""
+    q = frame_emb @ p["wq"]
+    k = frame_emb @ p["wk"]
+    v = frame_emb @ p["wv"]
+    attn = segment_attention if cfg.use_pallas else segment_attention_reference
+    ctx = attn(q, k, v, seg_ids)
+    return jnp.tanh(ctx @ p["wo"]) + frame_emb  # residual
+
+
+def _feedback_scan(p, ctx, seg_ids, state_in):
+    """Reset-gated recurrence along T carrying the oE feedback embedding.
+
+    The carried state is zeroed at every slot where a new source video
+    starts (seg id differs from the previous slot, or slot 0 of the block
+    when the incoming ``state_in`` belongs to a different stream — the Rust
+    state manager already zeroes ``state_in`` in that case).
+    """
+    b, t, s = ctx.shape
+    prev_seg = jnp.concatenate(
+        [jnp.full((b, 1), -2, seg_ids.dtype), seg_ids[:, :-1]], axis=1
+    )
+    # new_seq[b, t] == 1.0 at the first slot of every packed segment, except
+    # slot 0, where continuation is delegated to the Rust-managed state_in.
+    new_seq = (seg_ids != prev_seg).astype(jnp.float32)
+    new_seq = new_seq.at[:, 0].set(0.0)
+
+    def step(state, xs):
+        ctx_t, reset_t = xs  # [B,S], [B]
+        keep = (1.0 - reset_t)[:, None]
+        prev = state * keep
+        x = jnp.concatenate([prev, ctx_t], axis=-1)
+        z = jax.nn.sigmoid(x @ p["gru_wz"] + p["gru_bz"])
+        h = jnp.tanh(x @ p["gru_wh"] + p["gru_bh"])
+        nxt = (1.0 - z) * prev + z * h
+        return nxt, nxt
+
+    xs = (jnp.swapaxes(ctx, 0, 1), jnp.swapaxes(new_seq, 0, 1))
+    state_out, states = jax.lax.scan(step, state_in, xs)
+    return jnp.swapaxes(states, 0, 1), state_out  # [B,T,S], [B,S]
+
+
+def forward(cfg: ModelConfig, params, feats, frame_mask, seg_ids, state_in):
+    """Full DDS-lite forward.
+
+    Args:
+      params:     dict pytree (see ``ModelConfig.shapes``).
+      feats:      ``[B, T, O, F]`` object features.
+      frame_mask: ``[B, T]`` 1.0 = real frame, 0.0 = padding slot.
+      seg_ids:    ``[B, T]`` int32 packed segment ids (−1 = padding).
+      state_in:   ``[B, S]`` carried feedback embedding.
+
+    Returns:
+      logits ``[B, T, O, C]``, state_out ``[B, S]``.
+    """
+    tok, frame_emb = _encode_objects(params, feats)
+    ctx = _temporal_context(cfg, params, frame_emb, seg_ids)
+    states, state_out = _feedback_scan(params, ctx, seg_ids, state_in)
+
+    b, t, o, _ = tok.shape
+    ctx_b = jnp.broadcast_to(ctx[:, :, None, :], (b, t, o, ctx.shape[-1]))
+    st_b = jnp.broadcast_to(states[:, :, None, :], (b, t, o, states.shape[-1]))
+    x = jnp.concatenate([tok, ctx_b, st_b], axis=-1)
+    h = jnp.tanh(x @ params["head_w1"] + params["head_b1"])
+    logits = h @ params["head_w2"] + params["head_b2"]
+    logits = logits * frame_mask[:, :, None, None]
+    return logits, state_out
+
+
+def loss_fn(cfg: ModelConfig, params, feats, labels, frame_mask, seg_ids,
+            state_in):
+    logits, state_out = forward(cfg, params, feats, frame_mask, seg_ids,
+                                state_in)
+    return masked_bce_ref(logits, labels, frame_mask), state_out
+
+
+# --------------------------------------------------------------------------
+# AOT entry points — flat-parameter signatures the Rust runtime executes.
+# --------------------------------------------------------------------------
+
+def grad_step(cfg: ModelConfig):
+    """(params[P], feats, labels, frame_mask, seg_ids_f32, state_in)
+       -> (loss[], grads[P], state_out[B,S])"""
+
+    def fn(flat, feats, labels, frame_mask, seg_f32, state_in):
+        seg_ids = seg_f32.astype(jnp.int32)
+
+        def inner(flat_):
+            p = unflatten_params(cfg, flat_)
+            loss, st = loss_fn(cfg, p, feats, labels, frame_mask, seg_ids,
+                               state_in)
+            return loss, st
+
+        (loss, st), grads = jax.value_and_grad(inner, has_aux=True)(flat)
+        return loss, grads, st
+
+    return fn
+
+
+def infer_step(cfg: ModelConfig):
+    """(params[P], feats, frame_mask, seg_ids_f32, state_in)
+       -> (logits[B,T,O,C], state_out[B,S])"""
+
+    def fn(flat, feats, frame_mask, seg_f32, state_in):
+        p = unflatten_params(cfg, flat)
+        return forward(cfg, p, feats, frame_mask, seg_f32.astype(jnp.int32),
+                       state_in)
+
+    return fn
+
+
+def apply_update():
+    """SGD with momentum: (params[P], mom[P], grads[P], lr[], momentum[])
+       -> (params'[P], mom'[P])"""
+
+    def fn(params, mom, grads, lr, momentum):
+        mom_new = momentum * mom + grads
+        return params - lr * mom_new, mom_new
+
+    return fn

@@ -1,0 +1,109 @@
+"""AOT artifact pipeline tests: lowering, manifest integrity, HLO shape."""
+
+import json
+import os
+import re
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import PROFILES, lower_profile, manifest_entry, to_hlo_text
+from compile.model import ModelConfig, grad_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = PROFILES["tiny"]
+
+
+@pytest.fixture(scope="module")
+def tiny_texts():
+    return lower_profile(TINY)
+
+
+def test_lowering_emits_all_artifacts(tiny_texts):
+    assert set(tiny_texts) == {"grad_step", "infer_step", "apply_update"}
+    for name, text in tiny_texts.items():
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_hlo_entry_shapes_match_manifest(tiny_texts):
+    """The ENTRY signature of grad_step must agree with the manifest dims."""
+    text = tiny_texts["grad_step"]
+    lines = text.splitlines()
+    start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+    end = next(i for i in range(start, len(lines)) if lines[i].startswith("}"))
+    body = "\n".join(l for l in lines[start:end] if "parameter(" in l)
+    assert len(re.findall(r"parameter\(\d+\)", body)) == 6
+    p = TINY.param_count
+    b, t, o, f, c = (TINY.batch, TINY.block_len, TINY.objects,
+                     TINY.feat_dim, TINY.classes)
+    assert f"f32[{p}]" in body
+    assert f"f32[{b},{t},{o},{f}]" in body
+    assert f"f32[{b},{t},{o},{c}]" in body
+    assert f"f32[{b},{TINY.state_dim}]" in body
+
+
+def test_hlo_text_has_no_custom_calls(tiny_texts):
+    """interpret=True must fully lower pallas: no Mosaic custom-calls, so the
+    CPU PJRT client (and the rust loader) can execute the artifact."""
+    for name, text in tiny_texts.items():
+        assert "custom-call" not in text or "mosaic" not in text.lower(), name
+
+
+def test_manifest_entry_consistent():
+    e = manifest_entry("tiny", TINY)
+    assert e["param_count"] == TINY.param_count
+    total = sum(p["size"] for p in e["params"])
+    assert total == TINY.param_count
+    offs = [p["offset"] for p in e["params"]]
+    assert offs == sorted(offs)
+    # contiguous, non-overlapping layout
+    run = 0
+    for p in e["params"]:
+        assert p["offset"] == run
+        run += p["size"]
+
+
+def test_profiles_are_distinct_and_full_matches_paper_tmax():
+    assert PROFILES["full"].block_len == 94  # Action Genome T_max (Table I)
+    counts = {k: v.param_count for k, v in PROFILES.items()}
+    assert counts["tiny"] < counts["small"] == counts["full"]
+
+
+def test_written_artifacts_exist_when_built():
+    """If `make artifacts` has run, files must match the manifest."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    man = os.path.join(art, "manifest.json")
+    if not os.path.exists(man):
+        pytest.skip("artifacts not built yet")
+    with open(man) as fh:
+        m = json.load(fh)
+    for prof, entry in m["profiles"].items():
+        for _, rel in entry["artifacts"].items():
+            path = os.path.join(art, rel)
+            assert os.path.exists(path), path
+        raw = open(os.path.join(art, entry["artifacts"]["init_params"]),
+                   "rb").read()
+        assert len(raw) == 4 * entry["param_count"]
+
+
+def test_grad_step_numeric_stability_extreme_inputs():
+    fn = jax.jit(grad_step(TINY))
+    b, t, o, f = TINY.batch, TINY.block_len, TINY.objects, TINY.feat_dim
+    c, s, p = TINY.classes, TINY.state_dim, TINY.param_count
+    rng = np.random.default_rng(0)
+    flat = jnp.asarray(rng.standard_normal(p) * 0.1, jnp.float32)
+    feats = jnp.full((b, t, o, f), 50.0, jnp.float32)   # extreme activations
+    labels = jnp.ones((b, t, o, c), jnp.float32)
+    mask = jnp.ones((b, t), jnp.float32)
+    seg = jnp.zeros((b, t), jnp.float32)
+    state = jnp.zeros((b, s), jnp.float32)
+    loss, grads, st = fn(flat, feats, labels, mask, seg, state)
+    assert bool(jnp.isfinite(loss))
+    assert bool(jnp.all(jnp.isfinite(grads)))
+    assert bool(jnp.all(jnp.isfinite(st)))

@@ -1,0 +1,202 @@
+"""Pallas segment-attention kernel vs the pure-jnp oracle.
+
+This is the CORE L1 correctness signal: hypothesis sweeps shapes, segment
+layouts and seeds; every case must match ``ref.segment_attention_ref`` to
+float32 tolerance, forward and backward.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    NEG_INF,
+    masked_bce_ref,
+    segment_attention_batched_ref,
+    segment_attention_ref,
+)
+from compile.kernels.segment_attention import (
+    Q_TILE,
+    segment_attention,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_seg_ids(rng, b, t, max_seg_len):
+    """Packed-block style segment layout: runs of random length + tail pad."""
+    out = np.full((b, t), -1, np.int32)
+    for bi in range(b):
+        pos, seg = 0, 0
+        while pos < t:
+            if rng.random() < 0.15:  # leave the rest as padding
+                break
+            run = int(rng.integers(1, max_seg_len + 1))
+            run = min(run, t - pos)
+            out[bi, pos : pos + run] = seg
+            seg += 1
+            pos += run
+    return jnp.asarray(out)
+
+
+def make_case(seed, b, t, d, max_seg_len=9):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, t, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, t, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, t, d)), jnp.float32)
+    seg = random_seg_ids(rng, b, t, max_seg_len)
+    return q, k, v, seg
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 3),
+    t=st.integers(1, 70),
+    d=st.sampled_from([4, 8, 16, 32]),
+)
+def test_forward_matches_ref(seed, b, t, d):
+    q, k, v, seg = make_case(seed, b, t, d)
+    out = segment_attention(q, k, v, seg)
+    ref = segment_attention_batched_ref(q, k, v, seg)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    t=st.integers(2, 40),
+    d=st.sampled_from([4, 16]),
+)
+def test_backward_matches_ref(seed, t, d):
+    q, k, v, seg = make_case(seed, 2, t, d)
+    w = jnp.asarray(
+        np.random.default_rng(seed ^ 0xABCD).standard_normal((2, t, d)),
+        jnp.float32,
+    )
+
+    def f(q, k, v):
+        return jnp.sum(segment_attention(q, k, v, seg) * w)
+
+    def fr(q, k, v):
+        return jnp.sum(segment_attention_batched_ref(q, k, v, seg) * w)
+
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g, gr):
+        np.testing.assert_allclose(a, b_, rtol=5e-4, atol=5e-5)
+
+
+def test_tile_boundary_exact_multiple():
+    """T exactly at / around the Q_TILE boundary (padding-free vs padded)."""
+    for t in (Q_TILE - 1, Q_TILE, Q_TILE + 1, 2 * Q_TILE):
+        q, k, v, seg = make_case(7, 2, t, 8)
+        out = segment_attention(q, k, v, seg)
+        ref = segment_attention_batched_ref(q, k, v, seg)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_all_padding_block_is_zero():
+    b, t, d = 1, 16, 8
+    q = jnp.ones((b, t, d))
+    k = jnp.ones((b, t, d))
+    v = jnp.ones((b, t, d))
+    seg = jnp.full((b, t), -1, jnp.int32)
+    out = segment_attention(q, k, v, seg)
+    assert float(jnp.max(jnp.abs(out))) == 0.0
+
+
+def test_single_segment_equals_plain_causal():
+    """One segment spanning the block == ordinary causal attention."""
+    b, t, d = 1, 24, 16
+    q, k, v, _ = make_case(3, b, t, d)
+    seg = jnp.zeros((b, t), jnp.int32)
+    out = segment_attention(q, k, v, seg)
+
+    scale = 1.0 / np.sqrt(d)
+    s = (q[0] @ k[0].T) * scale
+    causal = np.tril(np.ones((t, t), bool))
+    s = np.where(causal, np.asarray(s), NEG_INF)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = np.where(causal, p, 0.0)
+    p /= p.sum(-1, keepdims=True)
+    expect = p @ np.asarray(v[0])
+    np.testing.assert_allclose(out[0], expect, rtol=2e-5, atol=2e-5)
+
+
+def test_segments_are_independent():
+    """Perturbing one segment's inputs must not change another's outputs."""
+    b, t, d = 1, 20, 8
+    q, k, v, _ = make_case(11, b, t, d)
+    seg = jnp.asarray([[0] * 10 + [1] * 10], jnp.int32)
+    base = segment_attention(q, k, v, seg)
+    q2 = q.at[:, :10, :].add(3.0)
+    k2 = k.at[:, :10, :].add(-2.0)
+    v2 = v.at[:, :10, :].add(1.0)
+    out2 = segment_attention(q2, k2, v2, seg)
+    np.testing.assert_allclose(base[:, 10:], out2[:, 10:], rtol=1e-5,
+                               atol=1e-6)
+    assert float(jnp.max(jnp.abs(base[:, :10] - out2[:, :10]))) > 1e-3
+
+
+def test_first_frame_of_segment_attends_only_to_itself():
+    """Row for a segment's first slot must equal its own value row."""
+    b, t, d = 1, 12, 8
+    q, k, v, _ = make_case(5, b, t, d)
+    seg = jnp.asarray([[0] * 4 + [1] * 8], jnp.int32)
+    out = segment_attention(q, k, v, seg)
+    np.testing.assert_allclose(out[0, 0], v[0, 0], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(out[0, 4], v[0, 4], rtol=1e-5, atol=1e-6)
+
+
+def test_permutation_equivariance_across_blocks():
+    """Swapping the two batch rows swaps the two output rows."""
+    q, k, v, seg = make_case(13, 2, 30, 16)
+    out = segment_attention(q, k, v, seg)
+    flip = lambda x: x[::-1]
+    out2 = segment_attention(flip(q), flip(k), flip(v), flip(seg))
+    np.testing.assert_allclose(out[::-1], out2, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("t", [1, 2, 3])
+def test_degenerate_tiny_t(t):
+    q, k, v, _ = make_case(17, 1, t, 4)
+    seg = jnp.zeros((1, t), jnp.int32)
+    out = segment_attention(q, k, v, seg)
+    ref = segment_attention_batched_ref(q, k, v, seg)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_masked_bce_ignores_padding():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.standard_normal((2, 6, 3, 5)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 2, (2, 6, 3, 5)), jnp.float32)
+    mask = jnp.asarray([[1, 1, 1, 0, 0, 0], [1, 1, 1, 1, 0, 0]], jnp.float32)
+    base = masked_bce_ref(logits, labels, mask)
+    # Garbage in padded frames must not change the loss.
+    logits2 = logits.at[:, 3:, :, :].set(99.0)
+    labels2 = labels.at[0, 3:, :, :].set(1.0)
+    after = masked_bce_ref(logits2, labels2, mask)
+    # frame 3 of row 1 is real; only rows 0's frames 3.. are padding
+    mask0 = mask.at[1, 3].set(1.0)  # sanity: differs when unmasked
+    np.testing.assert_allclose(
+        base, masked_bce_ref(logits.at[0, 3:, :, :].set(99.0), labels, mask),
+        rtol=1e-6,
+    )
+    del after, mask0
+
+
+def test_ref_rejects_cross_segment_leakage_scalar_probe():
+    """Oracle property: zeroing v outside segment 0 leaves segment 0 rows."""
+    t, d = 12, 4
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    seg = jnp.asarray([0] * 6 + [1] * 6, jnp.int32)
+    ref = segment_attention_ref(q, k, v, seg)
+    v2 = v.at[6:].set(0.0)
+    ref2 = segment_attention_ref(q, k, v2, seg)
+    np.testing.assert_allclose(ref[:6], ref2[:6], rtol=1e-6, atol=1e-7)

@@ -1,0 +1,144 @@
+"""DDS-lite model shape / semantics tests (L2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    ModelConfig,
+    apply_update,
+    flatten_params,
+    forward,
+    grad_step,
+    infer_step,
+    init_params,
+    loss_fn,
+    unflatten_params,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = ModelConfig(batch=2, block_len=12, objects=4, feat_dim=12,
+                  model_dim=32, classes=10, state_dim=32, head_hidden=32)
+
+
+def make_batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    b, t, o, f, c = cfg.batch, cfg.block_len, cfg.objects, cfg.feat_dim, cfg.classes
+    feats = jnp.asarray(rng.standard_normal((b, t, o, f)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 2, (b, t, o, c)), jnp.float32)
+    seg = np.zeros((b, t), np.int32)
+    seg[0, 6:] = 1          # two videos packed in block 0
+    seg[1, 9:] = -1         # padding tail in block 1
+    mask = (seg >= 0).astype(np.float32)
+    state = jnp.zeros((b, cfg.state_dim), jnp.float32)
+    return feats, labels, jnp.asarray(mask), jnp.asarray(seg), state
+
+
+def test_param_flatten_roundtrip():
+    p = init_params(CFG, seed=3)
+    flat = flatten_params(CFG, p)
+    assert flat.shape == (CFG.param_count,)
+    back = unflatten_params(CFG, flat)
+    for k in p:
+        np.testing.assert_array_equal(p[k], back[k])
+
+
+def test_forward_shapes_and_padding_zeroed():
+    p = init_params(CFG)
+    feats, _, mask, seg, state = make_batch(CFG)
+    logits, state_out = forward(CFG, p, feats, mask, seg, state)
+    assert logits.shape == (CFG.batch, CFG.block_len, CFG.objects, CFG.classes)
+    assert state_out.shape == (CFG.batch, CFG.state_dim)
+    # Padded frames produce exactly-zero logits (masked at the head).
+    assert float(jnp.max(jnp.abs(logits[1, 9:]))) == 0.0
+
+
+def test_pallas_and_ref_model_paths_agree():
+    cfg_ref = ModelConfig(**{**CFG.__dict__, "use_pallas": False})
+    p = init_params(CFG)
+    feats, labels, mask, seg, state = make_batch(CFG)
+    l1, s1 = loss_fn(CFG, p, feats, labels, mask, seg, state)
+    l2, s2 = loss_fn(cfg_ref, p, feats, labels, mask, seg, state)
+    np.testing.assert_allclose(l1, l2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-5)
+
+
+def test_reset_gating_blocks_cross_video_leakage():
+    """Frames of video B inside a packed block must be independent of
+    video A's content — the reset table guarantee the paper relies on."""
+    p = init_params(CFG, seed=1)
+    feats, _, mask, seg, state = make_batch(CFG)
+    logits, _ = forward(CFG, p, feats, mask, seg, state)
+    feats2 = feats.at[0, :6].add(5.0)  # perturb video A only (block 0)
+    logits2, _ = forward(CFG, p, feats2, mask, seg, state)
+    np.testing.assert_allclose(logits[0, 6:], logits2[0, 6:], rtol=1e-4,
+                               atol=1e-5)
+    assert float(jnp.max(jnp.abs(logits[0, :6] - logits2[0, :6]))) > 1e-3
+
+
+def test_grad_step_signature_and_finiteness():
+    p = flatten_params(CFG, init_params(CFG))
+    feats, labels, mask, seg, state = make_batch(CFG)
+    loss, grads, st = grad_step(CFG)(p, feats, labels, mask,
+                                     seg.astype(jnp.float32), state)
+    assert loss.shape == ()
+    assert grads.shape == (CFG.param_count,)
+    assert st.shape == (CFG.batch, CFG.state_dim)
+    assert bool(jnp.isfinite(loss))
+    assert bool(jnp.all(jnp.isfinite(grads)))
+    assert float(jnp.max(jnp.abs(grads))) > 0.0
+
+
+def test_sgd_reduces_loss():
+    flat = flatten_params(CFG, init_params(CFG))
+    feats, labels, mask, seg, state = make_batch(CFG)
+    segf = seg.astype(jnp.float32)
+    step = jax.jit(grad_step(CFG))
+    upd = jax.jit(apply_update())
+    mom = jnp.zeros_like(flat)
+    loss0, grads, _ = step(flat, feats, labels, mask, segf, state)
+    for _ in range(20):
+        loss, grads, _ = step(flat, feats, labels, mask, segf, state)
+        flat, mom = upd(flat, mom, grads, jnp.float32(0.5), jnp.float32(0.9))
+    lossN, _, _ = step(flat, feats, labels, mask, segf, state)
+    assert float(lossN) < float(loss0) * 0.8, (float(loss0), float(lossN))
+
+
+def test_infer_matches_forward():
+    p = init_params(CFG)
+    flat = flatten_params(CFG, p)
+    feats, _, mask, seg, state = make_batch(CFG)
+    logits_f, st_f = forward(CFG, p, feats, mask, seg, state)
+    logits_i, st_i = infer_step(CFG)(flat, feats, mask,
+                                     seg.astype(jnp.float32), state)
+    np.testing.assert_allclose(logits_f, logits_i, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(st_f, st_i, rtol=1e-5, atol=1e-6)
+
+
+def test_apply_update_momentum_math():
+    fn = apply_update()
+    params = jnp.asarray([1.0, 2.0])
+    mom = jnp.asarray([0.5, -0.5])
+    grads = jnp.asarray([0.1, 0.2])
+    p2, m2 = fn(params, mom, grads, jnp.float32(0.1), jnp.float32(0.9))
+    np.testing.assert_allclose(m2, 0.9 * mom + grads, rtol=1e-6)
+    np.testing.assert_allclose(p2, params - 0.1 * (0.9 * mom + grads),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("t0", [0.0, 1.0])
+def test_state_in_carries_information_unless_reset(t0):
+    """state_in influences frame 0 of a block (continuation semantics)."""
+    p = init_params(CFG, seed=2)
+    feats, _, mask, seg, _ = make_batch(CFG)
+    s0 = jnp.zeros((CFG.batch, CFG.state_dim))
+    s1 = jnp.full((CFG.batch, CFG.state_dim), t0)
+    la, _ = forward(CFG, p, feats, mask, seg, s0)
+    lb, _ = forward(CFG, p, feats, mask, seg, s1)
+    diff = float(jnp.max(jnp.abs(la[:, 0] - lb[:, 0])))
+    if t0 == 0.0:
+        assert diff == 0.0
+    else:
+        assert diff > 1e-4

@@ -1,0 +1,64 @@
+//! Streaming-loader throughput: frames/s through the prefetcher at
+//! several worker counts and prefetch depths (backpressure on).
+
+use std::sync::Arc;
+
+use bload::benchkit::Bencher;
+use bload::config::{ExperimentConfig, StrategyName};
+use bload::dataset::synthetic::generate;
+use bload::loader::{EpochPlan, Prefetcher};
+use bload::packing::pack;
+
+fn main() {
+    let bench = Bencher::from_env();
+    let cfg = ExperimentConfig::default_config();
+    let ds = generate(&cfg.dataset.scaled(0.03), 0);
+    let packed =
+        Arc::new(pack(StrategyName::BLoad, &ds.train, &cfg.packing, 0)
+            .unwrap());
+    let split = Arc::new(ds.train);
+    let frames = split.total_frames() as f64;
+
+    for workers in [1usize, 2, 4, 8] {
+        for depth in [2usize, 8] {
+            let name = format!("loader/workers{workers}/depth{depth}");
+            bench.run(&name, frames, "frames", || {
+                let plan = EpochPlan::new(&packed, 1, 0, 2, true, 0, 0);
+                let mut pf = Prefetcher::spawn(Arc::clone(&split),
+                                               Arc::clone(&packed), &plan,
+                                               workers, depth);
+                let mut n = 0usize;
+                while let Some(b) = pf.next() {
+                    n += b.unwrap().real_frames;
+                }
+                pf.shutdown();
+                n
+            });
+        }
+    }
+
+    // Chunked packing hits the per-worker video cache hard: every long
+    // video appears in several blocks (§Perf L3 optimization #3).
+    let mut pcfg = cfg.packing.clone();
+    pcfg.t_block = 10;
+    let chunked = Arc::new(
+        bload::packing::pack(StrategyName::Sampling, &split, &pcfg, 0)
+            .unwrap(),
+    );
+    let chunk_frames = chunked.stats.frames_kept as f64;
+    for workers in [1usize, 4] {
+        let name = format!("loader/sampling_chunks/workers{workers}");
+        bench.run(&name, chunk_frames, "frames", || {
+            let plan = EpochPlan::new(&chunked, 1, 0, 2, true, 0, 0);
+            let mut pf = Prefetcher::spawn(Arc::clone(&split),
+                                           Arc::clone(&chunked), &plan,
+                                           workers, 4);
+            let mut n = 0usize;
+            while let Some(b) = pf.next() {
+                n += b.unwrap().real_frames;
+            }
+            pf.shutdown();
+            n
+        });
+    }
+}

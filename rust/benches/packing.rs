@@ -1,0 +1,29 @@
+//! Packing-throughput bench: all four strategies at several dataset
+//! scales (frames/s). The BLoad packer is `O(N·T_max)`; it must never be
+//! the pipeline bottleneck (paper: packing happens once per epoch).
+
+use bload::benchkit::Bencher;
+use bload::config::{ExperimentConfig, StrategyName};
+use bload::dataset::synthetic::generate;
+use bload::packing::pack;
+
+fn main() {
+    let bench = Bencher::from_env();
+    let cfg = ExperimentConfig::default_config();
+    for scale in [0.1f64, 1.0] {
+        let dcfg = cfg.dataset.scaled(scale);
+        let ds = generate(&dcfg, 0);
+        let frames = ds.train.total_frames() as f64;
+        for strategy in StrategyName::all() {
+            let name = format!(
+                "packing/{}/scale{scale}",
+                strategy.paper_label().replace(' ', "_")
+            );
+            let mut seed = 0u64;
+            bench.run(&name, frames, "frames", || {
+                seed += 1;
+                pack(strategy, &ds.train, &cfg.packing, seed).unwrap()
+            });
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Criterion-lite benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iterations with mean/p50/p95 statistics,
+//! throughput units, and a stable one-line output format that
+//! `cargo bench` benches (with `harness = false`) print:
+//!
+//! ```text
+//! bench packing/bload/full      mean 12.31ms  p50 12.12ms  p95 13.40ms  thr 13.5M frames/s  (n=30)
+//! ```
+
+use std::time::{Duration, Instant};
+
+use crate::util::humanize;
+use crate::util::stats::{percentile_sorted, Summary};
+
+/// One benchmark's timing result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    /// Optional throughput: (items per iteration, unit label).
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        let thr = match self.throughput {
+            Some((items, unit)) => format!(
+                "  thr {} {unit}/s",
+                humanize::rate(items, self.mean_s)
+                    .trim_end_matches("/s")
+                    .to_string()
+            ),
+            None => String::new(),
+        };
+        format!(
+            "bench {:<38} mean {:>9}  p50 {:>9}  p95 {:>9}{thr}  (n={})",
+            self.name,
+            humanize::duration(Duration::from_secs_f64(self.mean_s)),
+            humanize::duration(Duration::from_secs_f64(self.p50_s)),
+            humanize::duration(Duration::from_secs_f64(self.p95_s)),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Bencher {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: 3,
+            iters: 20,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Bencher {
+        Bencher {
+            warmup: 1,
+            iters: 5,
+        }
+    }
+
+    /// Honour `BLOAD_BENCH_FAST=1` (CI smoke mode).
+    pub fn from_env() -> Bencher {
+        if std::env::var("BLOAD_BENCH_FAST").as_deref() == Ok("1") {
+            Bencher::quick()
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Run `f` repeatedly; `items` is the per-iteration work amount for
+    /// throughput reporting (pass 0.0 to omit).
+    pub fn run<T>(&self, name: &str, items: f64, unit: &'static str,
+                  mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters.max(1) {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let s = Summary::of(&samples).expect("non-empty");
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_s: s.mean,
+            p50_s: percentile_sorted(&sorted, 50.0),
+            p95_s: percentile_sorted(&sorted, 95.0),
+            min_s: sorted[0],
+            throughput: (items > 0.0).then_some((items, unit)),
+        };
+        println!("{}", result.line());
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bencher {
+            warmup: 1,
+            iters: 5,
+        };
+        let r = b.run("test/sleepless", 100.0, "items", || {
+            std::hint::black_box((0..1000).sum::<usize>())
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.p95_s >= r.p50_s);
+        let line = r.line();
+        assert!(line.contains("test/sleepless"));
+        assert!(line.contains("thr"));
+    }
+
+    #[test]
+    fn no_throughput_when_zero_items() {
+        let r = Bencher::quick().run("x", 0.0, "items", || 1);
+        assert!(r.throughput.is_none());
+        assert!(!r.line().contains("thr"));
+    }
+}

@@ -1,0 +1,160 @@
+//! Tiny argv parser: one positional command + `--key value` / `--switch`
+//! flags, with typed accessors and unknown-flag detection.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed argv.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    command: Option<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags actually read by the command (for unknown-flag errors).
+    consumed: std::collections::BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program name).
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::Config("stray '--'".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len()
+                    && !argv[i + 1].starts_with("--")
+                {
+                    out.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    // Boolean switch.
+                    out.flags.insert(name.to_string(), "true".into());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a.clone());
+            } else {
+                return Err(Error::Config(format!(
+                    "unexpected positional argument '{a}'"
+                )));
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn command(&self) -> Option<&str> {
+        self.command.as_deref()
+    }
+
+    pub fn flag_str(&mut self, name: &str, default: &str) -> String {
+        self.consumed.insert(name.to_string());
+        self.flags
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn flag_bool(&mut self, name: &str) -> bool {
+        self.consumed.insert(name.to_string());
+        matches!(
+            self.flags.get(name).map(String::as_str),
+            Some("true") | Some("1") | Some("yes")
+        )
+    }
+
+    pub fn flag_usize(&mut self, name: &str, default: usize)
+                      -> Result<usize> {
+        self.consumed.insert(name.to_string());
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!(
+                    "--{name} expects an integer, got '{v}'"
+                ))
+            }),
+        }
+    }
+
+    pub fn flag_u64(&mut self, name: &str, default: u64) -> Result<u64> {
+        Ok(self.flag_usize(name, default as usize)? as u64)
+    }
+
+    pub fn flag_f64(&mut self, name: &str, default: f64) -> Result<f64> {
+        self.consumed.insert(name.to_string());
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!(
+                    "--{name} expects a number, got '{v}'"
+                ))
+            }),
+        }
+    }
+
+    /// Error on flags that no accessor consumed ("--help" always allowed).
+    pub fn finish(&mut self) -> Result<()> {
+        self.consumed.insert("help".into());
+        for k in self.flags.keys() {
+            if !self.consumed.contains(k) {
+                return Err(Error::Config(format!("unknown flag '--{k}'")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let mut a = Args::parse(&argv(&[
+            "pack", "--strategy", "bload", "--seed=7", "--full",
+        ]))
+        .unwrap();
+        assert_eq!(a.command(), Some("pack"));
+        assert_eq!(a.flag_str("strategy", ""), "bload");
+        assert_eq!(a.flag_u64("seed", 0).unwrap(), 7);
+        assert!(a.flag_bool("full"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let mut a =
+            Args::parse(&argv(&["pack", "--bogus", "1"])).unwrap();
+        let _ = a.flag_str("strategy", "");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn type_errors() {
+        let mut a =
+            Args::parse(&argv(&["x", "--n", "abc"])).unwrap();
+        assert!(a.flag_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn double_positional_rejected() {
+        assert!(Args::parse(&argv(&["a", "b"])).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = Args::parse(&argv(&["cmd"])).unwrap();
+        assert_eq!(a.flag_usize("epochs", 3).unwrap(), 3);
+        assert_eq!(a.flag_str("out", "/tmp/x"), "/tmp/x");
+        assert!(!a.flag_bool("full"));
+    }
+}

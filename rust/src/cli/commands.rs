@@ -1,0 +1,244 @@
+//! Subcommand implementations.
+
+use std::sync::Arc;
+
+use crate::config::{ExperimentConfig, StrategyName};
+use crate::dataset::stats::SplitStats;
+use crate::dataset::store::StoreWriter;
+use crate::dataset::synthetic::generate;
+use crate::error::{Error, Result};
+use crate::harness::{ablation as abl, deadlock, table1};
+use crate::packing::{pack, validate::validate, viz};
+use crate::runtime::{ArtifactManifest, Engine};
+use crate::train::Trainer;
+use crate::util::humanize::commas;
+
+use super::args::Args;
+
+fn strategy_flag(args: &mut Args) -> Result<StrategyName> {
+    let raw = args.flag_str("strategy", "bload");
+    StrategyName::parse(&raw).ok_or_else(|| {
+        Error::Config(format!(
+            "--strategy '{raw}' unknown (bload|naive|sampling|mix_pad)"
+        ))
+    })
+}
+
+/// `bload gen-data --out PATH [--scale F] [--seed N]`
+pub fn gen_data(args: &mut Args) -> Result<i32> {
+    let out = args.flag_str("out", "agsynth.blds");
+    let scale = args.flag_f64("scale", 0.01)?;
+    let seed = args.flag_u64("seed", 0)?;
+    args.finish()?;
+    let cfg = ExperimentConfig::default_config().dataset.scaled(scale);
+    let ds = generate(&cfg, seed);
+    let split = &ds.train;
+    let path = std::path::Path::new(&out);
+    let mut w = StoreWriter::create(
+        path,
+        seed,
+        (cfg.objects as u32, cfg.feat_dim as u32, cfg.classes as u32),
+        split.videos.len() as u32,
+    )?;
+    for v in &split.videos {
+        w.append(&split.spec.materialize(*v))?;
+    }
+    w.finish()?;
+    println!(
+        "wrote {} videos / {} frames to {out}",
+        commas(split.videos.len() as u64),
+        commas(split.total_frames() as u64)
+    );
+    Ok(0)
+}
+
+/// `bload inspect [--scale F] [--seed N]`
+pub fn inspect(args: &mut Args) -> Result<i32> {
+    let scale = args.flag_f64("scale", 1.0)?;
+    let seed = args.flag_u64("seed", 0)?;
+    args.finish()?;
+    let cfg = ExperimentConfig::default_config().dataset.scaled(scale);
+    let ds = generate(&cfg, seed);
+    println!("{}", SplitStats::of(&ds.train).report("train"));
+    println!("{}", SplitStats::of(&ds.test).report("test"));
+    Ok(0)
+}
+
+/// `bload pack --strategy S [--scale F] [--seed N]`
+pub fn pack_cmd(args: &mut Args) -> Result<i32> {
+    let strat = strategy_flag(args)?;
+    let scale = args.flag_f64("scale", 1.0)?;
+    let seed = args.flag_u64("seed", 0)?;
+    args.finish()?;
+    let cfg = ExperimentConfig::default_config();
+    let ds = generate(&cfg.dataset.scaled(scale), seed);
+    let t0 = std::time::Instant::now();
+    let packed = pack(strat, &ds.train, &cfg.packing, seed)?;
+    let dt = t0.elapsed();
+    validate(&packed, &ds.train, strat == StrategyName::MixPad)?;
+    println!("{}", packed.stats);
+    println!(
+        "packed {} videos in {} ({} frames/s); validation OK",
+        commas(ds.train.videos.len() as u64),
+        crate::util::humanize::duration(dt),
+        crate::util::humanize::rate(ds.train.total_frames() as f64,
+                                    dt.as_secs_f64())
+    );
+    Ok(0)
+}
+
+/// `bload pack-viz [--strategy S|none] [--rows N]`
+pub fn pack_viz(args: &mut Args) -> Result<i32> {
+    let raw = args.flag_str("strategy", "bload");
+    let rows = args.flag_usize("rows", 16)?;
+    let seed = args.flag_u64("seed", 0)?;
+    args.finish()?;
+    // The Fig 1 toy scale: 8 videos of 2..6 frames, T_max = 6.
+    let dcfg = crate::dataset::synthetic::tiny_config();
+    let ds = generate(&dcfg, seed);
+    println!("— Fig 1: the raw dataset —");
+    println!("{}", viz::render_dataset(&ds.train, rows));
+    if raw == "none" {
+        return Ok(0);
+    }
+    let strat = StrategyName::parse(&raw).ok_or_else(|| {
+        Error::Config(format!("--strategy '{raw}' unknown"))
+    })?;
+    let mut pcfg = ExperimentConfig::default_config().packing;
+    pcfg.t_max = 6;
+    pcfg.t_block = 3;
+    pcfg.t_mix = 3;
+    let packed = pack(strat, &ds.train, &pcfg, seed)?;
+    let fig = match strat {
+        StrategyName::NaivePad => "Fig 3 (naive padding)",
+        StrategyName::Sampling => "Fig 4 (sampling/chunking)",
+        StrategyName::MixPad => "mix pad",
+        StrategyName::BLoad => "Fig 5 (BLoad block packing)",
+    };
+    println!("— {fig} — ('░' = padding, lowercase = within-video pad)");
+    println!("{}", viz::render_packed(&packed, &ds.train, rows));
+    Ok(0)
+}
+
+/// `bload table1 [--full] [--include-naive] [--epochs N] [--videos N]`
+pub fn table1(args: &mut Args) -> Result<i32> {
+    let opts = table1::Table1Options {
+        train: args.flag_bool("full"),
+        include_naive_training: args.flag_bool("include-naive"),
+        train_videos: args.flag_usize("videos", 700)?,
+        test_videos: args.flag_usize("test-videos", 150)?,
+        epochs: args.flag_usize("epochs", 3)?,
+        artifacts_dir: args.flag_str("artifacts", "artifacts"),
+        seed: args.flag_u64("seed", 0)?,
+    };
+    let json_out = args.flag_str("json", "");
+    args.finish()?;
+    let report = table1::run(&opts)?;
+    println!("{}", table1::render(&report));
+    if !json_out.is_empty() {
+        std::fs::write(&json_out, table1::to_json(&report))
+            .map_err(|e| Error::io(&json_out, e))?;
+        println!("wrote {json_out}");
+    }
+    Ok(0)
+}
+
+/// `bload epoch-time-full [--max-steps N] [--strategies a,b,c]`
+///
+/// Table I time column at full paper geometry (7,464 videos / 166,785
+/// frames), each strategy at its native block length. Needs the `full`
+/// and `mix22` artifact profiles (`make artifacts PROFILES=full,mix22`).
+pub fn epoch_time_full(args: &mut Args) -> Result<i32> {
+    let max_steps = args.flag_usize("max-steps", 0)?;
+    let raw = args.flag_str("strategies", "naive,sampling,mix_pad,bload");
+    let artifacts = args.flag_str("artifacts", "artifacts");
+    let seed = args.flag_u64("seed", 0)?;
+    args.finish()?;
+    let strategies: Vec<StrategyName> = raw
+        .split(',')
+        .map(|s| {
+            StrategyName::parse(s.trim()).ok_or_else(|| {
+                Error::Config(format!("unknown strategy '{s}'"))
+            })
+        })
+        .collect::<Result<_>>()?;
+    let rows = crate::harness::epoch_full::run(&strategies, max_steps, seed,
+                                               &artifacts)?;
+    println!("{}", crate::harness::epoch_full::render(&rows));
+    Ok(0)
+}
+
+/// `bload deadlock-demo [--ranks N] [--batch N] [--timeout-ms N]`
+pub fn deadlock_demo(args: &mut Args) -> Result<i32> {
+    let ranks = args.flag_usize("ranks", 2)?;
+    let batch = args.flag_usize("batch", 2)?;
+    let timeout = args.flag_u64("timeout-ms", 500)?;
+    let seed = args.flag_u64("seed", 3)?;
+    args.finish()?;
+    let demo = deadlock::run(ranks, batch, seed, timeout)?;
+    println!("{}", deadlock::render(&demo));
+    Ok(if demo.packed_completed { 0 } else { 1 })
+}
+
+/// `bload train --config FILE [--profile P]`
+pub fn train(args: &mut Args) -> Result<i32> {
+    let config_path = args.flag_str("config", "");
+    let seed_override = args.flag_u64("seed", u64::MAX)?;
+    args.finish()?;
+    let mut cfg = if config_path.is_empty() {
+        ExperimentConfig::default_config()
+    } else {
+        crate::config::load(&config_path)?
+    };
+    if seed_override != u64::MAX {
+        cfg.seed = seed_override;
+    }
+    let ds = generate(&cfg.dataset, cfg.seed);
+    let packed = Arc::new(pack(cfg.packing.strategy, &ds.train,
+                               &cfg.packing, cfg.seed)?);
+    validate(&packed, &ds.train,
+             cfg.packing.strategy == StrategyName::MixPad)?;
+    println!("{}", packed.stats);
+
+    let manifest = ArtifactManifest::load(std::path::Path::new(
+        &cfg.runtime.artifacts_dir,
+    ))?;
+    let spec = manifest.profile(&cfg.runtime.profile)?.clone();
+    if spec.block_len != packed.block_len {
+        return Err(Error::Config(format!(
+            "profile '{}' has T={}, packed blocks have T={}; choose a \
+             matching profile or packing.t_max",
+            spec.name, spec.block_len, packed.block_len
+        )));
+    }
+    let engine = Engine::load(spec)?;
+    let mut trainer = Trainer::new(engine, cfg.train.clone(),
+                                   cfg.ddp.clone(), cfg.loader.clone(),
+                                   cfg.seed)?;
+    let train_split = Arc::new(ds.train);
+    for epoch in 0..cfg.train.epochs as u64 {
+        trainer.train_epoch(&train_split, &packed, epoch)?;
+    }
+    let packed_test = Arc::new(pack(cfg.packing.strategy, &ds.test,
+                                    &cfg.packing, cfg.seed + 1)?);
+    let test_split = Arc::new(ds.test);
+    let recall = trainer.evaluate(&test_split, &packed_test, &cfg.eval)?;
+    println!("recall@{} = {recall:.2}%", cfg.eval.recall_k);
+    println!("\ntimings:\n{}", trainer.timings.report());
+    Ok(0)
+}
+
+/// `bload ablation [--epochs N] [--videos N]`
+pub fn ablation(args: &mut Args) -> Result<i32> {
+    let opts = abl::AblationOptions {
+        train_videos: args.flag_usize("videos", 500)?,
+        test_videos: args.flag_usize("test-videos", 120)?,
+        epochs: args.flag_usize("epochs", 3)?,
+        artifacts_dir: args.flag_str("artifacts", "artifacts"),
+        seed: args.flag_u64("seed", 0)?,
+    };
+    args.finish()?;
+    let rows = abl::run(&opts)?;
+    println!("{}", abl::render(&rows));
+    Ok(0)
+}

@@ -1,0 +1,84 @@
+//! Command-line interface (no `clap` offline — a small hand-rolled
+//! parser with subcommands, long flags and `--help` text).
+//!
+//! ```text
+//! bload <command> [--flag value]...
+//!
+//! commands:
+//!   gen-data       generate + persist an AG-Synth dataset store
+//!   inspect        dataset statistics (Fig 1 histogram)
+//!   pack           pack a split and print stats (+ validation)
+//!   pack-viz       ASCII rendering of packed blocks (Figs 1/3/4/5)
+//!   table1         reproduce Table I (add --full for measured runs)
+//!   deadlock-demo  reproduce Fig 2 and show BLoad completing
+//!   train          end-to-end training run from a config file
+//!   ablation       reset-table / state-carry ablations (Fig 6)
+//! ```
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+use crate::error::Result;
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: &[String]) -> Result<i32> {
+    let mut args = Args::parse(argv)?;
+    let cmd = match args.command() {
+        Some(c) => c.to_string(),
+        None => {
+            println!("{}", help());
+            return Ok(2);
+        }
+    };
+    if args.flag_bool("help") {
+        println!("{}", help());
+        return Ok(0);
+    }
+    match cmd.as_str() {
+        "gen-data" => commands::gen_data(&mut args),
+        "inspect" => commands::inspect(&mut args),
+        "pack" => commands::pack_cmd(&mut args),
+        "pack-viz" => commands::pack_viz(&mut args),
+        "table1" => commands::table1(&mut args),
+        "epoch-time-full" => commands::epoch_time_full(&mut args),
+        "deadlock-demo" => commands::deadlock_demo(&mut args),
+        "train" => commands::train(&mut args),
+        "ablation" => commands::ablation(&mut args),
+        other => {
+            eprintln!("unknown command '{other}'\n{}", help());
+            Ok(2)
+        }
+    }
+}
+
+/// Top-level help text.
+pub fn help() -> &'static str {
+    "bload — BLoad block-packed data loading for DDP training (paper \
+reproduction)
+
+USAGE:
+    bload <command> [flags]
+
+COMMANDS:
+    gen-data       generate an AG-Synth dataset store (--out PATH \
+[--scale F] [--seed N])
+    inspect        dataset statistics (--scale F) (Fig 1)
+    pack           pack + validate (--strategy S) (--scale F)
+    pack-viz       ASCII block layouts (--strategy S) (Figs 1/3/4/5)
+    table1         reproduce Table I (--full to train; --epochs N; \
+--videos N; --include-naive)
+    epoch-time-full  Table I time column at full paper geometry \
+(--max-steps N caps long arms)
+    deadlock-demo  reproduce Fig 2 (--ranks N --batch N --timeout-ms N)
+    train          full training run (--config FILE)
+    ablation       reset-table / state-carry ablations (--epochs N)
+
+COMMON FLAGS:
+    --seed N           PRNG seed (default 0)
+    --artifacts DIR    artifact directory (default artifacts)
+    --help             this text
+
+Set BLOAD_LOG=debug for verbose logging."
+}

@@ -1,0 +1,126 @@
+//! Typed experiment configuration.
+//!
+//! Experiments are described by TOML-subset files (see `configs/`); this
+//! module maps [`crate::configfmt::Doc`] documents onto typed structs with
+//! defaults, range validation and "did you mean" unknown-key errors.
+
+mod reader;
+mod schema;
+
+pub use reader::Reader;
+pub use schema::{
+    DatasetConfig, DdpConfig, EvalConfig, ExperimentConfig, LoaderConfig,
+    PackingConfig, RuntimeConfig, StrategyName, TrainConfig,
+};
+
+use crate::configfmt::parse_doc;
+use crate::error::{Error, Result};
+
+/// Load an [`ExperimentConfig`] from a file path.
+pub fn load(path: &str) -> Result<ExperimentConfig> {
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| Error::io(path, e))?;
+    from_str(path, &src)
+}
+
+/// Parse an [`ExperimentConfig`] from source text.
+pub fn from_str(file: &str, src: &str) -> Result<ExperimentConfig> {
+    let doc = parse_doc(file, src)?;
+    ExperimentConfig::from_doc(&doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_parse_from_empty() {
+        let cfg = from_str("t", "").unwrap();
+        assert_eq!(cfg.dataset.train_videos, 7464); // Action Genome scale
+        assert_eq!(cfg.packing.t_max, 94);
+        assert_eq!(cfg.ddp.ranks, 8);
+        assert_eq!(cfg.eval.recall_k, 20);
+    }
+
+    #[test]
+    fn full_roundtrip() {
+        let cfg = from_str(
+            "t",
+            r#"
+            seed = 7
+            [dataset]
+            train_videos = 100
+            test_videos = 20
+            min_len = 3
+            max_len = 30
+            mean_len = 10.0
+            [packing]
+            strategy = "bload"
+            t_max = 30
+            [ddp]
+            ranks = 4
+            batch_per_rank = 2
+            [train]
+            epochs = 2
+            lr = 0.05
+            [runtime]
+            profile = "tiny"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.dataset.train_videos, 100);
+        assert_eq!(cfg.packing.strategy, StrategyName::BLoad);
+        assert_eq!(cfg.packing.t_max, 30);
+        assert_eq!(cfg.ddp.ranks, 4);
+        assert!((cfg.train.lr - 0.05).abs() < 1e-12);
+        assert_eq!(cfg.runtime.profile, "tiny");
+    }
+
+    #[test]
+    fn unknown_key_suggests() {
+        let err = from_str("t", "[dataset]\ntrain_video = 1\n").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown key"), "{msg}");
+        assert!(msg.contains("train_videos"), "no suggestion in: {msg}");
+    }
+
+    #[test]
+    fn unknown_section_rejected() {
+        let err = from_str("t", "[dataste]\n").unwrap_err();
+        assert!(err.to_string().contains("unknown section"), "{err}");
+    }
+
+    #[test]
+    fn validation_catches_bad_ranges() {
+        let err = from_str("t", "[dataset]\nmin_len = 0\n").unwrap_err();
+        assert!(err.to_string().contains("min_len"), "{err}");
+        let err =
+            from_str("t", "[dataset]\nmin_len = 9\nmax_len = 4\n").unwrap_err();
+        assert!(err.to_string().contains("max_len"), "{err}");
+        let err = from_str("t", "[train]\nlr = -1.0\n").unwrap_err();
+        assert!(err.to_string().contains("lr"), "{err}");
+        let err = from_str("t", "[ddp]\nranks = 0\n").unwrap_err();
+        assert!(err.to_string().contains("ranks"), "{err}");
+    }
+
+    #[test]
+    fn strategy_names() {
+        for (s, want) in [
+            ("bload", StrategyName::BLoad),
+            ("block_pad", StrategyName::BLoad),
+            ("naive", StrategyName::NaivePad),
+            ("0_padding", StrategyName::NaivePad),
+            ("sampling", StrategyName::Sampling),
+            ("mix_pad", StrategyName::MixPad),
+        ] {
+            let cfg = from_str(
+                "t",
+                &format!("[packing]\nstrategy = \"{s}\"\n"),
+            )
+            .unwrap();
+            assert_eq!(cfg.packing.strategy, want, "{s}");
+        }
+        assert!(from_str("t", "[packing]\nstrategy = \"nope\"\n").is_err());
+    }
+}

@@ -1,0 +1,177 @@
+//! Section reader with typed accessors, unknown-key detection and
+//! Levenshtein "did you mean" suggestions.
+
+use std::collections::BTreeSet;
+
+use crate::configfmt::{CValue, Doc};
+use crate::error::{Error, Result};
+
+/// Typed view over one `[section]` of a parsed document.
+pub struct Reader<'a> {
+    doc: &'a Doc,
+    section: &'a str,
+    known: BTreeSet<&'static str>,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(doc: &'a Doc, section: &'a str) -> Reader<'a> {
+        Reader {
+            doc,
+            section,
+            known: BTreeSet::new(),
+        }
+    }
+
+    fn err(&self, key: &str, msg: String) -> Error {
+        let line = self
+            .doc
+            .item(self.section, key)
+            .map(|i| i.line)
+            .unwrap_or(0);
+        Error::Parse {
+            file: self.doc.file.clone(),
+            line,
+            col: 1,
+            msg,
+        }
+    }
+
+    fn value(&mut self, key: &'static str) -> Option<&'a CValue> {
+        self.known.insert(key);
+        self.doc.get(self.section, key)
+    }
+
+    pub fn usize(&mut self, key: &'static str, default: usize) -> Result<usize> {
+        match self.value(key) {
+            None => Ok(default),
+            Some(v) => v.as_usize().ok_or_else(|| {
+                self.err(key, format!(
+                    "key '{key}' expects a non-negative integer, got {}",
+                    v.type_name()
+                ))
+            }),
+        }
+    }
+
+    pub fn u64(&mut self, key: &'static str, default: u64) -> Result<u64> {
+        Ok(self.usize(key, default as usize)? as u64)
+    }
+
+    pub fn f64(&mut self, key: &'static str, default: f64) -> Result<f64> {
+        match self.value(key) {
+            None => Ok(default),
+            Some(v) => v.as_f64().ok_or_else(|| {
+                self.err(key, format!(
+                    "key '{key}' expects a number, got {}",
+                    v.type_name()
+                ))
+            }),
+        }
+    }
+
+    pub fn bool(&mut self, key: &'static str, default: bool) -> Result<bool> {
+        match self.value(key) {
+            None => Ok(default),
+            Some(v) => v.as_bool().ok_or_else(|| {
+                self.err(key, format!(
+                    "key '{key}' expects true/false, got {}",
+                    v.type_name()
+                ))
+            }),
+        }
+    }
+
+    pub fn string(&mut self, key: &'static str, default: &str) -> Result<String> {
+        match self.value(key) {
+            None => Ok(default.to_string()),
+            Some(v) => v
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| {
+                    self.err(key, format!(
+                        "key '{key}' expects a string, got {}",
+                        v.type_name()
+                    ))
+                }),
+        }
+    }
+
+    /// After reading every expected key, reject unknown ones (with a
+    /// nearest-known-key suggestion).
+    pub fn finish(self) -> Result<()> {
+        for key in self.doc.keys(self.section) {
+            if !self.known.contains(key) {
+                let suggestion = self
+                    .known
+                    .iter()
+                    .map(|k| (levenshtein(key, k), *k))
+                    .min()
+                    .filter(|(d, _)| *d <= 3)
+                    .map(|(_, k)| format!(" (did you mean '{k}'?)"))
+                    .unwrap_or_default();
+                return Err(self.err(
+                    key,
+                    format!(
+                        "unknown key '{key}' in section '[{}]'{suggestion}",
+                        self.section
+                    ),
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Classic DP Levenshtein distance (keys are short; O(nm) is fine).
+pub fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for i in 1..=a.len() {
+        cur[0] = i;
+        for j in 1..=b.len() {
+            let cost = usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = (prev[j] + 1)
+                .min(cur[j - 1] + 1)
+                .min(prev[j - 1] + cost);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configfmt::parse_doc;
+
+    #[test]
+    fn typed_reads_with_defaults() {
+        let doc = parse_doc("t", "[s]\nx = 3\ny = 2.5\nz = \"hi\"\n").unwrap();
+        let mut r = Reader::new(&doc, "s");
+        assert_eq!(r.usize("x", 9).unwrap(), 3);
+        assert_eq!(r.f64("y", 0.0).unwrap(), 2.5);
+        assert_eq!(r.string("z", "").unwrap(), "hi");
+        assert_eq!(r.usize("missing", 7).unwrap(), 7);
+        assert!(r.bool("flag", true).unwrap());
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn type_errors_name_key_and_line() {
+        let doc = parse_doc("t", "[s]\nx = \"str\"\n").unwrap();
+        let mut r = Reader::new(&doc, "s");
+        let err = r.usize("x", 0).unwrap_err().to_string();
+        assert!(err.contains("'x'"), "{err}");
+        assert!(err.contains("t:2"), "{err}");
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein("", ""), 0);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+        assert_eq!(levenshtein("t_max", "tmax"), 1);
+    }
+}

@@ -1,0 +1,152 @@
+//! Line-oriented lexer for the TOML subset.
+
+use crate::error::{Error, Result};
+
+/// A meaningful line of a config file.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Line {
+    /// `[section]` or `[a.b]`
+    Section(String),
+    /// `key = <raw value text>`
+    KeyValue { key: String, raw: String },
+}
+
+/// Strip comments (respecting quoted strings) and classify each line.
+/// Returns `(line_number, Line)` pairs.
+pub fn lex(file: &str, src: &str) -> Result<Vec<(usize, Line)>> {
+    let mut out = Vec::new();
+    for (idx, rawline) in src.lines().enumerate() {
+        let lineno = idx + 1;
+        let stripped = strip_comment(rawline);
+        let trimmed = stripped.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if let Some(rest) = trimmed.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| Error::Parse {
+                file: file.into(),
+                line: lineno,
+                col: trimmed.len(),
+                msg: "unterminated section header".into(),
+            })?;
+            let name = name.trim();
+            if name.is_empty()
+                || !name
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || "._-".contains(c))
+            {
+                return Err(Error::Parse {
+                    file: file.into(),
+                    line: lineno,
+                    col: 1,
+                    msg: format!("invalid section name '{name}'"),
+                });
+            }
+            out.push((lineno, Line::Section(name.to_string())));
+        } else if let Some(eq) = find_unquoted(trimmed, '=') {
+            let key = trimmed[..eq].trim();
+            let raw = trimmed[eq + 1..].trim();
+            if key.is_empty()
+                || !key
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || "_-".contains(c))
+            {
+                return Err(Error::Parse {
+                    file: file.into(),
+                    line: lineno,
+                    col: 1,
+                    msg: format!("invalid key '{key}'"),
+                });
+            }
+            if raw.is_empty() {
+                return Err(Error::Parse {
+                    file: file.into(),
+                    line: lineno,
+                    col: eq + 1,
+                    msg: format!("missing value for key '{key}'"),
+                });
+            }
+            out.push((
+                lineno,
+                Line::KeyValue {
+                    key: key.to_string(),
+                    raw: raw.to_string(),
+                },
+            ));
+        } else {
+            return Err(Error::Parse {
+                file: file.into(),
+                line: lineno,
+                col: 1,
+                msg: format!("expected 'key = value' or '[section]', got \
+                              '{trimmed}'"),
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Remove a `#` comment unless it is inside a double-quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut prev_escape = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' if !prev_escape => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        prev_escape = c == '\\' && !prev_escape;
+    }
+    line
+}
+
+/// First unquoted occurrence of `target`.
+fn find_unquoted(line: &str, target: char) -> Option<usize> {
+    let mut in_str = false;
+    let mut prev_escape = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' if !prev_escape => in_str = !in_str,
+            c2 if c2 == target && !in_str => return Some(i),
+            _ => {}
+        }
+        prev_escape = c == '\\' && !prev_escape;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_respect_strings() {
+        assert_eq!(strip_comment(r#"a = "x # y" # real"#), r#"a = "x # y" "#);
+        assert_eq!(strip_comment("plain # c"), "plain ");
+    }
+
+    #[test]
+    fn lexes_sections_and_pairs() {
+        let lines = lex("t", "[s]\nk = 1\n").unwrap();
+        assert_eq!(lines[0].1, Line::Section("s".into()));
+        assert_eq!(
+            lines[1].1,
+            Line::KeyValue {
+                key: "k".into(),
+                raw: "1".into()
+            }
+        );
+    }
+
+    #[test]
+    fn rejects_bad_section() {
+        assert!(lex("t", "[bad name]\n").is_err());
+        assert!(lex("t", "[unterminated\n").is_err());
+    }
+
+    #[test]
+    fn rejects_naked_text() {
+        assert!(lex("t", "what is this\n").is_err());
+    }
+}

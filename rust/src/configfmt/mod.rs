@@ -1,0 +1,155 @@
+//! TOML-subset parser for experiment configuration files.
+//!
+//! Supported grammar (covers everything in `configs/`):
+//!
+//! ```toml
+//! # comment
+//! [section]            # tables, one level of nesting via [a.b]
+//! key = "string"
+//! count = 42           # integers
+//! ratio = 0.75         # floats (also 1e-3)
+//! flag = true          # booleans
+//! dims = [1, 2, 3]     # homogeneous arrays of the above scalars
+//! ```
+//!
+//! Deliberately *not* supported (rejected with a clear error): multi-line
+//! strings, inline tables, arrays-of-tables, datetimes. The typed layer in
+//! [`crate::config`] consumes the [`Doc`] produced here.
+
+mod lexer;
+mod parser;
+
+pub use parser::{parse_doc, Doc, Item};
+
+/// A scalar or array config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<CValue>),
+}
+
+impl CValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            CValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            CValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            CValue::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`lr = 1` ≡ `1.0`).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            CValue::Float(f) => Some(*f),
+            CValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            CValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[CValue]> {
+        match self {
+            CValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            CValue::Str(_) => "string",
+            CValue::Int(_) => "integer",
+            CValue::Float(_) => "float",
+            CValue::Bool(_) => "boolean",
+            CValue::Array(_) => "array",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document() {
+        let doc = parse_doc(
+            "file.toml",
+            r#"
+            # top comment
+            title = "bload"      # inline comment
+            seed = 42
+
+            [dataset]
+            videos = 7464
+            mean_len = 22.345
+            lengths = [3, 94]
+            synthetic = true
+
+            [pack.bload]
+            t_max = 94
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "title").unwrap().as_str(), Some("bload"));
+        assert_eq!(doc.get("", "seed").unwrap().as_i64(), Some(42));
+        assert_eq!(doc.get("dataset", "videos").unwrap().as_usize(),
+                   Some(7464));
+        assert_eq!(doc.get("dataset", "mean_len").unwrap().as_f64(),
+                   Some(22.345));
+        assert_eq!(doc.get("dataset", "synthetic").unwrap().as_bool(),
+                   Some(true));
+        assert_eq!(doc.get("pack.bload", "t_max").unwrap().as_i64(), Some(94));
+        let arr = doc.get("dataset", "lengths").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 2);
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        let err = parse_doc("x", "a = 1\na = 2\n").unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn error_has_location() {
+        let err = parse_doc("conf.toml", "ok = 1\nbroken = \n").unwrap_err();
+        let s = err.to_string();
+        assert!(s.contains("conf.toml:2"), "{s}");
+    }
+
+    #[test]
+    fn negative_and_exponent_numbers() {
+        let doc = parse_doc("x", "a = -5\nb = -0.5\nc = 1e-3\n").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_i64(), Some(-5));
+        assert_eq!(doc.get("", "b").unwrap().as_f64(), Some(-0.5));
+        assert_eq!(doc.get("", "c").unwrap().as_f64(), Some(1e-3));
+    }
+
+    #[test]
+    fn unknown_section_listing() {
+        let doc = parse_doc("x", "[a]\nk = 1\n[b]\nk = 2\n").unwrap();
+        let mut sections = doc.sections();
+        sections.sort();
+        assert_eq!(sections, vec!["a", "b"]);
+    }
+}

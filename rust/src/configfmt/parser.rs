@@ -1,0 +1,227 @@
+//! Value parsing + document assembly for the TOML subset.
+
+use std::collections::BTreeMap;
+
+use super::lexer::{lex, Line};
+use super::CValue;
+use crate::error::{Error, Result};
+
+/// One `key = value` item with its source location (for error messages in
+/// the typed layer).
+#[derive(Debug, Clone)]
+pub struct Item {
+    pub value: CValue,
+    pub line: usize,
+}
+
+/// A parsed config document: `section -> key -> item`. Root-level keys use
+/// the empty-string section.
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    pub file: String,
+    tables: BTreeMap<String, BTreeMap<String, Item>>,
+}
+
+impl Doc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&CValue> {
+        self.tables
+            .get(section)
+            .and_then(|t| t.get(key))
+            .map(|i| &i.value)
+    }
+
+    pub fn item(&self, section: &str, key: &str) -> Option<&Item> {
+        self.tables.get(section).and_then(|t| t.get(key))
+    }
+
+    pub fn sections(&self) -> Vec<&str> {
+        self.tables
+            .keys()
+            .filter(|k| !k.is_empty())
+            .map(|s| s.as_str())
+            .collect()
+    }
+
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.tables
+            .get(section)
+            .map(|t| t.keys().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn has_section(&self, section: &str) -> bool {
+        self.tables.contains_key(section)
+    }
+}
+
+/// Parse a config document from source text.
+pub fn parse_doc(file: &str, src: &str) -> Result<Doc> {
+    let mut doc = Doc {
+        file: file.to_string(),
+        tables: BTreeMap::new(),
+    };
+    let mut current = String::new();
+    doc.tables.entry(current.clone()).or_default();
+
+    for (lineno, line) in lex(file, src)? {
+        match line {
+            Line::Section(name) => {
+                current = name;
+                doc.tables.entry(current.clone()).or_default();
+            }
+            Line::KeyValue { key, raw } => {
+                let value = parse_value(file, lineno, &raw)?;
+                let table = doc.tables.get_mut(&current).unwrap();
+                if table
+                    .insert(key.clone(), Item { value, line: lineno })
+                    .is_some()
+                {
+                    return Err(Error::Parse {
+                        file: file.into(),
+                        line: lineno,
+                        col: 1,
+                        msg: format!(
+                            "duplicate key '{key}' in section '[{current}]'"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    Ok(doc)
+}
+
+fn parse_value(file: &str, line: usize, raw: &str) -> Result<CValue> {
+    let perr = |msg: String| Error::Parse {
+        file: file.into(),
+        line,
+        col: 1,
+        msg,
+    };
+    let raw = raw.trim();
+    if let Some(inner) = raw.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| perr("unterminated string".into()))?;
+        return Ok(CValue::Str(unescape(inner)));
+    }
+    if raw == "true" {
+        return Ok(CValue::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(CValue::Bool(false));
+    }
+    if let Some(inner) = raw.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| perr("unterminated array".into()))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(CValue::Array(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                return Err(perr("empty array element".into()));
+            }
+            items.push(parse_value(file, line, part)?);
+        }
+        return Ok(CValue::Array(items));
+    }
+    // Numbers: integer if it parses as i64 and contains no float syntax.
+    let is_floaty = raw.contains('.') || raw.contains('e') || raw.contains('E');
+    if !is_floaty {
+        if let Ok(i) = raw.parse::<i64>() {
+            return Ok(CValue::Int(i));
+        }
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Ok(CValue::Float(f));
+    }
+    Err(perr(format!("cannot parse value '{raw}'")))
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Split on commas that are not inside strings (arrays are flat — nested
+/// arrays are not part of the subset).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    let mut prev_escape = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' if !prev_escape => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+        prev_escape = c == '\\' && !prev_escape;
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_kinds() {
+        assert_eq!(parse_value("t", 1, "42").unwrap(), CValue::Int(42));
+        assert_eq!(parse_value("t", 1, "4.5").unwrap(), CValue::Float(4.5));
+        assert_eq!(parse_value("t", 1, "true").unwrap(), CValue::Bool(true));
+        assert_eq!(
+            parse_value("t", 1, "\"a b\"").unwrap(),
+            CValue::Str("a b".into())
+        );
+    }
+
+    #[test]
+    fn arrays_with_strings_containing_commas() {
+        let v = parse_value("t", 1, r#"["a,b", "c"]"#).unwrap();
+        let arr = v.as_array().unwrap();
+        assert_eq!(arr[0].as_str(), Some("a,b"));
+        assert_eq!(arr[1].as_str(), Some("c"));
+    }
+
+    #[test]
+    fn escape_sequences() {
+        assert_eq!(
+            parse_value("t", 1, r#""a\nb\t\"q\"""#).unwrap(),
+            CValue::Str("a\nb\t\"q\"".into())
+        );
+    }
+
+    #[test]
+    fn large_int_falls_to_float() {
+        // > i64::MAX, no float syntax — still representable as f64.
+        let v = parse_value("t", 1, "99999999999999999999").unwrap();
+        assert!(matches!(v, CValue::Float(_)));
+    }
+}

@@ -1,0 +1,79 @@
+//! Split statistics and inspection helpers (`bload inspect`).
+
+use crate::util::humanize::commas;
+use crate::util::stats::Histogram;
+
+use super::Split;
+
+/// Aggregate statistics of a split.
+#[derive(Debug, Clone)]
+pub struct SplitStats {
+    pub videos: usize,
+    pub frames: usize,
+    pub min_len: usize,
+    pub max_len: usize,
+    pub mean_len: f64,
+    /// Histogram of lengths over `[min, max]` in 16 bins.
+    pub hist: Histogram,
+}
+
+impl SplitStats {
+    pub fn of(split: &Split) -> SplitStats {
+        let videos = split.videos.len();
+        let frames = split.total_frames();
+        let min_len = split.min_len();
+        let max_len = split.max_len();
+        let mut hist = Histogram::new(
+            min_len as f64,
+            max_len as f64 + 1.0,
+            16.min(max_len.saturating_sub(min_len) + 1).max(1),
+        );
+        for v in &split.videos {
+            hist.push(v.len as f64);
+        }
+        SplitStats {
+            videos,
+            frames,
+            min_len,
+            max_len,
+            mean_len: if videos > 0 {
+                frames as f64 / videos as f64
+            } else {
+                0.0
+            },
+            hist,
+        }
+    }
+
+    /// Multi-line human-readable report.
+    pub fn report(&self, name: &str) -> String {
+        format!(
+            "{name}: {} videos, {} frames, len [{}, {}], mean {:.2}\n  \
+             length histogram: {}",
+            commas(self.videos as u64),
+            commas(self.frames as u64),
+            self.min_len,
+            self.max_len,
+            self.mean_len,
+            self.hist.sparkline(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic::{generate, tiny_config};
+
+    #[test]
+    fn stats_and_report() {
+        let ds = generate(&tiny_config(), 3);
+        let s = SplitStats::of(&ds.train);
+        assert_eq!(s.videos, 8);
+        assert!(s.frames > 0);
+        assert!(s.min_len >= 2 && s.max_len <= 6);
+        let rep = s.report("train");
+        assert!(rep.contains("8 videos"), "{rep}");
+        assert!(rep.contains("histogram"));
+    }
+}

@@ -1,0 +1,301 @@
+//! On-disk binary store for materialized datasets.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic   "BLDS"            4 bytes
+//! version u32               (currently 1)
+//! seed    u64
+//! o, f, c u32 ×3            object slots, feature dim, classes
+//! n       u32               number of videos
+//! then per video:
+//!   id u32, len u32
+//!   feats  len*o*f  f32
+//!   labels len*o*c  f32
+//! footer: crc32 u32 over everything after the magic
+//! ```
+//!
+//! The store exists so examples can persist a materialized dataset and so
+//! the loader can be benchmarked against disk IO; the training pipeline
+//! normally materializes videos lazily (deterministically) instead.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::crc32::Hasher;
+
+use super::VideoData;
+
+const MAGIC: &[u8; 4] = b"BLDS";
+const VERSION: u32 = 1;
+
+/// Writer that streams videos to disk while hashing.
+pub struct StoreWriter<W: Write> {
+    out: W,
+    hasher: Hasher,
+    geometry: (u32, u32, u32),
+    written: u32,
+    expected: u32,
+}
+
+impl StoreWriter<BufWriter<std::fs::File>> {
+    /// Create a store file. `geometry` = (objects, feat_dim, classes).
+    pub fn create(path: &Path, seed: u64, geometry: (u32, u32, u32),
+                  n_videos: u32) -> Result<Self> {
+        let file = std::fs::File::create(path)
+            .map_err(|e| Error::io(path.display(), e))?;
+        StoreWriter::new(BufWriter::new(file), seed, geometry, n_videos)
+    }
+}
+
+impl<W: Write> StoreWriter<W> {
+    pub fn new(mut out: W, seed: u64, geometry: (u32, u32, u32),
+               n_videos: u32) -> Result<Self> {
+        let mut hasher = Hasher::new();
+        out.write_all(MAGIC).map_err(|e| Error::io("<store>", e))?;
+        let mut header = Vec::with_capacity(32);
+        header.extend_from_slice(&VERSION.to_le_bytes());
+        header.extend_from_slice(&seed.to_le_bytes());
+        header.extend_from_slice(&geometry.0.to_le_bytes());
+        header.extend_from_slice(&geometry.1.to_le_bytes());
+        header.extend_from_slice(&geometry.2.to_le_bytes());
+        header.extend_from_slice(&n_videos.to_le_bytes());
+        hasher.update(&header);
+        out.write_all(&header).map_err(|e| Error::io("<store>", e))?;
+        Ok(StoreWriter {
+            out,
+            hasher,
+            geometry,
+            written: 0,
+            expected: n_videos,
+        })
+    }
+
+    pub fn append(&mut self, v: &VideoData) -> Result<()> {
+        let (o, f, c) = self.geometry;
+        if (v.objects as u32, v.feat_dim as u32, v.classes as u32)
+            != (o, f, c)
+        {
+            return Err(Error::Dataset(format!(
+                "video {} geometry ({},{},{}) != store ({o},{f},{c})",
+                v.id, v.objects, v.feat_dim, v.classes
+            )));
+        }
+        if v.feats.len() != v.len * v.objects * v.feat_dim
+            || v.labels.len() != v.len * v.objects * v.classes
+        {
+            return Err(Error::Dataset(format!(
+                "video {} buffer sizes inconsistent with len {}",
+                v.id, v.len
+            )));
+        }
+        let mut buf = Vec::with_capacity(8 + 4 * (v.feats.len() + v.labels.len()));
+        buf.extend_from_slice(&v.id.to_le_bytes());
+        buf.extend_from_slice(&(v.len as u32).to_le_bytes());
+        for x in &v.feats {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        for y in &v.labels {
+            buf.extend_from_slice(&y.to_le_bytes());
+        }
+        self.hasher.update(&buf);
+        self.out.write_all(&buf).map_err(|e| Error::io("<store>", e))?;
+        self.written += 1;
+        Ok(())
+    }
+
+    /// Write the CRC footer and flush. Must have appended exactly the
+    /// declared number of videos.
+    pub fn finish(mut self) -> Result<()> {
+        if self.written != self.expected {
+            return Err(Error::Dataset(format!(
+                "store expected {} videos, got {}",
+                self.expected, self.written
+            )));
+        }
+        let crc = self.hasher.finalize();
+        self.out
+            .write_all(&crc.to_le_bytes())
+            .and_then(|_| self.out.flush())
+            .map_err(|e| Error::io("<store>", e))?;
+        Ok(())
+    }
+}
+
+/// Read an entire store file, verifying the CRC footer.
+pub fn read_store(path: &Path) -> Result<(u64, Vec<VideoData>)> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| Error::io(path.display(), e))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)
+        .map_err(|e| Error::io(path.display(), e))?;
+    if &magic != MAGIC {
+        return Err(Error::Dataset(format!(
+            "{}: bad magic {:?}",
+            path.display(),
+            magic
+        )));
+    }
+    let mut rest = Vec::new();
+    r.read_to_end(&mut rest)
+        .map_err(|e| Error::io(path.display(), e))?;
+    if rest.len() < 4 {
+        return Err(Error::Dataset("store truncated".into()));
+    }
+    let (body, footer) = rest.split_at(rest.len() - 4);
+    let want = u32::from_le_bytes(footer.try_into().unwrap());
+    let mut hasher = Hasher::new();
+    hasher.update(body);
+    let got = hasher.finalize();
+    if want != got {
+        return Err(Error::Dataset(format!(
+            "{}: CRC mismatch (file {want:#010x}, computed {got:#010x})",
+            path.display()
+        )));
+    }
+
+    let mut cur = Cursor { buf: body, pos: 0 };
+    let version = cur.u32()?;
+    if version != VERSION {
+        return Err(Error::Dataset(format!(
+            "unsupported store version {version}"
+        )));
+    }
+    let seed = cur.u64()?;
+    let o = cur.u32()? as usize;
+    let f = cur.u32()? as usize;
+    let c = cur.u32()? as usize;
+    let n = cur.u32()? as usize;
+    let mut videos = Vec::with_capacity(n);
+    for _ in 0..n {
+        let id = cur.u32()?;
+        let len = cur.u32()? as usize;
+        let feats = cur.f32s(len * o * f)?;
+        let labels = cur.f32s(len * o * c)?;
+        videos.push(VideoData {
+            id,
+            feats,
+            labels,
+            len,
+            objects: o,
+            feat_dim: f,
+            classes: c,
+        });
+    }
+    if cur.pos != body.len() {
+        return Err(Error::Dataset("store has trailing bytes".into()));
+    }
+    Ok((seed, videos))
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::Dataset("store truncated".into()));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(4 * n)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic::{tiny_config, GeneratorSpec};
+    use crate::dataset::VideoMeta;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("bload_store_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip() {
+        let cfg = tiny_config();
+        let spec = GeneratorSpec::new(&cfg, 5);
+        let vids: Vec<_> = (0..4)
+            .map(|i| spec.materialize(VideoMeta { id: i, len: 3 + i }))
+            .collect();
+        let path = tmpfile("rt.blds");
+        let mut w = StoreWriter::create(&path, 5, (4, 12, 10), 4).unwrap();
+        for v in &vids {
+            w.append(v).unwrap();
+        }
+        w.finish().unwrap();
+        let (seed, back) = read_store(&path).unwrap();
+        assert_eq!(seed, 5);
+        assert_eq!(back.len(), 4);
+        for (a, b) in vids.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.feats, b.feats);
+            assert_eq!(a.labels, b.labels);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let cfg = tiny_config();
+        let spec = GeneratorSpec::new(&cfg, 5);
+        let v = spec.materialize(VideoMeta { id: 0, len: 4 });
+        let path = tmpfile("corrupt.blds");
+        let mut w = StoreWriter::create(&path, 5, (4, 12, 10), 1).unwrap();
+        w.append(&v).unwrap();
+        w.finish().unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_store(&path).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_count_rejected() {
+        let cfg = tiny_config();
+        let spec = GeneratorSpec::new(&cfg, 5);
+        let v = spec.materialize(VideoMeta { id: 0, len: 4 });
+        let path = tmpfile("count.blds");
+        let mut w = StoreWriter::create(&path, 5, (4, 12, 10), 2).unwrap();
+        w.append(&v).unwrap();
+        assert!(w.finish().is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn geometry_mismatch_rejected() {
+        let cfg = tiny_config();
+        let spec = GeneratorSpec::new(&cfg, 5);
+        let v = spec.materialize(VideoMeta { id: 0, len: 4 });
+        let path = tmpfile("geom.blds");
+        let mut w = StoreWriter::create(&path, 5, (9, 9, 9), 1).unwrap();
+        assert!(w.append(&v).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,188 @@
+//! Synchronization barrier with timeout and participant tracking.
+//!
+//! `std::sync::Barrier` blocks forever — exactly the silent hang the paper
+//! describes. [`TimeoutBarrier`] instead reports *who* failed to arrive,
+//! turning Fig 2's "stalled training without any error message" into a
+//! diagnosable [`crate::error::Error::Deadlock`].
+
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+#[derive(Debug)]
+struct State {
+    /// Arrivals in the current generation.
+    arrived: Vec<bool>,
+    count: usize,
+    generation: u64,
+    /// Ranks that permanently left (exhausted their data).
+    departed: Vec<bool>,
+}
+
+/// A reusable barrier for `n` ranks with per-wait timeout.
+#[derive(Debug)]
+pub struct TimeoutBarrier {
+    n: usize,
+    state: Mutex<State>,
+    cv: Condvar,
+    name: String,
+}
+
+impl TimeoutBarrier {
+    pub fn new(name: impl Into<String>, n: usize) -> TimeoutBarrier {
+        assert!(n > 0);
+        TimeoutBarrier {
+            n,
+            state: Mutex::new(State {
+                arrived: vec![false; n],
+                count: 0,
+                generation: 0,
+                departed: vec![false; n],
+            }),
+            cv: Condvar::new(),
+            name: name.into(),
+        }
+    }
+
+    /// Rank `rank` permanently leaves the group (it ran out of batches).
+    /// Remaining ranks can never complete the barrier; their `wait` will
+    /// time out — the Fig 2 condition.
+    pub fn depart(&self, rank: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.departed[rank] = true;
+        self.cv.notify_all();
+    }
+
+    /// Arrive and wait for the other ranks (at most `timeout`).
+    ///
+    /// Returns the barrier generation on success; on timeout returns
+    /// [`Error::Deadlock`] naming the missing ranks.
+    pub fn wait(&self, rank: usize, iteration: u64, timeout: Duration)
+                -> Result<u64> {
+        let mut st = self.state.lock().unwrap();
+        if st.departed[rank] {
+            return Err(Error::Ddp(format!(
+                "rank {rank} waited after departing"
+            )));
+        }
+        debug_assert!(!st.arrived[rank], "double arrival of rank {rank}");
+        st.arrived[rank] = true;
+        st.count += 1;
+        let my_gen = st.generation;
+
+        if st.count == self.n {
+            // Last arrival releases everyone.
+            st.generation += 1;
+            st.count = 0;
+            st.arrived.iter_mut().for_each(|a| *a = false);
+            self.cv.notify_all();
+            return Ok(my_gen + 1);
+        }
+
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(
+                std::time::Instant::now(),
+            );
+            if st.generation != my_gen {
+                return Ok(st.generation); // released
+            }
+            // If every missing rank has departed, this can never complete.
+            let missing: Vec<usize> = (0..self.n)
+                .filter(|&r| !st.arrived[r])
+                .collect();
+            let all_missing_departed =
+                !missing.is_empty() && missing.iter().all(|&r| st.departed[r]);
+            if remaining.is_zero() || all_missing_departed {
+                // Undo our arrival so other stalled ranks see us missing
+                // consistently (they will time out too).
+                st.arrived[rank] = false;
+                st.count -= 1;
+                return Err(Error::Deadlock {
+                    barrier: self.name.clone(),
+                    iteration,
+                    waiting: 1,
+                    running: missing,
+                    waited_ms: timeout.as_millis() as u64,
+                });
+            }
+            let (guard, _timeout_result) =
+                self.cv.wait_timeout(st, remaining).unwrap();
+            st = guard;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn all_arrive_released() {
+        let b = Arc::new(TimeoutBarrier::new("t", 4));
+        let mut handles = Vec::new();
+        for r in 0..4 {
+            let b = Arc::clone(&b);
+            handles.push(std::thread::spawn(move || {
+                for it in 0..5u64 {
+                    b.wait(r, it, Duration::from_secs(5)).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn missing_rank_times_out_with_diagnostic() {
+        let b = Arc::new(TimeoutBarrier::new("allreduce", 3));
+        let b1 = Arc::clone(&b);
+        let h = std::thread::spawn(move || {
+            b1.wait(0, 7, Duration::from_millis(100))
+        });
+        let b2 = Arc::clone(&b);
+        let h2 = std::thread::spawn(move || {
+            b2.wait(1, 7, Duration::from_millis(100))
+        });
+        // Rank 2 never arrives.
+        let e = h.join().unwrap().unwrap_err();
+        let _ = h2.join().unwrap().unwrap_err();
+        match e {
+            Error::Deadlock { barrier, running, iteration, .. } => {
+                assert_eq!(barrier, "allreduce");
+                assert_eq!(iteration, 7);
+                assert!(running.contains(&2), "{running:?}");
+            }
+            other => panic!("wrong error: {other}"),
+        }
+    }
+
+    #[test]
+    fn departed_rank_fails_fast() {
+        let b = Arc::new(TimeoutBarrier::new("t", 2));
+        b.depart(1);
+        // Rank 0 should fail quickly (all missing ranks departed), well
+        // before the 10s timeout.
+        let t0 = std::time::Instant::now();
+        let err = b.wait(0, 0, Duration::from_secs(10)).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(2));
+        assert!(matches!(err, Error::Deadlock { .. }), "{err}");
+    }
+
+    #[test]
+    fn reusable_across_generations() {
+        let b = Arc::new(TimeoutBarrier::new("t", 2));
+        for it in 0..20u64 {
+            let b1 = Arc::clone(&b);
+            let h = std::thread::spawn(move || {
+                b1.wait(1, it, Duration::from_secs(5))
+            });
+            b.wait(0, it, Duration::from_secs(5)).unwrap();
+            h.join().unwrap().unwrap();
+        }
+    }
+}

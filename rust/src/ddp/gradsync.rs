@@ -1,0 +1,128 @@
+//! Bucketed gradient synchronization for the trainer.
+//!
+//! Mirrors PyTorch DDP's gradient bucketing: the flat gradient vector is
+//! split into fixed-size buckets and each bucket is all-reduced
+//! independently (on real hardware this overlaps communication with the
+//! backward pass; here it bounds peak scratch memory and feeds the
+//! per-bucket statistics the benches report).
+
+use super::collective::{AllReduce, ReduceStats};
+
+/// Bucketed mean all-reduce over per-rank flat gradient buffers.
+pub struct GradSynchronizer {
+    alg: Box<dyn AllReduce>,
+    bucket_elems: usize,
+    /// Cumulative stats across calls.
+    pub total: ReduceStats,
+    pub invocations: u64,
+}
+
+impl GradSynchronizer {
+    pub fn new(alg: Box<dyn AllReduce>, bucket_elems: usize)
+               -> GradSynchronizer {
+        assert!(bucket_elems > 0);
+        GradSynchronizer {
+            alg,
+            bucket_elems,
+            total: ReduceStats::default(),
+            invocations: 0,
+        }
+    }
+
+    pub fn algorithm(&self) -> &'static str {
+        self.alg.name()
+    }
+
+    /// Reduce `grads` (one buffer per rank) to their mean, in place, bucket
+    /// by bucket. All buffers must have equal length.
+    pub fn sync(&mut self, grads: &mut [Vec<f32>]) -> ReduceStats {
+        let r = grads.len();
+        if r == 0 {
+            return ReduceStats::default();
+        }
+        let n = grads[0].len();
+        assert!(
+            grads.iter().all(|g| g.len() == n),
+            "rank gradient sizes differ"
+        );
+        let mut stats = ReduceStats::default();
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + self.bucket_elems).min(n);
+            let mut views: Vec<&mut [f32]> = grads
+                .iter_mut()
+                .map(|g| &mut g[start..end])
+                .collect();
+            let s = self.alg.allreduce_mean(&mut views);
+            stats.elems_moved += s.elems_moved;
+            stats.bottleneck_elems += s.bottleneck_elems;
+            stats.steps += s.steps;
+            start = end;
+        }
+        self.total.elems_moved += stats.elems_moved;
+        self.total.bottleneck_elems += stats.bottleneck_elems;
+        self.total.steps += stats.steps;
+        self.invocations += 1;
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ddp::collective::{NaiveAllReduce, RingAllReduce};
+    use crate::util::Rng;
+
+    fn random_grads(r: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..r)
+            .map(|_| (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn bucketed_equals_mean() {
+        for bucket in [1usize, 7, 64, 1000] {
+            let mut grads = random_grads(4, 130, 9);
+            let mean: Vec<f32> = (0..130)
+                .map(|j| grads.iter().map(|g| g[j]).sum::<f32>() / 4.0)
+                .collect();
+            let mut sync =
+                GradSynchronizer::new(Box::new(RingAllReduce), bucket);
+            sync.sync(&mut grads);
+            for g in &grads {
+                for (a, b) in g.iter().zip(&mean) {
+                    assert!((a - b).abs() < 1e-5, "bucket={bucket}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn naive_and_ring_agree() {
+        let mut a = random_grads(8, 257, 2);
+        let mut b = a.clone();
+        GradSynchronizer::new(Box::new(NaiveAllReduce), 64).sync(&mut a);
+        GradSynchronizer::new(Box::new(RingAllReduce), 64).sync(&mut b);
+        for (x, y) in a.iter().flatten().zip(b.iter().flatten()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut sync = GradSynchronizer::new(Box::new(RingAllReduce), 50);
+        let mut grads = random_grads(2, 100, 3);
+        sync.sync(&mut grads);
+        sync.sync(&mut grads);
+        assert_eq!(sync.invocations, 2);
+        assert!(sync.total.elems_moved > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "sizes differ")]
+    fn unequal_sizes_panic() {
+        let mut grads = vec![vec![0.0; 4], vec![0.0; 5]];
+        GradSynchronizer::new(Box::new(RingAllReduce), 4).sync(&mut grads);
+    }
+}

@@ -1,0 +1,27 @@
+//! Simulated distributed data-parallel runtime.
+//!
+//! The paper's problem statement (Fig 2) is a *scheduling* failure: with
+//! variable-length samples, ranks finish their local batches after
+//! different iteration counts, and the gradient all-reduce blocks forever
+//! — PyTorch DDP hangs "without any error message". This module rebuilds
+//! that machinery so the failure (and BLoad's fix) can be demonstrated and
+//! tested:
+//!
+//! * [`collective`] — all-reduce algorithms (naive and ring) over host
+//!   f32 gradient buffers, with moved-bytes accounting;
+//! * [`barrier`] — a timeout-aware synchronization barrier
+//!   (`Condvar::wait_timeout`), turning silent hangs into diagnostics;
+//! * [`sim`] — the multi-threaded iteration engine reproducing Fig 2 with
+//!   raw variable-length data and proving equal-step completion with
+//!   packed blocks;
+//! * [`gradsync`] — bucketed gradient synchronization used by the real
+//!   trainer (sequential ranks, simulated-parallel timing).
+
+pub mod barrier;
+pub mod collective;
+pub mod gradsync;
+pub mod sim;
+
+pub use barrier::TimeoutBarrier;
+pub use collective::{AllReduce, NaiveAllReduce, RingAllReduce};
+pub use gradsync::GradSynchronizer;

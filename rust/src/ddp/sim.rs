@@ -1,0 +1,276 @@
+//! The Fig 2 reproduction: a multi-threaded DDP iteration engine.
+//!
+//! Model of PyTorch DDP with a recurrent per-frame training loop (DDS):
+//! each rank draws a local batch of videos, steps through them frame by
+//! frame, and joins a gradient all-reduce **every frame iteration**. New
+//! data is fetched only when all ranks finished the round. A rank whose
+//! batch is shorter therefore runs out of gradients while others still
+//! iterate — the all-reduce never completes. The engine runs one OS thread
+//! per rank against a [`TimeoutBarrier`], so the outcome is the real
+//! concurrent behaviour, not a closed-form prediction.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::dataset::Split;
+use crate::error::{Error, Result};
+use crate::packing::PackedDataset;
+use crate::util::Rng;
+
+use super::barrier::TimeoutBarrier;
+
+/// What happened on one rank.
+#[derive(Debug, Clone)]
+pub struct RankOutcome {
+    pub rank: usize,
+    /// Iterations completed before finishing or stalling.
+    pub completed: u64,
+    /// The deadlock error, if this rank stalled.
+    pub deadlock: Option<String>,
+}
+
+/// Result of a simulated epoch.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub ranks: Vec<RankOutcome>,
+    /// True iff every rank completed every scheduled iteration.
+    pub completed: bool,
+    /// Iterations each rank was scheduled to run.
+    pub scheduled: Vec<u64>,
+}
+
+impl SimReport {
+    pub fn deadlocked(&self) -> bool {
+        self.ranks.iter().any(|r| r.deadlock.is_some())
+    }
+}
+
+/// Run the lockstep iteration engine: rank `r` joins the all-reduce
+/// barrier `iters[r]` times, then departs.
+pub fn run(iters: &[u64], timeout: Duration) -> SimReport {
+    let n = iters.len();
+    assert!(n > 0);
+    let barrier = Arc::new(TimeoutBarrier::new("grad_allreduce", n));
+    let mut handles = Vec::with_capacity(n);
+    for (rank, &my_iters) in iters.iter().enumerate() {
+        let barrier = Arc::clone(&barrier);
+        handles.push(std::thread::spawn(move || {
+            let mut completed = 0u64;
+            for it in 0..my_iters {
+                match barrier.wait(rank, it, timeout) {
+                    Ok(_) => completed += 1,
+                    Err(e) => {
+                        return RankOutcome {
+                            rank,
+                            completed,
+                            deadlock: Some(e.to_string()),
+                        }
+                    }
+                }
+            }
+            barrier.depart(rank);
+            RankOutcome {
+                rank,
+                completed,
+                deadlock: None,
+            }
+        }));
+    }
+    let mut ranks: Vec<RankOutcome> = handles
+        .into_iter()
+        .map(|h| h.join().expect("rank thread panicked"))
+        .collect();
+    ranks.sort_by_key(|r| r.rank);
+    let completed = ranks
+        .iter()
+        .zip(iters)
+        .all(|(r, &want)| r.deadlock.is_none() && r.completed == want);
+    SimReport {
+        ranks,
+        completed,
+        scheduled: iters.to_vec(),
+    }
+}
+
+/// Per-rank iteration counts for **raw random batching** of variable-length
+/// videos (the paper's failing configuration): each round every rank draws
+/// `batch` videos without replacement; the round costs
+/// `max(len)` iterations on that rank (frame-synchronous recurrent model).
+/// Rounds end when the sampler runs dry on any rank.
+pub fn raw_schedule(split: &Split, ranks: usize, batch: usize, seed: u64)
+                    -> Vec<u64> {
+    let mut order: Vec<usize> = (0..split.videos.len()).collect();
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut order);
+    let mut iters = vec![0u64; ranks];
+    let mut pos = 0usize;
+    'outer: loop {
+        for it in iters.iter_mut() {
+            if pos + batch > order.len() {
+                break 'outer;
+            }
+            let round_len = order[pos..pos + batch]
+                .iter()
+                .map(|&i| split.videos[i].len as u64)
+                .max()
+                .unwrap_or(0);
+            *it += round_len;
+            pos += batch;
+        }
+    }
+    iters
+}
+
+/// Per-rank iteration counts when training from a **packed dataset**:
+/// every block is `block_len` iterations, ranks get equal block counts
+/// (the loader drops the remainder), so the schedule is uniform by
+/// construction.
+pub fn packed_schedule(packed: &PackedDataset, ranks: usize, batch: usize)
+                       -> Vec<u64> {
+    let per_rank_blocks = packed.blocks.len() / ranks;
+    let steps = (per_rank_blocks / batch) as u64;
+    vec![steps * packed.block_len as u64; ranks]
+}
+
+/// Convenience: run the raw-batching scenario and return the error the
+/// paper's users would have *wanted* PyTorch to raise.
+pub fn demo_raw_deadlock(split: &Split, ranks: usize, batch: usize,
+                         seed: u64, timeout: Duration) -> Result<SimReport> {
+    let iters = raw_schedule(split, ranks, batch, seed);
+    let report = run(&iters, timeout);
+    if report.deadlocked() {
+        let stalled: Vec<usize> = report
+            .ranks
+            .iter()
+            .filter(|r| r.deadlock.is_some())
+            .map(|r| r.rank)
+            .collect();
+        // The ranks that exhausted their batches and left — the ones the
+        // stalled ranks wait on forever (GPU 1 in the paper's Fig 2).
+        let finished: Vec<usize> = report
+            .ranks
+            .iter()
+            .filter(|r| r.deadlock.is_none())
+            .map(|r| r.rank)
+            .collect();
+        let min_it = report.ranks.iter().map(|r| r.completed).min().unwrap();
+        Err(Error::Deadlock {
+            barrier: "grad_allreduce".into(),
+            iteration: min_it,
+            waiting: stalled.len(),
+            running: finished,
+            waited_ms: timeout.as_millis() as u64,
+        })
+    } else {
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, StrategyName};
+    use crate::dataset::synthetic::{generate, tiny_config};
+    use crate::packing::pack;
+
+    #[test]
+    fn unequal_iterations_deadlock() {
+        let report = run(&[2, 6], Duration::from_millis(150));
+        assert!(report.deadlocked());
+        assert!(!report.completed);
+        // The long rank stalls at iteration 2 (after the short rank left).
+        let long = &report.ranks[1];
+        assert_eq!(long.completed, 2);
+        assert!(long.deadlock.as_deref().unwrap().contains("deadlock"));
+    }
+
+    #[test]
+    fn equal_iterations_complete() {
+        let report = run(&[5, 5, 5, 5], Duration::from_secs(2));
+        assert!(report.completed, "{report:?}");
+        assert!(!report.deadlocked());
+    }
+
+    #[test]
+    fn fig2_exact_scenario() {
+        // Paper Fig 2: GPU1 gets 2-frame videos, GPU2 gets 6-frame videos;
+        // GPU1 idles after iteration 2, GPU2 stalls at iteration 3.
+        let report = run(&[2, 6], Duration::from_millis(150));
+        let gpu2 = &report.ranks[1];
+        assert_eq!(gpu2.completed, 2, "stalls entering iteration 3");
+        assert!(report.ranks[0].deadlock.is_none(), "GPU1 simply finished");
+    }
+
+    #[test]
+    fn raw_schedule_is_unequal_and_packed_is_equal() {
+        let cfg = ExperimentConfig::default_config().dataset.scaled(0.02);
+        let ds = generate(&cfg, 3);
+        let raw = raw_schedule(&ds.train, 4, 2, 1);
+        assert!(
+            raw.windows(2).any(|w| w[0] != w[1]),
+            "variable-length random batching should be unequal: {raw:?}"
+        );
+        let packed = pack(
+            StrategyName::BLoad,
+            &ds.train,
+            &ExperimentConfig::default_config().packing,
+            0,
+        )
+        .unwrap();
+        let eq = packed_schedule(&packed, 4, 2);
+        assert!(eq.windows(2).all(|w| w[0] == w[1]));
+        assert!(eq[0] > 0);
+    }
+
+    #[test]
+    fn demo_raises_descriptive_error() {
+        let ds = generate(&tiny_config(), 2);
+        let err = demo_raw_deadlock(&ds.train, 2, 2, 5,
+                                    Duration::from_millis(120));
+        match err {
+            Err(Error::Deadlock { running, .. }) => {
+                assert!(!running.is_empty());
+            }
+            other => panic!("expected deadlock, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn raw_schedule_deterministic_in_seed() {
+        let cfg = ExperimentConfig::default_config().dataset.scaled(0.01);
+        let ds = generate(&cfg, 1);
+        assert_eq!(raw_schedule(&ds.train, 4, 2, 9),
+                   raw_schedule(&ds.train, 4, 2, 9));
+        assert_ne!(raw_schedule(&ds.train, 4, 2, 9),
+                   raw_schedule(&ds.train, 4, 2, 10));
+    }
+
+    #[test]
+    fn packed_schedule_math() {
+        let ds = generate(&tiny_config(), 2);
+        let mut pcfg = ExperimentConfig::default_config().packing;
+        pcfg.t_max = 6;
+        let packed = pack(StrategyName::BLoad, &ds.train, &pcfg, 0).unwrap();
+        let sched = packed_schedule(&packed, 2, 1);
+        // blocks/ranks/batch full steps × block_len iterations each.
+        let steps = (packed.blocks.len() / 2) as u64;
+        assert_eq!(sched, vec![steps * 6, steps * 6]);
+    }
+
+    #[test]
+    fn single_rank_never_deadlocks() {
+        let report = run(&[17], Duration::from_millis(100));
+        assert!(report.completed);
+    }
+
+    #[test]
+    fn packed_run_completes_end_to_end() {
+        let ds = generate(&tiny_config(), 2);
+        let mut pcfg = ExperimentConfig::default_config().packing;
+        pcfg.t_max = 6;
+        let packed = pack(StrategyName::BLoad, &ds.train, &pcfg, 0).unwrap();
+        let iters = packed_schedule(&packed, 2, 1);
+        let report = run(&iters, Duration::from_secs(2));
+        assert!(report.completed, "{report:?}");
+    }
+}

@@ -1,0 +1,149 @@
+//! Crate-wide error type.
+//!
+//! Every subsystem reports through [`Error`]; the CLI renders them with
+//! their full context chain. `anyhow` is deliberately *not* used in the
+//! library API so downstream users get a typed error surface.
+
+use std::fmt;
+
+/// Crate result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Typed error for every bload subsystem.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Configuration file / CLI argument problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// TOML-subset / JSON parse errors with location info.
+    #[error("parse error at {file}:{line}:{col}: {msg}")]
+    Parse {
+        file: String,
+        line: usize,
+        col: usize,
+        msg: String,
+    },
+
+    /// Dataset generation / store IO problems.
+    #[error("dataset error: {0}")]
+    Dataset(String),
+
+    /// Packing strategy violations (invalid blocks, reset tables...).
+    #[error("packing error: {0}")]
+    Packing(String),
+
+    /// Streaming loader failures (channel closed, worker panic...).
+    #[error("loader error: {0}")]
+    Loader(String),
+
+    /// DDP simulation failures; includes detected deadlocks.
+    #[error("ddp error: {0}")]
+    Ddp(String),
+
+    /// A synchronization barrier timed out — the condition the paper's
+    /// Fig. 2 describes (a rank exhausted its batch early).
+    #[error(
+        "ddp deadlock detected: {waiting} rank(s) stalled at iteration \
+         {iteration} waiting on barrier '{barrier}' for {waited_ms} ms \
+         (ranks still running: {running:?})"
+    )]
+    Deadlock {
+        barrier: String,
+        iteration: u64,
+        waiting: usize,
+        running: Vec<usize>,
+        waited_ms: u64,
+    },
+
+    /// PJRT runtime failures (artifact load, compile, execute, shape).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Shape/type mismatch when feeding an artifact.
+    #[error(
+        "shape mismatch for {artifact} input #{index} ({name}): \
+         expected {expected:?}, got {got:?}"
+    )]
+    Shape {
+        artifact: String,
+        index: usize,
+        name: String,
+        expected: Vec<usize>,
+        got: Vec<usize>,
+    },
+
+    /// Training loop errors (NaN loss, checkpoint IO...).
+    #[error("train error: {0}")]
+    Train(String),
+
+    /// Underlying XLA/PJRT error.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// IO with path context.
+    #[error("io error on {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+}
+
+impl Error {
+    /// Attach a path to an `std::io::Error`.
+    pub fn io(path: impl fmt::Display, source: std::io::Error) -> Self {
+        Error::Io {
+            path: path.to_string(),
+            source,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadlock_message_names_ranks_and_barrier() {
+        let e = Error::Deadlock {
+            barrier: "allreduce".into(),
+            iteration: 3,
+            waiting: 1,
+            running: vec![1],
+            waited_ms: 250,
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("allreduce"));
+        assert!(msg.contains("iteration 3"));
+        assert!(msg.contains("[1]"));
+    }
+
+    #[test]
+    fn io_error_carries_path() {
+        let e = Error::io(
+            "/tmp/x",
+            std::io::Error::new(std::io::ErrorKind::NotFound, "nope"),
+        );
+        assert!(e.to_string().contains("/tmp/x"));
+    }
+
+    #[test]
+    fn shape_error_is_descriptive() {
+        let e = Error::Shape {
+            artifact: "grad_step".into(),
+            index: 1,
+            name: "feats".into(),
+            expected: vec![2, 12, 4, 12],
+            got: vec![2, 12, 4, 13],
+        };
+        assert!(e.to_string().contains("grad_step"));
+        assert!(e.to_string().contains("feats"));
+    }
+}

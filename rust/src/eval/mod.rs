@@ -1,0 +1,6 @@
+//! Evaluation: the paper's metric is **recall@20** over scored relation
+//! triplets per frame (scene-graph detection convention).
+
+pub mod recall;
+
+pub use recall::{recall_at_k, RecallAccumulator};

@@ -1,0 +1,132 @@
+//! recall@K over per-frame (object, predicate) candidate scores.
+//!
+//! For each *real* frame, all `O × C` candidate pairs are ranked by score;
+//! recall@K is the fraction of ground-truth pairs that appear in the
+//! top-K. This is the standard SGDet-style recall the paper reports
+//! (recall@20, Table I row 4), with AG-like candidate counts
+//! (`O=6 × C=26 = 156` candidates/frame at full geometry).
+
+use crate::util::topk::top_k_indices;
+
+/// Streaming recall accumulator across batches.
+#[derive(Debug, Clone, Default)]
+pub struct RecallAccumulator {
+    pub hits: u64,
+    pub total_gt: u64,
+    pub frames: u64,
+}
+
+impl RecallAccumulator {
+    pub fn new() -> RecallAccumulator {
+        RecallAccumulator::default()
+    }
+
+    /// Accumulate one batch.
+    ///
+    /// * `logits`, `labels`: `[B, T, O, C]` row-major;
+    /// * `frame_mask`: `[B, T]`, only slots with mask > 0.5 count.
+    pub fn push_batch(&mut self, logits: &[f32], labels: &[f32],
+                      frame_mask: &[f32], b: usize, t: usize, o: usize,
+                      c: usize, k: usize) {
+        debug_assert_eq!(logits.len(), b * t * o * c);
+        debug_assert_eq!(labels.len(), b * t * o * c);
+        debug_assert_eq!(frame_mask.len(), b * t);
+        let per = o * c;
+        for bt in 0..b * t {
+            if frame_mask[bt] <= 0.5 {
+                continue;
+            }
+            let frame_scores = &logits[bt * per..(bt + 1) * per];
+            let frame_labels = &labels[bt * per..(bt + 1) * per];
+            let gt: u64 =
+                frame_labels.iter().map(|&y| u64::from(y > 0.5)).sum();
+            if gt == 0 {
+                continue;
+            }
+            let top = top_k_indices(frame_scores, k);
+            let hits = top
+                .iter()
+                .filter(|&&i| frame_labels[i] > 0.5)
+                .count() as u64;
+            self.hits += hits;
+            self.total_gt += gt;
+            self.frames += 1;
+        }
+    }
+
+    /// recall@K in percent (the paper reports 41.2 / 42.1 / 43.3).
+    pub fn recall_pct(&self) -> f64 {
+        if self.total_gt == 0 {
+            0.0
+        } else {
+            100.0 * self.hits as f64 / self.total_gt as f64
+        }
+    }
+}
+
+/// One-shot recall@K over a single frame's candidates.
+pub fn recall_at_k(scores: &[f32], labels: &[f32], k: usize) -> f64 {
+    let mut acc = RecallAccumulator::new();
+    acc.push_batch(scores, labels, &[1.0], 1, 1, 1, scores.len(), k);
+    acc.recall_pct() / 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_predictions() {
+        // 3 GT among 10 candidates, all scored highest.
+        let labels = [1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let scores = [9.0, 8.0, 7.0, 0.1, 0.2, 0.3, 0.1, 0.1, 0.1, 0.1];
+        assert_eq!(recall_at_k(&scores, &labels, 3), 1.0);
+    }
+
+    #[test]
+    fn anti_predictions() {
+        let labels = [1.0, 1.0, 0.0, 0.0];
+        let scores = [0.0, 0.1, 5.0, 6.0];
+        assert_eq!(recall_at_k(&scores, &labels, 2), 0.0);
+        assert_eq!(recall_at_k(&scores, &labels, 4), 1.0);
+    }
+
+    #[test]
+    fn masked_frames_ignored() {
+        let mut acc = RecallAccumulator::new();
+        let logits = [1.0, 0.0, /* frame 2 */ 1.0, 0.0];
+        let labels = [1.0, 0.0, /* frame 2 */ 0.0, 1.0];
+        // Only frame 0 is real.
+        acc.push_batch(&logits, &labels, &[1.0, 0.0], 1, 2, 1, 2, 1);
+        assert_eq!(acc.frames, 1);
+        assert_eq!(acc.recall_pct(), 100.0);
+    }
+
+    #[test]
+    fn frames_without_gt_do_not_count() {
+        let mut acc = RecallAccumulator::new();
+        acc.push_batch(&[1.0, 2.0], &[0.0, 0.0], &[1.0], 1, 1, 1, 2, 1);
+        assert_eq!(acc.frames, 0);
+        assert_eq!(acc.recall_pct(), 0.0);
+    }
+
+    #[test]
+    fn partial_recall_value() {
+        // 4 GT, top-2 contains exactly 1 GT -> recall@2 = 25%.
+        let labels = [1.0, 1.0, 1.0, 1.0, 0.0, 0.0];
+        let scores = [9.0, 0.0, 0.1, 0.2, 8.0, 7.0];
+        let mut acc = RecallAccumulator::new();
+        acc.push_batch(&scores, &labels, &[1.0], 1, 1, 1, 6, 2);
+        assert!((acc.recall_pct() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accumulates_over_batches() {
+        let mut acc = RecallAccumulator::new();
+        let labels = [1.0, 0.0];
+        acc.push_batch(&[1.0, 0.0], &labels, &[1.0], 1, 1, 1, 2, 1); // hit
+        acc.push_batch(&[0.0, 1.0], &labels, &[1.0], 1, 1, 1, 2, 1); // miss
+        assert!((acc.recall_pct() - 50.0).abs() < 1e-9);
+        assert_eq!(acc.frames, 2);
+    }
+}

@@ -1,0 +1,193 @@
+//! Ablations of the design choices DESIGN.md §4 calls out:
+//!
+//! * **reset table on/off** (Fig 6): train block_pad with segment ids
+//!   intact vs with every block's segments merged into one (state and
+//!   temporal attention bleed across the unrelated packed videos) —
+//!   quantifies why the paper's reset table exists.
+//! * **stateful chunking**: the sampling baseline with cross-chunk state
+//!   carry (`carry_state = true` + in-order scheduling) — the obvious
+//!   extension of the paper's §V future work.
+
+use std::sync::Arc;
+
+use crate::config::{EvalConfig, ExperimentConfig, StrategyName};
+use crate::dataset::synthetic::generate;
+use crate::error::Result;
+use crate::harness::{scaled_dataset, scaled_packing};
+use crate::packing::{pack_with_block_len, PackedDataset};
+use crate::runtime::{ArtifactManifest, Engine};
+use crate::train::Trainer;
+
+/// One ablation arm's outcome.
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub name: &'static str,
+    pub recall_pct: f64,
+    pub final_loss: f64,
+}
+
+/// Options.
+#[derive(Debug, Clone)]
+pub struct AblationOptions {
+    pub train_videos: usize,
+    pub test_videos: usize,
+    pub epochs: usize,
+    pub artifacts_dir: String,
+    pub seed: u64,
+}
+
+impl Default for AblationOptions {
+    fn default() -> Self {
+        AblationOptions {
+            train_videos: 500,
+            test_videos: 120,
+            epochs: 3,
+            artifacts_dir: "artifacts".into(),
+            seed: 0,
+        }
+    }
+}
+
+/// Erase reset tables: report every occupied slot as one segment (content
+/// stays identical — see [`crate::packing::Block::merged`]).
+fn strip_reset(packed: &mut PackedDataset) {
+    for b in &mut packed.blocks {
+        b.merged = true;
+    }
+}
+
+/// Packing flavour per arm.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Packing {
+    Strategy(StrategyName),
+    /// Shuffled chunking at an explicit chunk length.
+    SamplingAt(usize),
+    /// Ordered + contiguous-merged chunking at an explicit chunk length
+    /// (stateful chunking, §V future work).
+    SamplingOrdered(usize),
+}
+
+fn train_arm(name: &'static str, packing: Packing, carry: bool,
+             shuffle: bool, collapse_segments: bool,
+             opts: &AblationOptions) -> Result<AblationRow> {
+    let dcfg = scaled_dataset(opts.train_videos, opts.test_videos, 0.6);
+    let pcfg = scaled_packing();
+    let ds = generate(&dcfg, opts.seed);
+    let t = pcfg.t_max;
+    let mut packed = match packing {
+        Packing::Strategy(s) => {
+            pack_with_block_len(s, &ds.train, &pcfg, t, opts.seed)?
+        }
+        Packing::SamplingAt(tb) => {
+            let mut p = pcfg.clone();
+            p.t_block = tb;
+            pack_with_block_len(StrategyName::Sampling, &ds.train, &p, t,
+                                opts.seed)?
+        }
+        Packing::SamplingOrdered(tb) => {
+            crate::packing::sampling::pack_ordered(&ds.train, tb, t)?
+        }
+    };
+    // Eval is always on the same BLoad-packed (un-truncated) test set; the
+    // reset-stripped arm strips the test set too so inference matches what
+    // the arm's model believes about segment ids.
+    let mut packed_test = pack_with_block_len(
+        StrategyName::BLoad, &ds.test, &pcfg, t, opts.seed + 1)?;
+    if collapse_segments {
+        strip_reset(&mut packed);
+        strip_reset(&mut packed_test);
+    }
+
+    let manifest =
+        ArtifactManifest::load(std::path::Path::new(&opts.artifacts_dir))?;
+    let engine = Engine::load(manifest.profile("small")?.clone())?;
+    let mut cfg = ExperimentConfig::default_config();
+    cfg.train.epochs = opts.epochs;
+    cfg.train.log_every = 0;
+    cfg.train.carry_state = carry;
+    cfg.loader.shuffle = shuffle;
+    let mut trainer = Trainer::new(engine, cfg.train.clone(),
+                                   cfg.ddp.clone(), cfg.loader.clone(),
+                                   opts.seed)?;
+    let train_split = Arc::new(ds.train);
+    let test_split = Arc::new(ds.test);
+    let packed = Arc::new(packed);
+    let packed_test = Arc::new(packed_test);
+    let mut final_loss = 0.0;
+    for epoch in 0..opts.epochs as u64 {
+        final_loss = trainer
+            .train_epoch(&train_split, &packed, epoch)?
+            .final_loss;
+    }
+    let recall = trainer.evaluate(&test_split, &packed_test,
+                                  &EvalConfig { recall_k: 20 })?;
+    Ok(AblationRow {
+        name,
+        recall_pct: recall,
+        final_loss,
+    })
+}
+
+/// Run all arms.
+pub fn run(opts: &AblationOptions) -> Result<Vec<AblationRow>> {
+    use Packing::{SamplingAt, SamplingOrdered, Strategy};
+    Ok(vec![
+        train_arm("block_pad + reset table", Strategy(StrategyName::BLoad),
+                  false, true, false, opts)?,
+        train_arm("block_pad, reset stripped",
+                  Strategy(StrategyName::BLoad), false, true, true, opts)?,
+        train_arm("sampling (t_block=8, Table I)",
+                  Strategy(StrategyName::Sampling), false, true, false,
+                  opts)?,
+        // Short chunks make the severed-context penalty visible; the
+        // ordered+merged+carry arm then recovers it (§V future work).
+        train_arm("sampling t_block=4", SamplingAt(4), false, true, false,
+                  opts)?,
+        train_arm("sampling t4 ordered+merged+carry", SamplingOrdered(4),
+                  true, false, false, opts)?,
+    ])
+}
+
+pub fn render(rows: &[AblationRow]) -> String {
+    let mut out = String::from(
+        "ablation                             recall@20  final loss\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:<36} {:>8.1}  {:>10.4}\n",
+            r.name, r.recall_pct, r.final_loss
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+
+    #[test]
+    fn strip_reset_merges_seg_ids_only() {
+        let dcfg = scaled_dataset(40, 10, 0.6);
+        let ds = generate(&dcfg, 1);
+        let pcfg = scaled_packing();
+        let mut packed = pack_with_block_len(StrategyName::BLoad, &ds.train,
+                                             &pcfg, 24, 0)
+            .unwrap();
+        let multi = packed
+            .blocks
+            .iter()
+            .position(|b| b.segments.len() > 1)
+            .expect("some block has 2+ videos");
+        let before = packed.blocks[multi].seg_ids();
+        assert!(before.iter().any(|&s| s > 0));
+        strip_reset(&mut packed);
+        let after = packed.blocks[multi].seg_ids();
+        assert!(after.iter().all(|&s| s <= 0));
+        // Occupancy (padding mask) unchanged.
+        for (a, b) in before.iter().zip(&after) {
+            assert_eq!(*a >= 0, *b >= 0);
+        }
+
+    }
+}

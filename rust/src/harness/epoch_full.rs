@@ -1,0 +1,170 @@
+//! Table I time-column at **full paper geometry**: one real training epoch
+//! per strategy over the complete AG-Synth train split (7,464 videos /
+//! 166,785 frames), each strategy running at its *native* block length
+//! through a matching artifact profile:
+//!
+//! | strategy  | blocks              | profile |
+//! |-----------|---------------------|---------|
+//! | 0 padding | 7,464 × T=94        | `full`  |
+//! | sampling  | chunks × T=24       | `small` |
+//! | mix pad   | 7,464 × T=22        | `mix22` |
+//! | block_pad | ≈1,829 × T=94       | `full`  |
+//!
+//! The paper's 170/18/40/41 min columns are 8×A100 wall-clock; here the
+//! same pipeline runs on the CPU PJRT client, so we report measured
+//! minutes *and* ratios. On a GPU-class device the per-call dispatch
+//! overhead vanishes and the ratio converges to the slots cost model
+//! (EXPERIMENTS.md Table I discussion).
+
+use std::sync::Arc;
+
+use crate::config::{ExperimentConfig, StrategyName};
+use crate::dataset::synthetic::generate;
+use crate::error::Result;
+use crate::log_info;
+use crate::packing::pack;
+use crate::runtime::{ArtifactManifest, Engine};
+use crate::train::Trainer;
+
+/// Measured full-geometry epoch result.
+#[derive(Debug, Clone)]
+pub struct FullEpochRow {
+    pub strategy: StrategyName,
+    pub profile: &'static str,
+    pub blocks: usize,
+    pub slots: usize,
+    pub steps: usize,
+    pub wall_s: f64,
+    pub parallel_s: f64,
+}
+
+fn profile_for(strategy: StrategyName) -> &'static str {
+    match strategy {
+        StrategyName::BLoad | StrategyName::NaivePad => "full",
+        StrategyName::Sampling => "small",
+        StrategyName::MixPad => "mix22",
+    }
+}
+
+/// Run one epoch per requested strategy. `max_steps` (0 = unlimited) can
+/// cap long arms (the naive column is ~4× the others); the row is then
+/// linearly extrapolated to the full epoch and marked in logs.
+pub fn run(strategies: &[StrategyName], max_steps: usize, seed: u64,
+           artifacts_dir: &str) -> Result<Vec<FullEpochRow>> {
+    let cfg = ExperimentConfig::default_config();
+    let ds = generate(&cfg.dataset, seed);
+    let manifest =
+        ArtifactManifest::load(std::path::Path::new(artifacts_dir))?;
+    let train_split = Arc::new(ds.train);
+    let mut rows = Vec::new();
+    for &strategy in strategies {
+        let profile = profile_for(strategy);
+        let spec = manifest.profile(profile)?.clone();
+        let packed = Arc::new(pack(strategy, &train_split, &cfg.packing,
+                                   seed)?);
+        assert_eq!(spec.block_len, packed.block_len);
+        let engine = Engine::load(spec)?;
+        let mut tcfg = cfg.train.clone();
+        tcfg.log_every = 50;
+        let mut trainer = Trainer::new(engine, tcfg, cfg.ddp.clone(),
+                                       cfg.loader.clone(), seed)?;
+        let stats = trainer.train_epoch_capped(&train_split, &packed, 0,
+                                               max_steps)?;
+        let full_steps =
+            packed.blocks.len() / (cfg.ddp.ranks * cfg.ddp.batch_per_rank);
+        let scale = if stats.steps < full_steps {
+            full_steps as f64 / stats.steps as f64
+        } else {
+            1.0
+        };
+        if scale > 1.0 {
+            log_info!(
+                "{strategy}: measured {} of {} steps, extrapolating ×{scale:.2}",
+                stats.steps, full_steps
+            );
+        }
+        rows.push(FullEpochRow {
+            strategy,
+            profile,
+            blocks: packed.blocks.len(),
+            slots: packed.stats.total_slots,
+            steps: stats.steps,
+            wall_s: stats.wall_s * scale,
+            parallel_s: stats.parallel_s * scale,
+        });
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_match_native_block_lengths() {
+        assert_eq!(profile_for(StrategyName::BLoad), "full");
+        assert_eq!(profile_for(StrategyName::NaivePad), "full");
+        assert_eq!(profile_for(StrategyName::Sampling), "small");
+        assert_eq!(profile_for(StrategyName::MixPad), "mix22");
+    }
+
+    #[test]
+    fn render_reports_ratios_vs_block_pad() {
+        let rows = vec![
+            FullEpochRow {
+                strategy: StrategyName::NaivePad,
+                profile: "full",
+                blocks: 7464,
+                slots: 701_616,
+                steps: 466,
+                wall_s: 80.0,
+                parallel_s: 12.0,
+            },
+            FullEpochRow {
+                strategy: StrategyName::BLoad,
+                profile: "full",
+                blocks: 1829,
+                slots: 171_926,
+                steps: 114,
+                wall_s: 20.0,
+                parallel_s: 3.0,
+            },
+        ];
+        let s = render(&rows);
+        assert!(s.contains("4.00x (4.15x)"), "{s}");
+        assert!(s.contains("1.00x (1.00x)"), "{s}");
+    }
+}
+
+/// Render with ratios vs block_pad.
+pub fn render(rows: &[FullEpochRow]) -> String {
+    let base = rows
+        .iter()
+        .find(|r| r.strategy == StrategyName::BLoad)
+        .map(|r| r.parallel_s)
+        .unwrap_or(1.0);
+    let mut out = String::from(
+        "strategy    profile  blocks   slots     wall      parallel  ratio \
+         (paper)\n",
+    );
+    let paper = |s: StrategyName| match s {
+        StrategyName::NaivePad => 170.0 / 41.0,
+        StrategyName::Sampling => 18.0 / 41.0,
+        StrategyName::MixPad => 40.0 / 41.0,
+        StrategyName::BLoad => 1.0,
+    };
+    for r in rows {
+        out.push_str(&format!(
+            "{:<11} {:<8} {:<8} {:<9} {:>7.1}s  {:>7.1}s  {:>5.2}x ({:.2}x)\n",
+            r.strategy.paper_label(),
+            r.profile,
+            r.blocks,
+            r.slots,
+            r.wall_s,
+            r.parallel_s,
+            r.parallel_s / base,
+            paper(r.strategy),
+        ));
+    }
+    out
+}

@@ -1,0 +1,62 @@
+//! Experiment harness: drivers that regenerate every table and figure of
+//! the paper (DESIGN.md §4 maps ids → modules → commands).
+
+pub mod ablation;
+pub mod deadlock;
+pub mod epoch_full;
+pub mod table1;
+
+use crate::config::{DatasetConfig, PackingConfig};
+
+/// Scaled-down geometry used for *measured* training runs on this CPU
+/// testbed: same distribution family as Action Genome but `T_max = 24`
+/// (the `small` artifact profile). Chunk/mix lengths divide 24 so all four
+/// strategies emit 24-slot blocks for one executable.
+pub fn scaled_dataset(train_videos: usize, test_videos: usize, seed_sigma: f64)
+                      -> DatasetConfig {
+    DatasetConfig {
+        train_videos,
+        test_videos,
+        min_len: 3,
+        max_len: 24,
+        mean_len: 8.6,
+        sigma: seed_sigma,
+        target_train_frames: 0,
+        target_test_frames: 0,
+        objects: 6,
+        feat_dim: 20,
+        classes: 26,
+        temporal_rho: 0.9,
+        history_weight: 0.65,
+        noise: 0.35,
+    }
+}
+
+/// Packing geometry matching [`scaled_dataset`] (all strategies → 24-slot
+/// blocks).
+pub fn scaled_packing() -> PackingConfig {
+    PackingConfig {
+        strategy: crate::config::StrategyName::BLoad,
+        t_max: 24,
+        t_block: 8,
+        t_mix: 8,
+        max_retries: 16,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic::generate;
+
+    #[test]
+    fn scaled_geometry_is_consistent() {
+        let d = scaled_dataset(200, 50, 0.6);
+        let ds = generate(&d, 1);
+        assert!(ds.train.max_len() <= 24);
+        assert!(ds.train.min_len() >= 3);
+        let p = scaled_packing();
+        assert_eq!(p.t_max % p.t_block, 0);
+        assert_eq!(p.t_max % p.t_mix, 0);
+    }
+}

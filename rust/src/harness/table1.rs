@@ -1,0 +1,326 @@
+//! Table I regeneration.
+//!
+//! Two nested levels of fidelity:
+//!
+//! 1. **Pipeline accounting at paper scale** (always): pack the full
+//!    AG-Synth train split (7,464 videos / 166,785 frames / `T_max` 94)
+//!    with all four strategies and report *exact* padding / deletion
+//!    counts plus the frames-processed cost model for the time column.
+//! 2. **Measured runs at CPU scale** (`--full`): real training of DDS-lite
+//!    through the PJRT stack per strategy on the scaled geometry
+//!    (`T_max = 24`, the `small` profile) — measured epoch time (wall +
+//!    simulated-parallel) and recall@20 on the held-out split.
+
+use std::sync::Arc;
+
+use crate::config::{EvalConfig, ExperimentConfig, StrategyName};
+use crate::dataset::synthetic::generate;
+use crate::error::Result;
+use crate::harness::{scaled_dataset, scaled_packing};
+use crate::jsonio::{to_string_pretty, Value};
+use crate::log_info;
+use crate::metrics::TextTable;
+use crate::packing::{pack, pack_with_block_len, validate::validate};
+use crate::runtime::{ArtifactManifest, Engine};
+use crate::train::Trainer;
+use crate::util::humanize::commas;
+
+/// Paper Table I reference values (for side-by-side rendering).
+pub const PAPER: [(&str, u64, u64, u64, Option<f64>); 4] = [
+    ("0 padding", 534_831, 0, 170, None),
+    ("sampling", 0, 92_271, 18, Some(41.2)),
+    ("mix pad", 37_712, 40_289, 40, Some(42.1)),
+    ("block_pad", 3_695, 0, 41, Some(43.3)),
+];
+
+/// One strategy's reproduced row.
+#[derive(Debug, Clone)]
+pub struct StrategyRow {
+    pub strategy: StrategyName,
+    /// Exact full-scale pipeline numbers.
+    pub padding: usize,
+    pub deleted: usize,
+    /// Cost model: slots processed per epoch at full scale (time column is
+    /// proportional to this — DESIGN.md §4).
+    pub slots_full: usize,
+    /// Measured scaled-run numbers (None without `--full`).
+    pub epoch_wall_s: Option<f64>,
+    pub epoch_parallel_s: Option<f64>,
+    pub recall_pct: Option<f64>,
+    pub final_loss: Option<f64>,
+}
+
+/// Complete Table I reproduction.
+#[derive(Debug, Clone)]
+pub struct Table1Report {
+    pub rows: Vec<StrategyRow>,
+    /// Did the measured part run?
+    pub measured: bool,
+}
+
+/// Options for the harness.
+#[derive(Debug, Clone)]
+pub struct Table1Options {
+    /// Run the measured training part (slower).
+    pub train: bool,
+    /// Include the naive strategy in the measured part (the paper skipped
+    /// it; its epoch is ~3× the others').
+    pub include_naive_training: bool,
+    pub train_videos: usize,
+    pub test_videos: usize,
+    pub epochs: usize,
+    pub artifacts_dir: String,
+    pub seed: u64,
+}
+
+impl Default for Table1Options {
+    fn default() -> Self {
+        Table1Options {
+            train: false,
+            include_naive_training: false,
+            train_videos: 700,
+            test_videos: 150,
+            epochs: 3,
+            artifacts_dir: "artifacts".into(),
+            seed: 0,
+        }
+    }
+}
+
+/// Level 1: exact pipeline accounting at paper scale.
+pub fn pipeline_rows(seed: u64) -> Result<Vec<StrategyRow>> {
+    let cfg = ExperimentConfig::default_config();
+    let ds = generate(&cfg.dataset, seed);
+    let mut rows = Vec::new();
+    for strat in StrategyName::all() {
+        let packed = pack(strat, &ds.train, &cfg.packing, seed)?;
+        validate(&packed, &ds.train, strat == StrategyName::MixPad)?;
+        rows.push(StrategyRow {
+            strategy: strat,
+            padding: packed.stats.padding,
+            deleted: packed.stats.frames_deleted,
+            slots_full: packed.stats.total_slots,
+            epoch_wall_s: None,
+            epoch_parallel_s: None,
+            recall_pct: None,
+            final_loss: None,
+        });
+    }
+    Ok(rows)
+}
+
+/// Level 2: measured training per strategy at scaled geometry.
+fn measure_strategy(row: &mut StrategyRow, opts: &Table1Options)
+                    -> Result<()> {
+    let dcfg = scaled_dataset(opts.train_videos, opts.test_videos, 0.6);
+    let pcfg = scaled_packing();
+    let ds = generate(&dcfg, opts.seed);
+    let t = pcfg.t_max;
+
+    // All strategies emit uniform 24-slot blocks for the one executable.
+    let packed = Arc::new(pack_with_block_len(row.strategy, &ds.train, &pcfg,
+                                              t, opts.seed)?);
+    validate(&packed, &ds.train, row.strategy == StrategyName::MixPad)?;
+    // Eval set: ALWAYS BLoad-packed full videos, identical for every
+    // strategy — the paper evaluates all training strategies on the same
+    // (un-truncated) test set; the packing strategy only changes what the
+    // model saw during training.
+    let packed_test = Arc::new(pack_with_block_len(
+        StrategyName::BLoad, &ds.test, &pcfg, t, opts.seed + 1)?);
+
+    let manifest =
+        ArtifactManifest::load(std::path::Path::new(&opts.artifacts_dir))?;
+    let spec = manifest.profile("small")?.clone();
+    let engine = Engine::load(spec)?;
+
+    let mut cfg = ExperimentConfig::default_config();
+    cfg.train.epochs = opts.epochs;
+    cfg.train.log_every = 0;
+    // Chunked strategies benefit from carried state only when chunks are
+    // scheduled in order; the paper's baselines do NOT carry state — that
+    // is exactly why they lose recall. Keep carry off here; the ablation
+    // harness turns it on.
+    cfg.train.carry_state = false;
+    let train_split = Arc::new(ds.train);
+    let test_split = Arc::new(ds.test);
+    let mut trainer = Trainer::new(engine, cfg.train.clone(),
+                                   cfg.ddp.clone(), cfg.loader.clone(),
+                                   opts.seed)?;
+    let mut last = None;
+    for epoch in 0..opts.epochs as u64 {
+        last = Some(trainer.train_epoch(&train_split, &packed, epoch)?);
+    }
+    let last = last.expect("epochs >= 1");
+    let recall = trainer.evaluate(&test_split, &packed_test,
+                                  &EvalConfig { recall_k: 20 })?;
+    row.epoch_wall_s = Some(last.wall_s);
+    row.epoch_parallel_s = Some(last.parallel_s);
+    row.recall_pct = Some(recall);
+    row.final_loss = Some(last.final_loss);
+    log_info!(
+        "{}: epoch wall {:.1}s parallel {:.1}s recall@20 {:.1}%",
+        row.strategy, last.wall_s, last.parallel_s, recall
+    );
+    Ok(())
+}
+
+/// Run the full harness.
+pub fn run(opts: &Table1Options) -> Result<Table1Report> {
+    let mut rows = pipeline_rows(opts.seed)?;
+    if opts.train {
+        for row in rows.iter_mut() {
+            if row.strategy == StrategyName::NaivePad
+                && !opts.include_naive_training
+            {
+                continue; // the paper did not finish this column either
+            }
+            measure_strategy(row, opts)?;
+        }
+    }
+    Ok(Table1Report {
+        rows,
+        measured: opts.train,
+    })
+}
+
+/// Render the report in the paper's layout, with paper values alongside.
+pub fn render(report: &Table1Report) -> String {
+    let mut t = TextTable::new(&[
+        "", "0 padding", "sampling", "mix pad", "block_pad",
+    ]);
+    let by = |s: StrategyName| {
+        report
+            .rows
+            .iter()
+            .find(|r| r.strategy == s)
+            .expect("all strategies present")
+    };
+    let order = [
+        StrategyName::NaivePad,
+        StrategyName::Sampling,
+        StrategyName::MixPad,
+        StrategyName::BLoad,
+    ];
+    let cells = |f: &dyn Fn(&StrategyRow) -> String| -> Vec<String> {
+        order.iter().map(|&s| f(by(s))).collect()
+    };
+    let mut row = vec!["padding amount".to_string()];
+    row.extend(cells(&|r| commas(r.padding as u64)));
+    t.row(&row);
+    let mut row = vec!["paper".to_string()];
+    row.extend(PAPER.iter().map(|p| commas(p.1)));
+    t.row(&row);
+    let mut row = vec!["# frames deleted".to_string()];
+    row.extend(cells(&|r| commas(r.deleted as u64)));
+    t.row(&row);
+    let mut row = vec!["paper".to_string()];
+    row.extend(PAPER.iter().map(|p| commas(p.2)));
+    t.row(&row);
+    let mut row = vec!["slots/epoch (cost model)".to_string()];
+    row.extend(cells(&|r| commas(r.slots_full as u64)));
+    t.row(&row);
+    let base = by(StrategyName::BLoad).slots_full as f64;
+    let mut row = vec!["time ratio vs block_pad".to_string()];
+    row.extend(cells(&|r| format!("{:.2}x", r.slots_full as f64 / base)));
+    t.row(&row);
+    let mut row = vec!["paper time ratio".to_string()];
+    row.extend(PAPER.iter().map(|p| format!("{:.2}x", p.3 as f64 / 41.0)));
+    t.row(&row);
+    if report.measured {
+        let fmt_opt = |v: Option<f64>, unit: &str| match v {
+            Some(x) => format!("{x:.1}{unit}"),
+            None => "—".to_string(),
+        };
+        let mut row = vec!["epoch time measured (parallel)".to_string()];
+        row.extend(cells(&|r| fmt_opt(r.epoch_parallel_s, "s")));
+        t.row(&row);
+        let mut row = vec!["epoch time measured (wall)".to_string()];
+        row.extend(cells(&|r| fmt_opt(r.epoch_wall_s, "s")));
+        t.row(&row);
+        let mut row = vec!["recall@20".to_string()];
+        row.extend(cells(&|r| fmt_opt(r.recall_pct, "")));
+        t.row(&row);
+        let mut row = vec!["paper recall@20".to_string()];
+        row.extend(PAPER.iter().map(|p| match p.4 {
+            Some(v) => format!("{v:.1}"),
+            None => "—".to_string(),
+        }));
+        t.row(&row);
+    }
+    t.render()
+}
+
+/// Export machine-readable results.
+pub fn to_json(report: &Table1Report) -> String {
+    let rows: Vec<Value> = report
+        .rows
+        .iter()
+        .map(|r| {
+            Value::object(vec![
+                ("strategy", Value::str(r.strategy.paper_label())),
+                ("padding", Value::int(r.padding as i64)),
+                ("frames_deleted", Value::int(r.deleted as i64)),
+                ("slots_full", Value::int(r.slots_full as i64)),
+                ("epoch_wall_s",
+                 r.epoch_wall_s.map(Value::num).unwrap_or(Value::Null)),
+                ("epoch_parallel_s",
+                 r.epoch_parallel_s.map(Value::num).unwrap_or(Value::Null)),
+                ("recall_pct",
+                 r.recall_pct.map(Value::num).unwrap_or(Value::Null)),
+            ])
+        })
+        .collect();
+    to_string_pretty(&Value::object(vec![
+        ("table", Value::str("table1")),
+        ("rows", Value::array(rows)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_rows_reproduce_paper_accounting() {
+        let rows = pipeline_rows(0).unwrap();
+        let by = |s: StrategyName| {
+            rows.iter().find(|r| r.strategy == s).unwrap()
+        };
+        let naive = by(StrategyName::NaivePad);
+        assert_eq!(naive.padding, 534_831, "paper-exact");
+        assert_eq!(naive.deleted, 0);
+        let bload = by(StrategyName::BLoad);
+        assert_eq!(bload.deleted, 0);
+        assert!(
+            naive.padding / bload.padding.max(1) > 100,
+            "paper headline: >100x padding reduction ({} vs {})",
+            naive.padding, bload.padding
+        );
+        let sampling = by(StrategyName::Sampling);
+        assert_eq!(sampling.padding, 0);
+        assert!((sampling.deleted as f64 - 92_271.0).abs() / 92_271.0 < 0.08);
+        let mix = by(StrategyName::MixPad);
+        assert!(mix.padding > 0 && mix.deleted > 0);
+        // Time ratios (cost model) near the paper's 4.15 / 0.44 / 0.98.
+        let base = bload.slots_full as f64;
+        let r_naive = naive.slots_full as f64 / base;
+        let r_samp = sampling.slots_full as f64 / base;
+        let r_mix = mix.slots_full as f64 / base;
+        assert!((r_naive - 4.15).abs() < 0.4, "naive ratio {r_naive}");
+        assert!((r_samp - 0.44).abs() < 0.1, "sampling ratio {r_samp}");
+        assert!((r_mix - 0.98).abs() < 0.12, "mix ratio {r_mix}");
+    }
+
+    #[test]
+    fn render_contains_paper_reference() {
+        let report = Table1Report {
+            rows: pipeline_rows(0).unwrap(),
+            measured: false,
+        };
+        let s = render(&report);
+        assert!(s.contains("534,831"), "{s}");
+        assert!(s.contains("block_pad"));
+        let j = to_json(&report);
+        assert!(j.contains("\"padding\": 534831"), "{j}");
+    }
+}

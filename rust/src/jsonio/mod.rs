@@ -1,0 +1,75 @@
+//! Minimal JSON reader/writer.
+//!
+//! Used to parse `artifacts/manifest.json` (written by `python/compile/
+//! aot.py`) and to export metrics/experiment results. Supports the full
+//! JSON grammar except `\u` surrogate pairs beyond the BMP; numbers are
+//! f64 (adequate: the manifest's largest integers are parameter counts).
+
+mod parse;
+mod value;
+mod write;
+
+pub use parse::parse;
+pub use value::Value;
+pub use write::to_string_pretty;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_nested() {
+        let src = r#"{"a": [1, 2.5, -3e2], "b": {"c": true, "d": null},
+                      "s": "he\"llo\nworld"}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("a").unwrap().as_array().unwrap().len(), 3);
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_bool(), Some(true));
+        assert!(v.get("b").unwrap().get("d").unwrap().is_null());
+        assert_eq!(
+            v.get("s").unwrap().as_str().unwrap(),
+            "he\"llo\nworld"
+        );
+        // Re-serialize and re-parse: must be identical.
+        let text = to_string_pretty(&v);
+        let v2 = parse(&text).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("tru").is_err());
+        assert!(parse("\"unterminated").is_err());
+        assert!(parse("{} trailing").is_err());
+    }
+
+    #[test]
+    fn parses_manifest_shape() {
+        let src = r#"{"format": 1, "profiles": {"tiny": {
+            "param_count": 12234,
+            "params": [{"name": "enc_w", "shape": [12, 32],
+                        "offset": 0, "size": 384}]}}}"#;
+        let v = parse(src).unwrap();
+        let tiny = v.get("profiles").unwrap().get("tiny").unwrap();
+        assert_eq!(tiny.get("param_count").unwrap().as_usize(), Some(12234));
+        let p0 = &tiny.get("params").unwrap().as_array().unwrap()[0];
+        assert_eq!(p0.get("name").unwrap().as_str(), Some("enc_w"));
+        assert_eq!(
+            p0.get("shape")
+                .unwrap()
+                .as_array()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_usize().unwrap())
+                .collect::<Vec<_>>(),
+            vec![12, 32]
+        );
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        let v = parse(r#""Aé""#).unwrap();
+        assert_eq!(v.as_str(), Some("Aé"));
+    }
+}

@@ -1,0 +1,37 @@
+//! # bload — block-packed sequential data loading for DDP training
+//!
+//! A production reproduction of *BLoad: Enhancing Neural Network Training
+//! with Efficient Sequential Data Handling* (Iftekhar, Ruschel, You,
+//! Manjunath; 2023) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is the Layer-3 coordinator: it owns the dataset substrate, the
+//! packing strategies (the paper's contribution, [`packing`]), the streaming
+//! loader, a simulated multi-rank DDP runtime with deadlock detection
+//! ([`ddp`]), the PJRT artifact runtime ([`runtime`]), the trainer and the
+//! recall@K evaluator. JAX/Pallas exist only at build time (`make
+//! artifacts`); at run time this crate executes pre-lowered HLO text via the
+//! PJRT CPU client.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index,
+//! and `EXPERIMENTS.md` for reproduced paper numbers.
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod configfmt;
+pub mod dataset;
+pub mod ddp;
+pub mod error;
+pub mod eval;
+pub mod harness;
+pub mod jsonio;
+pub mod loader;
+pub mod logging;
+pub mod metrics;
+pub mod model;
+pub mod packing;
+pub mod runtime;
+pub mod train;
+pub mod util;
+
+pub use error::{Error, Result};

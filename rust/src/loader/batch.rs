@@ -1,0 +1,323 @@
+//! Device-batch assembly: materialize packed blocks into the dense host
+//! buffers the `grad_step` / `infer_step` artifacts consume.
+
+use std::collections::HashMap;
+
+use crate::dataset::Split;
+use crate::error::{Error, Result};
+use crate::packing::Block;
+
+/// One rank-step's worth of data, laid out exactly like the artifact
+/// inputs (row-major f32).
+#[derive(Debug, Clone)]
+pub struct DeviceBatch {
+    /// `[B, T, O, F]`
+    pub feats: Vec<f32>,
+    /// `[B, T, O, C]`
+    pub labels: Vec<f32>,
+    /// `[B, T]` — 1.0 where the slot holds a *real* source frame.
+    pub frame_mask: Vec<f32>,
+    /// `[B, T]` — segment ids as f32 (−1.0 padding), the reset table.
+    pub seg_ids: Vec<f32>,
+    /// Block indices this batch was assembled from (state management).
+    pub block_ids: Vec<usize>,
+    pub batch: usize,
+    pub block_len: usize,
+    pub objects: usize,
+    pub feat_dim: usize,
+    pub classes: usize,
+    /// Real frames in the batch (for throughput accounting).
+    pub real_frames: usize,
+    /// Total slots (real + padding) — the compute actually executed.
+    pub slots: usize,
+}
+
+/// Bounded LRU of materialized videos, owned per loader worker.
+///
+/// Chunked strategies (sampling) place several spans of one video into
+/// different blocks; without a cache each span re-synthesizes the *whole*
+/// video (the latent chain is sequential, so a chunk cannot be generated
+/// without its prefix). §Perf L3 optimization #3.
+#[derive(Debug)]
+pub struct VideoCache {
+    cap: usize,
+    map: HashMap<u32, crate::dataset::VideoData>,
+    order: std::collections::VecDeque<u32>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl VideoCache {
+    pub fn new(cap: usize) -> VideoCache {
+        VideoCache {
+            cap: cap.max(1),
+            map: HashMap::new(),
+            order: std::collections::VecDeque::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn get(&mut self, split: &Split, meta: crate::dataset::VideoMeta)
+           -> &crate::dataset::VideoData {
+        if self.map.contains_key(&meta.id) {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            if self.map.len() >= self.cap {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                }
+            }
+            self.map.insert(meta.id, split.spec.materialize(meta));
+            self.order.push_back(meta.id);
+        }
+        &self.map[&meta.id]
+    }
+}
+
+/// Materialize `blocks` (with their indices) into a dense batch.
+///
+/// Each block's placements are filled from deterministically re-generated
+/// video content; within-video padding lanes (mix pad) get zero features
+/// and a zero frame mask past the video's real length — the "pad with 0's"
+/// variant from the paper's Fig 3 caption.
+pub fn materialize_batch(split: &Split, blocks: &[(usize, &Block)],
+                         block_len: usize) -> Result<DeviceBatch> {
+    let mut cache = VideoCache::new(blocks.len().max(4));
+    materialize_batch_cached(split, blocks, block_len, &mut cache)
+}
+
+/// [`materialize_batch`] with a caller-owned [`VideoCache`] (loader
+/// workers keep one across their whole epoch shard).
+pub fn materialize_batch_cached(split: &Split, blocks: &[(usize, &Block)],
+                                block_len: usize, cache: &mut VideoCache)
+                                -> Result<DeviceBatch> {
+    let spec = &split.spec;
+    let (o, f, c) = (spec.objects, spec.feat_dim, spec.classes);
+    let b = blocks.len();
+    let t = block_len;
+    let lens: HashMap<u32, usize> = split
+        .videos
+        .iter()
+        .map(|v| (v.id, v.len as usize))
+        .collect();
+
+    let mut out = DeviceBatch {
+        feats: vec![0.0; b * t * o * f],
+        labels: vec![0.0; b * t * o * c],
+        frame_mask: vec![0.0; b * t],
+        seg_ids: vec![-1.0; b * t],
+        block_ids: blocks.iter().map(|(i, _)| *i).collect(),
+        batch: b,
+        block_len: t,
+        objects: o,
+        feat_dim: f,
+        classes: c,
+        real_frames: 0,
+        slots: b * t,
+    };
+
+    for (bi, (_, block)) in blocks.iter().enumerate() {
+        if block.len != t {
+            return Err(Error::Loader(format!(
+                "block len {} != batch block_len {t}",
+                block.len
+            )));
+        }
+        for (ord, s) in block.segments.iter().enumerate() {
+            let vlen = *lens.get(&s.video).ok_or_else(|| {
+                Error::Loader(format!("unknown video {}", s.video))
+            })?;
+            let meta = crate::dataset::VideoMeta {
+                id: s.video,
+                len: vlen as u32,
+            };
+            // Deterministic regeneration through the worker's LRU —
+            // multiple spans of one video synthesize it once.
+            let video = cache.get(split, meta);
+            for k in 0..s.len {
+                let slot = s.at + k;
+                let src = s.src_start + k;
+                out.seg_ids[bi * t + slot] =
+                    if block.merged { 0.0 } else { ord as f32 };
+                if src >= vlen {
+                    continue; // within-video padding lane (mix pad)
+                }
+                out.frame_mask[bi * t + slot] = 1.0;
+                out.real_frames += 1;
+                let fsrc = &video.feats[src * o * f..(src + 1) * o * f];
+                let fdst = &mut out.feats
+                    [(bi * t + slot) * o * f..(bi * t + slot + 1) * o * f];
+                fdst.copy_from_slice(fsrc);
+                let lsrc = &video.labels[src * o * c..(src + 1) * o * c];
+                let ldst = &mut out.labels
+                    [(bi * t + slot) * o * c..(bi * t + slot + 1) * o * c];
+                ldst.copy_from_slice(lsrc);
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, StrategyName};
+    use crate::dataset::synthetic::{generate, tiny_config};
+    use crate::packing::pack;
+
+    fn packed_tiny() -> (crate::dataset::AgSynth, crate::packing::PackedDataset)
+    {
+        let ds = generate(&tiny_config(), 1);
+        let mut cfg = ExperimentConfig::default_config().packing;
+        cfg.t_max = 6;
+        let packed = pack(StrategyName::BLoad, &ds.train, &cfg, 0).unwrap();
+        (ds, packed)
+    }
+
+    #[test]
+    fn shapes_and_mask_consistency() {
+        let (ds, packed) = packed_tiny();
+        let refs: Vec<(usize, &Block)> =
+            packed.blocks.iter().take(2).enumerate().collect();
+        let batch = materialize_batch(&ds.train, &refs, 6).unwrap();
+        assert_eq!(batch.batch, 2);
+        assert_eq!(batch.feats.len(), 2 * 6 * 4 * 12);
+        assert_eq!(batch.labels.len(), 2 * 6 * 4 * 10);
+        // mask == 1 exactly where seg_ids >= 0 (bload has no within-video
+        // padding).
+        for i in 0..batch.frame_mask.len() {
+            assert_eq!(
+                batch.frame_mask[i] > 0.5,
+                batch.seg_ids[i] >= 0.0,
+                "slot {i}"
+            );
+        }
+        assert_eq!(
+            batch.real_frames,
+            packed.blocks[0].used() + packed.blocks[1].used()
+        );
+    }
+
+    #[test]
+    fn content_matches_source_video() {
+        let (ds, packed) = packed_tiny();
+        let refs: Vec<(usize, &Block)> =
+            packed.blocks.iter().take(1).enumerate().collect();
+        let batch = materialize_batch(&ds.train, &refs, 6).unwrap();
+        let s = packed.blocks[0].segments[0];
+        let vlen = ds.train.videos.iter()
+            .find(|v| v.id == s.video).unwrap().len;
+        let video = ds.train.spec.materialize(crate::dataset::VideoMeta {
+            id: s.video,
+            len: vlen,
+        });
+        let (o, f) = (4, 12);
+        // Slot s.at holds source frame s.src_start.
+        let got = &batch.feats[(s.at) * o * f..(s.at) * o * f + o * f];
+        let want = &video.feats[s.src_start * o * f
+            ..s.src_start * o * f + o * f];
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn padding_slots_are_zero() {
+        let (ds, packed) = packed_tiny();
+        // Find a block with padding.
+        let (idx, block) = packed
+            .blocks
+            .iter()
+            .enumerate()
+            .find(|(_, b)| b.padding() > 0)
+            .expect("toy pack has at least one padded block");
+        let refs = vec![(idx, block)];
+        let batch = materialize_batch(&ds.train, &refs, 6).unwrap();
+        let (o, f) = (4, 12);
+        for slot in 0..6 {
+            if batch.seg_ids[slot] < 0.0 {
+                let fr = &batch.feats[slot * o * f..(slot + 1) * o * f];
+                assert!(fr.iter().all(|&x| x == 0.0));
+                assert_eq!(batch.frame_mask[slot], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn video_cache_hits_on_repeated_spans() {
+        // Two chunks of one video in one batch -> one synthesis.
+        let ds = generate(&tiny_config(), 8);
+        let v = ds.train.videos.iter().find(|v| v.len >= 4).unwrap();
+        let mut b = crate::packing::Block::new(4);
+        b.push(v.id, 0, 2).unwrap();
+        b.push(v.id, 2, 2).unwrap();
+        let refs = vec![(0usize, &b)];
+        let mut cache = VideoCache::new(8);
+        materialize_batch_cached(&ds.train, &refs, 4, &mut cache).unwrap();
+        assert_eq!(cache.misses, 1);
+        assert_eq!(cache.hits, 1);
+        // Re-materializing the same batch is now all hits.
+        materialize_batch_cached(&ds.train, &refs, 4, &mut cache).unwrap();
+        assert_eq!(cache.misses, 1);
+        assert_eq!(cache.hits, 3);
+    }
+
+    #[test]
+    fn video_cache_evicts_at_capacity() {
+        let ds = generate(&tiny_config(), 8);
+        let mut cache = VideoCache::new(2);
+        for v in ds.train.videos.iter().take(4) {
+            let mut b = crate::packing::Block::new(v.len as usize);
+            b.push(v.id, 0, v.len as usize).unwrap();
+            let refs = vec![(0usize, &b)];
+            materialize_batch_cached(&ds.train, &refs, v.len as usize,
+                                     &mut cache)
+                .unwrap();
+        }
+        assert_eq!(cache.misses, 4);
+        assert_eq!(cache.hits, 0);
+    }
+
+    #[test]
+    fn rejects_wrong_block_len() {
+        let (ds, packed) = packed_tiny();
+        let refs: Vec<(usize, &Block)> =
+            packed.blocks.iter().take(1).enumerate().collect();
+        assert!(materialize_batch(&ds.train, &refs, 8).is_err());
+    }
+
+    #[test]
+    fn mixpad_within_video_padding_masked() {
+        let ds = generate(&tiny_config(), 5);
+        let mut cfg = ExperimentConfig::default_config().packing;
+        cfg.t_mix = 6;
+        let packed = pack(StrategyName::MixPad, &ds.train, &cfg, 0).unwrap();
+        // Find a lane whose video is shorter than 6.
+        let (idx, block, seg) = packed
+            .blocks
+            .iter()
+            .enumerate()
+            .find_map(|(i, b)| {
+                b.segments
+                    .iter()
+                    .find(|s| {
+                        let vl = ds.train.videos.iter()
+                            .find(|v| v.id == s.video).unwrap().len as usize;
+                        vl < 6
+                    })
+                    .map(|s| (i, b, *s))
+            })
+            .expect("tiny videos include some shorter than 6");
+        let refs = vec![(idx, block)];
+        let batch = materialize_batch(&ds.train, &refs, 6).unwrap();
+        let vlen = ds.train.videos.iter()
+            .find(|v| v.id == seg.video).unwrap().len as usize;
+        for k in vlen..6 {
+            let slot = seg.at + k;
+            assert_eq!(batch.frame_mask[slot], 0.0,
+                       "padded lane frame must be masked");
+            assert!(batch.seg_ids[slot] >= 0.0,
+                    "lane still belongs to the segment");
+        }
+    }
+}

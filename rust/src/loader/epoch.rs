@@ -1,0 +1,124 @@
+//! Epoch planning: deterministic shuffle → rank shard → fixed-size batch
+//! schedule. The plan is pure bookkeeping (indices only); materialization
+//! happens in the prefetcher.
+
+use crate::packing::PackedDataset;
+use crate::util::Rng;
+
+use super::shard::shard_blocks;
+
+/// The batch schedule of one rank for one epoch.
+#[derive(Debug, Clone)]
+pub struct EpochPlan {
+    /// `batches[i]` = block indices of the i-th step on this rank.
+    pub batches: Vec<Vec<usize>>,
+    pub rank: usize,
+    pub epoch: u64,
+    /// Blocks dropped globally to keep per-rank counts equal.
+    pub dropped_blocks: usize,
+}
+
+impl EpochPlan {
+    /// Build the plan for `rank` out of `ranks`. All ranks constructing a
+    /// plan with the same `(seed, epoch)` see the same global shuffle —
+    /// exactly how `DistributedSampler.set_epoch` works.
+    ///
+    /// Trailing blocks that do not fill a complete `batch` on every rank
+    /// are dropped (equal step counts are the BLoad guarantee).
+    pub fn new(packed: &PackedDataset, ranks: usize, rank: usize,
+               batch: usize, shuffle: bool, seed: u64, epoch: u64)
+               -> EpochPlan {
+        assert!(rank < ranks, "rank {rank} out of {ranks}");
+        assert!(batch > 0);
+        let mut order: Vec<usize> = (0..packed.blocks.len()).collect();
+        if shuffle {
+            let mut rng = Rng::new(seed ^ epoch.wrapping_mul(0x9E37_79B9));
+            rng.shuffle(&mut order);
+        }
+        let (shards, mut dropped) = shard_blocks(order.len(), ranks);
+        let mine = &shards[rank];
+        let steps = mine.len() / batch;
+        dropped += (mine.len() - steps * batch) * ranks;
+        let batches = (0..steps)
+            .map(|s| {
+                mine[s * batch..(s + 1) * batch]
+                    .iter()
+                    .map(|&pos| order[pos])
+                    .collect()
+            })
+            .collect();
+        EpochPlan {
+            batches,
+            rank,
+            epoch,
+            dropped_blocks: dropped,
+        }
+    }
+
+    pub fn steps(&self) -> usize {
+        self.batches.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, StrategyName};
+    use crate::dataset::synthetic::generate;
+    use crate::packing::pack;
+
+    fn packed() -> crate::packing::PackedDataset {
+        let cfg = ExperimentConfig::default_config().dataset.scaled(0.02);
+        let ds = generate(&cfg, 1);
+        pack(
+            StrategyName::BLoad,
+            &ds.train,
+            &ExperimentConfig::default_config().packing,
+            0,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn equal_steps_across_ranks() {
+        let p = packed();
+        let plans: Vec<EpochPlan> = (0..4)
+            .map(|r| EpochPlan::new(&p, 4, r, 2, true, 7, 0))
+            .collect();
+        let steps: Vec<usize> = plans.iter().map(|p| p.steps()).collect();
+        assert!(steps.windows(2).all(|w| w[0] == w[1]), "{steps:?}");
+        assert!(steps[0] > 0);
+    }
+
+    #[test]
+    fn no_block_on_two_ranks() {
+        let p = packed();
+        let mut seen = std::collections::HashSet::new();
+        for r in 0..4 {
+            let plan = EpochPlan::new(&p, 4, r, 2, true, 7, 3);
+            for b in plan.batches.iter().flatten() {
+                assert!(seen.insert(*b), "block {b} scheduled twice");
+            }
+        }
+    }
+
+    #[test]
+    fn epoch_changes_shuffle_deterministically() {
+        let p = packed();
+        let a = EpochPlan::new(&p, 2, 0, 2, true, 7, 0);
+        let b = EpochPlan::new(&p, 2, 0, 2, true, 7, 0);
+        let c = EpochPlan::new(&p, 2, 0, 2, true, 7, 1);
+        assert_eq!(a.batches, b.batches);
+        assert_ne!(a.batches, c.batches);
+    }
+
+    #[test]
+    fn no_shuffle_is_identity_order() {
+        let p = packed();
+        let plan = EpochPlan::new(&p, 1, 0, 2, false, 7, 0);
+        let flat: Vec<usize> =
+            plan.batches.iter().flatten().copied().collect();
+        let want: Vec<usize> = (0..flat.len()).collect();
+        assert_eq!(flat, want);
+    }
+}

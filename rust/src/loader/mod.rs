@@ -1,0 +1,25 @@
+//! Streaming block loader: shuffling, rank sharding, batch assembly and
+//! threaded prefetch with bounded-queue backpressure.
+//!
+//! The pipeline per epoch:
+//!
+//! ```text
+//! PackedDataset ──shuffle──► shard(rank) ──► batch(B blocks) ──►
+//!     materialize (worker threads, bounded channel) ──► DeviceBatch
+//! ```
+//!
+//! A [`DeviceBatch`] is exactly what one rank feeds its `grad_step`
+//! executable: `feats [B,T,O,F]`, `labels [B,T,O,C]`, `frame_mask [B,T]`,
+//! `seg_ids [B,T]` (as f32 for the HLO interface), plus block provenance
+//! for recurrent-state management.
+
+pub mod batch;
+pub mod epoch;
+pub mod prefetch;
+pub mod shard;
+
+pub use batch::{materialize_batch, materialize_batch_cached, DeviceBatch,
+                VideoCache};
+pub use epoch::EpochPlan;
+pub use prefetch::Prefetcher;
+pub use shard::shard_blocks;

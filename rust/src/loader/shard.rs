@@ -1,0 +1,58 @@
+//! Rank sharding of packed blocks.
+//!
+//! Uniform blocks are the whole point of BLoad: every rank receives the
+//! same *number* of equally-sized blocks, so DDP iteration counts match
+//! and the Fig 2 deadlock cannot occur. For un-padded variable-length
+//! data (the failure case) see [`crate::ddp::sim`].
+
+/// Assign block indices to `ranks` shards, dropping the tail remainder so
+/// every rank gets exactly the same count (mirrors PyTorch's
+/// `DistributedSampler(drop_last=True)` behaviour for equal-step epochs).
+///
+/// Returns `shards[rank] = Vec<block index>` and the number of dropped
+/// blocks.
+pub fn shard_blocks(n_blocks: usize, ranks: usize)
+                    -> (Vec<Vec<usize>>, usize) {
+    assert!(ranks > 0);
+    let per_rank = n_blocks / ranks;
+    let used = per_rank * ranks;
+    let mut shards = vec![Vec::with_capacity(per_rank); ranks];
+    for i in 0..used {
+        // Round-robin: block i goes to rank i % ranks. Keeps consecutive
+        // blocks on different ranks (good mixing after shuffling).
+        shards[i % ranks].push(i);
+    }
+    (shards, n_blocks - used)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_counts_always() {
+        for n in 0..40 {
+            for ranks in 1..9 {
+                let (shards, dropped) = shard_blocks(n, ranks);
+                assert_eq!(shards.len(), ranks);
+                let counts: Vec<usize> =
+                    shards.iter().map(|s| s.len()).collect();
+                assert!(counts.windows(2).all(|w| w[0] == w[1]),
+                        "n={n} ranks={ranks}: {counts:?}");
+                assert_eq!(
+                    counts.iter().sum::<usize>() + dropped,
+                    n
+                );
+                assert!(dropped < ranks);
+            }
+        }
+    }
+
+    #[test]
+    fn covers_all_used_blocks_once() {
+        let (shards, _) = shard_blocks(10, 3);
+        let mut all: Vec<usize> = shards.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..9).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,19 @@
+//! `bload` — the Layer-3 coordinator binary.
+//!
+//! See `bload --help`, README.md, and DESIGN.md.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match bload::cli::run(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e}");
+            let mut src = std::error::Error::source(&e);
+            while let Some(s) = src {
+                eprintln!("  caused by: {s}");
+                src = s.source();
+            }
+            std::process::exit(1);
+        }
+    }
+}

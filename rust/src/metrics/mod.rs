@@ -1,0 +1,7 @@
+//! Metrics: timers, counters and text-table rendering (Table I format).
+
+pub mod table;
+pub mod timer;
+
+pub use table::TextTable;
+pub use timer::{ScopedTimer, Timings};

@@ -1,0 +1,129 @@
+//! Named wall-clock timers with aggregation.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Welford;
+
+/// Aggregated timings keyed by label.
+#[derive(Debug, Default)]
+pub struct Timings {
+    entries: BTreeMap<String, Welford>,
+}
+
+impl Timings {
+    pub fn new() -> Timings {
+        Timings::default()
+    }
+
+    pub fn record(&mut self, label: &str, d: Duration) {
+        self.entries
+            .entry(label.to_string())
+            .or_insert_with(Welford::new)
+            .push(d.as_secs_f64());
+    }
+
+    /// Time a closure under `label`.
+    pub fn time<T>(&mut self, label: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(label, t0.elapsed());
+        out
+    }
+
+    pub fn total_seconds(&self, label: &str) -> f64 {
+        self.entries
+            .get(label)
+            .map(|w| w.mean() * w.count() as f64)
+            .unwrap_or(0.0)
+    }
+
+    pub fn count(&self, label: &str) -> u64 {
+        self.entries.get(label).map(|w| w.count()).unwrap_or(0)
+    }
+
+    pub fn mean_seconds(&self, label: &str) -> f64 {
+        self.entries.get(label).map(|w| w.mean()).unwrap_or(0.0)
+    }
+
+    /// Multi-line report sorted by total time, descending.
+    pub fn report(&self) -> String {
+        let mut rows: Vec<(String, f64, u64, f64)> = self
+            .entries
+            .iter()
+            .map(|(k, w)| {
+                (k.clone(), w.mean() * w.count() as f64, w.count(), w.mean())
+            })
+            .collect();
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mut out = String::new();
+        for (label, total, count, mean) in rows {
+            out.push_str(&format!(
+                "{label:<28} total {total:>9.3}s  n={count:<7} mean \
+                 {:>9.3}ms\n",
+                mean * 1e3
+            ));
+        }
+        out
+    }
+}
+
+/// RAII timer recording into a `Timings` on drop.
+pub struct ScopedTimer<'a> {
+    timings: &'a mut Timings,
+    label: &'a str,
+    start: Instant,
+}
+
+impl<'a> ScopedTimer<'a> {
+    pub fn new(timings: &'a mut Timings, label: &'a str) -> ScopedTimer<'a> {
+        ScopedTimer {
+            timings,
+            label,
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Drop for ScopedTimer<'_> {
+    fn drop(&mut self) {
+        self.timings.record(self.label, self.start.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut t = Timings::new();
+        t.record("step", Duration::from_millis(10));
+        t.record("step", Duration::from_millis(30));
+        t.record("load", Duration::from_millis(5));
+        assert_eq!(t.count("step"), 2);
+        assert!((t.mean_seconds("step") - 0.020).abs() < 1e-9);
+        assert!((t.total_seconds("step") - 0.040).abs() < 1e-9);
+        let rep = t.report();
+        assert!(rep.find("step").unwrap() < rep.find("load").unwrap());
+    }
+
+    #[test]
+    fn scoped_timer_records_on_drop() {
+        let mut t = Timings::new();
+        {
+            let _g = ScopedTimer::new(&mut t, "scope");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(t.count("scope"), 1);
+        assert!(t.total_seconds("scope") >= 0.002);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut t = Timings::new();
+        let v = t.time("f", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(t.count("f"), 1);
+    }
+}

@@ -1,0 +1,145 @@
+//! Checkpoint format: params + momentum + step counter, CRC-protected.
+//!
+//! Layout (little-endian): magic `"BLCK"`, version u32, step u64,
+//! param_count u64, params f32[P], mom f32[P], crc32 u32 (over everything
+//! after the magic).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::crc32::Hasher;
+
+const MAGIC: &[u8; 4] = b"BLCK";
+const VERSION: u32 = 1;
+
+/// A loaded checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub params: Vec<f32>,
+    pub mom: Vec<f32>,
+}
+
+/// Write a checkpoint atomically (tmp file + rename).
+pub fn save_checkpoint(path: &Path, step: u64, params: &[f32], mom: &[f32])
+                       -> Result<()> {
+    if params.len() != mom.len() {
+        return Err(Error::Train(format!(
+            "checkpoint: params ({}) and momentum ({}) differ",
+            params.len(),
+            mom.len()
+        )));
+    }
+    let mut body = Vec::with_capacity(20 + 8 * params.len());
+    body.extend_from_slice(&VERSION.to_le_bytes());
+    body.extend_from_slice(&step.to_le_bytes());
+    body.extend_from_slice(&(params.len() as u64).to_le_bytes());
+    for x in params {
+        body.extend_from_slice(&x.to_le_bytes());
+    }
+    for x in mom {
+        body.extend_from_slice(&x.to_le_bytes());
+    }
+    let mut h = Hasher::new();
+    h.update(&body);
+    let crc = h.finalize();
+
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .map_err(|e| Error::io(tmp.display(), e))?;
+        f.write_all(MAGIC)
+            .and_then(|_| f.write_all(&body))
+            .and_then(|_| f.write_all(&crc.to_le_bytes()))
+            .map_err(|e| Error::io(tmp.display(), e))?;
+    }
+    std::fs::rename(&tmp, path).map_err(|e| Error::io(path.display(), e))
+}
+
+/// Read + verify a checkpoint.
+pub fn load_checkpoint(path: &Path) -> Result<Checkpoint> {
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| Error::io(path.display(), e))?;
+    let mut all = Vec::new();
+    f.read_to_end(&mut all)
+        .map_err(|e| Error::io(path.display(), e))?;
+    if all.len() < 24 || &all[..4] != MAGIC {
+        return Err(Error::Train(format!(
+            "{}: not a bload checkpoint",
+            path.display()
+        )));
+    }
+    let (body, footer) = all[4..].split_at(all.len() - 8);
+    let want = u32::from_le_bytes(footer[..4].try_into().unwrap());
+    let mut h = Hasher::new();
+    h.update(body);
+    if h.finalize() != want {
+        return Err(Error::Train(format!(
+            "{}: checkpoint CRC mismatch",
+            path.display()
+        )));
+    }
+    let version = u32::from_le_bytes(body[0..4].try_into().unwrap());
+    if version != VERSION {
+        return Err(Error::Train(format!(
+            "unsupported checkpoint version {version}"
+        )));
+    }
+    let step = u64::from_le_bytes(body[4..12].try_into().unwrap());
+    let n = u64::from_le_bytes(body[12..20].try_into().unwrap()) as usize;
+    if body.len() != 20 + 8 * n {
+        return Err(Error::Train("checkpoint truncated".into()));
+    }
+    let read_f32s = |raw: &[u8]| -> Vec<f32> {
+        raw.chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect()
+    };
+    Ok(Checkpoint {
+        step,
+        params: read_f32s(&body[20..20 + 4 * n]),
+        mom: read_f32s(&body[20 + 4 * n..]),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("bload_ckpt_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = tmp("rt");
+        let params: Vec<f32> = (0..100).map(|i| i as f32 * 0.5).collect();
+        let mom: Vec<f32> = (0..100).map(|i| -(i as f32)).collect();
+        save_checkpoint(&p, 42, &params, &mom).unwrap();
+        let c = load_checkpoint(&p).unwrap();
+        assert_eq!(c.step, 42);
+        assert_eq!(c.params, params);
+        assert_eq!(c.mom, mom);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let p = tmp("bad");
+        save_checkpoint(&p, 1, &[1.0, 2.0], &[0.0, 0.0]).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let n = bytes.len();
+        bytes[n / 2] ^= 0x40;
+        std::fs::write(&p, bytes).unwrap();
+        assert!(load_checkpoint(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mismatched_buffers_rejected() {
+        let p = tmp("mm");
+        assert!(save_checkpoint(&p, 0, &[1.0], &[]).is_err());
+    }
+}

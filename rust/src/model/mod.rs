@@ -1,0 +1,9 @@
+//! Host-side model state: parameter/momentum buffers, checkpointing, and
+//! the recurrent-state manager that implements the paper's reset-table
+//! semantics across blocks.
+
+pub mod checkpoint;
+pub mod state;
+
+pub use checkpoint::{load_checkpoint, save_checkpoint, Checkpoint};
+pub use state::StateManager;

@@ -1,0 +1,192 @@
+//! Recurrent feedback-state management (the `oE_{t-1}` of the paper's
+//! Fig 6) across *blocks*.
+//!
+//! Inside a block, the reset table / segment ids let the model zero its
+//! state at every sequence start (handled in the AOT'd graph). Across
+//! blocks the state is the coordinator's job:
+//!
+//! * BLoad and naive packing place *whole* videos — every block starts a
+//!   fresh sequence, so `state_in = 0`.
+//! * Chunked strategies (sampling) may schedule consecutive chunks of one
+//!   video in consecutive steps; with `carry_state` on, the manager hands
+//!   the `state_out` captured after chunk `[s, e)` of video `v` to the
+//!   step whose first segment is `(v, e)` — the "stateful chunking"
+//!   ablation of DESIGN.md §4 (Fig 6 row).
+
+use std::collections::HashMap;
+
+use crate::loader::DeviceBatch;
+use crate::packing::Block;
+
+/// Tracks per-video continuation states between steps of one rank.
+#[derive(Debug, Default)]
+pub struct StateManager {
+    state_dim: usize,
+    carry: bool,
+    /// `(video, next_src_start)` → state row.
+    pending: HashMap<(u32, usize), Vec<f32>>,
+    /// Telemetry: how many block rows resumed a stored state.
+    pub resumed: u64,
+}
+
+impl StateManager {
+    pub fn new(state_dim: usize, carry: bool) -> StateManager {
+        StateManager {
+            state_dim,
+            carry,
+            pending: HashMap::new(),
+            resumed: 0,
+        }
+    }
+
+    /// Build `state_in [B, S]` for a batch: zero rows except where the
+    /// batch's first segment continues a stored stream.
+    pub fn state_in(&mut self, batch: &DeviceBatch, blocks: &[&Block])
+                    -> Vec<f32> {
+        let b = batch.batch;
+        let mut out = vec![0.0; b * self.state_dim];
+        if !self.carry {
+            return out;
+        }
+        for (bi, block) in blocks.iter().enumerate() {
+            if let Some(first) = block.segments.first() {
+                let key = (first.video, first.src_start);
+                if first.src_start > 0 {
+                    if let Some(row) = self.pending.remove(&key) {
+                        out[bi * self.state_dim..(bi + 1) * self.state_dim]
+                            .copy_from_slice(&row);
+                        self.resumed += 1;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Record `state_out [B, S]` after a step: the state belongs to the
+    /// *last* segment of each block row; store it keyed by the frame that
+    /// would come next in that video.
+    pub fn absorb(&mut self, state_out: &[f32], blocks: &[&Block]) {
+        if !self.carry {
+            return;
+        }
+        for (bi, block) in blocks.iter().enumerate() {
+            if let Some(last) = block.segments.last() {
+                let next = last.src_start + last.len;
+                let row = state_out
+                    [bi * self.state_dim..(bi + 1) * self.state_dim]
+                    .to_vec();
+                self.pending.insert((last.video, next), row);
+            }
+        }
+    }
+
+    /// Drop everything (epoch boundary).
+    pub fn reset(&mut self) {
+        self.pending.clear();
+    }
+
+    pub fn pending_streams(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packing::Block;
+
+    fn batch(b: usize, t: usize) -> DeviceBatch {
+        DeviceBatch {
+            feats: vec![],
+            labels: vec![],
+            frame_mask: vec![],
+            seg_ids: vec![],
+            block_ids: vec![],
+            batch: b,
+            block_len: t,
+            objects: 1,
+            feat_dim: 1,
+            classes: 1,
+            real_frames: 0,
+            slots: b * t,
+        }
+    }
+
+    fn chunk_block(video: u32, src_start: usize, len: usize) -> Block {
+        let mut b = Block::new(len);
+        b.push(video, src_start, len).unwrap();
+        b
+    }
+
+    #[test]
+    fn carries_state_between_consecutive_chunks() {
+        let mut mgr = StateManager::new(2, true);
+        let b0 = chunk_block(7, 0, 10);
+        let batch0 = batch(1, 10);
+        let s_in = mgr.state_in(&batch0, &[&b0]);
+        assert_eq!(s_in, vec![0.0, 0.0], "fresh video starts from zero");
+        mgr.absorb(&[1.5, -2.0], &[&b0]);
+        // Next chunk [10, 20) of video 7 resumes the stored state.
+        let b1 = chunk_block(7, 10, 10);
+        let s_in = mgr.state_in(&batch(1, 10), &[&b1]);
+        assert_eq!(s_in, vec![1.5, -2.0]);
+        assert_eq!(mgr.resumed, 1);
+        // The state is consumed.
+        let s_in = mgr.state_in(&batch(1, 10), &[&b1]);
+        assert_eq!(s_in, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn wrong_offset_does_not_resume() {
+        let mut mgr = StateManager::new(1, true);
+        let b0 = chunk_block(3, 0, 8);
+        mgr.absorb(&[9.0], &[&b0]);
+        // Chunk [16, 24) skips [8, 16): no resume.
+        let b2 = chunk_block(3, 16, 8);
+        assert_eq!(mgr.state_in(&batch(1, 8), &[&b2]), vec![0.0]);
+        assert_eq!(mgr.resumed, 0);
+    }
+
+    #[test]
+    fn disabled_carry_is_always_zero() {
+        let mut mgr = StateManager::new(1, false);
+        let b0 = chunk_block(3, 0, 8);
+        mgr.absorb(&[9.0], &[&b0]);
+        let b1 = chunk_block(3, 8, 8);
+        assert_eq!(mgr.state_in(&batch(1, 8), &[&b1]), vec![0.0]);
+        assert_eq!(mgr.pending_streams(), 0);
+    }
+
+    #[test]
+    fn whole_video_blocks_never_resume() {
+        // bload blocks: src_start == 0 for every first segment.
+        let mut mgr = StateManager::new(1, true);
+        let b0 = chunk_block(5, 0, 6);
+        mgr.absorb(&[4.0], &[&b0]);
+        let b1 = chunk_block(5, 0, 6); // same video replayed from 0
+        assert_eq!(mgr.state_in(&batch(1, 6), &[&b1]), vec![0.0]);
+    }
+
+    #[test]
+    fn multi_row_batches_keyed_independently() {
+        let mut mgr = StateManager::new(1, true);
+        let b0 = chunk_block(1, 0, 4);
+        let b1 = chunk_block(2, 0, 4);
+        mgr.absorb(&[0.5, 0.7], &[&b0, &b1]);
+        let c0 = chunk_block(2, 4, 4);
+        let c1 = chunk_block(1, 4, 4);
+        let s = mgr.state_in(&batch(2, 4), &[&c0, &c1]);
+        assert_eq!(s, vec![0.7, 0.5], "rows matched by video id");
+        assert_eq!(mgr.resumed, 2);
+    }
+
+    #[test]
+    fn reset_clears_pending() {
+        let mut mgr = StateManager::new(1, true);
+        mgr.absorb(&[1.0], &[&chunk_block(1, 0, 4)]);
+        assert_eq!(mgr.pending_streams(), 1);
+        mgr.reset();
+        assert_eq!(mgr.pending_streams(), 0);
+    }
+}

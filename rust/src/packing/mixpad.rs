@@ -1,0 +1,115 @@
+//! `mix pad` baseline: pad-or-trim every video to a common target length
+//! `t_mix` (the dataset's mean length — Action Genome: 22).
+//!
+//! Table I's mix-pad column decomposes exactly as
+//! `kept + padding = N·t_mix` with `deleted = Σ max(0, T_i − t_mix)` and
+//! `padding = Σ max(0, t_mix − T_i)` — with the paper's numbers,
+//! `(166785 − 40289) + 37712 = 7464·22`, which pins `t_mix = 22`
+//! (DESIGN.md §4).
+
+use crate::dataset::Split;
+use crate::error::{Error, Result};
+use crate::util::Rng;
+
+use super::{Block, Placement, PackedDataset};
+
+/// Pad/trim every video to `t_mix`, group `block_len / t_mix` videos per
+/// block (`block_len % t_mix == 0`; `block_len == t_mix` reproduces the
+/// paper's per-sample accounting), shuffle order.
+pub fn pack(split: &Split, t_mix: usize, block_len: usize, rng: &mut Rng)
+            -> Result<PackedDataset> {
+    if t_mix == 0 || block_len < t_mix || block_len % t_mix != 0 {
+        return Err(Error::Packing(format!(
+            "mixpad: block_len {block_len} must be a positive multiple of \
+             t_mix {t_mix}"
+        )));
+    }
+    let mut order: Vec<usize> = (0..split.videos.len()).collect();
+    rng.shuffle(&mut order);
+
+    let per_block = block_len / t_mix;
+    let mut blocks = Vec::with_capacity(order.len().div_ceil(per_block));
+    for group in order.chunks(per_block) {
+        let mut b = Block::new(block_len);
+        for (slot, &vi) in group.iter().enumerate() {
+            let v = &split.videos[vi];
+            // The placement always spans the full t_mix lane: frames past
+            // the video's real length are *within-video padding* (the
+            // paper pads "by adding 0's or repeating the last entry").
+            // finalize() counts only the overlap with [0, len) as real.
+            b.segments.push(Placement {
+                at: slot * t_mix,
+                video: v.id,
+                src_start: 0,
+                len: t_mix,
+            });
+        }
+        blocks.push(b);
+    }
+    Ok(PackedDataset::finalize("mix pad", block_len, blocks, split))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::dataset::synthetic::generate;
+    use crate::util::Rng;
+
+    #[test]
+    fn paper_accounting_at_full_scale() {
+        let cfg = ExperimentConfig::default_config().dataset;
+        let ds = generate(&cfg, 0);
+        let packed = pack(&ds.train, 22, 22, &mut Rng::new(1)).unwrap();
+        let del: usize = ds.train.videos.iter()
+            .map(|v| (v.len as i64 - 22).max(0) as usize).sum();
+        let padv: usize = ds.train.videos.iter()
+            .map(|v| (22 - v.len as i64).max(0) as usize).sum();
+        assert_eq!(packed.stats.frames_deleted, del);
+        assert_eq!(packed.stats.padding, padv);
+        // Structural identity from the paper's own numbers:
+        assert_eq!(
+            packed.stats.frames_kept + packed.stats.padding,
+            7464 * 22
+        );
+        // Near the paper's 40,289 / 37,712 (distribution calibration).
+        assert!((del as f64 - 40_289.0).abs() / 40_289.0 < 0.15, "del={del}");
+        assert!((padv as f64 - 37_712.0).abs() / 37_712.0 < 0.15,
+                "pad={padv}");
+    }
+
+    #[test]
+    fn grouping_fills_blocks() {
+        let cfg = ExperimentConfig::default_config().dataset.scaled(0.02);
+        let ds = generate(&cfg, 4);
+        let packed = pack(&ds.train, 8, 24, &mut Rng::new(2)).unwrap();
+        for b in &packed.blocks[..packed.blocks.len() - 1] {
+            assert_eq!(b.segments.len(), 3);
+            assert_eq!(b.segments[0].at, 0);
+            assert_eq!(b.segments[1].at, 8);
+            assert_eq!(b.segments[2].at, 16);
+        }
+        assert_eq!(packed.stats.fragmented_videos, 0, "no video is split");
+    }
+
+    #[test]
+    fn seg_ids_mark_lanes_not_padding_inside_lanes() {
+        // A 5-frame video in an 8-slot lane: the whole lane belongs to the
+        // segment (padding is *within video*, handled by frame synthesis /
+        // loss mask downstream), matching the paper's repeat-last-frame
+        // padding.
+        let cfg = crate::dataset::synthetic::tiny_config();
+        let ds = generate(&cfg, 6);
+        let packed = pack(&ds.train, 8, 8, &mut Rng::new(0)).unwrap();
+        for b in &packed.blocks {
+            assert!(b.seg_ids().iter().all(|&s| s == 0));
+        }
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        let ds = generate(&crate::dataset::synthetic::tiny_config(), 1);
+        assert!(pack(&ds.train, 0, 8, &mut Rng::new(0)).is_err());
+        assert!(pack(&ds.train, 8, 20, &mut Rng::new(0)).is_err());
+    }
+}

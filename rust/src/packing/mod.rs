@@ -1,0 +1,281 @@
+//! Packing strategies — the paper's contribution and its three baselines.
+//!
+//! A *packed dataset* is a list of fixed-length **blocks**; each block's
+//! time axis is filled by **placements** (contiguous spans of source
+//! videos) with any leftover slots as padding. The four strategies are the
+//! four columns of the paper's Table I:
+//!
+//! | strategy               | module       | paper figure |
+//! |------------------------|--------------|--------------|
+//! | `0 padding` (naive)    | [`naive`]    | Fig 3        |
+//! | `sampling` (chunking)  | [`sampling`] | Fig 4        |
+//! | `mix pad`              | [`mixpad`]   | —            |
+//! | `block_pad` (BLoad)    | [`bload`]    | Fig 5, Fig 7 |
+//!
+//! Each block carries the paper's **reset table** — the start offset of
+//! every source sequence inside the block — exported to the model as
+//! per-slot segment ids so the recurrent feedback (`oE_{t-1}`, Fig 6) can
+//! be zeroed exactly at sequence boundaries.
+
+pub mod bload;
+pub mod mixpad;
+pub mod naive;
+pub mod sampling;
+pub mod validate;
+pub mod viz;
+
+use crate::config::{PackingConfig, StrategyName};
+use crate::dataset::Split;
+use crate::error::{Error, Result};
+use crate::util::humanize::commas;
+use crate::util::Rng;
+
+/// A contiguous span of one source video placed inside a block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    /// Offset inside the block where this span starts.
+    pub at: usize,
+    /// Source video id.
+    pub video: u32,
+    /// First source-frame index of the span.
+    pub src_start: usize,
+    /// Span length in frames.
+    pub len: usize,
+}
+
+/// One packed block of `len` time slots.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Block {
+    pub len: usize,
+    /// Placements ordered by `at`, non-overlapping.
+    pub segments: Vec<Placement>,
+    /// Ablation flag: report every occupied slot as segment 0, erasing the
+    /// reset table while keeping frame content identical (the "no reset"
+    /// arm of `harness::ablation`). Never set by packing strategies.
+    pub merged: bool,
+}
+
+impl Block {
+    pub fn new(len: usize) -> Block {
+        Block {
+            len,
+            segments: Vec::new(),
+            merged: false,
+        }
+    }
+
+    /// Frames actually occupied by source video content.
+    pub fn used(&self) -> usize {
+        self.segments.iter().map(|s| s.len).sum()
+    }
+
+    /// Padding slots in this block.
+    pub fn padding(&self) -> usize {
+        self.len - self.used()
+    }
+
+    /// The paper's reset table for this block: start offset of every
+    /// source sequence (Fig 7, `block_reset`).
+    pub fn reset_table(&self) -> Vec<usize> {
+        self.segments.iter().map(|s| s.at).collect()
+    }
+
+    /// Per-slot segment ids: `-1` padding, else the ordinal of the segment
+    /// occupying the slot. This is what the L1 kernel masks on.
+    pub fn seg_ids(&self) -> Vec<i32> {
+        let mut ids = vec![-1i32; self.len];
+        for (ord, s) in self.segments.iter().enumerate() {
+            let id = if self.merged { 0 } else { ord as i32 };
+            for slot in ids.iter_mut().skip(s.at).take(s.len) {
+                *slot = id;
+            }
+        }
+        ids
+    }
+
+    /// Per-slot 0/1 validity mask.
+    pub fn frame_mask(&self) -> Vec<f32> {
+        self.seg_ids()
+            .iter()
+            .map(|&s| if s >= 0 { 1.0 } else { 0.0 })
+            .collect()
+    }
+
+    /// Append a span at the first free offset after existing segments.
+    /// Errors if it does not fit.
+    pub fn push(&mut self, video: u32, src_start: usize, len: usize)
+                -> Result<()> {
+        let at = self
+            .segments
+            .last()
+            .map(|s| s.at + s.len)
+            .unwrap_or(0);
+        if at + len > self.len {
+            return Err(Error::Packing(format!(
+                "span of {len} does not fit at offset {at} in block of {}",
+                self.len
+            )));
+        }
+        self.segments.push(Placement {
+            at,
+            video,
+            src_start,
+            len,
+        });
+        Ok(())
+    }
+}
+
+/// Aggregate packing statistics — the pipeline-side rows of Table I.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PackStats {
+    pub strategy: &'static str,
+    pub blocks: usize,
+    pub total_slots: usize,
+    /// "padding amount" (Table I row 1).
+    pub padding: usize,
+    /// "# frames deleted" (Table I row 2).
+    pub frames_deleted: usize,
+    pub frames_kept: usize,
+    /// Source videos split across more than one segment (Fig 4's broken
+    /// temporal support; 0 for every strategy except sampling).
+    pub fragmented_videos: usize,
+}
+
+impl std::fmt::Display for PackStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: {} blocks × slots={} | padding {} | deleted {} | kept {} \
+             | fragmented {}",
+            self.strategy,
+            commas(self.blocks as u64),
+            commas(self.total_slots as u64),
+            commas(self.padding as u64),
+            commas(self.frames_deleted as u64),
+            commas(self.frames_kept as u64),
+            commas(self.fragmented_videos as u64),
+        )
+    }
+}
+
+/// A fully packed dataset.
+#[derive(Debug, Clone)]
+pub struct PackedDataset {
+    /// Uniform block length (the executable's T dimension).
+    pub block_len: usize,
+    pub blocks: Vec<Block>,
+    pub stats: PackStats,
+}
+
+impl PackedDataset {
+    /// Assemble stats from blocks + the source split.
+    pub fn finalize(strategy: &'static str, block_len: usize,
+                    blocks: Vec<Block>, split: &Split) -> PackedDataset {
+        use std::collections::HashMap;
+        let total_slots: usize = blocks.iter().map(|b| b.len).sum();
+        let frames_kept: usize = blocks.iter().map(|b| b.used()).sum();
+        let source_frames = split.total_frames();
+        let mut seg_count: HashMap<u32, usize> = HashMap::new();
+        for b in &blocks {
+            for s in &b.segments {
+                *seg_count.entry(s.video).or_default() += 1;
+            }
+        }
+        let fragmented = seg_count.values().filter(|&&n| n > 1).count();
+        // Deleted = source frames that were never placed. Placements never
+        // duplicate frames (validated separately), so kept counts are exact.
+        // mixpad *pads within* videos (a placement may extend past the
+        // video's last real frame), so real content is the part of each
+        // span that overlaps `[0, video_len)`.
+        let len_by_id: HashMap<u32, usize> = split
+            .videos
+            .iter()
+            .map(|v| (v.id, v.len as usize))
+            .collect();
+        let mut placed_real = 0usize;
+        for b in &blocks {
+            for s in &b.segments {
+                let vlen = len_by_id.get(&s.video).copied().unwrap_or(0);
+                placed_real += s.len.min(vlen.saturating_sub(s.src_start));
+            }
+        }
+        let _ = frames_kept;
+        let frames_deleted = source_frames.saturating_sub(placed_real);
+        PackedDataset {
+            block_len,
+            stats: PackStats {
+                strategy,
+                blocks: blocks.len(),
+                total_slots,
+                // Every slot not holding a real source frame is padding.
+                padding: total_slots - placed_real,
+                frames_deleted,
+                frames_kept: placed_real,
+                fragmented_videos: fragmented,
+            },
+            blocks,
+        }
+    }
+}
+
+/// Pack a split with the named strategy.
+///
+/// `block_len` is the uniform output block length (the executable's `T`);
+/// pass `cfg.t_max` for paper-exact Table I accounting at full scale.
+pub fn pack_with_block_len(strategy: StrategyName, split: &Split,
+                           cfg: &PackingConfig, block_len: usize, seed: u64)
+                           -> Result<PackedDataset> {
+    let mut rng = Rng::new(seed ^ 0xB10C);
+    match strategy {
+        StrategyName::BLoad => bload::pack(split, block_len, &mut rng),
+        StrategyName::NaivePad => naive::pack(split, block_len),
+        StrategyName::Sampling => {
+            sampling::pack(split, cfg.t_block, block_len, &mut rng)
+        }
+        StrategyName::MixPad => {
+            mixpad::pack(split, cfg.t_mix, block_len, &mut rng)
+        }
+    }
+}
+
+/// Pack with each strategy's *native* block length (paper Table I
+/// accounting): `t_max` for naive/bload, `t_block` for sampling, `t_mix`
+/// for mix pad.
+pub fn pack(strategy: StrategyName, split: &Split, cfg: &PackingConfig,
+            seed: u64) -> Result<PackedDataset> {
+    let block_len = match strategy {
+        StrategyName::BLoad | StrategyName::NaivePad => cfg.t_max,
+        StrategyName::Sampling => cfg.t_block,
+        StrategyName::MixPad => cfg.t_mix,
+    };
+    pack_with_block_len(strategy, split, cfg, block_len, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_slot_views() {
+        let mut b = Block::new(10);
+        b.push(7, 0, 4).unwrap();
+        b.push(9, 0, 3).unwrap();
+        assert_eq!(b.used(), 7);
+        assert_eq!(b.padding(), 3);
+        assert_eq!(b.reset_table(), vec![0, 4]);
+        assert_eq!(
+            b.seg_ids(),
+            vec![0, 0, 0, 0, 1, 1, 1, -1, -1, -1]
+        );
+        assert_eq!(b.frame_mask()[6], 1.0);
+        assert_eq!(b.frame_mask()[7], 0.0);
+    }
+
+    #[test]
+    fn block_overflow_rejected() {
+        let mut b = Block::new(5);
+        b.push(1, 0, 3).unwrap();
+        assert!(b.push(2, 0, 3).is_err());
+    }
+}

@@ -1,0 +1,227 @@
+//! `sampling` baseline (paper Fig 4, the MOTR/TrackFormer-style chunking):
+//! every video is cut into fixed `t_block`-frame chunks; remainder frames
+//! (and whole videos shorter than `t_block`) are **deleted**. Chunks of
+//! one video become *independent* samples — the temporal relationship
+//! across chunk boundaries is destroyed, which is why recurrent models
+//! like DDS lose recall under this strategy (Table I: 41.2 vs 43.3).
+//!
+//! On Action Genome geometry with `t_block = 24 ≈ mean length` this
+//! deletes ≈ 92 k of 167 k frames — the paper's "discarding nearly 2/3 of
+//! the data".
+
+use crate::dataset::Split;
+use crate::error::{Error, Result};
+use crate::util::Rng;
+
+use super::{Block, PackedDataset};
+
+/// Chunk into `t_block` pieces, group whole chunks into blocks of
+/// `block_len` slots (`block_len % t_block == 0`; pass `block_len ==
+/// t_block` for the paper's one-chunk-per-sample accounting), shuffle
+/// chunk order.
+pub fn pack(split: &Split, t_block: usize, block_len: usize, rng: &mut Rng)
+            -> Result<PackedDataset> {
+    if t_block == 0 || block_len < t_block || block_len % t_block != 0 {
+        return Err(Error::Packing(format!(
+            "sampling: block_len {block_len} must be a positive multiple of \
+             t_block {t_block}"
+        )));
+    }
+    // Enumerate full chunks; remainders are deleted by never placing them.
+    let mut chunks: Vec<(u32, usize)> = Vec::new(); // (video, src_start)
+    for v in &split.videos {
+        let n = v.len as usize / t_block;
+        for c in 0..n {
+            chunks.push((v.id, c * t_block));
+        }
+    }
+    rng.shuffle(&mut chunks);
+
+    let per_block = block_len / t_block;
+    let mut blocks = Vec::with_capacity(chunks.len().div_ceil(per_block));
+    for group in chunks.chunks(per_block) {
+        let mut b = Block::new(block_len);
+        for &(video, src_start) in group {
+            b.push(video, src_start, t_block)?;
+        }
+        blocks.push(b);
+    }
+    Ok(PackedDataset::finalize("sampling", block_len, blocks, split))
+}
+
+/// Ordered, merge-contiguous variant — the **stateful chunking** extension
+/// (the paper's §V future work, benchmarked by `harness::ablation`):
+/// chunks are laid out in video order and contiguous same-video chunks in
+/// one block are merged into a single segment, so
+/// (a) within a block the reset table does not sever a video's context and
+/// (b) across blocks the trainer's [`crate::model::StateManager`] can hand
+/// the feedback state to the next chunk.
+pub fn pack_ordered(split: &Split, t_block: usize, block_len: usize)
+                    -> Result<PackedDataset> {
+    if t_block == 0 || block_len < t_block || block_len % t_block != 0 {
+        return Err(Error::Packing(format!(
+            "sampling: block_len {block_len} must be a positive multiple of \
+             t_block {t_block}"
+        )));
+    }
+    let per_block = block_len / t_block;
+    let mut blocks: Vec<Block> = Vec::new();
+    let mut cur = Block::new(block_len);
+    let mut used_chunks = 0usize;
+    for v in &split.videos {
+        let n = v.len as usize / t_block;
+        for c in 0..n {
+            if used_chunks == per_block {
+                blocks.push(std::mem::replace(&mut cur,
+                                              Block::new(block_len)));
+                used_chunks = 0;
+            }
+            let src_start = c * t_block;
+            // Merge into the previous segment when it is the same video
+            // and frame-contiguous.
+            if let Some(last) = cur.segments.last_mut() {
+                if last.video == v.id
+                    && last.src_start + last.len == src_start
+                {
+                    last.len += t_block;
+                    used_chunks += 1;
+                    continue;
+                }
+            }
+            cur.push(v.id, src_start, t_block)?;
+            used_chunks += 1;
+        }
+    }
+    if used_chunks > 0 {
+        blocks.push(cur);
+    }
+    Ok(PackedDataset::finalize("sampling_ordered", block_len, blocks,
+                               split))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::dataset::synthetic::generate;
+    use crate::util::Rng;
+
+    #[test]
+    fn deletion_accounting_matches_paper_scale() {
+        // Paper Table I: 92,271 deleted. Chunk-to-24 on the calibrated
+        // distribution lands within a few percent (DESIGN.md §4).
+        let cfg = ExperimentConfig::default_config().dataset;
+        let ds = generate(&cfg, 0);
+        let packed = pack(&ds.train, 24, 24, &mut Rng::new(1)).unwrap();
+        let expect: usize = ds
+            .train
+            .videos
+            .iter()
+            .map(|v| v.len as usize % 24)
+            .sum();
+        assert_eq!(packed.stats.frames_deleted, expect);
+        let rel = (packed.stats.frames_deleted as f64 - 92_271.0).abs()
+            / 92_271.0;
+        assert!(rel < 0.08, "deleted {} vs paper 92271",
+                packed.stats.frames_deleted);
+        // Zero padding: every chunk fills its slots exactly.
+        assert_eq!(packed.stats.padding, 0);
+    }
+
+    #[test]
+    fn videos_are_fragmented() {
+        let cfg = ExperimentConfig::default_config().dataset.scaled(0.05);
+        let ds = generate(&cfg, 2);
+        let packed = pack(&ds.train, 10, 10, &mut Rng::new(1)).unwrap();
+        assert!(
+            packed.stats.fragmented_videos > 0,
+            "long videos must split into several chunks"
+        );
+        // All placements are exactly t_block long and offset-aligned.
+        for b in &packed.blocks {
+            for s in &b.segments {
+                assert_eq!(s.len, 10);
+                assert_eq!(s.src_start % 10, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn grouping_into_wider_blocks() {
+        let cfg = ExperimentConfig::default_config().dataset.scaled(0.02);
+        let ds = generate(&cfg, 3);
+        let packed = pack(&ds.train, 8, 24, &mut Rng::new(4)).unwrap();
+        for b in &packed.blocks[..packed.blocks.len() - 1] {
+            assert_eq!(b.segments.len(), 3, "3 chunks of 8 per 24-block");
+            assert_eq!(b.padding(), 0);
+        }
+        // Chunks inside one block are separate segments (ids differ) even
+        // when they come from the same video: temporal link is broken.
+        let b0 = &packed.blocks[0];
+        let ids = b0.seg_ids();
+        assert_eq!(ids[0], 0);
+        assert_eq!(ids[8], 1);
+        assert_eq!(ids[16], 2);
+    }
+
+    #[test]
+    fn rejects_nondivisible_grouping() {
+        let cfg = ExperimentConfig::default_config().dataset.scaled(0.01);
+        let ds = generate(&cfg, 3);
+        assert!(pack(&ds.train, 10, 25, &mut Rng::new(0)).is_err());
+        assert!(pack(&ds.train, 10, 5, &mut Rng::new(0)).is_err());
+    }
+
+    #[test]
+    fn ordered_variant_merges_contiguous_chunks() {
+        let cfg = ExperimentConfig::default_config().dataset.scaled(0.02);
+        let ds = generate(&cfg, 3);
+        let packed = pack_ordered(&ds.train, 8, 24).unwrap();
+        crate::packing::validate::validate(&packed, &ds.train, false)
+            .unwrap();
+        // Same deletion accounting as the shuffled variant.
+        let shuffled = pack(&ds.train, 8, 24, &mut Rng::new(0)).unwrap();
+        assert_eq!(packed.stats.frames_deleted,
+                   shuffled.stats.frames_deleted);
+        assert_eq!(packed.stats.frames_kept, shuffled.stats.frames_kept);
+        // A 24-frame-or-longer video yields one merged 24-slot segment.
+        let long = ds.train.videos.iter().find(|v| v.len >= 24).unwrap();
+        let merged = packed
+            .blocks
+            .iter()
+            .flat_map(|b| b.segments.iter())
+            .find(|s| s.video == long.id && s.len == 24);
+        assert!(merged.is_some(), "expected a merged full-block segment");
+        // Fewer fragments than the shuffled variant (context preserved).
+        assert!(packed.stats.fragmented_videos
+                <= shuffled.stats.fragmented_videos);
+    }
+
+    #[test]
+    fn ordered_variant_keeps_cross_block_continuations() {
+        // A 40-frame video at t_block 8, block 24: segments [0,24) and
+        // [24,40) in consecutive blocks — the StateManager resume key.
+        let mut dcfg = crate::harness::scaled_dataset(1, 1, 0.4);
+        dcfg.min_len = 40;
+        dcfg.max_len = 40;
+        dcfg.mean_len = 40.0;
+        let ds = generate(&dcfg, 0);
+        let packed = pack_ordered(&ds.train, 8, 24).unwrap();
+        assert_eq!(packed.blocks.len(), 2);
+        let s0 = packed.blocks[0].segments[0];
+        let s1 = packed.blocks[1].segments[0];
+        assert_eq!((s0.src_start, s0.len), (0, 24));
+        assert_eq!((s1.src_start, s1.len), (24, 16));
+        assert_eq!(s0.src_start + s0.len, s1.src_start);
+    }
+
+    #[test]
+    fn short_videos_entirely_deleted() {
+        let ds = generate(&crate::dataset::synthetic::tiny_config(), 9);
+        // t_block = 7 > max_len 6 => everything deleted, zero blocks.
+        let packed = pack(&ds.train, 7, 7, &mut Rng::new(0)).unwrap();
+        assert_eq!(packed.stats.frames_kept, 0);
+        assert_eq!(packed.stats.frames_deleted, ds.train.total_frames());
+        assert_eq!(packed.stats.blocks, 0);
+    }
+}

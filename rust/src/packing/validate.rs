@@ -1,0 +1,199 @@
+//! Packed-dataset invariant validator.
+//!
+//! Run after every pack (cheap) and hammered by randomized property tests:
+//! whatever strategy produced the blocks, the result must be structurally
+//! sound before it reaches the loader.
+
+use std::collections::HashMap;
+
+use crate::dataset::Split;
+use crate::error::{Error, Result};
+
+use super::PackedDataset;
+
+/// Strategy-independent invariants.
+///
+/// 1. every block's placements are in-bounds, ordered, non-overlapping;
+/// 2. no source frame is placed twice (spans of one video never overlap);
+/// 3. placements reference only videos of the split;
+/// 4. spans only cover `[0, len)` of their video **unless**
+///    `allow_within_video_padding` (mix pad's trailing lane padding);
+/// 5. stats are consistent with the blocks.
+pub fn validate(packed: &PackedDataset, split: &Split,
+                allow_within_video_padding: bool) -> Result<()> {
+    let lens: HashMap<u32, usize> = split
+        .videos
+        .iter()
+        .map(|v| (v.id, v.len as usize))
+        .collect();
+
+    // Per-video coverage intervals for overlap detection.
+    let mut covered: HashMap<u32, Vec<(usize, usize)>> = HashMap::new();
+    let mut total_slots = 0usize;
+    let mut placed_real = 0usize;
+
+    for (bi, b) in packed.blocks.iter().enumerate() {
+        total_slots += b.len;
+        let mut cursor = 0usize;
+        for (si, s) in b.segments.iter().enumerate() {
+            if s.at < cursor {
+                return Err(Error::Packing(format!(
+                    "block {bi} segment {si} at {} overlaps previous \
+                     (cursor {cursor})",
+                    s.at
+                )));
+            }
+            if s.at + s.len > b.len {
+                return Err(Error::Packing(format!(
+                    "block {bi} segment {si} [{}, {}) exceeds block len {}",
+                    s.at,
+                    s.at + s.len,
+                    b.len
+                )));
+            }
+            if s.len == 0 {
+                return Err(Error::Packing(format!(
+                    "block {bi} segment {si} has zero length"
+                )));
+            }
+            cursor = s.at + s.len;
+            let vlen = *lens.get(&s.video).ok_or_else(|| {
+                Error::Packing(format!(
+                    "block {bi} references unknown video {}",
+                    s.video
+                ))
+            })?;
+            let real_end = s.src_start + s.len;
+            if real_end > vlen && !allow_within_video_padding {
+                return Err(Error::Packing(format!(
+                    "block {bi} segment {si} covers [{}, {real_end}) of \
+                     video {} (len {vlen})",
+                    s.src_start, s.video
+                )));
+            }
+            let real = s.len.min(vlen.saturating_sub(s.src_start));
+            placed_real += real;
+            if real > 0 {
+                covered
+                    .entry(s.video)
+                    .or_default()
+                    .push((s.src_start, s.src_start + real));
+            }
+        }
+    }
+
+    // No frame placed twice.
+    for (video, spans) in covered.iter_mut() {
+        spans.sort_unstable();
+        for w in spans.windows(2) {
+            if w[0].1 > w[1].0 {
+                return Err(Error::Packing(format!(
+                    "video {video}: frame ranges {:?} and {:?} overlap",
+                    w[0], w[1]
+                )));
+            }
+        }
+    }
+
+    // Stats cross-check.
+    let s = &packed.stats;
+    if s.blocks != packed.blocks.len()
+        || s.total_slots != total_slots
+        || s.frames_kept != placed_real
+        || s.padding != total_slots - placed_real
+        || s.frames_deleted != split.total_frames().saturating_sub(placed_real)
+    {
+        return Err(Error::Packing(format!(
+            "stats inconsistent with blocks: {s:?} (recount: slots \
+             {total_slots}, kept {placed_real})"
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, PackingConfig, StrategyName};
+    use crate::dataset::synthetic::generate;
+    use crate::packing::{pack, Block, PackedDataset, Placement};
+
+    fn small_split() -> crate::dataset::Split {
+        let cfg = ExperimentConfig::default_config().dataset.scaled(0.01);
+        generate(&cfg, 3).train
+    }
+
+    fn pack_cfg() -> PackingConfig {
+        ExperimentConfig::default_config().packing
+    }
+
+    #[test]
+    fn all_strategies_validate_over_random_seeds() {
+        let split = small_split();
+        let cfg = pack_cfg();
+        for seed in 0..25 {
+            for strat in StrategyName::all() {
+                let packed = pack(strat, &split, &cfg, seed).unwrap();
+                let allow = strat == StrategyName::MixPad;
+                validate(&packed, &split, allow).unwrap_or_else(|e| {
+                    panic!("{strat} seed {seed}: {e}")
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn detects_overlapping_segments() {
+        let split = small_split();
+        let v = split.videos[0];
+        let mut b = Block::new(20);
+        b.segments.push(Placement { at: 0, video: v.id, src_start: 0, len: 3 });
+        b.segments.push(Placement { at: 2, video: split.videos[1].id,
+                                    src_start: 0, len: 3 });
+        let packed = PackedDataset::finalize("x", 20, vec![b], &split);
+        assert!(validate(&packed, &split, false).is_err());
+    }
+
+    #[test]
+    fn detects_double_placed_frames() {
+        let split = small_split();
+        let v = split.videos.iter().find(|v| v.len >= 4).unwrap();
+        let mut b = Block::new(40);
+        b.push(v.id, 0, 3).unwrap();
+        b.push(v.id, 1, 3).unwrap(); // frames 1..3 placed twice
+        let packed = PackedDataset::finalize("x", 40, vec![b], &split);
+        let err = validate(&packed, &split, false).unwrap_err().to_string();
+        assert!(err.contains("overlap"), "{err}");
+    }
+
+    #[test]
+    fn detects_unknown_video() {
+        let split = small_split();
+        let mut b = Block::new(10);
+        b.push(0xDEAD_BEEF, 0, 3).unwrap();
+        let packed = PackedDataset::finalize("x", 10, vec![b], &split);
+        assert!(validate(&packed, &split, false).is_err());
+    }
+
+    #[test]
+    fn detects_span_past_video_end() {
+        let split = small_split();
+        let v = split.videos[0];
+        let mut b = Block::new(200);
+        b.push(v.id, 0, v.len as usize + 2).unwrap();
+        let packed = PackedDataset::finalize("x", 200, vec![b], &split);
+        assert!(validate(&packed, &split, false).is_err());
+        // ...but mix pad's within-video padding is allowed when flagged.
+        assert!(validate(&packed, &split, true).is_ok());
+    }
+
+    #[test]
+    fn detects_corrupted_stats() {
+        let split = small_split();
+        let cfg = pack_cfg();
+        let mut packed =
+            pack(StrategyName::BLoad, &split, &cfg, 0).unwrap();
+        packed.stats.padding += 1;
+        assert!(validate(&packed, &split, false).is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! ASCII visualization of packed blocks — regenerates the paper's Figs
+//! 1/3/4/5 as terminal art (`bload pack-viz`).
+//!
+//! ```text
+//! block  0 │ A A A A A A │ B B B B ░ ░ │            (block_pad)
+//! ```
+
+use std::collections::HashMap;
+
+use crate::dataset::Split;
+
+use super::PackedDataset;
+
+/// Glyphs used for video identities (cycled).
+const GLYPHS: &[u8] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz";
+
+/// Render the raw (unpacked) dataset, one row per video — Fig 1.
+pub fn render_dataset(split: &Split, max_rows: usize) -> String {
+    let mut out = String::new();
+    for (i, v) in split.videos.iter().take(max_rows).enumerate() {
+        let g = GLYPHS[i % GLYPHS.len()] as char;
+        out.push_str(&format!("V{:<3} │ ", v.id));
+        for _ in 0..v.len {
+            out.push(g);
+            out.push(' ');
+        }
+        out.push('\n');
+    }
+    if split.videos.len() > max_rows {
+        out.push_str(&format!("… ({} more videos)\n",
+                              split.videos.len() - max_rows));
+    }
+    out
+}
+
+/// Render packed blocks, one row per block — Figs 3/4/5. `░` = padding.
+/// Within-video padding lanes (mix pad) render as the video's lowercase
+/// glyph.
+pub fn render_packed(packed: &PackedDataset, split: &Split, max_rows: usize)
+                     -> String {
+    let lens: HashMap<u32, usize> = split
+        .videos
+        .iter()
+        .map(|v| (v.id, v.len as usize))
+        .collect();
+    // Stable glyph per video id, in first-appearance order.
+    let mut glyph: HashMap<u32, char> = HashMap::new();
+    let mut next = 0usize;
+    let mut out = String::new();
+    for (bi, b) in packed.blocks.iter().take(max_rows).enumerate() {
+        out.push_str(&format!("block {bi:>3} │ "));
+        let mut row = vec!['░'; b.len];
+        for s in &b.segments {
+            let g = *glyph.entry(s.video).or_insert_with(|| {
+                let c = GLYPHS[next % GLYPHS.len()] as char;
+                next += 1;
+                c
+            });
+            let vlen = lens.get(&s.video).copied().unwrap_or(usize::MAX);
+            for k in 0..s.len {
+                let real = s.src_start + k < vlen;
+                row[s.at + k] = if real {
+                    g
+                } else {
+                    g.to_ascii_lowercase()
+                };
+            }
+        }
+        for c in row {
+            out.push(c);
+            out.push(' ');
+        }
+        out.push_str(&format!("│ reset={:?}\n", b.reset_table()));
+    }
+    if packed.blocks.len() > max_rows {
+        out.push_str(&format!("… ({} more blocks)\n",
+                              packed.blocks.len() - max_rows));
+    }
+    out.push_str(&format!("{}\n", packed.stats));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, StrategyName};
+    use crate::dataset::synthetic::{generate, tiny_config};
+    use crate::packing::pack;
+
+    #[test]
+    fn renders_toy_dataset_and_blocks() {
+        let ds = generate(&tiny_config(), 1);
+        let fig1 = render_dataset(&ds.train, 10);
+        assert_eq!(fig1.lines().count(), 8);
+        let cfg = {
+            let mut c = ExperimentConfig::default_config().packing;
+            c.t_max = 6;
+            c
+        };
+        let packed = pack(StrategyName::BLoad, &ds.train, &cfg, 0).unwrap();
+        let fig5 = render_packed(&packed, &ds.train, 50);
+        assert!(fig5.contains("block   0"), "{fig5}");
+        assert!(fig5.contains("reset="), "{fig5}");
+        assert!(fig5.contains("block_pad"));
+    }
+
+    #[test]
+    fn padding_glyph_appears_for_naive() {
+        let ds = generate(&tiny_config(), 2);
+        let cfg = {
+            let mut c = ExperimentConfig::default_config().packing;
+            c.t_max = 6;
+            c
+        };
+        let packed = pack(StrategyName::NaivePad, &ds.train, &cfg, 0).unwrap();
+        let art = render_packed(&packed, &ds.train, 50);
+        assert!(art.contains('░'), "naive padding must be visible\n{art}");
+    }
+
+    #[test]
+    fn row_truncation() {
+        let ds = generate(&tiny_config(), 3);
+        let s = render_dataset(&ds.train, 2);
+        assert!(s.contains("more videos"));
+    }
+}

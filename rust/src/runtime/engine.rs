@@ -1,0 +1,336 @@
+//! The PJRT execution engine: compile-once, shape-checked execution of the
+//! three model artifacts.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::loader::DeviceBatch;
+use crate::log_info;
+
+use super::manifest::ProfileSpec;
+
+/// Output of one `grad_step` call.
+#[derive(Debug, Clone)]
+pub struct GradOut {
+    pub loss: f32,
+    pub grads: Vec<f32>,
+    pub state_out: Vec<f32>,
+}
+
+/// Output of one `infer_step` call.
+#[derive(Debug, Clone)]
+pub struct InferOut {
+    /// `[B, T, O, C]` row-major.
+    pub logits: Vec<f32>,
+    pub state_out: Vec<f32>,
+}
+
+/// Compiled executables for one profile on the PJRT CPU client.
+pub struct Engine {
+    pub spec: ProfileSpec,
+    client: xla::PjRtClient,
+    grad_exe: xla::PjRtLoadedExecutable,
+    infer_exe: xla::PjRtLoadedExecutable,
+    update_exe: xla::PjRtLoadedExecutable,
+    /// Executions performed (telemetry).
+    pub executions: std::cell::Cell<u64>,
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path)
+           -> Result<xla::PjRtLoadedExecutable> {
+    let text_path = path.to_str().ok_or_else(|| {
+        Error::Runtime(format!("non-utf8 artifact path {path:?}"))
+    })?;
+    let proto = xla::HloModuleProto::from_text_file(text_path)
+        .map_err(|e| Error::Runtime(format!(
+            "load HLO text {text_path}: {e}"
+        )))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+fn literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let want: usize = dims.iter().product();
+    debug_assert_eq!(want, data.len());
+    // Single-copy construction straight into the shaped literal —
+    // `vec1(..).reshape(..)` would copy twice (§Perf L3 optimization #1).
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   std::mem::size_of_val(data))
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+fn scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+impl Engine {
+    /// Compile the three artifacts of `spec` on a fresh CPU client.
+    pub fn load(spec: ProfileSpec) -> Result<Engine> {
+        let t0 = std::time::Instant::now();
+        let client = xla::PjRtClient::cpu()?;
+        let grad_exe = compile(&client, &spec.grad_step)?;
+        let infer_exe = compile(&client, &spec.infer_step)?;
+        let update_exe = compile(&client, &spec.apply_update)?;
+        log_info!(
+            "engine '{}' compiled in {:.2}s (P={}, B={}, T={})",
+            spec.name,
+            t0.elapsed().as_secs_f64(),
+            spec.param_count,
+            spec.batch,
+            spec.block_len
+        );
+        Ok(Engine {
+            spec,
+            client,
+            grad_exe,
+            infer_exe,
+            update_exe,
+            executions: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Platform string of the underlying PJRT client.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn check_batch(&self, b: &DeviceBatch, artifact: &str) -> Result<()> {
+        let s = &self.spec;
+        let checks = [
+            (0usize, "batch", vec![b.batch], vec![s.batch]),
+            (1, "block_len", vec![b.block_len], vec![s.block_len]),
+            (2, "objects", vec![b.objects], vec![s.objects]),
+            (3, "feat_dim", vec![b.feat_dim], vec![s.feat_dim]),
+            (4, "classes", vec![b.classes], vec![s.classes]),
+        ];
+        for (index, name, got, expected) in checks {
+            if got != expected {
+                return Err(Error::Shape {
+                    artifact: artifact.into(),
+                    index,
+                    name: name.into(),
+                    expected,
+                    got,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    fn run(&self, exe: &xla::PjRtLoadedExecutable, args: &[&xla::Literal])
+           -> Result<Vec<xla::Literal>> {
+        self.executions.set(self.executions.get() + 1);
+        let result = exe.execute::<&xla::Literal>(args)?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Upload the flat parameter vector once; the returned literal can be
+    /// reused across every rank's `grad_step`/`infer_step` of a DDP step
+    /// (parameters are identical on all ranks — §Perf L3 optimization #2).
+    pub fn params_literal(&self, params: &[f32]) -> Result<xla::Literal> {
+        if params.len() != self.spec.param_count {
+            return Err(Error::Runtime(format!(
+                "params len {} != {}",
+                params.len(),
+                self.spec.param_count
+            )));
+        }
+        literal(params, &[self.spec.param_count])
+    }
+
+    /// Execute `grad_step`:
+    /// `(params, feats, labels, frame_mask, seg_ids, state_in)` →
+    /// `(loss, grads, state_out)`.
+    pub fn grad_step(&self, params: &[f32], batch: &DeviceBatch,
+                     state_in: &[f32]) -> Result<GradOut> {
+        let plit = self.params_literal(params)?;
+        self.grad_step_lit(&plit, batch, state_in)
+    }
+
+    /// `grad_step` with a pre-uploaded parameter literal.
+    pub fn grad_step_lit(&self, params: &xla::Literal, batch: &DeviceBatch,
+                         state_in: &[f32]) -> Result<GradOut> {
+        self.check_batch(batch, "grad_step")?;
+        let s = &self.spec;
+        if state_in.len() != s.batch * s.state_dim {
+            return Err(Error::Runtime(format!(
+                "grad_step: state len {} != {}",
+                state_in.len(),
+                s.batch * s.state_dim
+            )));
+        }
+        let (b, t, o) = (s.batch, s.block_len, s.objects);
+        let feats = literal(&batch.feats, &[b, t, o, s.feat_dim])?;
+        let labels = literal(&batch.labels, &[b, t, o, s.classes])?;
+        let mask = literal(&batch.frame_mask, &[b, t])?;
+        let seg = literal(&batch.seg_ids, &[b, t])?;
+        let state = literal(state_in, &[b, s.state_dim])?;
+        let args = [params, &feats, &labels, &mask, &seg, &state];
+        let out = self.run(&self.grad_exe, &args)?;
+        if out.len() != 3 {
+            return Err(Error::Runtime(format!(
+                "grad_step returned {} outputs, want 3",
+                out.len()
+            )));
+        }
+        Ok(GradOut {
+            loss: out[0].to_vec::<f32>()?[0],
+            grads: out[1].to_vec::<f32>()?,
+            state_out: out[2].to_vec::<f32>()?,
+        })
+    }
+
+    /// Execute `infer_step`:
+    /// `(params, feats, frame_mask, seg_ids, state_in)` →
+    /// `(logits, state_out)`.
+    pub fn infer_step(&self, params: &[f32], batch: &DeviceBatch,
+                      state_in: &[f32]) -> Result<InferOut> {
+        let plit = self.params_literal(params)?;
+        self.infer_step_lit(&plit, batch, state_in)
+    }
+
+    /// `infer_step` with a pre-uploaded parameter literal.
+    pub fn infer_step_lit(&self, params: &xla::Literal, batch: &DeviceBatch,
+                          state_in: &[f32]) -> Result<InferOut> {
+        self.check_batch(batch, "infer_step")?;
+        let s = &self.spec;
+        let (b, t, o) = (s.batch, s.block_len, s.objects);
+        let feats = literal(&batch.feats, &[b, t, o, s.feat_dim])?;
+        let mask = literal(&batch.frame_mask, &[b, t])?;
+        let seg = literal(&batch.seg_ids, &[b, t])?;
+        let state = literal(state_in, &[b, s.state_dim])?;
+        let args = [params, &feats, &mask, &seg, &state];
+        let out = self.run(&self.infer_exe, &args)?;
+        if out.len() != 2 {
+            return Err(Error::Runtime(format!(
+                "infer_step returned {} outputs, want 2",
+                out.len()
+            )));
+        }
+        Ok(InferOut {
+            logits: out[0].to_vec::<f32>()?,
+            state_out: out[1].to_vec::<f32>()?,
+        })
+    }
+
+    /// Execute `apply_update` (SGD + momentum):
+    /// `(params, mom, grads, lr, momentum)` → `(params', mom')`.
+    /// Updates `params` and `mom` in place.
+    pub fn apply_update(&self, params: &mut Vec<f32>, mom: &mut Vec<f32>,
+                        grads: &[f32], lr: f32, momentum: f32) -> Result<()> {
+        let p = self.spec.param_count;
+        if params.len() != p || mom.len() != p || grads.len() != p {
+            return Err(Error::Runtime(format!(
+                "apply_update: buffer lens ({}, {}, {}) != {p}",
+                params.len(),
+                mom.len(),
+                grads.len()
+            )));
+        }
+        let pl = literal(params, &[p])?;
+        let ml = literal(mom, &[p])?;
+        let gl = literal(grads, &[p])?;
+        let lrl = scalar(lr);
+        let mml = scalar(momentum);
+        let args = [&pl, &ml, &gl, &lrl, &mml];
+        let out = self.run(&self.update_exe, &args)?;
+        *params = out[0].to_vec::<f32>()?;
+        *mom = out[1].to_vec::<f32>()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ArtifactManifest;
+    use std::path::PathBuf;
+
+    fn engine() -> Option<Engine> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let m = ArtifactManifest::load(&dir).unwrap();
+        let spec = m.profile("tiny").unwrap().clone();
+        Some(Engine::load(spec).unwrap())
+    }
+
+    fn fake_batch(spec: &ProfileSpec, fill: f32) -> DeviceBatch {
+        let (b, t, o, f, c) = (spec.batch, spec.block_len, spec.objects,
+                               spec.feat_dim, spec.classes);
+        DeviceBatch {
+            feats: vec![fill; b * t * o * f],
+            labels: vec![1.0; b * t * o * c],
+            frame_mask: vec![1.0; b * t],
+            seg_ids: vec![0.0; b * t],
+            block_ids: vec![0, 1],
+            batch: b,
+            block_len: t,
+            objects: o,
+            feat_dim: f,
+            classes: c,
+            real_frames: b * t,
+            slots: b * t,
+        }
+    }
+
+    #[test]
+    fn grad_step_runs_and_sgd_reduces_loss() {
+        let Some(eng) = engine() else { return };
+        let mut params = eng.spec.load_init_params().unwrap();
+        let mut mom = vec![0.0; params.len()];
+        let batch = fake_batch(&eng.spec, 0.3);
+        let state = vec![0.0; eng.spec.batch * eng.spec.state_dim];
+        let first = eng.grad_step(&params, &batch, &state).unwrap();
+        assert!(first.loss.is_finite() && first.loss > 0.0);
+        assert_eq!(first.grads.len(), params.len());
+        let mut last = first.loss;
+        for _ in 0..10 {
+            let g = eng.grad_step(&params, &batch, &state).unwrap();
+            eng.apply_update(&mut params, &mut mom, &g.grads, 0.5, 0.9)
+                .unwrap();
+            last = g.loss;
+        }
+        assert!(
+            last < first.loss * 0.9,
+            "loss did not drop: {} -> {last}",
+            first.loss
+        );
+    }
+
+    #[test]
+    fn infer_step_shapes() {
+        let Some(eng) = engine() else { return };
+        let params = eng.spec.load_init_params().unwrap();
+        let batch = fake_batch(&eng.spec, 0.1);
+        let state = vec![0.0; eng.spec.batch * eng.spec.state_dim];
+        let out = eng.infer_step(&params, &batch, &state).unwrap();
+        let s = &eng.spec;
+        assert_eq!(out.logits.len(),
+                   s.batch * s.block_len * s.objects * s.classes);
+        assert_eq!(out.state_out.len(), s.batch * s.state_dim);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let Some(eng) = engine() else { return };
+        let params = eng.spec.load_init_params().unwrap();
+        let mut batch = fake_batch(&eng.spec, 0.1);
+        batch.block_len += 1;
+        let state = vec![0.0; eng.spec.batch * eng.spec.state_dim];
+        let err = eng.grad_step(&params, &batch, &state).unwrap_err();
+        assert!(matches!(err, Error::Shape { .. }), "{err}");
+        let bad_state = vec![0.0; 1];
+        let batch = fake_batch(&eng.spec, 0.1);
+        assert!(eng.grad_step(&params, &batch, &bad_state).is_err());
+    }
+}

@@ -1,0 +1,232 @@
+//! `artifacts/manifest.json` parsing and integrity checks.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::jsonio::{parse, Value};
+
+/// One named parameter tensor inside the flat parameter vector.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Geometry + artifact paths of one compiled profile.
+#[derive(Debug, Clone)]
+pub struct ProfileSpec {
+    pub name: String,
+    pub batch: usize,
+    pub block_len: usize,
+    pub objects: usize,
+    pub feat_dim: usize,
+    pub classes: usize,
+    pub state_dim: usize,
+    pub param_count: usize,
+    pub params: Vec<ParamEntry>,
+    pub grad_step: PathBuf,
+    pub infer_step: PathBuf,
+    pub apply_update: PathBuf,
+    pub init_params: PathBuf,
+}
+
+impl ProfileSpec {
+    fn from_value(dir: &Path, name: &str, v: &Value) -> Result<ProfileSpec> {
+        let get = |k: &str| -> Result<usize> {
+            v.get(k).and_then(Value::as_usize).ok_or_else(|| {
+                Error::Runtime(format!(
+                    "manifest profile '{name}': missing/invalid '{k}'"
+                ))
+            })
+        };
+        let arts = v.get("artifacts").ok_or_else(|| {
+            Error::Runtime(format!("profile '{name}': missing artifacts"))
+        })?;
+        let art = |k: &str| -> Result<PathBuf> {
+            arts.get(k)
+                .and_then(Value::as_str)
+                .map(|rel| dir.join(rel))
+                .ok_or_else(|| {
+                    Error::Runtime(format!(
+                        "profile '{name}': missing artifact '{k}'"
+                    ))
+                })
+        };
+        let mut params = Vec::new();
+        if let Some(list) = v.get("params").and_then(Value::as_array) {
+            for (i, p) in list.iter().enumerate() {
+                let name = p
+                    .get("name")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| {
+                        Error::Runtime(format!("param {i}: missing name"))
+                    })?
+                    .to_string();
+                let shape = p
+                    .get("shape")
+                    .and_then(Value::as_array)
+                    .map(|a| {
+                        a.iter().filter_map(Value::as_usize).collect::<Vec<_>>()
+                    })
+                    .unwrap_or_default();
+                params.push(ParamEntry {
+                    name,
+                    shape,
+                    offset: p
+                        .get("offset")
+                        .and_then(Value::as_usize)
+                        .unwrap_or(0),
+                    size: p.get("size").and_then(Value::as_usize).unwrap_or(0),
+                });
+            }
+        }
+        let spec = ProfileSpec {
+            name: name.to_string(),
+            batch: get("batch")?,
+            block_len: get("block_len")?,
+            objects: get("objects")?,
+            feat_dim: get("feat_dim")?,
+            classes: get("classes")?,
+            state_dim: get("state_dim")?,
+            param_count: get("param_count")?,
+            params,
+            grad_step: art("grad_step")?,
+            infer_step: art("infer_step")?,
+            apply_update: art("apply_update")?,
+            init_params: art("init_params")?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    fn validate(&self) -> Result<()> {
+        // Param layout must be contiguous and sum to param_count.
+        let mut off = 0usize;
+        for p in &self.params {
+            if p.offset != off {
+                return Err(Error::Runtime(format!(
+                    "profile '{}': param '{}' offset {} != expected {off}",
+                    self.name, p.name, p.offset
+                )));
+            }
+            let prod: usize = p.shape.iter().product();
+            if prod != p.size {
+                return Err(Error::Runtime(format!(
+                    "profile '{}': param '{}' shape {:?} != size {}",
+                    self.name, p.name, p.shape, p.size
+                )));
+            }
+            off += p.size;
+        }
+        if !self.params.is_empty() && off != self.param_count {
+            return Err(Error::Runtime(format!(
+                "profile '{}': params sum {off} != param_count {}",
+                self.name, self.param_count
+            )));
+        }
+        Ok(())
+    }
+
+    /// Load the python-initialized flat parameter vector.
+    pub fn load_init_params(&self) -> Result<Vec<f32>> {
+        let raw = std::fs::read(&self.init_params)
+            .map_err(|e| Error::io(self.init_params.display(), e))?;
+        if raw.len() != 4 * self.param_count {
+            return Err(Error::Runtime(format!(
+                "init_params {} has {} bytes, want {}",
+                self.init_params.display(),
+                raw.len(),
+                4 * self.param_count
+            )));
+        }
+        Ok(raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// The parsed manifest (all profiles).
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub profiles: Vec<ProfileSpec>,
+}
+
+impl ArtifactManifest {
+    /// Read `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| Error::io(path.display(), e))?;
+        let v = parse(&src)?;
+        let profiles_v = v
+            .get("profiles")
+            .and_then(Value::as_object)
+            .ok_or_else(|| {
+                Error::Runtime("manifest: missing 'profiles'".into())
+            })?;
+        let mut profiles = Vec::new();
+        for (name, pv) in profiles_v {
+            profiles.push(ProfileSpec::from_value(dir, name, pv)?);
+        }
+        Ok(ArtifactManifest { profiles })
+    }
+
+    pub fn profile(&self, name: &str) -> Result<&ProfileSpec> {
+        self.profiles
+            .iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "profile '{name}' not in manifest (have: {:?}); run \
+                     `make artifacts` with the right --profiles",
+                    self.profiles.iter().map(|p| &p.name).collect::<Vec<_>>()
+                ))
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_built_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = ArtifactManifest::load(&dir).unwrap();
+        let tiny = m.profile("tiny").unwrap();
+        assert_eq!(tiny.batch, 2);
+        assert_eq!(tiny.block_len, 12);
+        assert!(tiny.param_count > 0);
+        assert!(tiny.grad_step.exists());
+        let flat = tiny.load_init_params().unwrap();
+        assert_eq!(flat.len(), tiny.param_count);
+        assert!(flat.iter().all(|x| x.is_finite()));
+        assert!(m.profile("nonexistent").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_layout() {
+        let v = parse(
+            r#"{"batch":1,"block_len":2,"objects":1,"feat_dim":1,
+                "classes":1,"state_dim":1,"param_count":10,
+                "params":[{"name":"w","shape":[3],"offset":1,"size":3}],
+                "artifacts":{"grad_step":"g","infer_step":"i",
+                              "apply_update":"a","init_params":"p"}}"#,
+        )
+        .unwrap();
+        let err =
+            ProfileSpec::from_value(Path::new("/x"), "t", &v).unwrap_err();
+        assert!(err.to_string().contains("offset"), "{err}");
+    }
+}

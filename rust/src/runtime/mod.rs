@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT'd HLO-text artifacts and execute them.
+//!
+//! The interchange contract (see `python/compile/aot.py` and DESIGN.md §3):
+//! HLO **text** (not serialized protos — the image's xla_extension 0.5.1
+//! rejects jax ≥ 0.5 64-bit instruction ids), one artifact directory per
+//! *profile*, described by `artifacts/manifest.json`.
+//!
+//! [`manifest`] parses and validates the manifest; [`engine`] owns the
+//! PJRT CPU client, compiles executables once, and exposes shape-checked
+//! typed entry points (`grad_step`, `infer_step`, `apply_update`).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, GradOut, InferOut};
+pub use manifest::{ArtifactManifest, ParamEntry, ProfileSpec};

@@ -1,0 +1,7 @@
+//! The training loop: simulated multi-rank DDP over PJRT executables.
+
+pub mod schedule;
+pub mod trainer;
+
+pub use schedule::LrSchedule;
+pub use trainer::{EpochStats, Trainer};

@@ -1,0 +1,46 @@
+//! Learning-rate schedule: linear warmup → constant.
+
+/// Linear warmup to `base_lr` over `warmup_steps`, then constant.
+#[derive(Debug, Clone, Copy)]
+pub struct LrSchedule {
+    pub base_lr: f64,
+    pub warmup_steps: usize,
+}
+
+impl LrSchedule {
+    pub fn new(base_lr: f64, warmup_steps: usize) -> LrSchedule {
+        LrSchedule {
+            base_lr,
+            warmup_steps,
+        }
+    }
+
+    /// LR at global step `step` (0-based).
+    pub fn at(&self, step: u64) -> f64 {
+        if self.warmup_steps == 0 || step >= self.warmup_steps as u64 {
+            self.base_lr
+        } else {
+            self.base_lr * (step + 1) as f64 / self.warmup_steps as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_then_holds() {
+        let s = LrSchedule::new(0.1, 10);
+        assert!((s.at(0) - 0.01).abs() < 1e-12);
+        assert!((s.at(4) - 0.05).abs() < 1e-12);
+        assert!((s.at(9) - 0.1).abs() < 1e-12);
+        assert!((s.at(100) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_warmup_is_constant() {
+        let s = LrSchedule::new(0.2, 0);
+        assert_eq!(s.at(0), 0.2);
+    }
+}

@@ -1,0 +1,291 @@
+//! The DDP trainer: per-rank gradient steps through the PJRT engine,
+//! bucketed all-reduce, single parameter update.
+//!
+//! Ranks execute *sequentially* on the CPU client (the simulator model —
+//! DESIGN.md §1): per step, each rank runs `grad_step` on its own batch
+//! and its own recurrent state; gradients are then mean-reduced with the
+//! configured collective and applied once (mathematically identical to
+//! PyTorch DDP, where every rank applies the same averaged gradient).
+//! Timing reports both measured wall-clock and the *simulated parallel*
+//! time (`Σ_steps max_rank(compute)`), which is what an 8-GPU box would
+//! observe.
+
+use std::sync::Arc;
+
+use crate::config::{DdpConfig, EvalConfig, LoaderConfig, TrainConfig};
+use crate::dataset::Split;
+use crate::ddp::collective::by_name;
+use crate::ddp::GradSynchronizer;
+use crate::error::{Error, Result};
+use crate::eval::RecallAccumulator;
+use crate::loader::{EpochPlan, Prefetcher};
+use crate::log_info;
+use crate::metrics::Timings;
+use crate::model::StateManager;
+use crate::packing::{Block, PackedDataset};
+use crate::runtime::Engine;
+use crate::train::LrSchedule;
+
+/// Per-epoch training statistics.
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    pub epoch: u64,
+    pub steps: usize,
+    pub mean_loss: f64,
+    pub final_loss: f64,
+    /// Wall-clock of the epoch (ranks serialized on this CPU).
+    pub wall_s: f64,
+    /// Simulated 8-GPU parallel time: Σ_steps max over ranks of compute.
+    pub parallel_s: f64,
+    /// Real source frames consumed.
+    pub real_frames: usize,
+    /// Total slots (incl. padding) — the compute actually spent.
+    pub slots: usize,
+}
+
+/// Multi-rank DDP trainer over one [`Engine`].
+pub struct Trainer {
+    pub engine: Engine,
+    pub params: Vec<f32>,
+    pub mom: Vec<f32>,
+    sync: GradSynchronizer,
+    states: Vec<StateManager>,
+    lr: LrSchedule,
+    train_cfg: TrainConfig,
+    ddp_cfg: DdpConfig,
+    loader_cfg: LoaderConfig,
+    pub timings: Timings,
+    pub global_step: u64,
+    pub history: Vec<EpochStats>,
+    nan_streak: usize,
+    seed: u64,
+}
+
+impl Trainer {
+    pub fn new(engine: Engine, train_cfg: TrainConfig, ddp_cfg: DdpConfig,
+               loader_cfg: LoaderConfig, seed: u64) -> Result<Trainer> {
+        if engine.spec.batch != ddp_cfg.batch_per_rank {
+            return Err(Error::Train(format!(
+                "artifact profile '{}' was compiled for B={}, but \
+                 ddp.batch_per_rank={}; rebuild artifacts or fix the config",
+                engine.spec.name, engine.spec.batch, ddp_cfg.batch_per_rank
+            )));
+        }
+        let params = engine.spec.load_init_params()?;
+        let mom = vec![0.0; params.len()];
+        let states = (0..ddp_cfg.ranks)
+            .map(|_| {
+                StateManager::new(engine.spec.state_dim,
+                                  train_cfg.carry_state)
+            })
+            .collect();
+        let sync = GradSynchronizer::new(by_name(&ddp_cfg.allreduce),
+                                         ddp_cfg.bucket_elems);
+        Ok(Trainer {
+            lr: LrSchedule::new(train_cfg.lr, train_cfg.warmup_steps),
+            engine,
+            params,
+            mom,
+            sync,
+            states,
+            train_cfg,
+            ddp_cfg,
+            loader_cfg,
+            timings: Timings::new(),
+            global_step: 0,
+            history: Vec::new(),
+            nan_streak: 0,
+            seed,
+        })
+    }
+
+    /// Train one epoch over `packed`; returns the epoch stats.
+    pub fn train_epoch(&mut self, split: &Arc<Split>,
+                       packed: &Arc<PackedDataset>, epoch: u64)
+                       -> Result<EpochStats> {
+        self.train_epoch_capped(split, packed, epoch, 0)
+    }
+
+    /// Train one epoch, stopping after `max_steps` steps (0 = whole
+    /// epoch). Used by the full-geometry timing harness to cap the ~4×
+    /// naive-padding arm and extrapolate.
+    pub fn train_epoch_capped(&mut self, split: &Arc<Split>,
+                              packed: &Arc<PackedDataset>, epoch: u64,
+                              max_steps: usize) -> Result<EpochStats> {
+        let ranks = self.ddp_cfg.ranks;
+        let batch = self.ddp_cfg.batch_per_rank;
+        let plans: Vec<EpochPlan> = (0..ranks)
+            .map(|r| {
+                EpochPlan::new(packed, ranks, r, batch,
+                               self.loader_cfg.shuffle, self.seed, epoch)
+            })
+            .collect();
+        let mut steps = plans[0].steps();
+        if max_steps > 0 {
+            steps = steps.min(max_steps);
+        }
+        if steps == 0 {
+            return Err(Error::Train(format!(
+                "epoch {epoch}: no full batches ({} blocks / {ranks} ranks \
+                 / batch {batch})",
+                packed.blocks.len()
+            )));
+        }
+        let mut prefetchers: Vec<Prefetcher> = plans
+            .iter()
+            .map(|p| {
+                Prefetcher::spawn(Arc::clone(split), Arc::clone(packed), p,
+                                  self.loader_cfg.workers,
+                                  self.loader_cfg.prefetch_depth)
+            })
+            .collect();
+        for st in &mut self.states {
+            st.reset();
+        }
+
+        let epoch_t0 = std::time::Instant::now();
+        let mut parallel_s = 0.0f64;
+        let mut loss_sum = 0.0f64;
+        let mut final_loss = 0.0f64;
+        let mut real_frames = 0usize;
+        let mut slots = 0usize;
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(ranks);
+
+        for step in 0..steps {
+            grads.clear();
+            let mut step_max_compute = 0.0f64;
+            let mut step_loss = 0.0f64;
+            // Upload parameters once per step; every rank executes against
+            // the same literal (DDP keeps replicas identical — §Perf L3).
+            let params_lit = self.engine.params_literal(&self.params)?;
+            for rank in 0..ranks {
+                let batch_data = self
+                    .timings
+                    .time("loader.next", || prefetchers[rank].next())
+                    .ok_or_else(|| {
+                        Error::Train(format!(
+                            "rank {rank} ran out of batches at step {step}"
+                        ))
+                    })??;
+                let blocks: Vec<&Block> = batch_data
+                    .block_ids
+                    .iter()
+                    .map(|&i| &packed.blocks[i])
+                    .collect();
+                let state_in =
+                    self.states[rank].state_in(&batch_data, &blocks);
+                let t0 = std::time::Instant::now();
+                let out = self.engine.grad_step_lit(&params_lit, &batch_data,
+                                                    &state_in)?;
+                let dt = t0.elapsed().as_secs_f64();
+                self.timings
+                    .record("compute.grad_step",
+                            std::time::Duration::from_secs_f64(dt));
+                step_max_compute = step_max_compute.max(dt);
+                self.states[rank].absorb(&out.state_out, &blocks);
+                step_loss += out.loss as f64;
+                real_frames += batch_data.real_frames;
+                slots += batch_data.slots;
+                grads.push(out.grads);
+            }
+            parallel_s += step_max_compute;
+
+            // Gradient synchronization (all ranks' grads -> mean).
+            self.timings.time("comm.allreduce", || {
+                self.sync.sync(&mut grads)
+            });
+
+            let lr = self.lr.at(self.global_step) as f32;
+            let momentum = self.train_cfg.momentum as f32;
+            let (params, mom) = (&mut self.params, &mut self.mom);
+            let engine = &self.engine;
+            let g0 = &grads[0];
+            self.timings.time("compute.apply_update", || {
+                engine.apply_update(params, mom, g0, lr, momentum)
+            })?;
+
+            let mean_step_loss = step_loss / ranks as f64;
+            loss_sum += mean_step_loss;
+            final_loss = mean_step_loss;
+            if !mean_step_loss.is_finite() {
+                self.nan_streak += 1;
+                if self.nan_streak >= self.train_cfg.nan_tolerance {
+                    return Err(Error::Train(format!(
+                        "loss non-finite for {} consecutive steps \
+                         (step {})",
+                        self.nan_streak, self.global_step
+                    )));
+                }
+            } else {
+                self.nan_streak = 0;
+            }
+            self.global_step += 1;
+            if self.train_cfg.log_every > 0
+                && (step + 1) % self.train_cfg.log_every == 0
+            {
+                log_info!(
+                    "epoch {epoch} step {}/{steps} loss {mean_step_loss:.4} \
+                     lr {lr:.4}",
+                    step + 1
+                );
+            }
+        }
+        for pf in prefetchers.drain(..) {
+            pf.shutdown();
+        }
+        let stats = EpochStats {
+            epoch,
+            steps,
+            mean_loss: loss_sum / steps as f64,
+            final_loss,
+            wall_s: epoch_t0.elapsed().as_secs_f64(),
+            parallel_s,
+            real_frames,
+            slots,
+        };
+        log_info!(
+            "epoch {epoch} done: steps={} loss={:.4} wall={:.1}s \
+             parallel={:.1}s frames={} slots={}",
+            stats.steps, stats.mean_loss, stats.wall_s, stats.parallel_s,
+            stats.real_frames, stats.slots
+        );
+        self.history.push(stats.clone());
+        Ok(stats)
+    }
+
+    /// Evaluate recall@K over a packed test split (single rank, no grads).
+    pub fn evaluate(&mut self, split: &Arc<Split>,
+                    packed: &Arc<PackedDataset>, eval_cfg: &EvalConfig)
+                    -> Result<f64> {
+        let spec = &self.engine.spec;
+        let b = spec.batch;
+        let plan = EpochPlan::new(packed, 1, 0, b, false, self.seed, 0);
+        let mut pf = Prefetcher::spawn(Arc::clone(split), Arc::clone(packed),
+                                       &plan, self.loader_cfg.workers,
+                                       self.loader_cfg.prefetch_depth);
+        let mut acc = RecallAccumulator::new();
+        let mut state_mgr =
+            StateManager::new(spec.state_dim, self.train_cfg.carry_state);
+        let params_lit = self.engine.params_literal(&self.params)?;
+        while let Some(batch) = pf.next() {
+            let batch = batch?;
+            let blocks: Vec<&Block> = batch
+                .block_ids
+                .iter()
+                .map(|&i| &packed.blocks[i])
+                .collect();
+            let state_in = state_mgr.state_in(&batch, &blocks);
+            let out = self.engine.infer_step_lit(&params_lit, &batch,
+                                                 &state_in)?;
+            state_mgr.absorb(&out.state_out, &blocks);
+            acc.push_batch(&out.logits, &batch.labels, &batch.frame_mask,
+                           b, spec.block_len, spec.objects, spec.classes,
+                           eval_cfg.recall_k);
+        }
+        pf.shutdown();
+        if acc.frames == 0 {
+            return Err(Error::Train("evaluation saw zero frames".into()));
+        }
+        Ok(acc.recall_pct())
+    }
+}

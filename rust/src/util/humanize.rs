@@ -1,0 +1,100 @@
+//! Human-readable formatting of durations, counts and byte sizes for CLI
+//! and bench output.
+
+use std::time::Duration;
+
+/// `1234567` → `"1,234,567"`.
+pub fn commas(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Compact duration: `"1.23s"`, `"45.1ms"`, `"820µs"`, `"2m03s"`.
+pub fn duration(d: Duration) -> String {
+    let secs = d.as_secs_f64();
+    if secs >= 60.0 {
+        let m = (secs / 60.0).floor() as u64;
+        format!("{m}m{:04.1}s", secs - m as f64 * 60.0)
+    } else if secs >= 1.0 {
+        format!("{secs:.2}s")
+    } else if secs >= 1e-3 {
+        format!("{:.1}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.0}µs", secs * 1e6)
+    } else {
+        format!("{:.0}ns", secs * 1e9)
+    }
+}
+
+/// Bytes with binary units: `"1.50 MiB"`.
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Rate: items per second with SI prefixes (`"3.4M/s"`).
+pub fn rate(items: f64, seconds: f64) -> String {
+    let r = if seconds > 0.0 { items / seconds } else { 0.0 };
+    if r >= 1e9 {
+        format!("{:.2}G/s", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2}M/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2}k/s", r / 1e3)
+    } else {
+        format!("{r:.1}/s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commas_groups() {
+        assert_eq!(commas(0), "0");
+        assert_eq!(commas(999), "999");
+        assert_eq!(commas(1000), "1,000");
+        assert_eq!(commas(534831), "534,831");
+        assert_eq!(commas(1234567890), "1,234,567,890");
+    }
+
+    #[test]
+    fn duration_scales() {
+        assert_eq!(duration(Duration::from_secs(125)), "2m05.0s");
+        assert_eq!(duration(Duration::from_millis(1500)), "1.50s");
+        assert_eq!(duration(Duration::from_micros(4200)), "4.2ms");
+        assert_eq!(duration(Duration::from_nanos(900)), "900ns");
+    }
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(1536), "1.50 KiB");
+        assert_eq!(bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn rates() {
+        assert_eq!(rate(1000.0, 1.0), "1.00k/s");
+        assert_eq!(rate(0.0, 0.0), "0.0/s");
+        assert_eq!(rate(2_500_000.0, 1.0), "2.50M/s");
+    }
+}

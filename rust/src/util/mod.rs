@@ -1,0 +1,15 @@
+//! Small self-contained utilities shared across the crate.
+//!
+//! This environment has no third-party utility crates available offline, so
+//! the pieces a data-pipeline system normally pulls in (a seedable PRNG,
+//! percentile stats, CRC32, top-k selection, humanized units) live here,
+//! each with unit tests.
+
+pub mod crc32;
+pub mod humanize;
+pub mod rng;
+pub mod stats;
+pub mod tensor;
+pub mod topk;
+
+pub use rng::Rng;

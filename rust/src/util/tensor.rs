@@ -1,0 +1,171 @@
+//! A minimal dense f32 tensor for host-side staging.
+//!
+//! This is *not* a compute library — all heavy math runs inside the AOT'd
+//! XLA executables. [`Tensor`] exists to carry shaped `f32` buffers between
+//! the loader, the DDP gradient exchange and the PJRT literal conversion,
+//! with shape checking at the boundaries.
+
+use crate::error::{Error, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    /// Constant-filled tensor.
+    pub fn full(shape: &[usize], value: f32) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![value; shape.iter().product()],
+        }
+    }
+
+    /// Wrap an existing buffer; the length must match the shape product.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let want: usize = shape.iter().product();
+        if want != data.len() {
+            return Err(Error::Runtime(format!(
+                "Tensor::from_vec: shape {shape:?} wants {want} elements, \
+                 buffer has {}",
+                data.len()
+            )));
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Row-major linear offset of a multi-index (debug-checked).
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (d, (&i, &s)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(i < s, "index {i} out of bounds for dim {d} ({s})");
+            off = off * s + i;
+        }
+        off
+    }
+
+    pub fn get(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let o = self.offset(idx);
+        self.data[o] = v;
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor> {
+        let want: usize = shape.iter().product();
+        if want != self.data.len() {
+            return Err(Error::Runtime(format!(
+                "reshape {:?} -> {shape:?}: element count mismatch",
+                self.shape
+            )));
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Elementwise in-place AXPY: `self += alpha * other` (shapes must match).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            return Err(Error::Runtime(format!(
+                "axpy shape mismatch {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    /// L2 norm of the flattened tensor.
+    pub fn l2(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_indexing() {
+        let mut t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        t.set(&[1, 2, 3], 7.0);
+        assert_eq!(t.get(&[1, 2, 3]), 7.0);
+        assert_eq!(t.offset(&[1, 2, 3]), 23);
+        assert_eq!(t.offset(&[0, 0, 0]), 0);
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let t = Tensor::zeros(&[4, 3]);
+        assert!(t.clone().reshape(&[3, 4]).is_ok());
+        assert!(t.reshape(&[5, 2]).is_err());
+    }
+
+    #[test]
+    fn axpy_and_norm() {
+        let mut a = Tensor::full(&[3], 1.0);
+        let b = Tensor::full(&[3], 2.0);
+        a.axpy(0.5, &b).unwrap();
+        assert_eq!(a.data(), &[2.0, 2.0, 2.0]);
+        assert!((a.l2() - (12.0f32).sqrt()).abs() < 1e-6);
+        let bad = Tensor::zeros(&[4]);
+        assert!(a.axpy(1.0, &bad).is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! Top-k selection over scored items — the core of the recall@K evaluator
+//! (the paper's metric is recall@20 over scored relation triplets).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Min-heap entry: ordered by score ascending so the heap root is the
+/// *worst* of the current top-k and can be evicted cheaply.
+struct Entry {
+    score: f32,
+    index: usize,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.score == other.score && self.index == other.index
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse on score => BinaryHeap (max-heap) behaves as a min-heap:
+        // the root is the lowest score. Among equal scores the root is the
+        // *largest* index, so ties evict high indices first (deterministic
+        // "prefer lower index" semantics).
+        other
+            .score
+            .partial_cmp(&self.score)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| self.index.cmp(&other.index))
+    }
+}
+
+/// Indices of the `k` largest scores, ordered by descending score
+/// (ties: ascending index). `O(n log k)`, exact and deterministic.
+pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    if k == 0 || scores.is_empty() {
+        return Vec::new();
+    }
+    let mut heap: BinaryHeap<Entry> = BinaryHeap::with_capacity(k + 1);
+    for (index, &score) in scores.iter().enumerate() {
+        debug_assert!(!score.is_nan(), "NaN score at {index}");
+        if heap.len() < k {
+            heap.push(Entry { score, index });
+        } else if let Some(worst) = heap.peek() {
+            if score > worst.score
+                || (score == worst.score && index < worst.index)
+            {
+                heap.pop();
+                heap.push(Entry { score, index });
+            }
+        }
+    }
+    let mut out: Vec<Entry> = heap.into_vec();
+    out.sort_by(|a, b| {
+        b.score
+            .partial_cmp(&a.score)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| a.index.cmp(&b.index))
+    });
+    out.into_iter().map(|e| e.index).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn picks_largest() {
+        let s = [0.1, 0.9, 0.5, 0.7];
+        assert_eq!(top_k_indices(&s, 2), vec![1, 3]);
+    }
+
+    #[test]
+    fn k_larger_than_n_returns_all_sorted() {
+        let s = [0.3, 0.1, 0.2];
+        assert_eq!(top_k_indices(&s, 10), vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn k_zero_and_empty() {
+        assert!(top_k_indices(&[1.0], 0).is_empty());
+        assert!(top_k_indices(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn ties_break_on_lower_index() {
+        let s = [0.5, 0.5, 0.5, 0.5];
+        assert_eq!(top_k_indices(&s, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn matches_full_sort_randomized() {
+        let mut rng = Rng::new(99);
+        for case in 0..200 {
+            let n = rng.range(1, 60);
+            let k = rng.range(1, 25);
+            let scores: Vec<f32> =
+                (0..n).map(|_| (rng.below(20) as f32) / 10.0).collect();
+            let got = top_k_indices(&scores, k);
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| {
+                scores[b]
+                    .partial_cmp(&scores[a])
+                    .unwrap()
+                    .then_with(|| a.cmp(&b))
+            });
+            idx.truncate(k.min(n));
+            assert_eq!(got, idx, "case {case}: scores={scores:?} k={k}");
+        }
+    }
+}

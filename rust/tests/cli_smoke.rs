@@ -1,0 +1,113 @@
+//! CLI smoke tests: every subcommand's happy path and its flag errors,
+//! exercised through the public `cli::run` dispatcher (no subprocess).
+
+use bload::cli::run;
+
+fn argv(s: &[&str]) -> Vec<String> {
+    s.iter().map(|x| x.to_string()).collect()
+}
+
+#[test]
+fn no_command_prints_help_and_exits_2() {
+    assert_eq!(run(&argv(&[])).unwrap(), 2);
+    assert_eq!(run(&argv(&["definitely-not-a-command"])).unwrap(), 2);
+}
+
+#[test]
+fn help_flag_short_circuits() {
+    assert_eq!(run(&argv(&["pack", "--help"])).unwrap(), 0);
+}
+
+#[test]
+fn inspect_small_scale() {
+    assert_eq!(
+        run(&argv(&["inspect", "--scale", "0.01", "--seed", "3"])).unwrap(),
+        0
+    );
+}
+
+#[test]
+fn pack_all_strategies_small_scale() {
+    for s in ["bload", "naive", "sampling", "mix_pad"] {
+        assert_eq!(
+            run(&argv(&["pack", "--strategy", s, "--scale", "0.02"]))
+                .unwrap(),
+            0,
+            "{s}"
+        );
+    }
+}
+
+#[test]
+fn pack_rejects_unknown_strategy_and_flags() {
+    assert!(run(&argv(&["pack", "--strategy", "bogus"])).is_err());
+    assert!(run(&argv(&["pack", "--bogus-flag", "1"])).is_err());
+}
+
+#[test]
+fn pack_viz_all_figures() {
+    for s in ["none", "bload", "naive", "sampling", "mix_pad"] {
+        assert_eq!(
+            run(&argv(&["pack-viz", "--strategy", s])).unwrap(),
+            0,
+            "{s}"
+        );
+    }
+}
+
+#[test]
+fn gen_data_writes_store() {
+    let out = std::env::temp_dir().join(format!(
+        "bload_cli_smoke_{}.blds",
+        std::process::id()
+    ));
+    let out_s = out.to_str().unwrap().to_string();
+    assert_eq!(
+        run(&argv(&["gen-data", "--out", &out_s, "--scale", "0.003"]))
+            .unwrap(),
+        0
+    );
+    let (_seed, videos) =
+        bload::dataset::store::read_store(&out).unwrap();
+    assert!(!videos.is_empty());
+    std::fs::remove_file(&out).ok();
+}
+
+#[test]
+fn deadlock_demo_completes() {
+    assert_eq!(
+        run(&argv(&[
+            "deadlock-demo", "--ranks", "2", "--batch", "2",
+            "--timeout-ms", "120",
+        ]))
+        .unwrap(),
+        0
+    );
+}
+
+#[test]
+fn table1_pipeline_level() {
+    // Pipeline accounting only (no --full): packs the full AG-Synth split
+    // four ways and prints the paper-side table.
+    assert_eq!(run(&argv(&["table1"])).unwrap(), 0);
+}
+
+#[test]
+fn train_rejects_missing_config() {
+    assert!(run(&argv(&["train", "--config", "/nope/missing.toml"]))
+        .is_err());
+}
+
+#[test]
+fn train_smoke_config_runs_if_artifacts_built() {
+    let manifest = std::path::Path::new("artifacts/manifest.json");
+    let config = std::path::Path::new("configs/smoke.toml");
+    if !manifest.exists() || !config.exists() {
+        eprintln!("skipping: artifacts/config not present");
+        return;
+    }
+    assert_eq!(
+        run(&argv(&["train", "--config", "configs/smoke.toml"])).unwrap(),
+        0
+    );
+}

@@ -1,0 +1,197 @@
+//! Integration: the full data pipeline (generate → pack → shard →
+//! prefetch → device batches) without the PJRT runtime, plus randomized
+//! cross-strategy properties. These tests exercise module *composition*;
+//! per-module behaviour lives in unit tests.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use bload::config::{ExperimentConfig, StrategyName};
+use bload::dataset::synthetic::generate;
+use bload::loader::{EpochPlan, Prefetcher};
+use bload::packing::{pack, pack_with_block_len, validate::validate};
+use bload::util::Rng;
+
+#[test]
+fn bload_pipeline_conserves_every_frame() {
+    let cfg = ExperimentConfig::default_config();
+    let dcfg = cfg.dataset.scaled(0.02);
+    let ds = generate(&dcfg, 7);
+    let packed =
+        Arc::new(pack(StrategyName::BLoad, &ds.train, &cfg.packing, 7)
+            .unwrap());
+    let split = Arc::new(ds.train);
+
+    // Stream one epoch on one rank; count per-video frames delivered.
+    let plan = EpochPlan::new(&packed, 1, 0, 2, true, 7, 0);
+    let mut pf = Prefetcher::spawn(Arc::clone(&split), Arc::clone(&packed),
+                                   &plan, 3, 4);
+    let mut frames_delivered = 0usize;
+    while let Some(b) = pf.next() {
+        let b = b.unwrap();
+        frames_delivered += b.real_frames;
+        // Mask and seg ids agree on occupancy for bload.
+        for i in 0..b.frame_mask.len() {
+            assert_eq!(b.frame_mask[i] > 0.5, b.seg_ids[i] >= 0.0);
+        }
+    }
+    pf.shutdown();
+    // Equal-shard epoch may drop a remainder batch but nothing else.
+    let expected: usize = plan
+        .batches
+        .iter()
+        .flatten()
+        .map(|&i| packed.blocks[i].used())
+        .sum();
+    assert_eq!(frames_delivered, expected);
+}
+
+#[test]
+fn multi_rank_epoch_covers_disjoint_blocks_with_equal_steps() {
+    let cfg = ExperimentConfig::default_config();
+    let ds = generate(&cfg.dataset.scaled(0.02), 1);
+    let packed =
+        Arc::new(pack(StrategyName::BLoad, &ds.train, &cfg.packing, 1)
+            .unwrap());
+    let ranks = 8;
+    let mut seen = std::collections::HashSet::new();
+    let mut steps = Vec::new();
+    for r in 0..ranks {
+        let plan = EpochPlan::new(&packed, ranks, r, 2, true, 1, 0);
+        steps.push(plan.steps());
+        for b in plan.batches.iter().flatten() {
+            assert!(seen.insert(*b), "block {b} on two ranks");
+        }
+    }
+    assert!(steps.windows(2).all(|w| w[0] == w[1]), "{steps:?}");
+}
+
+#[test]
+fn all_strategies_produce_loadable_batches() {
+    let cfg = ExperimentConfig::default_config();
+    let dcfg = bload::harness::scaled_dataset(120, 30, 0.6);
+    let pcfg = bload::harness::scaled_packing();
+    let ds = generate(&dcfg, 3);
+    for strategy in StrategyName::all() {
+        let packed = Arc::new(
+            pack_with_block_len(strategy, &ds.train, &pcfg, pcfg.t_max, 3)
+                .unwrap(),
+        );
+        validate(&packed, &ds.train, strategy == StrategyName::MixPad)
+            .unwrap();
+        let split = Arc::new(ds.train.clone());
+        let plan = EpochPlan::new(&packed, 2, 0, 2, true, 3, 0);
+        if plan.steps() == 0 {
+            continue;
+        }
+        let mut pf = Prefetcher::spawn(split, Arc::clone(&packed), &plan,
+                                       2, 2);
+        let b = pf.next().unwrap().unwrap();
+        assert_eq!(b.block_len, pcfg.t_max);
+        assert!(b.real_frames > 0, "{strategy}");
+        pf.shutdown();
+    }
+    let _ = cfg;
+}
+
+#[test]
+fn randomized_strategy_invariants_hold() {
+    // Property sweep: over random geometries and seeds, every strategy's
+    // output validates and its conservation law holds.
+    let mut rng = Rng::new(0xFEED);
+    for case in 0..30 {
+        let mut dcfg = bload::harness::scaled_dataset(
+            rng.range(10, 120), 5, 0.4 + rng.f64() * 0.5);
+        dcfg.min_len = rng.range(1, 4);
+        dcfg.max_len = rng.range(dcfg.min_len + 4, 30);
+        dcfg.mean_len =
+            dcfg.min_len as f64 + (dcfg.max_len - dcfg.min_len) as f64 * 0.4;
+        let ds = generate(&dcfg, rng.next_u64());
+        let mut pcfg = bload::harness::scaled_packing();
+        pcfg.t_max = dcfg.max_len.max(4);
+        pcfg.t_block = rng.range(1, pcfg.t_max / 2 + 2);
+        pcfg.t_mix = rng.range(1, pcfg.t_max + 1);
+        for strategy in StrategyName::all() {
+            let packed = pack(strategy, &ds.train, &pcfg, rng.next_u64())
+                .unwrap_or_else(|e| panic!("case {case} {strategy}: {e}"));
+            validate(&packed, &ds.train, strategy == StrategyName::MixPad)
+                .unwrap_or_else(|e| panic!("case {case} {strategy}: {e}"));
+            let s = &packed.stats;
+            let total = ds.train.total_frames();
+            assert_eq!(s.frames_kept + s.frames_deleted, total,
+                       "case {case} {strategy}: conservation");
+            match strategy {
+                StrategyName::BLoad | StrategyName::NaivePad => {
+                    assert_eq!(s.frames_deleted, 0);
+                }
+                StrategyName::Sampling => {
+                    assert_eq!(s.padding, 0);
+                }
+                StrategyName::MixPad => {}
+            }
+        }
+    }
+}
+
+#[test]
+fn batches_are_bit_identical_across_runs() {
+    // Determinism end to end: same seeds -> same bytes.
+    let dcfg = bload::harness::scaled_dataset(60, 10, 0.6);
+    let pcfg = bload::harness::scaled_packing();
+    let collect = || -> Vec<f32> {
+        let ds = generate(&dcfg, 11);
+        let packed = Arc::new(
+            pack_with_block_len(StrategyName::BLoad, &ds.train, &pcfg, 24,
+                                11)
+            .unwrap(),
+        );
+        let split = Arc::new(ds.train);
+        let plan = EpochPlan::new(&packed, 2, 1, 2, true, 11, 4);
+        let mut pf = Prefetcher::spawn(split, packed, &plan, 4, 3);
+        let mut out = Vec::new();
+        while let Some(b) = pf.next() {
+            out.extend(b.unwrap().feats);
+        }
+        pf.shutdown();
+        out
+    };
+    assert_eq!(collect(), collect());
+}
+
+#[test]
+fn sampling_chunks_cover_prefixes_only() {
+    // Each video's delivered frames are exactly frames [0, k*t_block).
+    let dcfg = bload::harness::scaled_dataset(80, 10, 0.6);
+    let pcfg = bload::harness::scaled_packing();
+    let ds = generate(&dcfg, 5);
+    let packed =
+        pack_with_block_len(StrategyName::Sampling, &ds.train, &pcfg, 24, 5)
+            .unwrap();
+    let mut covered: HashMap<u32, Vec<(usize, usize)>> = HashMap::new();
+    for b in &packed.blocks {
+        for s in &b.segments {
+            covered
+                .entry(s.video)
+                .or_default()
+                .push((s.src_start, s.src_start + s.len));
+        }
+    }
+    let lens: HashMap<u32, usize> = ds
+        .train
+        .videos
+        .iter()
+        .map(|v| (v.id, v.len as usize))
+        .collect();
+    for (video, mut spans) in covered {
+        spans.sort_unstable();
+        // Contiguous from zero.
+        let mut expect = 0usize;
+        for (a, b) in &spans {
+            assert_eq!(*a, expect, "video {video}");
+            expect = *b;
+        }
+        let kept = expect;
+        let vlen = lens[&video];
+        assert_eq!(kept, vlen / 8 * 8, "video {video} len {vlen}");
+    }
+}
