@@ -1,0 +1,64 @@
+//! Online-packing throughput: the windowed streaming packer vs offline
+//! BLoad (frames/s), across window sizes, plus the padding overhead each
+//! window pays. The online packer must keep up with ingest-rate traffic —
+//! it sits on the hot arrival path, unlike the offline packer's
+//! once-per-epoch batch job.
+
+use bload::benchkit::Bencher;
+use bload::config::{ExperimentConfig, StrategyName};
+use bload::dataset::synthetic::generate;
+use bload::packing::online::{pack_stream, OnlineConfig};
+use bload::packing::pack;
+
+fn main() {
+    let bench = Bencher::from_env();
+    let cfg = ExperimentConfig::default_config();
+    for scale in [0.1f64, 1.0] {
+        let dcfg = cfg.dataset.scaled(scale);
+        let ds = generate(&dcfg, 0);
+        let frames = ds.train.total_frames() as f64;
+        let items: Vec<(u32, usize)> = ds
+            .train
+            .videos
+            .iter()
+            .map(|v| (v.id, v.len as usize))
+            .collect();
+
+        let mut seed = 0u64;
+        bench.run(
+            &format!("packing/offline_bload/scale{scale}"),
+            frames,
+            "frames",
+            || {
+                seed += 1;
+                pack(StrategyName::BLoad, &ds.train, &cfg.packing, seed)
+                    .unwrap()
+            },
+        );
+
+        for window in [16usize, 64, 256] {
+            let mut ocfg = OnlineConfig::new(cfg.packing.t_max);
+            ocfg.window = window;
+            let mut seed = 0u64;
+            let name =
+                format!("packing/online_w{window}/scale{scale}");
+            bench.run(&name, frames, "frames", || {
+                seed += 1;
+                pack_stream(items.iter().copied(), ocfg, seed).unwrap()
+            });
+            // One representative run for the padding overhead line.
+            let (_, stats) =
+                pack_stream(items.iter().copied(), ocfg, 0).unwrap();
+            let offline =
+                pack(StrategyName::BLoad, &ds.train, &cfg.packing, 0)
+                    .unwrap();
+            println!(
+                "  padding: online_w{window} {:.3}% vs offline {:.3}% \
+                 (scale {scale})",
+                100.0 * stats.padding_ratio(),
+                100.0 * offline.stats.padding as f64
+                    / offline.stats.total_slots as f64
+            );
+        }
+    }
+}

@@ -7,7 +7,7 @@ use crate::dataset::stats::SplitStats;
 use crate::dataset::store::StoreWriter;
 use crate::dataset::synthetic::generate;
 use crate::error::{Error, Result};
-use crate::harness::{ablation as abl, deadlock, table1};
+use crate::harness::{ablation as abl, deadlock, streaming, table1};
 use crate::packing::{pack, validate::validate, viz};
 use crate::runtime::{ArtifactManifest, Engine};
 use crate::train::Trainer;
@@ -226,6 +226,33 @@ pub fn train(args: &mut Args) -> Result<i32> {
     println!("recall@{} = {recall:.2}%", cfg.eval.recall_k);
     println!("\ntimings:\n{}", trainer.timings.report());
     Ok(0)
+}
+
+/// `bload ingest [--scale F] [--seed N] [--window N] [--max-latency N]
+///               [--queue N] [--ranks N] [--batch N] [--workers N]
+///               [--producers N]`
+///
+/// Streaming mode: run the online packing service end-to-end (bounded
+/// multi-producer queue → windowed BLoad → per-rank block shards →
+/// streaming prefetcher) and compare its padding ratio and throughput
+/// against offline BLoad on the same split.
+pub fn ingest(args: &mut Args) -> Result<i32> {
+    let defaults = streaming::StreamingOptions::default();
+    let opts = streaming::StreamingOptions {
+        scale: args.flag_f64("scale", defaults.scale)?,
+        seed: args.flag_u64("seed", defaults.seed)?,
+        window: args.flag_usize("window", defaults.window)?,
+        max_latency: args.flag_usize("max-latency", defaults.max_latency)?,
+        queue_cap: args.flag_usize("queue", defaults.queue_cap)?,
+        ranks: args.flag_usize("ranks", defaults.ranks)?,
+        batch: args.flag_usize("batch", defaults.batch)?,
+        workers: args.flag_usize("workers", defaults.workers)?,
+        producers: args.flag_usize("producers", defaults.producers)?,
+    };
+    args.finish()?;
+    let report = streaming::run(&opts)?;
+    println!("{}", streaming::render(&report));
+    Ok(if report.ddp_completed { 0 } else { 1 })
 }
 
 /// `bload ablation [--epochs N] [--videos N]`

@@ -11,6 +11,7 @@
 //!   pack-viz       ASCII rendering of packed blocks (Figs 1/3/4/5)
 //!   table1         reproduce Table I (add --full for measured runs)
 //!   deadlock-demo  reproduce Fig 2 and show BLoad completing
+//!   ingest         streaming mode: online packing service vs offline
 //!   train          end-to-end training run from a config file
 //!   ablation       reset-table / state-carry ablations (Fig 6)
 //! ```
@@ -44,6 +45,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "table1" => commands::table1(&mut args),
         "epoch-time-full" => commands::epoch_time_full(&mut args),
         "deadlock-demo" => commands::deadlock_demo(&mut args),
+        "ingest" => commands::ingest(&mut args),
         "train" => commands::train(&mut args),
         "ablation" => commands::ablation(&mut args),
         other => {
@@ -72,8 +74,20 @@ COMMANDS:
     epoch-time-full  Table I time column at full paper geometry \
 (--max-steps N caps long arms)
     deadlock-demo  reproduce Fig 2 (--ranks N --batch N --timeout-ms N)
+    ingest         streaming mode (--window N --max-latency N --queue N \
+--ranks N --producers N)
     train          full training run (--config FILE)
     ablation       reset-table / state-carry ablations (--epochs N)
+
+STREAMING MODE:
+    `bload ingest` runs the online packing service: sequences arrive from
+    concurrent producers over a bounded queue (backpressure), a windowed
+    BLoad packer emits uniform blocks incrementally (pool-full /
+    max-latency / end-of-stream flushes), blocks shard round-robin to all
+    DDP ranks in equal counts, and rank 0 streams device batches through
+    the prefetcher while packing is still running. The report compares
+    online vs offline padding ratio and checks the schedule on the
+    threaded DDP barrier engine.
 
 COMMON FLAGS:
     --seed N           PRNG seed (default 0)

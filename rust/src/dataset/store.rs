@@ -15,8 +15,10 @@
 //! footer: crc32 u32 over everything after the magic
 //! ```
 //!
-//! The store exists so examples can persist a materialized dataset and so
-//! the loader can be benchmarked against disk IO; the training pipeline
+//! The store exists so examples can persist a materialized dataset, so
+//! the loader can be benchmarked against disk IO, and so on-disk shards
+//! can feed the streaming [`crate::ingest`] service through
+//! [`StoreReader`] (one video in memory at a time); the training pipeline
 //! normally materializes videos lazily (deterministically) instead.
 
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -25,7 +27,7 @@ use std::path::Path;
 use crate::error::{Error, Result};
 use crate::util::crc32::Hasher;
 
-use super::VideoData;
+use super::{VideoData, VideoMeta};
 
 const MAGIC: &[u8; 4] = b"BLDS";
 const VERSION: u32 = 1;
@@ -123,58 +125,224 @@ impl<W: Write> StoreWriter<W> {
     }
 }
 
-/// Read an entire store file, verifying the CRC footer.
-pub fn read_store(path: &Path) -> Result<(u64, Vec<VideoData>)> {
-    let file = std::fs::File::open(path)
-        .map_err(|e| Error::io(path.display(), e))?;
-    let mut r = BufReader::new(file);
-    let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)
-        .map_err(|e| Error::io(path.display(), e))?;
-    if &magic != MAGIC {
-        return Err(Error::Dataset(format!(
-            "{}: bad magic {:?}",
-            path.display(),
-            magic
-        )));
+/// Streaming reader: yields one [`VideoData`] at a time without ever
+/// holding the whole store in memory, hashing incrementally and verifying
+/// the CRC footer after the last video.
+///
+/// This is what lets on-disk shards feed the [`crate::ingest`] service:
+/// a shard of any size streams through O(one video) of memory
+/// ([`next_meta`](StoreReader::next_meta) through O(1)). Corruption is
+/// reported with the byte offset where reading stopped and the
+/// stored-vs-computed CRC values.
+///
+/// **Weaker mid-stream guarantee than [`read_store`]**: the footer covers
+/// the whole body, so videos yielded before the stream reaches the footer
+/// have *not* been CRC-verified yet — a flipped byte early in a shard
+/// surfaces only at the end (structural corruption of lengths/geometry is
+/// still caught immediately). The one-shot [`read_store`] verifies the
+/// CRC before returning any data; streaming consumers that cannot
+/// tolerate provisionally-unverified records must drain to `None` before
+/// trusting what they received.
+pub struct StoreReader<R: Read> {
+    src: String,
+    r: R,
+    hasher: Hasher,
+    seed: u64,
+    geometry: (u32, u32, u32),
+    total: usize,
+    yielded: usize,
+    /// Bytes consumed from the start of the file (error context).
+    offset: u64,
+    /// Total file size when known (bounds corrupt per-video lengths).
+    size: Option<u64>,
+    verified: bool,
+    failed: bool,
+}
+
+impl StoreReader<BufReader<std::fs::File>> {
+    /// Open a store file for streaming.
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = std::fs::File::open(path)
+            .map_err(|e| Error::io(path.display(), e))?;
+        let size = file.metadata().ok().map(|m| m.len());
+        let mut reader = StoreReader::new(
+            &path.display().to_string(),
+            BufReader::new(file),
+        )?;
+        reader.size = size;
+        Ok(reader)
     }
-    let mut rest = Vec::new();
-    r.read_to_end(&mut rest)
-        .map_err(|e| Error::io(path.display(), e))?;
-    if rest.len() < 4 {
-        return Err(Error::Dataset("store truncated".into()));
-    }
-    let (body, footer) = rest.split_at(rest.len() - 4);
-    let want = u32::from_le_bytes(footer.try_into().unwrap());
-    let mut hasher = Hasher::new();
-    hasher.update(body);
-    let got = hasher.finalize();
-    if want != got {
-        return Err(Error::Dataset(format!(
-            "{}: CRC mismatch (file {want:#010x}, computed {got:#010x})",
-            path.display()
-        )));
+}
+
+impl<R: Read> StoreReader<R> {
+    /// Start streaming from any byte source. `src` labels errors (use the
+    /// path for files).
+    pub fn new(src: &str, mut r: R) -> Result<Self> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)
+            .map_err(|e| Error::io(src, e))?;
+        if &magic != MAGIC {
+            return Err(Error::Dataset(format!(
+                "{src}: bad magic {magic:?}"
+            )));
+        }
+        let mut hasher = Hasher::new();
+        let mut header = [0u8; 28];
+        r.read_exact(&mut header).map_err(|e| Error::io(src, e))?;
+        hasher.update(&header);
+        let u32_at = |i: usize| {
+            u32::from_le_bytes(header[i..i + 4].try_into().unwrap())
+        };
+        let version = u32_at(0);
+        if version != VERSION {
+            return Err(Error::Dataset(format!(
+                "{src}: unsupported store version {version}"
+            )));
+        }
+        let seed = u64::from_le_bytes(header[4..12].try_into().unwrap());
+        let geometry = (u32_at(12), u32_at(16), u32_at(20));
+        let total = u32_at(24) as usize;
+        Ok(StoreReader {
+            src: src.to_string(),
+            r,
+            hasher,
+            seed,
+            geometry,
+            total,
+            yielded: 0,
+            offset: 4 + 28,
+            size: None,
+            verified: false,
+            failed: false,
+        })
     }
 
-    let mut cur = Cursor { buf: body, pos: 0 };
-    let version = cur.u32()?;
-    if version != VERSION {
-        return Err(Error::Dataset(format!(
-            "unsupported store version {version}"
-        )));
+    pub fn seed(&self) -> u64 {
+        self.seed
     }
-    let seed = cur.u64()?;
-    let o = cur.u32()? as usize;
-    let f = cur.u32()? as usize;
-    let c = cur.u32()? as usize;
-    let n = cur.u32()? as usize;
-    let mut videos = Vec::with_capacity(n);
-    for _ in 0..n {
-        let id = cur.u32()?;
-        let len = cur.u32()? as usize;
-        let feats = cur.f32s(len * o * f)?;
-        let labels = cur.f32s(len * o * c)?;
-        videos.push(VideoData {
+
+    /// `(objects, feat_dim, classes)` declared by the header.
+    pub fn geometry(&self) -> (usize, usize, usize) {
+        let (o, f, c) = self.geometry;
+        (o as usize, f as usize, c as usize)
+    }
+
+    /// Videos declared by the header.
+    pub fn total_videos(&self) -> usize {
+        self.total
+    }
+
+    /// Videos not yet yielded.
+    pub fn remaining(&self) -> usize {
+        self.total - self.yielded
+    }
+
+    fn read_tracked(&mut self, buf: &mut [u8]) -> Result<()> {
+        self.r.read_exact(buf).map_err(|e| {
+            Error::Dataset(format!(
+                "{}: store truncated at byte offset {} (wanted {} more \
+                 bytes): {e}",
+                self.src,
+                self.offset,
+                buf.len()
+            ))
+        })?;
+        self.hasher.update(buf);
+        self.offset += buf.len() as u64;
+        Ok(())
+    }
+
+    /// Read `n` f32s in bounded chunks: the vector only grows as bytes
+    /// actually arrive, so a corrupt record length on a short source hits
+    /// the truncation error instead of a giant upfront allocation.
+    fn read_f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        const CHUNK_F32S: usize = 1 << 16; // 256 KiB per read
+        let mut out = Vec::with_capacity(n.min(CHUNK_F32S));
+        let mut raw = vec![0u8; 4 * n.min(CHUNK_F32S)];
+        let mut remaining = n;
+        while remaining > 0 {
+            let take = remaining.min(CHUNK_F32S);
+            let buf = &mut raw[..4 * take];
+            self.read_tracked(buf)?;
+            out.extend(
+                buf.chunks_exact(4)
+                    .map(|b| f32::from_le_bytes(b.try_into().unwrap())),
+            );
+            remaining -= take;
+        }
+        Ok(out)
+    }
+
+    /// Hash past `n` payload bytes through a fixed scratch buffer
+    /// (metadata-only streaming never allocates per-video).
+    fn skip_tracked(&mut self, mut n: usize) -> Result<()> {
+        let mut buf = [0u8; 8192];
+        while n > 0 {
+            let take = n.min(buf.len());
+            self.read_tracked(&mut buf[..take])?;
+            n -= take;
+        }
+        Ok(())
+    }
+
+    /// Read and sanity-check the next record's `(id, len, n_feats,
+    /// n_labels)` header.
+    fn record_header(&mut self) -> Result<(u32, usize, usize, usize)> {
+        let mut head = [0u8; 8];
+        self.read_tracked(&mut head)?;
+        let id = u32::from_le_bytes(head[0..4].try_into().unwrap());
+        let len = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+        let (o, f, c) = self.geometry();
+        // Checked arithmetic throughout: corrupted len/geometry must
+        // surface as a dataset error, never wrap into a small "valid"
+        // size in release builds.
+        let corrupt = |what: &str| {
+            Error::Dataset(format!(
+                "{}: store corrupt at byte offset {}: video {id} with len \
+                 {len} and geometry ({o},{f},{c}) overflows {what}",
+                self.src, self.offset
+            ))
+        };
+        let n_feats = len
+            .checked_mul(o)
+            .and_then(|x| x.checked_mul(f))
+            .ok_or_else(|| corrupt("feature count"))?;
+        let n_labels = len
+            .checked_mul(o)
+            .and_then(|x| x.checked_mul(c))
+            .ok_or_else(|| corrupt("label count"))?;
+        let bytes_needed = (n_feats as u64)
+            .checked_add(n_labels as u64)
+            .and_then(|x| x.checked_mul(4))
+            .ok_or_else(|| corrupt("record size"))?;
+        if let Some(size) = self.size {
+            // With a known source size, reject oversized records before
+            // reading anything: the record cannot exceed what is left.
+            if self
+                .offset
+                .checked_add(bytes_needed)
+                .map_or(true, |end| end > size)
+            {
+                return Err(Error::Dataset(format!(
+                    "{}: store truncated or corrupt at byte offset {}: \
+                     video {id} declares len {len} ({bytes_needed} bytes) \
+                     but only {} bytes remain in the file",
+                    self.src,
+                    self.offset,
+                    size - self.offset
+                )));
+            }
+        }
+        Ok((id, len, n_feats, n_labels))
+    }
+
+    fn next_video(&mut self) -> Result<VideoData> {
+        let (id, len, n_feats, n_labels) = self.record_header()?;
+        let (o, f, c) = self.geometry();
+        let feats = self.read_f32s(n_feats)?;
+        let labels = self.read_f32s(n_labels)?;
+        self.yielded += 1;
+        Ok(VideoData {
             id,
             feats,
             labels,
@@ -182,44 +350,120 @@ pub fn read_store(path: &Path) -> Result<(u64, Vec<VideoData>)> {
             objects: o,
             feat_dim: f,
             classes: c,
-        });
+        })
     }
-    if cur.pos != body.len() {
-        return Err(Error::Dataset("store has trailing bytes".into()));
+
+    /// Metadata-only streaming: yield the next video's `(id, len)` and
+    /// hash past its payload without decoding or allocating it — the hot
+    /// path when feeding the [`crate::ingest`] service, which only needs
+    /// placements. Footer/CRC verification is identical to full
+    /// iteration; `None` means the footer verified.
+    pub fn next_meta(&mut self) -> Option<Result<VideoMeta>> {
+        if self.failed || self.verified {
+            return None;
+        }
+        if self.yielded == self.total {
+            return match self.verify_footer() {
+                Ok(()) => None,
+                Err(e) => {
+                    self.failed = true;
+                    Some(Err(e))
+                }
+            };
+        }
+        let meta = self.record_header().and_then(|(id, len, nf, nl)| {
+            self.skip_tracked(4 * nf)?;
+            self.skip_tracked(4 * nl)?;
+            self.yielded += 1;
+            Ok(VideoMeta {
+                id,
+                len: len as u32,
+            })
+        });
+        match meta {
+            Ok(m) => Some(Ok(m)),
+            Err(e) => {
+                self.failed = true;
+                Some(Err(e))
+            }
+        }
+    }
+
+    /// After the last video: read the footer, compare CRCs, reject
+    /// trailing bytes.
+    fn verify_footer(&mut self) -> Result<()> {
+        let mut footer = [0u8; 4];
+        self.r.read_exact(&mut footer).map_err(|e| {
+            Error::Dataset(format!(
+                "{}: store truncated at byte offset {} (missing CRC \
+                 footer): {e}",
+                self.src, self.offset
+            ))
+        })?;
+        let want = u32::from_le_bytes(footer);
+        let got = self.hasher.finalize();
+        if want != got {
+            return Err(Error::Dataset(format!(
+                "{}: CRC mismatch at byte offset {} (stored {want:#010x}, \
+                 computed {got:#010x})",
+                self.src, self.offset
+            )));
+        }
+        self.offset += 4;
+        let mut probe = [0u8; 1];
+        match self.r.read(&mut probe) {
+            Ok(0) => {}
+            Ok(_) => {
+                return Err(Error::Dataset(format!(
+                    "{}: store has trailing bytes after the CRC footer \
+                     (offset {})",
+                    self.src, self.offset
+                )));
+            }
+            Err(e) => return Err(Error::io(&self.src, e)),
+        }
+        self.verified = true;
+        Ok(())
+    }
+}
+
+impl<R: Read> Iterator for StoreReader<R> {
+    type Item = Result<VideoData>;
+
+    fn next(&mut self) -> Option<Result<VideoData>> {
+        if self.failed || self.verified {
+            return None;
+        }
+        if self.yielded == self.total {
+            return match self.verify_footer() {
+                Ok(()) => None,
+                Err(e) => {
+                    self.failed = true;
+                    Some(Err(e))
+                }
+            };
+        }
+        match self.next_video() {
+            Ok(v) => Some(Ok(v)),
+            Err(e) => {
+                self.failed = true;
+                Some(Err(e))
+            }
+        }
+    }
+}
+
+/// Read an entire store file, verifying the CRC footer. Convenience
+/// wrapper over [`StoreReader`] for callers that want the whole shard in
+/// memory.
+pub fn read_store(path: &Path) -> Result<(u64, Vec<VideoData>)> {
+    let mut r = StoreReader::open(path)?;
+    let seed = r.seed();
+    let mut videos = Vec::with_capacity(r.total_videos());
+    for v in &mut r {
+        videos.push(v?);
     }
     Ok((seed, videos))
-}
-
-struct Cursor<'a> {
-    buf: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Cursor<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
-            return Err(Error::Dataset("store truncated".into()));
-        }
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
-        Ok(s)
-    }
-
-    fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-
-    fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-
-    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
-        let raw = self.take(4 * n)?;
-        Ok(raw
-            .chunks_exact(4)
-            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
-            .collect())
-    }
 }
 
 #[cfg(test)]
@@ -273,6 +517,155 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let err = read_store(&path).unwrap_err().to_string();
         assert!(err.contains("CRC"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn streaming_reader_yields_videos_then_verifies() {
+        let cfg = tiny_config();
+        let spec = GeneratorSpec::new(&cfg, 9);
+        let vids: Vec<_> = (0..5)
+            .map(|i| spec.materialize(VideoMeta { id: i, len: 2 + i }))
+            .collect();
+        let path = tmpfile("stream.blds");
+        let mut w = StoreWriter::create(&path, 9, (4, 12, 10), 5).unwrap();
+        for v in &vids {
+            w.append(v).unwrap();
+        }
+        w.finish().unwrap();
+        let mut r = StoreReader::open(&path).unwrap();
+        assert_eq!(r.seed(), 9);
+        assert_eq!(r.geometry(), (4, 12, 10));
+        assert_eq!(r.total_videos(), 5);
+        let mut got = 0usize;
+        for (i, v) in (&mut r).enumerate() {
+            let v = v.unwrap();
+            assert_eq!(v.id, vids[i].id);
+            assert_eq!(v.feats, vids[i].feats);
+            got += 1;
+        }
+        assert_eq!(got, 5);
+        assert_eq!(r.remaining(), 0);
+        // Iterator is fused after verification.
+        assert!(r.next().is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn metadata_only_streaming_matches_and_still_verifies_crc() {
+        let cfg = tiny_config();
+        let spec = GeneratorSpec::new(&cfg, 7);
+        let vids: Vec<_> = (0..4)
+            .map(|i| spec.materialize(VideoMeta { id: 10 + i, len: 3 + i }))
+            .collect();
+        let path = tmpfile("meta.blds");
+        let mut w = StoreWriter::create(&path, 7, (4, 12, 10), 4).unwrap();
+        for v in &vids {
+            w.append(v).unwrap();
+        }
+        w.finish().unwrap();
+        let mut r = StoreReader::open(&path).unwrap();
+        let mut metas = Vec::new();
+        while let Some(m) = r.next_meta() {
+            metas.push(m.unwrap());
+        }
+        assert_eq!(metas.len(), 4);
+        for (m, v) in metas.iter().zip(&vids) {
+            assert_eq!(m.id, v.id);
+            assert_eq!(m.len as usize, v.len);
+        }
+        // The payload was hashed even though it was never decoded: a
+        // flipped payload byte still fails at the footer.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let mut r = StoreReader::open(&path).unwrap();
+        let mut err = None;
+        while let Some(m) = r.next_meta() {
+            if let Err(e) = m {
+                err = Some(e);
+                break;
+            }
+        }
+        let err = err.expect("corruption must surface").to_string();
+        assert!(err.contains("CRC mismatch"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_error_reports_offset_and_both_crcs() {
+        let cfg = tiny_config();
+        let spec = GeneratorSpec::new(&cfg, 5);
+        let v = spec.materialize(VideoMeta { id: 0, len: 4 });
+        let path = tmpfile("offsets.blds");
+        let mut w = StoreWriter::create(&path, 5, (4, 12, 10), 1).unwrap();
+        w.append(&v).unwrap();
+        w.finish().unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_store(&path).unwrap_err().to_string();
+        assert!(err.contains("CRC mismatch"), "{err}");
+        assert!(err.contains("byte offset"), "{err}");
+        assert!(err.contains("stored 0x"), "{err}");
+        assert!(err.contains("computed 0x"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncation_error_reports_offset() {
+        let cfg = tiny_config();
+        let spec = GeneratorSpec::new(&cfg, 5);
+        let v = spec.materialize(VideoMeta { id: 0, len: 4 });
+        let path = tmpfile("trunc.blds");
+        let mut w = StoreWriter::create(&path, 5, (4, 12, 10), 1).unwrap();
+        w.append(&v).unwrap();
+        w.finish().unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let err = read_store(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        assert!(err.contains("byte offset"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_len_field_rejected_without_huge_alloc() {
+        let cfg = tiny_config();
+        let spec = GeneratorSpec::new(&cfg, 5);
+        let v = spec.materialize(VideoMeta { id: 0, len: 4 });
+        let path = tmpfile("badlen.blds");
+        let mut w = StoreWriter::create(&path, 5, (4, 12, 10), 1).unwrap();
+        w.append(&v).unwrap();
+        w.finish().unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // The video's len field sits right after magic+header+id.
+        let len_at = 4 + 28 + 4;
+        bytes[len_at..len_at + 4]
+            .copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_store(&path).unwrap_err().to_string();
+        assert!(err.contains("bytes remain"), "{err}");
+        assert!(err.contains("byte offset"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let cfg = tiny_config();
+        let spec = GeneratorSpec::new(&cfg, 5);
+        let v = spec.materialize(VideoMeta { id: 0, len: 4 });
+        let path = tmpfile("trail.blds");
+        let mut w = StoreWriter::create(&path, 5, (4, 12, 10), 1).unwrap();
+        w.append(&v).unwrap();
+        w.finish().unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.push(0xAB);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_store(&path).unwrap_err().to_string();
+        assert!(err.contains("trailing bytes"), "{err}");
         std::fs::remove_file(&path).ok();
     }
 

@@ -1,8 +1,10 @@
 //! Crate-wide error type.
 //!
 //! Every subsystem reports through [`Error`]; the CLI renders them with
-//! their full context chain. `anyhow` is deliberately *not* used in the
-//! library API so downstream users get a typed error surface.
+//! their full context chain. `anyhow`/`thiserror` are deliberately *not*
+//! used (this environment builds fully offline), so the `Display` and
+//! `source` impls are written by hand and downstream users get a typed
+//! error surface.
 
 use std::fmt;
 
@@ -10,14 +12,12 @@ use std::fmt;
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Typed error for every bload subsystem.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration file / CLI argument problems.
-    #[error("config error: {0}")]
     Config(String),
 
     /// TOML-subset / JSON parse errors with location info.
-    #[error("parse error at {file}:{line}:{col}: {msg}")]
     Parse {
         file: String,
         line: usize,
@@ -26,28 +26,22 @@ pub enum Error {
     },
 
     /// Dataset generation / store IO problems.
-    #[error("dataset error: {0}")]
     Dataset(String),
 
     /// Packing strategy violations (invalid blocks, reset tables...).
-    #[error("packing error: {0}")]
     Packing(String),
 
     /// Streaming loader failures (channel closed, worker panic...).
-    #[error("loader error: {0}")]
     Loader(String),
 
+    /// Online ingest-service failures (queue shut down, consumer gone...).
+    Ingest(String),
+
     /// DDP simulation failures; includes detected deadlocks.
-    #[error("ddp error: {0}")]
     Ddp(String),
 
     /// A synchronization barrier timed out — the condition the paper's
     /// Fig. 2 describes (a rank exhausted its batch early).
-    #[error(
-        "ddp deadlock detected: {waiting} rank(s) stalled at iteration \
-         {iteration} waiting on barrier '{barrier}' for {waited_ms} ms \
-         (ranks still running: {running:?})"
-    )]
     Deadlock {
         barrier: String,
         iteration: u64,
@@ -57,14 +51,9 @@ pub enum Error {
     },
 
     /// PJRT runtime failures (artifact load, compile, execute, shape).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Shape/type mismatch when feeding an artifact.
-    #[error(
-        "shape mismatch for {artifact} input #{index} ({name}): \
-         expected {expected:?}, got {got:?}"
-    )]
     Shape {
         artifact: String,
         index: usize,
@@ -74,20 +63,70 @@ pub enum Error {
     },
 
     /// Training loop errors (NaN loss, checkpoint IO...).
-    #[error("train error: {0}")]
     Train(String),
 
     /// Underlying XLA/PJRT error.
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// IO with path context.
-    #[error("io error on {path}: {source}")]
     Io {
         path: String,
-        #[source]
         source: std::io::Error,
     },
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Parse { file, line, col, msg } => {
+                write!(f, "parse error at {file}:{line}:{col}: {msg}")
+            }
+            Error::Dataset(m) => write!(f, "dataset error: {m}"),
+            Error::Packing(m) => write!(f, "packing error: {m}"),
+            Error::Loader(m) => write!(f, "loader error: {m}"),
+            Error::Ingest(m) => write!(f, "ingest error: {m}"),
+            Error::Ddp(m) => write!(f, "ddp error: {m}"),
+            Error::Deadlock {
+                barrier,
+                iteration,
+                waiting,
+                running,
+                waited_ms,
+            } => write!(
+                f,
+                "ddp deadlock detected: {waiting} rank(s) stalled at \
+                 iteration {iteration} waiting on barrier '{barrier}' for \
+                 {waited_ms} ms (ranks still running: {running:?})"
+            ),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Shape {
+                artifact,
+                index,
+                name,
+                expected,
+                got,
+            } => write!(
+                f,
+                "shape mismatch for {artifact} input #{index} ({name}): \
+                 expected {expected:?}, got {got:?}"
+            ),
+            Error::Train(m) => write!(f, "train error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Io { path, source } => {
+                write!(f, "io error on {path}: {source}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl Error {
@@ -132,6 +171,7 @@ mod tests {
             std::io::Error::new(std::io::ErrorKind::NotFound, "nope"),
         );
         assert!(e.to_string().contains("/tmp/x"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 
     #[test]
@@ -145,5 +185,11 @@ mod tests {
         };
         assert!(e.to_string().contains("grad_step"));
         assert!(e.to_string().contains("feats"));
+    }
+
+    #[test]
+    fn ingest_error_prefixed() {
+        let e = Error::Ingest("queue closed".into());
+        assert_eq!(e.to_string(), "ingest error: queue closed");
     }
 }

@@ -1,0 +1,369 @@
+//! Streaming-ingest scenario: the online packing service end-to-end,
+//! compared against offline BLoad on the same split.
+//!
+//! Drives the full new-subsystem pipeline —
+//!
+//! ```text
+//! producers ─► bounded queue ─► OnlinePacker ─► per-rank round-robin
+//!     rank 0 ─► Prefetcher::spawn_stream ─► DeviceBatches (timed)
+//!     rank 1.. ─► collected
+//! ```
+//!
+//! — then checks every invariant the paper's offline packer guarantees:
+//! stream-validated whole-video placement, per-rank block equality, and
+//! deadlock-freedom of the implied DDP schedule through the *threaded*
+//! [`crate::ddp::sim`] barrier engine (not a closed-form prediction).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::{ExperimentConfig, StrategyName};
+use crate::dataset::synthetic::generate;
+use crate::dataset::VideoMeta;
+use crate::ddp::sim;
+use crate::error::{Error, Result};
+use crate::ingest::{self, IngestConfig};
+use crate::loader::Prefetcher;
+use crate::packing::validate::StreamValidator;
+use crate::packing::{pack, Block};
+use crate::util::humanize::{commas, rate};
+use crate::util::Rng;
+
+/// Scenario knobs (defaults match `bload ingest` with no flags).
+#[derive(Debug, Clone)]
+pub struct StreamingOptions {
+    /// Dataset scale factor over Action-Genome geometry.
+    pub scale: f64,
+    pub seed: u64,
+    /// Online window watermark `W`.
+    pub window: usize,
+    /// Latency flush in ticks (0 = off).
+    pub max_latency: usize,
+    /// Bounded ingest-queue capacity.
+    pub queue_cap: usize,
+    pub ranks: usize,
+    /// Blocks per device batch on the measured rank.
+    pub batch: usize,
+    /// Prefetcher worker threads on the measured rank.
+    pub workers: usize,
+    /// Concurrent producer threads feeding the queue.
+    pub producers: usize,
+}
+
+impl Default for StreamingOptions {
+    fn default() -> Self {
+        StreamingOptions {
+            scale: 0.05,
+            seed: 0,
+            window: 64,
+            max_latency: 0,
+            queue_cap: 256,
+            ranks: 2,
+            batch: 2,
+            workers: 2,
+            producers: 2,
+        }
+    }
+}
+
+/// Everything the scenario measured.
+#[derive(Debug, Clone)]
+pub struct StreamingReport {
+    pub videos: usize,
+    pub frames: usize,
+    pub online_blocks: usize,
+    pub online_padding: usize,
+    pub online_slots: usize,
+    pub offline_blocks: usize,
+    pub offline_padding: usize,
+    pub offline_slots: usize,
+    pub blocks_per_rank: usize,
+    pub dropped_blocks: usize,
+    pub dropped_frames: usize,
+    pub flush_pool_full: usize,
+    pub flush_latency: usize,
+    pub flush_eos: usize,
+    /// Device batches delivered on rank 0.
+    pub steps_rank0: usize,
+    /// Real frames materialized on rank 0.
+    pub frames_streamed: usize,
+    /// Ingest → blocks → device batches wall time (overlapped).
+    pub wall_s: f64,
+    /// The implied DDP schedule completed on the threaded barrier engine.
+    pub ddp_completed: bool,
+}
+
+impl StreamingReport {
+    pub fn online_ratio(&self) -> f64 {
+        ratio(self.online_padding, self.online_slots)
+    }
+
+    pub fn offline_ratio(&self) -> f64 {
+        ratio(self.offline_padding, self.offline_slots)
+    }
+
+    /// Online padding ratio as a multiple of offline's (1.0 = parity).
+    pub fn ratio_factor(&self) -> f64 {
+        if self.offline_ratio() == 0.0 {
+            if self.online_ratio() == 0.0 {
+                1.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            self.online_ratio() / self.offline_ratio()
+        }
+    }
+}
+
+fn ratio(padding: usize, slots: usize) -> f64 {
+    if slots == 0 {
+        0.0
+    } else {
+        padding as f64 / slots as f64
+    }
+}
+
+/// Run the scenario.
+pub fn run(o: &StreamingOptions) -> Result<StreamingReport> {
+    if o.ranks == 0 || o.batch == 0 || o.workers == 0 || o.producers == 0 {
+        return Err(Error::Config(
+            "streaming: ranks, batch, workers and producers must be >= 1"
+                .into(),
+        ));
+    }
+    let cfg = ExperimentConfig::default_config();
+    let t_max = cfg.packing.t_max;
+    let ds = generate(&cfg.dataset.scaled(o.scale), o.seed);
+    let split = Arc::new(ds.train);
+    let frames = split.total_frames();
+
+    // Offline baseline: the paper's packer over the materialized epoch.
+    let offline = pack(StrategyName::BLoad, &split, &cfg.packing, o.seed)?;
+
+    // Online service.
+    let mut icfg = IngestConfig::new(t_max);
+    icfg.online.window = o.window;
+    icfg.online.max_latency = o.max_latency;
+    icfg.queue_cap = o.queue_cap;
+    icfg.ranks = o.ranks;
+    icfg.seed = o.seed;
+    let (mut svc, producer) = ingest::start(icfg)?;
+
+    // Producers: a shuffled arrival order dealt to P concurrent feeders
+    // (their interleaving over the bounded queue is real concurrency).
+    let mut order: Vec<VideoMeta> = split.videos.clone();
+    Rng::new(o.seed ^ 0x57_BEA4).shuffle(&mut order);
+    let mut feeders = Vec::new();
+    for p in 0..o.producers {
+        let metas: Vec<VideoMeta> =
+            order.iter().skip(p).step_by(o.producers).copied().collect();
+        let h = producer.clone();
+        feeders.push(std::thread::spawn(move || {
+            for m in metas {
+                if h.send(m).is_err() {
+                    return;
+                }
+            }
+        }));
+    }
+    drop(producer);
+
+    let t0 = Instant::now();
+    // Rank 0 tees into the streaming prefetcher so device batches
+    // materialize while upstream is still packing; other ranks collect.
+    let mut collectors = Vec::new();
+    let mut pf = None;
+    for r in 0..o.ranks {
+        let rx = svc.take_output(r).expect("outputs taken once");
+        if r == 0 {
+            let (brx, tee) =
+                ingest::tee_blocks(rx, o.queue_cap.max(4));
+            collectors.push(tee);
+            pf = Some(Prefetcher::spawn_stream(
+                Arc::clone(&split),
+                brx,
+                t_max,
+                o.batch,
+                o.workers,
+                4,
+            ));
+        } else {
+            collectors.push(std::thread::spawn(move || {
+                rx.iter().collect::<Vec<Block>>()
+            }));
+        }
+    }
+    let mut pf = pf.expect("rank 0 always exists");
+    let mut steps_rank0 = 0usize;
+    let mut frames_streamed = 0usize;
+    while let Some(b) = pf.next() {
+        let b = b?;
+        steps_rank0 += 1;
+        frames_streamed += b.real_frames;
+    }
+    pf.shutdown();
+    for f in feeders {
+        f.join()
+            .map_err(|_| Error::Ingest("producer thread panicked".into()))?;
+    }
+    let per_rank: Vec<Vec<Block>> = collectors
+        .into_iter()
+        .map(|c| {
+            c.join().map_err(|_| {
+                Error::Ingest("collector thread panicked".into())
+            })
+        })
+        .collect::<Result<_>>()?;
+    let stats = svc.join()?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // Stream invariants over every delivered block; only whole videos
+    // inside the dropped partial round may be missing.
+    let mut sv = StreamValidator::new(&split, t_max);
+    for b in per_rank.iter().flatten() {
+        sv.check_block(b)?;
+    }
+    let summary = sv.finish_partial()?;
+    if summary.frames_unplaced != stats.dropped_frames {
+        return Err(Error::Ingest(format!(
+            "coverage mismatch: {} frames unplaced but {} dropped",
+            summary.frames_unplaced, stats.dropped_frames
+        )));
+    }
+    let counts: Vec<usize> = per_rank.iter().map(Vec::len).collect();
+    if counts.iter().any(|&c| c != stats.blocks_per_rank()) {
+        return Err(Error::Ingest(format!(
+            "unequal per-rank block counts: {counts:?}"
+        )));
+    }
+
+    // Deadlock-freedom of the implied schedule, on the real threaded
+    // barrier engine (equal blocks × equal block length ⇒ equal
+    // all-reduce counts).
+    let iters =
+        vec![(stats.blocks_per_rank() * t_max) as u64; o.ranks];
+    let sim_report = sim::run(&iters, Duration::from_millis(2000));
+
+    Ok(StreamingReport {
+        videos: split.videos.len(),
+        frames,
+        online_blocks: stats.packing.blocks,
+        online_padding: stats.packing.padding,
+        online_slots: stats.packing.total_slots,
+        offline_blocks: offline.stats.blocks,
+        offline_padding: offline.stats.padding,
+        offline_slots: offline.stats.total_slots,
+        blocks_per_rank: stats.blocks_per_rank(),
+        dropped_blocks: stats.dropped_blocks,
+        dropped_frames: stats.dropped_frames,
+        flush_pool_full: stats.packing.flush_pool_full,
+        flush_latency: stats.packing.flush_latency,
+        flush_eos: stats.packing.flush_eos,
+        steps_rank0,
+        frames_streamed,
+        wall_s,
+        ddp_completed: sim_report.completed,
+    })
+}
+
+/// Human-readable report.
+pub fn render(r: &StreamingReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "streaming ingest: {} videos / {} frames\n",
+        commas(r.videos as u64),
+        commas(r.frames as u64)
+    ));
+    out.push_str(&format!(
+        "  online  (windowed): {} blocks | padding {} / {} slots \
+         ({:.2}%)\n",
+        commas(r.online_blocks as u64),
+        commas(r.online_padding as u64),
+        commas(r.online_slots as u64),
+        100.0 * r.online_ratio()
+    ));
+    out.push_str(&format!(
+        "  offline (BLoad)   : {} blocks | padding {} / {} slots \
+         ({:.2}%)\n",
+        commas(r.offline_blocks as u64),
+        commas(r.offline_padding as u64),
+        commas(r.offline_slots as u64),
+        100.0 * r.offline_ratio()
+    ));
+    out.push_str(&format!(
+        "  online/offline padding-ratio factor: {:.2}x\n",
+        r.ratio_factor()
+    ));
+    out.push_str(&format!(
+        "  flushes: {} pool-full, {} latency, {} end-of-stream\n",
+        r.flush_pool_full, r.flush_latency, r.flush_eos
+    ));
+    out.push_str(&format!(
+        "  sharding: {} blocks/rank, {} dropped ({} frames) for equal \
+         steps\n",
+        r.blocks_per_rank, r.dropped_blocks, r.dropped_frames
+    ));
+    out.push_str(&format!(
+        "  rank 0: {} device batches, {} frames in {:.2}s ({})\n",
+        r.steps_rank0,
+        commas(r.frames_streamed as u64),
+        r.wall_s,
+        rate(r.frames_streamed as f64, r.wall_s)
+    ));
+    out.push_str(&format!(
+        "  ddp schedule on threaded barrier engine: {}\n",
+        if r.ddp_completed { "completed" } else { "DEADLOCKED" }
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_validates_and_completes() {
+        let opts = StreamingOptions {
+            scale: 0.02,
+            ranks: 2,
+            ..Default::default()
+        };
+        let r = run(&opts).unwrap();
+        assert!(r.ddp_completed);
+        assert!(r.steps_rank0 > 0);
+        assert!(r.frames_streamed > 0);
+        assert!(r.dropped_blocks < opts.ranks);
+        // Structural bound: online padding ratio ≤ naive's.
+        let naive_slots = r.videos * 94;
+        let naive_padding = naive_slots - r.frames;
+        assert!(
+            r.online_padding * naive_slots
+                <= naive_padding * r.online_slots
+        );
+        let rendered = render(&r);
+        assert!(rendered.contains("completed"), "{rendered}");
+    }
+
+    #[test]
+    fn rejects_zero_knobs() {
+        let opts = StreamingOptions {
+            ranks: 0,
+            ..Default::default()
+        };
+        assert!(run(&opts).is_err());
+    }
+
+    #[test]
+    fn online_tracks_offline_at_default_window() {
+        // The acceptance bar for the example: within 2x of offline BLoad
+        // on the default synthetic distribution.
+        let r = run(&StreamingOptions::default()).unwrap();
+        assert!(
+            r.ratio_factor() <= 2.0,
+            "online {:.4} vs offline {:.4}",
+            r.online_ratio(),
+            r.offline_ratio()
+        );
+    }
+}

@@ -1,0 +1,43 @@
+//! Online packing service — streaming BLoad over a bounded ingest queue.
+//!
+//! The offline pipeline packs an epoch only after the whole split is
+//! known. This subsystem serves the production streaming scenario instead:
+//! sequences arrive continuously from many producers, get packed into
+//! uniform blocks *incrementally* by the windowed
+//! [`OnlinePacker`](crate::packing::online::OnlinePacker), and finished
+//! blocks are dealt round-robin to every DDP rank — all without ever
+//! holding the dataset in memory.
+//!
+//! ```text
+//!  Producer ─┐   bounded MPSC queue     packer thread          per-rank
+//!  Producer ─┼──►(backpressure when ───► OnlinePacker ──► round-robin ──► rank 0
+//!  Producer ─┘   the packer lags)        (windowed BLoad)    full rounds ► rank 1
+//!                                                              only      ► ...
+//! ```
+//!
+//! Design points:
+//!
+//! * **Backpressure** — the ingest queue is a bounded `sync_channel`;
+//!   [`Producer::send`] blocks when the packer lags, so memory stays
+//!   O(queue + window) regardless of stream length.
+//! * **Equal step counts** — blocks are distributed to ranks in complete
+//!   rounds of `ranks` blocks; a partial round at end-of-stream is dropped
+//!   (and accounted), so every rank sees exactly the same number of
+//!   equally-sized blocks and the Fig 2 all-reduce deadlock cannot occur
+//!   (checked against [`crate::ddp::sim`] in the streaming harness).
+//! * **Bounded padding** — the packer's pool-full watermark preserves the
+//!   offline close condition (padding < shortest pending sequence), and
+//!   the `max_latency` knob trades padding for block latency.
+//! * **Disk feeds** — [`crate::dataset::store::StoreReader`] streams a
+//!   shard video-by-video; its metadata goes straight into a
+//!   [`Producer`].
+//!
+//! Consumers drain per-rank receivers ([`IngestService::take_output`]) —
+//! e.g. through [`crate::loader::Prefetcher::spawn_stream`], which
+//! materializes device batches from a block stream — then call
+//! [`IngestService::join`] for the final [`IngestStats`].
+
+pub mod service;
+
+pub use service::{start, tee_blocks, IngestConfig, IngestService,
+                  IngestStats, Producer};

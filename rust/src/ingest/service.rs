@@ -1,0 +1,414 @@
+//! The streaming packing service: bounded multi-producer ingest queue →
+//! packer thread ([`OnlinePacker`]) → per-rank bounded block channels.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
+
+use crate::dataset::VideoMeta;
+use crate::error::{Error, Result};
+use crate::packing::online::{OnlineConfig, OnlinePacker, OnlineStats};
+use crate::packing::Block;
+
+/// Service configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct IngestConfig {
+    /// Windowed-packer knobs (block length, window watermark, latency).
+    pub online: OnlineConfig,
+    /// Capacity of the bounded ingest queue (producer backpressure).
+    pub queue_cap: usize,
+    /// DDP ranks receiving round-robin block shards.
+    pub ranks: usize,
+    /// Capacity of each per-rank output channel (consumer backpressure).
+    pub out_cap: usize,
+    /// Seed of the packer's `Random*` draw.
+    pub seed: u64,
+}
+
+impl IngestConfig {
+    /// Defaults: window 64, no latency flush, queue 256, 1 rank, out 32.
+    pub fn new(t_max: usize) -> IngestConfig {
+        IngestConfig {
+            online: OnlineConfig::new(t_max),
+            queue_cap: 256,
+            ranks: 1,
+            out_cap: 32,
+            seed: 0,
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.ranks == 0 {
+            return Err(Error::Ingest("ranks must be >= 1".into()));
+        }
+        if self.queue_cap == 0 || self.out_cap == 0 {
+            return Err(Error::Ingest(
+                "queue_cap and out_cap must be >= 1".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Final accounting of one ingest session.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct IngestStats {
+    /// Packer-side counters (received/placed/blocks/padding/flushes).
+    pub packing: OnlineStats,
+    /// Blocks delivered to each rank (equal across ranks by
+    /// construction).
+    pub per_rank_blocks: Vec<usize>,
+    /// Blocks of the final partial round dropped to keep rank counts
+    /// equal (always `< ranks`).
+    pub dropped_blocks: usize,
+    /// Real frames inside the dropped blocks.
+    pub dropped_frames: usize,
+}
+
+impl IngestStats {
+    /// Blocks each rank received (0 when no full round completed).
+    pub fn blocks_per_rank(&self) -> usize {
+        self.per_rank_blocks.first().copied().unwrap_or(0)
+    }
+}
+
+/// Cloneable producer handle feeding the bounded ingest queue.
+#[derive(Debug, Clone)]
+pub struct Producer {
+    tx: SyncSender<VideoMeta>,
+}
+
+impl Producer {
+    /// Enqueue one sequence's metadata. Blocks while the queue is full
+    /// (backpressure); errors once the service has stopped.
+    pub fn send(&self, meta: VideoMeta) -> Result<()> {
+        self.tx.send(meta).map_err(|_| {
+            Error::Ingest(
+                "ingest queue is closed (service stopped)".into(),
+            )
+        })
+    }
+}
+
+/// Handle to a running ingest service.
+///
+/// Drop all [`Producer`] clones to signal end-of-stream; drain every
+/// rank's output (the packer thread blocks on full output channels), then
+/// [`join`](IngestService::join) for the final stats.
+pub struct IngestService {
+    outputs: Vec<Option<Receiver<Block>>>,
+    handle: JoinHandle<Result<IngestStats>>,
+}
+
+impl IngestService {
+    /// Take rank `rank`'s block receiver (once).
+    pub fn take_output(&mut self, rank: usize) -> Option<Receiver<Block>> {
+        self.outputs.get_mut(rank).and_then(Option::take)
+    }
+
+    /// Wait for the packer thread and return the session stats.
+    pub fn join(self) -> Result<IngestStats> {
+        // Receivers never taken are dropped here, so the packer cannot
+        // block forever sending to a rank nobody consumes.
+        drop(self.outputs);
+        self.handle
+            .join()
+            .map_err(|_| Error::Ingest("packer thread panicked".into()))?
+    }
+}
+
+/// Tee one rank's block stream: every block is forwarded into a bounded
+/// channel (for a live consumer such as
+/// [`crate::loader::Prefetcher::spawn_stream`]) while a clone is kept for
+/// end-of-stream validation. Returns the forward receiver and the join
+/// handle yielding the kept blocks. A dropped forward consumer stops the
+/// forwarding silently; collection continues either way.
+pub fn tee_blocks(rx: Receiver<Block>, cap: usize)
+                  -> (Receiver<Block>, JoinHandle<Vec<Block>>) {
+    let (tx, out) = sync_channel(cap);
+    let handle = std::thread::spawn(move || {
+        let mut kept = Vec::new();
+        for b in rx {
+            let _ = tx.send(b.clone());
+            kept.push(b);
+        }
+        kept
+    });
+    (out, handle)
+}
+
+/// Start the service: spawns the packer thread and returns the service
+/// handle plus one [`Producer`] (clone it for more producers).
+pub fn start(cfg: IngestConfig) -> Result<(IngestService, Producer)> {
+    cfg.validate()?;
+    // Constructing the packer here surfaces config errors synchronously.
+    let packer = OnlinePacker::new(cfg.online, cfg.seed ^ 0x1A6E57)?;
+    let (tx, rx) = sync_channel::<VideoMeta>(cfg.queue_cap);
+    let mut out_txs = Vec::with_capacity(cfg.ranks);
+    let mut outputs = Vec::with_capacity(cfg.ranks);
+    for _ in 0..cfg.ranks {
+        let (btx, brx) = sync_channel::<Block>(cfg.out_cap);
+        out_txs.push(btx);
+        outputs.push(Some(brx));
+    }
+    let handle =
+        std::thread::spawn(move || pack_loop(cfg, packer, rx, out_txs));
+    Ok((IngestService { outputs, handle }, Producer { tx }))
+}
+
+/// The packer thread: drain the ingest queue into the online packer and
+/// deal finished blocks to ranks in complete rounds.
+fn pack_loop(cfg: IngestConfig, mut packer: OnlinePacker,
+             rx: Receiver<VideoMeta>, out_txs: Vec<SyncSender<Block>>)
+             -> Result<IngestStats> {
+    let ranks = cfg.ranks;
+    let mut round: Vec<Block> = Vec::with_capacity(ranks);
+    let mut per_rank_blocks = vec![0usize; ranks];
+
+    let mut dispatch = |blocks: Vec<Block>,
+                        round: &mut Vec<Block>|
+     -> Result<()> {
+        for b in blocks {
+            round.push(b);
+            if round.len() == ranks {
+                for (r, b) in round.drain(..).enumerate() {
+                    out_txs[r].send(b).map_err(|_| {
+                        Error::Ingest(format!(
+                            "rank {r} output disconnected mid-stream"
+                        ))
+                    })?;
+                    per_rank_blocks[r] += 1;
+                }
+            }
+        }
+        Ok(())
+    };
+
+    // One tick per arrival: the latency clock advances with stream
+    // progress, so `max_latency` bounds how many arrivals an open block
+    // may wait before flushing.
+    while let Ok(meta) = rx.recv() {
+        let emitted = packer.push(meta.id, meta.len as usize)?;
+        dispatch(emitted, &mut round)?;
+        let emitted = packer.tick();
+        dispatch(emitted, &mut round)?;
+    }
+
+    // All producers dropped: drain the pool.
+    let (tail, packing) = packer.finish();
+    dispatch(tail, &mut round)?;
+
+    // A partial round cannot be delivered without skewing per-rank step
+    // counts; drop it and account for the loss.
+    let dropped_blocks = round.len();
+    let dropped_frames = round.iter().map(|b| b.used()).sum();
+    drop(round);
+
+    Ok(IngestStats {
+        packing,
+        per_rank_blocks,
+        dropped_blocks,
+        dropped_frames,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::dataset::synthetic::generate;
+    use crate::packing::validate::StreamValidator;
+
+    fn small_cfg(ranks: usize) -> IngestConfig {
+        let mut cfg = IngestConfig::new(94);
+        cfg.ranks = ranks;
+        cfg.queue_cap = 8;
+        cfg.out_cap = 4;
+        cfg.online.window = 16;
+        cfg
+    }
+
+    #[test]
+    fn multi_producer_stream_covers_all_but_dropped() {
+        let dcfg = ExperimentConfig::default_config().dataset.scaled(0.02);
+        let ds = generate(&dcfg, 21);
+        let ranks = 3;
+        let (mut svc, producer) = start(small_cfg(ranks)).unwrap();
+
+        // Two producers interleave arbitrarily over the bounded queue.
+        let halves: Vec<Vec<crate::dataset::VideoMeta>> = vec![
+            ds.train.videos.iter().step_by(2).copied().collect(),
+            ds.train.videos.iter().skip(1).step_by(2).copied().collect(),
+        ];
+        let mut feeders = Vec::new();
+        for metas in halves {
+            let p = producer.clone();
+            feeders.push(std::thread::spawn(move || {
+                for m in metas {
+                    p.send(m).unwrap();
+                }
+            }));
+        }
+        drop(producer);
+
+        let mut collectors = Vec::new();
+        for r in 0..ranks {
+            let rx = svc.take_output(r).unwrap();
+            collectors.push(std::thread::spawn(move || {
+                rx.iter().collect::<Vec<Block>>()
+            }));
+        }
+        for f in feeders {
+            f.join().unwrap();
+        }
+        let per_rank: Vec<Vec<Block>> = collectors
+            .into_iter()
+            .map(|c| c.join().unwrap())
+            .collect();
+        let stats = svc.join().unwrap();
+
+        // Equal per-rank counts, matching the stats.
+        let counts: Vec<usize> = per_rank.iter().map(Vec::len).collect();
+        assert!(counts.windows(2).all(|w| w[0] == w[1]), "{counts:?}");
+        assert_eq!(stats.per_rank_blocks, counts);
+        assert!(stats.dropped_blocks < ranks);
+        assert_eq!(
+            stats.packing.blocks,
+            counts[0] * ranks + stats.dropped_blocks
+        );
+
+        // Structural invariants over everything delivered; whole videos
+        // may be missing only because of the dropped partial round.
+        let mut sv = StreamValidator::new(&ds.train, 94);
+        for b in per_rank.iter().flatten() {
+            sv.check_block(b).unwrap();
+        }
+        let summary = sv.finish_partial().unwrap();
+        assert_eq!(summary.frames_unplaced, stats.dropped_frames);
+        assert_eq!(
+            summary.frames_placed + stats.dropped_frames,
+            ds.train.total_frames()
+        );
+    }
+
+    #[test]
+    fn single_rank_strict_coverage() {
+        // ranks=1 never drops a round, so coverage is exact.
+        let dcfg = ExperimentConfig::default_config().dataset.scaled(0.01);
+        let ds = generate(&dcfg, 5);
+        let (mut svc, producer) = start(small_cfg(1)).unwrap();
+        let metas = ds.train.videos.clone();
+        let feeder = std::thread::spawn(move || {
+            for m in metas {
+                producer.send(m).unwrap();
+            }
+        });
+        let rx = svc.take_output(0).unwrap();
+        let blocks: Vec<Block> = rx.iter().collect();
+        feeder.join().unwrap();
+        let stats = svc.join().unwrap();
+        assert_eq!(stats.dropped_blocks, 0);
+        let summary = crate::packing::validate::validate_stream(
+            blocks.iter(),
+            &ds.train,
+            94,
+        )
+        .unwrap();
+        assert_eq!(summary.frames_placed, ds.train.total_frames());
+        assert_eq!(summary.blocks, stats.blocks_per_rank());
+    }
+
+    #[test]
+    fn send_after_shutdown_errors() {
+        let mut cfg = small_cfg(1);
+        cfg.online.max_latency = 1; // every arrival flushes a block
+        let (mut svc, producer) = start(cfg).unwrap();
+        // The consumer never shows up: the first flushed block cannot be
+        // delivered, the service stops, and the queue closes.
+        drop(svc.take_output(0));
+        let _ = producer.send(crate::dataset::VideoMeta { id: 1, len: 3 });
+        let mut saw_err = false;
+        for i in 0..200u32 {
+            if producer
+                .send(crate::dataset::VideoMeta { id: 2 + i, len: 3 })
+                .is_err()
+            {
+                saw_err = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert!(saw_err, "queue never closed after service stop");
+        assert!(svc.join().is_err());
+    }
+
+    #[test]
+    fn oversized_sequence_fails_the_service() {
+        let (svc, producer) = start(small_cfg(1)).unwrap();
+        producer
+            .send(crate::dataset::VideoMeta { id: 1, len: 500 })
+            .unwrap();
+        drop(producer);
+        let err = svc.join().unwrap_err();
+        assert!(err.to_string().contains("exceeds t_max"), "{err}");
+    }
+
+    #[test]
+    fn early_consumer_drop_stops_service_with_error() {
+        let dcfg = ExperimentConfig::default_config().dataset.scaled(0.02);
+        let ds = generate(&dcfg, 8);
+        let mut cfg = small_cfg(1);
+        cfg.out_cap = 1;
+        cfg.online.max_latency = 1; // flush aggressively: many blocks
+        let (mut svc, producer) = start(cfg).unwrap();
+        let rx = svc.take_output(0).unwrap();
+        let feeder = std::thread::spawn(move || {
+            for m in ds.train.videos.iter().copied() {
+                if producer.send(m).is_err() {
+                    return; // service stopped; expected
+                }
+            }
+        });
+        // Take one block, then walk away.
+        let _ = rx.recv();
+        drop(rx);
+        feeder.join().unwrap();
+        let err = svc.join().unwrap_err();
+        assert!(err.to_string().contains("disconnected"), "{err}");
+    }
+
+    #[test]
+    fn tee_forwards_and_keeps_and_survives_dropped_consumer() {
+        let (tx, rx) = sync_channel::<Block>(8);
+        let (fwd, tee) = tee_blocks(rx, 2);
+        let mk = |id: u32| {
+            let mut b = Block::new(5);
+            b.push(id, 0, 3).unwrap();
+            b
+        };
+        tx.send(mk(1)).unwrap();
+        tx.send(mk(2)).unwrap();
+        let first = fwd.recv().unwrap();
+        assert_eq!(first.segments[0].video, 1);
+        // Forward consumer walks away; collection must keep going.
+        drop(fwd);
+        tx.send(mk(3)).unwrap();
+        drop(tx);
+        let kept = tee.join().unwrap();
+        assert_eq!(kept.len(), 3);
+        assert_eq!(kept[2].segments[0].video, 3);
+    }
+
+    #[test]
+    fn bad_config_rejected() {
+        assert!(start(IngestConfig { ranks: 0, ..IngestConfig::new(94) })
+            .is_err());
+        assert!(start(IngestConfig {
+            queue_cap: 0,
+            ..IngestConfig::new(94)
+        })
+        .is_err());
+        let mut cfg = IngestConfig::new(94);
+        cfg.online.window = 0;
+        assert!(start(cfg).is_err());
+    }
+}

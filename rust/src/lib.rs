@@ -24,6 +24,7 @@ pub mod ddp;
 pub mod error;
 pub mod eval;
 pub mod harness;
+pub mod ingest;
 pub mod jsonio;
 pub mod loader;
 pub mod logging;

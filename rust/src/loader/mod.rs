@@ -8,6 +8,11 @@
 //!     materialize (worker threads, bounded channel) ──► DeviceBatch
 //! ```
 //!
+//! Streaming mode ([`Prefetcher::spawn_stream`]) replaces the first three
+//! stages with a live `Receiver<Block>` from the [`crate::ingest`]
+//! service; batches materialize in arrival order while upstream is still
+//! packing.
+//!
 //! A [`DeviceBatch`] is exactly what one rank feeds its `grad_step`
 //! executable: `feats [B,T,O,F]`, `labels [B,T,O,C]`, `frame_mask [B,T]`,
 //! `seg_ids [B,T]` (as f32 for the HLO interface), plus block provenance

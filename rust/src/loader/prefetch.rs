@@ -6,17 +6,27 @@
 //! are re-ordered to the schedule order before delivery so training is
 //! deterministic regardless of worker timing.
 //!
+//! Two sources feed a prefetcher:
+//!
+//! * [`Prefetcher::spawn`] — a finished [`PackedDataset`] plus an
+//!   [`EpochPlan`] (the offline path);
+//! * [`Prefetcher::spawn_stream`] — a live `Receiver<Block>` from the
+//!   [`crate::ingest`] service: batches materialize while upstream is
+//!   still packing, and the epoch length is unknown until the stream
+//!   ends.
+//!
 //! Built on `std::sync::mpsc` + threads (no tokio offline); the channel
 //! bound is implemented with a semaphore-style token pool.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::dataset::Split;
 use crate::error::{Error, Result};
-use crate::packing::PackedDataset;
+use crate::packing::{Block, PackedDataset};
 
 use super::batch::{materialize_batch_cached, DeviceBatch};
 use super::epoch::EpochPlan;
@@ -29,6 +39,11 @@ pub struct Prefetcher {
     pending: HashMap<usize, Result<DeviceBatch>>,
     next_step: usize,
     total_steps: usize,
+    /// `Some` in stream mode: steps claimed by workers so far. Stream
+    /// mode's step count is open-ended, so a closed channel means
+    /// end-of-stream — unless fewer steps were delivered than claimed,
+    /// which means a worker died.
+    claimed: Option<Arc<AtomicUsize>>,
 }
 
 impl Prefetcher {
@@ -80,10 +95,78 @@ impl Prefetcher {
             pending: HashMap::new(),
             next_step: 0,
             total_steps,
+            claimed: None,
         }
     }
 
-    /// Next batch in schedule order; `None` when the epoch is done.
+    /// Spawn workers materializing batches straight off a **block
+    /// stream** (e.g. one rank's output of the ingest service).
+    ///
+    /// Blocks are grouped into steps of `batch` in arrival order; the
+    /// final step may be smaller when the stream ends mid-batch. Delivery
+    /// is in step order, `next` returns `None` once the stream is drained.
+    /// `block_ids` of emitted batches number the stream's blocks
+    /// sequentially from 0.
+    pub fn spawn_stream(split: Arc<Split>, blocks: Receiver<Block>,
+                        block_len: usize, batch: usize, workers: usize,
+                        depth: usize) -> Prefetcher {
+        assert!(workers > 0 && depth > 0 && batch > 0);
+        let (tx, rx) = sync_channel(depth);
+        let source = Arc::new(Mutex::new(blocks));
+        let next_id = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let split = Arc::clone(&split);
+            let source = Arc::clone(&source);
+            let next_id = Arc::clone(&next_id);
+            handles.push(std::thread::spawn(move || {
+                let mut cache = super::batch::VideoCache::new(64);
+                loop {
+                    // Pull one step's blocks and claim its index under
+                    // the same lock, so step numbering matches arrival
+                    // order even with many workers.
+                    let (step, chunk) = {
+                        let source =
+                            source.lock().expect("block source lock");
+                        let mut chunk = Vec::with_capacity(batch);
+                        while chunk.len() < batch {
+                            match source.recv() {
+                                Ok(b) => chunk.push(b),
+                                Err(_) => break, // stream ended
+                            }
+                        }
+                        if chunk.is_empty() {
+                            return;
+                        }
+                        (next_id.fetch_add(1, Ordering::SeqCst), chunk)
+                    };
+                    let base = step * batch;
+                    let refs: Vec<(usize, &Block)> = chunk
+                        .iter()
+                        .enumerate()
+                        .map(|(i, b)| (base + i, b))
+                        .collect();
+                    let out = materialize_batch_cached(
+                        &split, &refs, block_len, &mut cache);
+                    if tx.send((step, out)).is_err() {
+                        return;
+                    }
+                }
+            }));
+        }
+        Prefetcher {
+            rx,
+            workers: handles,
+            pending: HashMap::new(),
+            next_step: 0,
+            total_steps: usize::MAX,
+            claimed: Some(next_id),
+        }
+    }
+
+    /// Next batch in schedule order; `None` when the epoch is done (or,
+    /// in stream mode, when the block stream is drained).
     pub fn next(&mut self) -> Option<Result<DeviceBatch>> {
         if self.next_step >= self.total_steps {
             return None;
@@ -96,6 +179,27 @@ impl Prefetcher {
             match self.rx.recv() {
                 Ok((step, batch)) => {
                     self.pending.insert(step, batch);
+                }
+                Err(_) if self.claimed.is_some() => {
+                    // Stream mode: every worker exited. On a clean
+                    // end-of-stream every claimed step was sent and
+                    // drained, so delivery caught up with the claim
+                    // counter; falling short means a worker died
+                    // mid-step (even on the very last one) and silently
+                    // truncating the epoch would hide it.
+                    let claimed = self
+                        .claimed
+                        .as_ref()
+                        .expect("guarded by match arm")
+                        .load(Ordering::SeqCst);
+                    if self.next_step < claimed {
+                        return Some(Err(Error::Loader(format!(
+                            "stream prefetch worker died: only {} of \
+                             {claimed} claimed step(s) were delivered",
+                            self.next_step
+                        ))));
+                    }
+                    return None;
                 }
                 Err(_) => {
                     // All workers exited without producing our step.
@@ -185,5 +289,81 @@ mod tests {
         let mut pf = Prefetcher::spawn(split, packed, &plan, 2, 1);
         let _first = pf.next();
         pf.shutdown(); // consumer walks away mid-epoch; workers must exit
+    }
+
+    #[test]
+    fn stream_mode_delivers_all_blocks_with_partial_tail() {
+        let (split, packed) = setup();
+        let n_blocks = packed.blocks.len();
+        assert!(n_blocks >= 3, "need a few blocks, got {n_blocks}");
+        let (btx, brx) = std::sync::mpsc::sync_channel(2);
+        let feeder = {
+            let packed = Arc::clone(&packed);
+            std::thread::spawn(move || {
+                for b in &packed.blocks {
+                    if btx.send(b.clone()).is_err() {
+                        return;
+                    }
+                }
+            })
+        };
+        let batch = 2;
+        let mut pf = Prefetcher::spawn_stream(
+            Arc::clone(&split), brx, packed.block_len, batch, 3, 2);
+        let mut frames = 0usize;
+        let mut blocks_seen = 0usize;
+        let mut steps = 0usize;
+        while let Some(b) = pf.next() {
+            let b = b.unwrap();
+            assert!(b.batch <= batch && b.batch > 0);
+            frames += b.real_frames;
+            blocks_seen += b.batch;
+            steps += 1;
+        }
+        feeder.join().unwrap();
+        pf.shutdown();
+        assert_eq!(blocks_seen, n_blocks);
+        assert_eq!(steps, (n_blocks + batch - 1) / batch);
+        let want: usize = packed.blocks.iter().map(|b| b.used()).sum();
+        assert_eq!(frames, want, "every streamed frame delivered");
+    }
+
+    #[test]
+    fn stream_mode_deterministic_content_across_worker_counts() {
+        let (split, packed) = setup();
+        let collect = |workers: usize| {
+            let (btx, brx) = std::sync::mpsc::sync_channel(4);
+            let feeder = {
+                let packed = Arc::clone(&packed);
+                std::thread::spawn(move || {
+                    for b in &packed.blocks {
+                        if btx.send(b.clone()).is_err() {
+                            return;
+                        }
+                    }
+                })
+            };
+            let mut pf = Prefetcher::spawn_stream(
+                Arc::clone(&split), brx, packed.block_len, 2, workers, 3);
+            let mut sums = Vec::new();
+            while let Some(b) = pf.next() {
+                sums.push(b.unwrap().feats.iter().sum::<f32>());
+            }
+            feeder.join().unwrap();
+            pf.shutdown();
+            sums
+        };
+        assert_eq!(collect(1), collect(4));
+    }
+
+    #[test]
+    fn stream_mode_empty_stream_yields_nothing() {
+        let (split, _) = setup();
+        let (btx, brx) =
+            std::sync::mpsc::sync_channel::<crate::packing::Block>(1);
+        drop(btx);
+        let mut pf = Prefetcher::spawn_stream(split, brx, 94, 2, 2, 2);
+        assert!(pf.next().is_none());
+        pf.shutdown();
     }
 }

@@ -37,7 +37,28 @@ pub struct LengthDict {
     total: usize,
 }
 
+impl Default for LengthDict {
+    fn default() -> Self {
+        LengthDict::new()
+    }
+}
+
 impl LengthDict {
+    /// Empty dict — the online packer's sliding candidate pool starts here
+    /// and grows by [`LengthDict::insert`] as sequences arrive.
+    pub fn new() -> LengthDict {
+        LengthDict {
+            buckets: BTreeMap::new(),
+            total: 0,
+        }
+    }
+
+    /// Add one not-yet-packed video to the dict.
+    pub fn insert(&mut self, id: u32, len: usize) {
+        self.buckets.entry(len).or_default().push(id);
+        self.total += 1;
+    }
+
     pub fn from_split(split: &Split) -> LengthDict {
         let mut buckets: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
         for v in &split.videos {
@@ -247,6 +268,29 @@ mod tests {
         assert_eq!(a.blocks, b.blocks);
         let c = pack(&ds.train, 94, &mut Rng::new(5)).unwrap();
         assert_ne!(a.blocks, c.blocks, "different seed, different packing");
+    }
+
+    #[test]
+    fn length_dict_incremental_insert_matches_from_split() {
+        let ds = generate(&tiny_config(), 4);
+        let mut inc = LengthDict::new();
+        for v in &ds.train.videos {
+            inc.insert(v.id, v.len as usize);
+        }
+        let full = LengthDict::from_split(&ds.train);
+        assert_eq!(inc.len(), full.len());
+        assert_eq!(inc.min_len(), full.min_len());
+        // Draining both with the same rng yields the same multiset of ids.
+        let drain = |mut d: LengthDict| {
+            let mut rng = Rng::new(5);
+            let mut ids = Vec::new();
+            while let Some((id, _)) = d.draw_fitting(100, &mut rng) {
+                ids.push(id);
+            }
+            ids.sort_unstable();
+            ids
+        };
+        assert_eq!(drain(inc), drain(full));
     }
 
     #[test]

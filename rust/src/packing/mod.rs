@@ -11,6 +11,13 @@
 //! | `sampling` (chunking)  | [`sampling`] | Fig 4        |
 //! | `mix pad`              | [`mixpad`]   | —            |
 //! | `block_pad` (BLoad)    | [`bload`]    | Fig 5, Fig 7 |
+//! | `online` (streaming)   | [`online`]   | Fig 7 (windowed) |
+//!
+//! `online` is not a Table I column: it is the streaming variant of
+//! `block_pad` used by the [`crate::ingest`] service — the same uniform
+//! `Random*` draw over a sliding candidate pool of at most `W` pending
+//! sequences, emitting blocks incrementally with bounded padding instead
+//! of packing a materialized epoch.
 //!
 //! Each block carries the paper's **reset table** — the start offset of
 //! every source sequence inside the block — exported to the model as
@@ -20,6 +27,7 @@
 pub mod bload;
 pub mod mixpad;
 pub mod naive;
+pub mod online;
 pub mod sampling;
 pub mod validate;
 pub mod viz;

@@ -9,7 +9,7 @@ use std::collections::HashMap;
 use crate::dataset::Split;
 use crate::error::{Error, Result};
 
-use super::PackedDataset;
+use super::{Block, PackedDataset};
 
 /// Strategy-independent invariants.
 ///
@@ -111,6 +111,168 @@ pub fn validate(packed: &PackedDataset, split: &Split,
     Ok(())
 }
 
+/// Summary returned by a completed [`StreamValidator`] pass.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StreamSummary {
+    pub blocks: usize,
+    pub total_slots: usize,
+    /// Slots not covered by any placement.
+    pub padding: usize,
+    /// Real source frames placed.
+    pub frames_placed: usize,
+    /// Videos placed (each exactly once, whole and contiguous).
+    pub videos_placed: usize,
+    /// Videos of the split never seen in the stream (only allowed by
+    /// [`StreamValidator::finish_partial`], e.g. blocks dropped for rank
+    /// equality).
+    pub videos_unplaced: usize,
+    /// Frames of the never-placed videos.
+    pub frames_unplaced: usize,
+}
+
+/// Incremental invariant checker for a *stream* of blocks.
+///
+/// The offline [`validate`] needs the whole [`PackedDataset`]; streaming
+/// packers (the `ingest` service, [`super::online::OnlinePacker`]) emit
+/// blocks one at a time and never hold them all. `StreamValidator` checks
+/// the same whole-video invariants block-by-block in O(segments) per
+/// block:
+///
+/// 1. every block has the agreed uniform length and at least one segment;
+/// 2. placements are ordered, non-overlapping and in-bounds;
+/// 3. every placement is a *whole* video (`src_start == 0`,
+///    `len == video len`) of the split — the contiguous-placement
+///    guarantee BLoad shares with its online variant;
+/// 4. no video is placed twice anywhere in the stream;
+/// 5. at [`finish`](StreamValidator::finish): every video was placed
+///    (no frame deleted).
+#[derive(Debug)]
+pub struct StreamValidator {
+    lens: HashMap<u32, usize>,
+    placed: std::collections::HashSet<u32>,
+    block_len: usize,
+    summary: StreamSummary,
+}
+
+impl StreamValidator {
+    pub fn new(split: &Split, block_len: usize) -> StreamValidator {
+        StreamValidator {
+            lens: split
+                .videos
+                .iter()
+                .map(|v| (v.id, v.len as usize))
+                .collect(),
+            placed: Default::default(),
+            block_len,
+            summary: StreamSummary::default(),
+        }
+    }
+
+    /// Check one block as it comes off the stream.
+    pub fn check_block(&mut self, b: &Block) -> Result<()> {
+        let bi = self.summary.blocks;
+        if b.len != self.block_len {
+            return Err(Error::Packing(format!(
+                "stream block {bi} has len {} != agreed {}",
+                b.len, self.block_len
+            )));
+        }
+        if b.segments.is_empty() {
+            return Err(Error::Packing(format!(
+                "stream block {bi} is empty (all padding)"
+            )));
+        }
+        let mut cursor = 0usize;
+        for (si, s) in b.segments.iter().enumerate() {
+            if s.at < cursor {
+                return Err(Error::Packing(format!(
+                    "stream block {bi} segment {si} at {} overlaps \
+                     previous (cursor {cursor})",
+                    s.at
+                )));
+            }
+            if s.at + s.len > b.len {
+                return Err(Error::Packing(format!(
+                    "stream block {bi} segment {si} [{}, {}) exceeds block \
+                     len {}",
+                    s.at,
+                    s.at + s.len,
+                    b.len
+                )));
+            }
+            let vlen = *self.lens.get(&s.video).ok_or_else(|| {
+                Error::Packing(format!(
+                    "stream block {bi} references unknown video {}",
+                    s.video
+                ))
+            })?;
+            if s.src_start != 0 || s.len != vlen {
+                return Err(Error::Packing(format!(
+                    "stream block {bi} segment {si} covers [{}, {}) of \
+                     video {} (len {vlen}); streaming placements must be \
+                     whole contiguous videos",
+                    s.src_start,
+                    s.src_start + s.len,
+                    s.video
+                )));
+            }
+            if !self.placed.insert(s.video) {
+                return Err(Error::Packing(format!(
+                    "stream block {bi} places video {} a second time",
+                    s.video
+                )));
+            }
+            cursor = s.at + s.len;
+            self.summary.frames_placed += s.len;
+        }
+        self.summary.blocks += 1;
+        self.summary.total_slots += b.len;
+        self.summary.padding += b.padding();
+        Ok(())
+    }
+
+    /// Strict end-of-stream check: every video of the split must have been
+    /// placed (the paper's no-frame-deleted guarantee).
+    pub fn finish(self) -> Result<StreamSummary> {
+        let summary = self.finish_partial()?;
+        if summary.videos_unplaced > 0 {
+            return Err(Error::Packing(format!(
+                "stream ended with {} video(s) / {} frame(s) never placed",
+                summary.videos_unplaced, summary.frames_unplaced
+            )));
+        }
+        Ok(summary)
+    }
+
+    /// End-of-stream check tolerating *whole* missing videos (e.g. blocks
+    /// dropped by the ingest service to equalize per-rank step counts).
+    /// Partially-covered or double-placed videos are still errors.
+    pub fn finish_partial(mut self) -> Result<StreamSummary> {
+        for (id, len) in &self.lens {
+            if self.placed.contains(id) {
+                self.summary.videos_placed += 1;
+            } else {
+                self.summary.videos_unplaced += 1;
+                self.summary.frames_unplaced += *len;
+            }
+        }
+        Ok(self.summary)
+    }
+}
+
+/// One-shot strict streaming validation over an iterator of blocks.
+pub fn validate_stream<'a, I>(blocks: I, split: &Split, block_len: usize)
+                              -> Result<StreamSummary>
+where
+    I: IntoIterator<Item = &'a Block>,
+{
+    let mut v = StreamValidator::new(split, block_len);
+    for b in blocks {
+        v.check_block(b)?;
+    }
+    v.finish()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,5 +357,68 @@ mod tests {
             pack(StrategyName::BLoad, &split, &cfg, 0).unwrap();
         packed.stats.padding += 1;
         assert!(validate(&packed, &split, false).is_err());
+    }
+
+    #[test]
+    fn stream_accepts_offline_bload_blocks() {
+        let split = small_split();
+        let packed =
+            pack(StrategyName::BLoad, &split, &pack_cfg(), 3).unwrap();
+        let summary =
+            validate_stream(packed.blocks.iter(), &split, packed.block_len)
+                .unwrap();
+        assert_eq!(summary.blocks, packed.blocks.len());
+        assert_eq!(summary.padding, packed.stats.padding);
+        assert_eq!(summary.frames_placed, split.total_frames());
+        assert_eq!(summary.videos_unplaced, 0);
+    }
+
+    #[test]
+    fn stream_detects_double_placement_across_blocks() {
+        let split = small_split();
+        let v = split.videos[0];
+        let mk = |id: u32, len: usize| {
+            let mut b = Block::new(94);
+            b.push(id, 0, len).unwrap();
+            b
+        };
+        let a = mk(v.id, v.len as usize);
+        let b = mk(v.id, v.len as usize);
+        let err = validate_stream([&a, &b], &split, 94).unwrap_err();
+        assert!(err.to_string().contains("second time"), "{err}");
+    }
+
+    #[test]
+    fn stream_detects_partial_video_and_bad_len() {
+        let split = small_split();
+        let v = split.videos.iter().find(|v| v.len >= 3).unwrap();
+        let mut b = Block::new(94);
+        b.push(v.id, 0, v.len as usize - 1).unwrap();
+        let err = validate_stream([&b], &split, 94).unwrap_err();
+        assert!(err.to_string().contains("whole contiguous"), "{err}");
+        // Wrong uniform length.
+        let mut b = Block::new(40);
+        b.push(v.id, 0, v.len as usize).unwrap();
+        assert!(validate_stream([&b], &split, 94).is_err());
+        // Empty block.
+        let b = Block::new(94);
+        assert!(validate_stream([&b], &split, 94).is_err());
+    }
+
+    #[test]
+    fn stream_strict_vs_partial_finish() {
+        let split = small_split();
+        let v = split.videos[0];
+        let mut b = Block::new(94);
+        b.push(v.id, 0, v.len as usize).unwrap();
+        let mut sv = StreamValidator::new(&split, 94);
+        sv.check_block(&b).unwrap();
+        let err = sv.finish().unwrap_err();
+        assert!(err.to_string().contains("never placed"), "{err}");
+        let mut sv = StreamValidator::new(&split, 94);
+        sv.check_block(&b).unwrap();
+        let summary = sv.finish_partial().unwrap();
+        assert_eq!(summary.videos_placed, 1);
+        assert_eq!(summary.videos_unplaced, split.videos.len() - 1);
     }
 }

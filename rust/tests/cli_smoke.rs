@@ -86,6 +86,25 @@ fn deadlock_demo_completes() {
 }
 
 #[test]
+fn ingest_streaming_mode_completes() {
+    assert_eq!(
+        run(&argv(&[
+            "ingest", "--scale", "0.02", "--ranks", "2", "--window", "32",
+            "--producers", "2",
+        ]))
+        .unwrap(),
+        0
+    );
+}
+
+#[test]
+fn ingest_rejects_bad_flags() {
+    assert!(run(&argv(&["ingest", "--ranks", "0"])).is_err());
+    assert!(run(&argv(&["ingest", "--bogus", "1"])).is_err());
+    assert!(run(&argv(&["ingest", "--window", "abc"])).is_err());
+}
+
+#[test]
 fn table1_pipeline_level() {
     // Pipeline accounting only (no --full): packs the full AG-Synth split
     // four ways and prints the paper-side table.

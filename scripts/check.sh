@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Pre-PR gate: run this (and get it green) before opening a PR.
+#
+#   scripts/check.sh
+#
+# Mirrors CI: formatting, lints as errors, then the full test suite.
+# Runtime tests that need AOT artifacts skip themselves when
+# artifacts/manifest.json is absent, so the suite is self-contained.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo fmt --check && cargo clippy -- -D warnings && cargo test -q

@@ -1,0 +1,175 @@
+//! Offline stub of the `xla` (PJRT) bindings used by the `bload` crate.
+//!
+//! This environment has no XLA/PJRT shared library and no network access,
+//! so the real bindings cannot be built. The coordinator crate only needs
+//! the API *surface* to compile; every entry point that would touch a real
+//! runtime returns [`Error`] instead. `PjRtClient::cpu()` fails first, so
+//! callers gate cleanly: `Engine::load` reports "runtime unavailable" and
+//! the runtime test-suite skips (it already skips when artifacts are
+//! absent). Replace the `vendor/xla` path dependency with the real `xla`
+//! crate to execute artifacts.
+
+use std::fmt;
+
+/// Error type mirroring the real bindings' `xla::Error`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias mirroring the real bindings.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: XLA/PJRT runtime unavailable (built against the offline \
+         `vendor/xla` API stub; link the real xla crate to execute \
+         artifacts)"
+    ))
+}
+
+/// Element types of device buffers (only F32 is used by this crate).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+}
+
+/// Host-side literal (stub: carries no data).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    /// Scalar literal (stub value is never executed).
+    pub fn scalar(_x: f32) -> Literal {
+        Literal { _priv: () }
+    }
+
+    /// Shaped literal from raw bytes (stub: shape/data are discarded).
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Ok(Literal { _priv: () })
+    }
+
+    /// Decompose a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file (stub: fails — nothing could execute it).
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation wrapper.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// On-device buffer produced by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    /// Synchronously copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments (stub: always fails).
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU client. The stub fails here, which is the single gate
+    /// every execution path goes through first.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creation_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("unavailable"), "{err}");
+    }
+
+    #[test]
+    fn literal_construction_is_permitted() {
+        // Literals are built on the host before any execution; the stub
+        // accepts them so shape-checking code paths stay exercisable.
+        let l = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 2],
+            &[0u8; 16],
+        )
+        .unwrap();
+        assert!(l.to_tuple().is_err());
+        let _ = Literal::scalar(1.0);
+    }
+}
