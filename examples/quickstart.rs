@@ -1,16 +1,17 @@
 //! Quickstart: the paper's Fig 1 → Fig 5 walk-through on the toy dataset.
 //!
-//! Generates the 8-video toy dataset (Fig 1), packs it with all four
-//! strategies, prints the layouts and the Table-I-style stats, and shows
-//! the reset table the recurrent model consumes.
+//! Generates the 8-video toy dataset (Fig 1), packs it with every
+//! strategy in the registry, prints the layouts and the Table-I-style
+//! stats, and shows the reset table the recurrent model consumes.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use bload::config::{ExperimentConfig, StrategyName};
+use bload::config::ExperimentConfig;
 use bload::dataset::synthetic::{generate, tiny_config};
-use bload::packing::{pack, validate::validate, viz};
+use bload::packing::{by_name, pack, registry, validate::validate, viz,
+                     Packer};
 
 fn main() -> bload::Result<()> {
     // Fig 1: a dataset of 8 short videos (2–6 frames).
@@ -23,15 +24,15 @@ fn main() -> bload::Result<()> {
     pcfg.t_block = 3;
     pcfg.t_mix = 3;
 
-    for strategy in StrategyName::all() {
+    for &strategy in registry() {
         let packed = pack(strategy, &ds.train, &pcfg, 0)?;
-        validate(&packed, &ds.train, strategy == StrategyName::MixPad)?;
-        println!("— {} —", strategy);
+        validate(&packed, &ds.train, strategy.within_video_padding())?;
+        println!("— {} —", strategy.label());
         println!("{}", viz::render_packed(&packed, &ds.train, 12));
     }
 
     // The reset table in detail, for the first BLoad block.
-    let packed = pack(StrategyName::BLoad, &ds.train, &pcfg, 0)?;
+    let packed = pack(by_name("bload")?, &ds.train, &pcfg, 0)?;
     let block = &packed.blocks[0];
     println!("block 0 reset table (paper Fig 7 `block_reset`): {:?}",
              block.reset_table());

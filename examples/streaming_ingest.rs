@@ -23,14 +23,14 @@
 use std::sync::mpsc::sync_channel;
 use std::sync::Arc;
 
-use bload::config::{ExperimentConfig, StrategyName};
+use bload::config::ExperimentConfig;
 use bload::dataset::store::{StoreReader, StoreWriter};
 use bload::dataset::synthetic::generate;
 use bload::dataset::VideoMeta;
 use bload::ingest::{self, IngestConfig};
 use bload::loader::Prefetcher;
 use bload::packing::validate::StreamValidator;
-use bload::packing::{pack, Block};
+use bload::packing::{by_name, pack, Block};
 use bload::util::humanize::{bytes, commas, rate};
 
 fn main() -> bload::Result<()> {
@@ -46,7 +46,7 @@ fn main() -> bload::Result<()> {
     );
 
     // Offline baseline for the padding comparison.
-    let offline = pack(StrategyName::BLoad, &split, &cfg.packing, 0)?;
+    let offline = pack(by_name("bload")?, &split, &cfg.packing, 0)?;
     println!("offline {}", offline.stats);
 
     // Persist a shard; the streaming reader will feed the service from

@@ -14,10 +14,10 @@
 
 use std::sync::Arc;
 
-use bload::config::{EvalConfig, ExperimentConfig, StrategyName};
+use bload::config::{EvalConfig, ExperimentConfig};
 use bload::dataset::synthetic::generate;
 use bload::harness::{scaled_dataset, scaled_packing};
-use bload::packing::{pack_with_block_len, validate::validate};
+use bload::packing::{by_name, pack_with_block_len, validate::validate};
 use bload::runtime::{ArtifactManifest, Engine};
 use bload::train::Trainer;
 
@@ -53,7 +53,7 @@ fn main() -> bload::Result<()> {
     );
 
     let packed = Arc::new(pack_with_block_len(
-        StrategyName::BLoad, &ds.train, &pcfg, pcfg.t_max, 0)?);
+        by_name("bload")?, &ds.train, &pcfg, pcfg.t_max, 0)?);
     validate(&packed, &ds.train, false)?;
     println!("{}", packed.stats);
 
@@ -80,7 +80,7 @@ fn main() -> bload::Result<()> {
     }
 
     let packed_test = Arc::new(pack_with_block_len(
-        StrategyName::BLoad, &test_split, &pcfg, pcfg.t_max, 1)?);
+        by_name("bload")?, &test_split, &pcfg, pcfg.t_max, 1)?);
     let recall =
         trainer.evaluate(&test_split, &packed_test,
                          &EvalConfig { recall_k: 20 })?;

@@ -9,10 +9,10 @@
 use std::sync::Arc;
 
 use bload::benchkit::Bencher;
-use bload::config::{ExperimentConfig, StrategyName};
+use bload::config::ExperimentConfig;
 use bload::dataset::synthetic::generate;
 use bload::harness::{scaled_dataset, scaled_packing};
-use bload::packing::pack_with_block_len;
+use bload::packing::{pack_with_block_len, registry, Packer};
 use bload::runtime::{ArtifactManifest, Engine};
 use bload::train::Trainer;
 
@@ -42,8 +42,8 @@ fn main() {
     let ds = generate(&dcfg, 0);
     let train_split = Arc::new(ds.train);
 
-    let mut results = Vec::new();
-    for strategy in StrategyName::all() {
+    let mut results: Vec<(&'static dyn Packer, f64)> = Vec::new();
+    for &strategy in registry() {
         let packed = Arc::new(
             pack_with_block_len(strategy, &train_split, &pcfg, pcfg.t_max, 0)
                 .unwrap(),
@@ -57,10 +57,7 @@ fn main() {
             .unwrap();
         let slots: usize =
             packed.blocks.iter().map(|b| b.len).sum();
-        let name = format!(
-            "epoch_time/{}",
-            strategy.paper_label().replace(' ', "_")
-        );
+        let name = format!("epoch_time/{}", strategy.name());
         let mut epoch = 0u64;
         let r = bench.run(&name, slots as f64, "slots", || {
             let s = trainer
@@ -73,12 +70,12 @@ fn main() {
     }
     let base = results
         .iter()
-        .find(|(s, _)| *s == StrategyName::BLoad)
+        .find(|(s, _)| s.name() == "bload")
         .map(|(_, t)| *t)
         .unwrap();
     println!("\nmeasured epoch-time ratios vs block_pad:");
     for (s, t) in &results {
-        println!("  {:<12} {:.2}x", s.paper_label(), t / base);
+        println!("  {:<12} {:.2}x", s.label(), t / base);
     }
-    println!("paper ratios: 4.15x / 0.44x / 0.98x / 1.00x");
+    println!("paper ratios (Table I columns): 4.15x / 0.44x / 0.98x / 1.00x");
 }

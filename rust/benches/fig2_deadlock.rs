@@ -5,10 +5,10 @@
 use std::time::Duration;
 
 use bload::benchkit::Bencher;
-use bload::config::{ExperimentConfig, StrategyName};
+use bload::config::ExperimentConfig;
 use bload::dataset::synthetic::generate;
 use bload::ddp::sim;
-use bload::packing::pack;
+use bload::packing::{by_name, pack};
 
 fn main() {
     let bench = Bencher::from_env();
@@ -27,7 +27,8 @@ fn main() {
 
     // Packed equal-schedule completion at the paper's 8-rank topology.
     let packed =
-        pack(StrategyName::BLoad, &ds.train, &cfg.packing, 0).unwrap();
+        pack(by_name("bload").unwrap(), &ds.train, &cfg.packing, 0)
+            .unwrap();
     let sched = sim::packed_schedule(&packed, 8, 2);
     let iters = sched[0] as f64 * 8.0;
     bench.run("fig2/bload_packed_completion/8ranks", iters, "barrier-waits",

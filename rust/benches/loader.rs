@@ -4,17 +4,17 @@
 use std::sync::Arc;
 
 use bload::benchkit::Bencher;
-use bload::config::{ExperimentConfig, StrategyName};
+use bload::config::ExperimentConfig;
 use bload::dataset::synthetic::generate;
 use bload::loader::{EpochPlan, Prefetcher};
-use bload::packing::pack;
+use bload::packing::{by_name, pack};
 
 fn main() {
     let bench = Bencher::from_env();
     let cfg = ExperimentConfig::default_config();
     let ds = generate(&cfg.dataset.scaled(0.03), 0);
     let packed =
-        Arc::new(pack(StrategyName::BLoad, &ds.train, &cfg.packing, 0)
+        Arc::new(pack(by_name("bload").unwrap(), &ds.train, &cfg.packing, 0)
             .unwrap());
     let split = Arc::new(ds.train);
     let frames = split.total_frames() as f64;
@@ -42,7 +42,7 @@ fn main() {
     let mut pcfg = cfg.packing.clone();
     pcfg.t_block = 10;
     let chunked = Arc::new(
-        bload::packing::pack(StrategyName::Sampling, &split, &pcfg, 0)
+        bload::packing::pack(by_name("sampling").unwrap(), &split, &pcfg, 0)
             .unwrap(),
     );
     let chunk_frames = chunked.stats.frames_kept as f64;

@@ -5,10 +5,10 @@
 //! once-per-epoch batch job.
 
 use bload::benchkit::Bencher;
-use bload::config::{ExperimentConfig, StrategyName};
+use bload::config::ExperimentConfig;
 use bload::dataset::synthetic::generate;
 use bload::packing::online::{pack_stream, OnlineConfig};
-use bload::packing::pack;
+use bload::packing::{by_name, pack};
 
 fn main() {
     let bench = Bencher::from_env();
@@ -31,7 +31,8 @@ fn main() {
             "frames",
             || {
                 seed += 1;
-                pack(StrategyName::BLoad, &ds.train, &cfg.packing, seed)
+                pack(by_name("bload").unwrap(), &ds.train, &cfg.packing,
+                     seed)
                     .unwrap()
             },
         );
@@ -50,7 +51,7 @@ fn main() {
             let (_, stats) =
                 pack_stream(items.iter().copied(), ocfg, 0).unwrap();
             let offline =
-                pack(StrategyName::BLoad, &ds.train, &cfg.packing, 0)
+                pack(by_name("bload").unwrap(), &ds.train, &cfg.packing, 0)
                     .unwrap();
             println!(
                 "  padding: online_w{window} {:.3}% vs offline {:.3}% \

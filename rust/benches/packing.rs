@@ -1,11 +1,12 @@
-//! Packing-throughput bench: all four strategies at several dataset
-//! scales (frames/s). The BLoad packer is `O(N·T_max)`; it must never be
-//! the pipeline bottleneck (paper: packing happens once per epoch).
+//! Packing-throughput bench: every registered strategy at several
+//! dataset scales (frames/s). The BLoad packer is `O(N·T_max)`; no
+//! strategy may become the pipeline bottleneck (packing happens once per
+//! epoch). New registry entries are benched automatically.
 
 use bload::benchkit::Bencher;
-use bload::config::{ExperimentConfig, StrategyName};
+use bload::config::ExperimentConfig;
 use bload::dataset::synthetic::generate;
-use bload::packing::pack;
+use bload::packing::{pack, registry, Packer};
 
 fn main() {
     let bench = Bencher::from_env();
@@ -14,11 +15,8 @@ fn main() {
         let dcfg = cfg.dataset.scaled(scale);
         let ds = generate(&dcfg, 0);
         let frames = ds.train.total_frames() as f64;
-        for strategy in StrategyName::all() {
-            let name = format!(
-                "packing/{}/scale{scale}",
-                strategy.paper_label().replace(' ', "_")
-            );
+        for &strategy in registry() {
+            let name = format!("packing/{}/scale{scale}", strategy.name());
             let mut seed = 0u64;
             bench.run(&name, frames, "frames", || {
                 seed += 1;

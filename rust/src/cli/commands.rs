@@ -2,26 +2,23 @@
 
 use std::sync::Arc;
 
-use crate::config::{ExperimentConfig, StrategyName};
+use crate::config::ExperimentConfig;
 use crate::dataset::stats::SplitStats;
 use crate::dataset::store::StoreWriter;
 use crate::dataset::synthetic::generate;
 use crate::error::{Error, Result};
 use crate::harness::{ablation as abl, deadlock, streaming, table1};
-use crate::packing::{pack, validate::validate, viz};
+use crate::metrics::TextTable;
+use crate::packing::{self, pack, validate::validate, viz, Packer};
 use crate::runtime::{ArtifactManifest, Engine};
 use crate::train::Trainer;
 use crate::util::humanize::commas;
 
 use super::args::Args;
 
-fn strategy_flag(args: &mut Args) -> Result<StrategyName> {
+fn strategy_flag(args: &mut Args) -> Result<&'static dyn Packer> {
     let raw = args.flag_str("strategy", "bload");
-    StrategyName::parse(&raw).ok_or_else(|| {
-        Error::Config(format!(
-            "--strategy '{raw}' unknown (bload|naive|sampling|mix_pad)"
-        ))
-    })
+    packing::by_name(&raw)
 }
 
 /// `bload gen-data --out PATH [--scale F] [--seed N]`
@@ -75,7 +72,7 @@ pub fn pack_cmd(args: &mut Args) -> Result<i32> {
     let t0 = std::time::Instant::now();
     let packed = pack(strat, &ds.train, &cfg.packing, seed)?;
     let dt = t0.elapsed();
-    validate(&packed, &ds.train, strat == StrategyName::MixPad)?;
+    validate(&packed, &ds.train, strat.within_video_padding())?;
     println!("{}", packed.stats);
     println!(
         "packed {} videos in {} ({} frames/s); validation OK",
@@ -101,19 +98,18 @@ pub fn pack_viz(args: &mut Args) -> Result<i32> {
     if raw == "none" {
         return Ok(0);
     }
-    let strat = StrategyName::parse(&raw).ok_or_else(|| {
-        Error::Config(format!("--strategy '{raw}' unknown"))
-    })?;
+    let strat = packing::by_name(&raw)?;
     let mut pcfg = ExperimentConfig::default_config().packing;
     pcfg.t_max = 6;
     pcfg.t_block = 3;
     pcfg.t_mix = 3;
     let packed = pack(strat, &ds.train, &pcfg, seed)?;
-    let fig = match strat {
-        StrategyName::NaivePad => "Fig 3 (naive padding)",
-        StrategyName::Sampling => "Fig 4 (sampling/chunking)",
-        StrategyName::MixPad => "mix pad",
-        StrategyName::BLoad => "Fig 5 (BLoad block packing)",
+    let fig = match strat.name() {
+        "naive" => "Fig 3 (naive padding)",
+        "sampling" => "Fig 4 (sampling/chunking)",
+        "mix_pad" => "mix pad",
+        "bload" => "Fig 5 (BLoad block packing)",
+        other => other,
     };
     println!("— {fig} — ('░' = padding, lowercase = within-video pad)");
     println!("{}", viz::render_packed(&packed, &ds.train, rows));
@@ -154,13 +150,9 @@ pub fn epoch_time_full(args: &mut Args) -> Result<i32> {
     let artifacts = args.flag_str("artifacts", "artifacts");
     let seed = args.flag_u64("seed", 0)?;
     args.finish()?;
-    let strategies: Vec<StrategyName> = raw
+    let strategies: Vec<&'static dyn Packer> = raw
         .split(',')
-        .map(|s| {
-            StrategyName::parse(s.trim()).ok_or_else(|| {
-                Error::Config(format!("unknown strategy '{s}'"))
-            })
-        })
+        .map(|s| packing::by_name(s.trim()))
         .collect::<Result<_>>()?;
     let rows = crate::harness::epoch_full::run(&strategies, max_steps, seed,
                                                &artifacts)?;
@@ -194,10 +186,9 @@ pub fn train(args: &mut Args) -> Result<i32> {
         cfg.seed = seed_override;
     }
     let ds = generate(&cfg.dataset, cfg.seed);
-    let packed = Arc::new(pack(cfg.packing.strategy, &ds.train,
-                               &cfg.packing, cfg.seed)?);
-    validate(&packed, &ds.train,
-             cfg.packing.strategy == StrategyName::MixPad)?;
+    let packer = cfg.packing.strategy.packer();
+    let packed = Arc::new(pack(packer, &ds.train, &cfg.packing, cfg.seed)?);
+    validate(&packed, &ds.train, packer.within_video_padding())?;
     println!("{}", packed.stats);
 
     let manifest = ArtifactManifest::load(std::path::Path::new(
@@ -219,8 +210,8 @@ pub fn train(args: &mut Args) -> Result<i32> {
     for epoch in 0..cfg.train.epochs as u64 {
         trainer.train_epoch(&train_split, &packed, epoch)?;
     }
-    let packed_test = Arc::new(pack(cfg.packing.strategy, &ds.test,
-                                    &cfg.packing, cfg.seed + 1)?);
+    let packed_test = Arc::new(pack(packer, &ds.test, &cfg.packing,
+                                    cfg.seed + 1)?);
     let test_split = Arc::new(ds.test);
     let recall = trainer.evaluate(&test_split, &packed_test, &cfg.eval)?;
     println!("recall@{} = {recall:.2}%", cfg.eval.recall_k);
@@ -253,6 +244,40 @@ pub fn ingest(args: &mut Args) -> Result<i32> {
     let report = streaming::run(&opts)?;
     println!("{}", streaming::render(&report));
     Ok(if report.ddp_completed { 0 } else { 1 })
+}
+
+/// `bload strategies` — list the packing-strategy registry: key,
+/// Table I label, native block length, streaming support, aliases, and
+/// the source citation of every registered [`Packer`].
+pub fn strategies(args: &mut Args) -> Result<i32> {
+    args.finish()?;
+    let pcfg = ExperimentConfig::default_config().packing;
+    let ctx = packing::PackContext::new(&pcfg, pcfg.t_max, 0);
+    let mut t = TextTable::new(&[
+        "name", "label", "native T", "streaming", "aliases", "description",
+    ]);
+    for &p in packing::registry() {
+        let streaming = match p.streaming(&ctx) {
+            Some(Ok(_)) => "yes",
+            Some(Err(_)) => "error",
+            None => "—",
+        };
+        t.row(&[
+            p.name().to_string(),
+            p.label().to_string(),
+            p.native_block_len(&pcfg).to_string(),
+            streaming.to_string(),
+            p.aliases().join(", "),
+            p.describe().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "{} strategies registered; `--strategy <name>` and \
+         `packing.strategy` accept any name or alias.",
+        packing::registry().len()
+    );
+    Ok(0)
 }
 
 /// `bload ablation [--epochs N] [--videos N]`

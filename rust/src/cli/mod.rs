@@ -7,6 +7,7 @@
 //! commands:
 //!   gen-data       generate + persist an AG-Synth dataset store
 //!   inspect        dataset statistics (Fig 1 histogram)
+//!   strategies     list the packing-strategy registry
 //!   pack           pack a split and print stats (+ validation)
 //!   pack-viz       ASCII rendering of packed blocks (Figs 1/3/4/5)
 //!   table1         reproduce Table I (add --full for measured runs)
@@ -40,6 +41,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
     match cmd.as_str() {
         "gen-data" => commands::gen_data(&mut args),
         "inspect" => commands::inspect(&mut args),
+        "strategies" => commands::strategies(&mut args),
         "pack" => commands::pack_cmd(&mut args),
         "pack-viz" => commands::pack_viz(&mut args),
         "table1" => commands::table1(&mut args),
@@ -67,6 +69,8 @@ COMMANDS:
     gen-data       generate an AG-Synth dataset store (--out PATH \
 [--scale F] [--seed N])
     inspect        dataset statistics (--scale F) (Fig 1)
+    strategies     list the packing-strategy registry (keys, aliases, \
+streaming support)
     pack           pack + validate (--strategy S) (--scale F)
     pack-viz       ASCII block layouts (--strategy S) (Figs 1/3/4/5)
     table1         reproduce Table I (--full to train; --epochs N; \

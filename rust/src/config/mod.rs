@@ -70,7 +70,7 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.seed, 7);
         assert_eq!(cfg.dataset.train_videos, 100);
-        assert_eq!(cfg.packing.strategy, StrategyName::BLoad);
+        assert_eq!(cfg.packing.strategy.key(), "bload");
         assert_eq!(cfg.packing.t_max, 30);
         assert_eq!(cfg.ddp.ranks, 4);
         assert!((cfg.train.lr - 0.05).abs() < 1e-12);
@@ -107,20 +107,25 @@ mod tests {
     #[test]
     fn strategy_names() {
         for (s, want) in [
-            ("bload", StrategyName::BLoad),
-            ("block_pad", StrategyName::BLoad),
-            ("naive", StrategyName::NaivePad),
-            ("0_padding", StrategyName::NaivePad),
-            ("sampling", StrategyName::Sampling),
-            ("mix_pad", StrategyName::MixPad),
+            ("bload", "bload"),
+            ("block_pad", "bload"),
+            ("naive", "naive"),
+            ("0_padding", "naive"),
+            ("sampling", "sampling"),
+            ("mix_pad", "mix_pad"),
+            ("ffd", "ffd"),
+            ("bucket", "bucket"),
         ] {
             let cfg = from_str(
                 "t",
                 &format!("[packing]\nstrategy = \"{s}\"\n"),
             )
             .unwrap();
-            assert_eq!(cfg.packing.strategy, want, "{s}");
+            assert_eq!(cfg.packing.strategy.key(), want, "{s}");
         }
-        assert!(from_str("t", "[packing]\nstrategy = \"nope\"\n").is_err());
+        let err = from_str("t", "[packing]\nstrategy = \"nope\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("ffd"), "error lists registry keys: {err}");
     }
 }

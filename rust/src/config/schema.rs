@@ -3,52 +3,65 @@
 use super::reader::Reader;
 use crate::configfmt::Doc;
 use crate::error::{Error, Result};
+use crate::packing::Packer;
 
-/// Which packing strategy — Table I's four columns.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum StrategyName {
-    /// "0 padding": pad every sequence to `T_max` (Fig 3).
-    NaivePad,
-    /// "sampling": chunk to fixed `T_block`, drop remainders (Fig 4).
-    Sampling,
-    /// "mix pad": pad/trim every sequence to the dataset mean length.
-    MixPad,
-    /// "block_pad": the paper's contribution (Fig 5 + Fig 7 pseudocode).
-    BLoad,
-}
+/// Which packing strategy — a thin config-compatibility shim over the
+/// [`crate::packing::registry`].
+///
+/// Config files and flags name strategies by string; this type parses
+/// any registered key, alias, or Table I label into the corresponding
+/// [`crate::packing::Packer`] registry entry. New strategies register in
+/// `packing::registry()` — this shim stays a pass-through and needs no
+/// edits.
+#[derive(Clone, Copy)]
+pub struct StrategyName(&'static dyn Packer);
 
 impl StrategyName {
+    /// Resolve any registered key, alias, or Table I label.
     pub fn parse(s: &str) -> Option<StrategyName> {
-        match s.to_ascii_lowercase().as_str() {
-            "bload" | "block_pad" | "blockpad" | "block" => {
-                Some(StrategyName::BLoad)
-            }
-            "naive" | "0_padding" | "zero_pad" | "naive_pad" | "pad" => {
-                Some(StrategyName::NaivePad)
-            }
-            "sampling" | "chunk" | "chunking" => Some(StrategyName::Sampling),
-            "mix_pad" | "mix" | "mixpad" => Some(StrategyName::MixPad),
-            _ => None,
-        }
+        crate::packing::lookup(s).map(StrategyName)
+    }
+
+    /// The registry entry this name resolved to.
+    pub fn packer(&self) -> &'static dyn Packer {
+        self.0
+    }
+
+    /// Canonical registry key.
+    pub fn key(&self) -> &'static str {
+        self.0.name()
     }
 
     /// The column label used in the paper's Table I.
     pub fn paper_label(&self) -> &'static str {
-        match self {
-            StrategyName::NaivePad => "0 padding",
-            StrategyName::Sampling => "sampling",
-            StrategyName::MixPad => "mix pad",
-            StrategyName::BLoad => "block_pad",
-        }
+        self.0.label()
     }
+}
 
-    pub fn all() -> [StrategyName; 4] {
-        [
-            StrategyName::NaivePad,
-            StrategyName::Sampling,
-            StrategyName::MixPad,
-            StrategyName::BLoad,
-        ]
+impl Default for StrategyName {
+    /// The paper's contribution is the default strategy.
+    fn default() -> StrategyName {
+        StrategyName::parse("bload").expect("bload is registered")
+    }
+}
+
+impl PartialEq for StrategyName {
+    fn eq(&self, other: &StrategyName) -> bool {
+        self.key() == other.key()
+    }
+}
+
+impl Eq for StrategyName {}
+
+impl std::hash::Hash for StrategyName {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.key().hash(state);
+    }
+}
+
+impl std::fmt::Debug for StrategyName {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "StrategyName({})", self.key())
     }
 }
 
@@ -182,12 +195,9 @@ impl PackingConfig {
         let mut r = Reader::new(doc, "packing");
         let strategy_raw = r.string("strategy", "bload")?;
         let cfg = PackingConfig {
-            strategy: StrategyName::parse(&strategy_raw).ok_or_else(|| {
-                Error::Config(format!(
-                    "packing.strategy '{strategy_raw}' unknown; expected one \
-                     of bload|naive|sampling|mix_pad"
-                ))
-            })?,
+            // by_name's error already lists every registered key.
+            strategy: crate::packing::by_name(&strategy_raw)
+                .map(StrategyName)?,
             t_max: r.usize("t_max", 94)?,
             t_block: r.usize("t_block", 24)?,
             t_mix: r.usize("t_mix", 22)?,
@@ -422,9 +432,18 @@ mod tests {
     }
 
     #[test]
-    fn paper_labels() {
-        assert_eq!(StrategyName::BLoad.paper_label(), "block_pad");
-        assert_eq!(StrategyName::NaivePad.paper_label(), "0 padding");
-        assert_eq!(StrategyName::all().len(), 4);
+    fn strategy_shim_resolves_registry() {
+        let s = StrategyName::parse("block_pad").unwrap();
+        assert_eq!(s.key(), "bload");
+        assert_eq!(s.paper_label(), "block_pad");
+        assert_eq!(s, StrategyName::parse("bload").unwrap());
+        assert_eq!(StrategyName::default().key(), "bload");
+        assert_eq!(
+            StrategyName::parse("0 padding").unwrap().key(),
+            "naive",
+            "Table I labels parse too"
+        );
+        assert!(StrategyName::parse("nope").is_none());
+        assert_eq!(format!("{}", StrategyName::default()), "block_pad");
     }
 }

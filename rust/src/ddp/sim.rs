@@ -169,9 +169,9 @@ pub fn demo_raw_deadlock(split: &Split, ranks: usize, batch: usize,
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{ExperimentConfig, StrategyName};
+    use crate::config::ExperimentConfig;
     use crate::dataset::synthetic::{generate, tiny_config};
-    use crate::packing::pack;
+    use crate::packing::{by_name, pack};
 
     #[test]
     fn unequal_iterations_deadlock() {
@@ -211,7 +211,7 @@ mod tests {
             "variable-length random batching should be unequal: {raw:?}"
         );
         let packed = pack(
-            StrategyName::BLoad,
+            by_name("bload").unwrap(),
             &ds.train,
             &ExperimentConfig::default_config().packing,
             0,
@@ -250,7 +250,7 @@ mod tests {
         let ds = generate(&tiny_config(), 2);
         let mut pcfg = ExperimentConfig::default_config().packing;
         pcfg.t_max = 6;
-        let packed = pack(StrategyName::BLoad, &ds.train, &pcfg, 0).unwrap();
+        let packed = pack(by_name("bload").unwrap(), &ds.train, &pcfg, 0).unwrap();
         let sched = packed_schedule(&packed, 2, 1);
         // blocks/ranks/batch full steps × block_len iterations each.
         let steps = (packed.blocks.len() / 2) as u64;
@@ -268,7 +268,7 @@ mod tests {
         let ds = generate(&tiny_config(), 2);
         let mut pcfg = ExperimentConfig::default_config().packing;
         pcfg.t_max = 6;
-        let packed = pack(StrategyName::BLoad, &ds.train, &pcfg, 0).unwrap();
+        let packed = pack(by_name("bload").unwrap(), &ds.train, &pcfg, 0).unwrap();
         let iters = packed_schedule(&packed, 2, 1);
         let report = run(&iters, Duration::from_secs(2));
         assert!(report.completed, "{report:?}");

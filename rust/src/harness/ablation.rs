@@ -10,11 +10,11 @@
 
 use std::sync::Arc;
 
-use crate::config::{EvalConfig, ExperimentConfig, StrategyName};
+use crate::config::{EvalConfig, ExperimentConfig};
 use crate::dataset::synthetic::generate;
 use crate::error::Result;
 use crate::harness::{scaled_dataset, scaled_packing};
-use crate::packing::{pack_with_block_len, PackedDataset};
+use crate::packing::{by_name, pack_with_block_len, PackedDataset, Packer};
 use crate::runtime::{ArtifactManifest, Engine};
 use crate::train::Trainer;
 
@@ -57,9 +57,10 @@ fn strip_reset(packed: &mut PackedDataset) {
 }
 
 /// Packing flavour per arm.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy)]
 enum Packing {
-    Strategy(StrategyName),
+    /// A registered strategy at the scaled uniform block length.
+    Strategy(&'static dyn Packer),
     /// Shuffled chunking at an explicit chunk length.
     SamplingAt(usize),
     /// Ordered + contiguous-merged chunking at an explicit chunk length
@@ -81,7 +82,7 @@ fn train_arm(name: &'static str, packing: Packing, carry: bool,
         Packing::SamplingAt(tb) => {
             let mut p = pcfg.clone();
             p.t_block = tb;
-            pack_with_block_len(StrategyName::Sampling, &ds.train, &p, t,
+            pack_with_block_len(by_name("sampling")?, &ds.train, &p, t,
                                 opts.seed)?
         }
         Packing::SamplingOrdered(tb) => {
@@ -92,7 +93,7 @@ fn train_arm(name: &'static str, packing: Packing, carry: bool,
     // reset-stripped arm strips the test set too so inference matches what
     // the arm's model believes about segment ids.
     let mut packed_test = pack_with_block_len(
-        StrategyName::BLoad, &ds.test, &pcfg, t, opts.seed + 1)?;
+        by_name("bload")?, &ds.test, &pcfg, t, opts.seed + 1)?;
     if collapse_segments {
         strip_reset(&mut packed);
         strip_reset(&mut packed_test);
@@ -131,13 +132,15 @@ fn train_arm(name: &'static str, packing: Packing, carry: bool,
 /// Run all arms.
 pub fn run(opts: &AblationOptions) -> Result<Vec<AblationRow>> {
     use Packing::{SamplingAt, SamplingOrdered, Strategy};
+    let bload = by_name("bload")?;
+    let sampling = by_name("sampling")?;
     Ok(vec![
-        train_arm("block_pad + reset table", Strategy(StrategyName::BLoad),
+        train_arm("block_pad + reset table", Strategy(bload),
                   false, true, false, opts)?,
         train_arm("block_pad, reset stripped",
-                  Strategy(StrategyName::BLoad), false, true, true, opts)?,
+                  Strategy(bload), false, true, true, opts)?,
         train_arm("sampling (t_block=8, Table I)",
-                  Strategy(StrategyName::Sampling), false, true, false,
+                  Strategy(sampling), false, true, false,
                   opts)?,
         // Short chunks make the severed-context penalty visible; the
         // ordered+merged+carry arm then recovers it (§V future work).
@@ -171,8 +174,8 @@ mod tests {
         let dcfg = scaled_dataset(40, 10, 0.6);
         let ds = generate(&dcfg, 1);
         let pcfg = scaled_packing();
-        let mut packed = pack_with_block_len(StrategyName::BLoad, &ds.train,
-                                             &pcfg, 24, 0)
+        let mut packed = pack_with_block_len(by_name("bload").unwrap(),
+                                             &ds.train, &pcfg, 24, 0)
             .unwrap();
         let multi = packed
             .blocks

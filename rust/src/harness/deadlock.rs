@@ -3,11 +3,11 @@
 
 use std::time::Duration;
 
-use crate::config::{ExperimentConfig, StrategyName};
+use crate::config::ExperimentConfig;
 use crate::dataset::synthetic::generate;
 use crate::ddp::sim;
 use crate::error::Result;
-use crate::packing::pack;
+use crate::packing::{by_name, pack};
 
 /// Outcome of the demo.
 #[derive(Debug, Clone)]
@@ -32,7 +32,7 @@ pub fn run(ranks: usize, batch: usize, seed: u64, timeout_ms: u64)
     let raw_sched = sim::raw_schedule(&ds.train, ranks, batch, seed);
     let raw = sim::demo_raw_deadlock(&ds.train, ranks, batch, seed, timeout);
 
-    let packed = pack(StrategyName::BLoad, &ds.train, &cfg.packing, seed)?;
+    let packed = pack(by_name("bload")?, &ds.train, &cfg.packing, seed)?;
     let packed_sched = sim::packed_schedule(&packed, ranks, batch);
     let packed_report = sim::run(&packed_sched, timeout);
 

@@ -18,18 +18,18 @@
 
 use std::sync::Arc;
 
-use crate::config::{ExperimentConfig, StrategyName};
+use crate::config::{ExperimentConfig, PackingConfig};
 use crate::dataset::synthetic::generate;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::log_info;
-use crate::packing::pack;
+use crate::packing::{pack, Packer};
 use crate::runtime::{ArtifactManifest, Engine};
 use crate::train::Trainer;
 
 /// Measured full-geometry epoch result.
 #[derive(Debug, Clone)]
 pub struct FullEpochRow {
-    pub strategy: StrategyName,
+    pub strategy: &'static dyn Packer,
     pub profile: &'static str,
     pub blocks: usize,
     pub slots: usize,
@@ -38,18 +38,24 @@ pub struct FullEpochRow {
     pub parallel_s: f64,
 }
 
-fn profile_for(strategy: StrategyName) -> &'static str {
-    match strategy {
-        StrategyName::BLoad | StrategyName::NaivePad => "full",
-        StrategyName::Sampling => "small",
-        StrategyName::MixPad => "mix22",
+/// Artifact profile matching each strategy's *native block length* under
+/// the default packing geometry — derived from the registry metadata, so
+/// new strategies need no edit here: `T = 94` packers run `full`,
+/// `T = 24` chunkers run `small`, `T = 22` laners run `mix22`. A native
+/// length with no matching profile is a hard error in [`run`] (the
+/// profile/packing block-length agreement is re-checked there).
+fn profile_for(strategy: &dyn Packer, cfg: &PackingConfig) -> &'static str {
+    match strategy.native_block_len(cfg) {
+        22 => "mix22",
+        24 => "small",
+        _ => "full",
     }
 }
 
 /// Run one epoch per requested strategy. `max_steps` (0 = unlimited) can
 /// cap long arms (the naive column is ~4× the others); the row is then
 /// linearly extrapolated to the full epoch and marked in logs.
-pub fn run(strategies: &[StrategyName], max_steps: usize, seed: u64,
+pub fn run(strategies: &[&'static dyn Packer], max_steps: usize, seed: u64,
            artifacts_dir: &str) -> Result<Vec<FullEpochRow>> {
     let cfg = ExperimentConfig::default_config();
     let ds = generate(&cfg.dataset, seed);
@@ -58,11 +64,19 @@ pub fn run(strategies: &[StrategyName], max_steps: usize, seed: u64,
     let train_split = Arc::new(ds.train);
     let mut rows = Vec::new();
     for &strategy in strategies {
-        let profile = profile_for(strategy);
+        let profile = profile_for(strategy, &cfg.packing);
         let spec = manifest.profile(profile)?.clone();
         let packed = Arc::new(pack(strategy, &train_split, &cfg.packing,
                                    seed)?);
-        assert_eq!(spec.block_len, packed.block_len);
+        if spec.block_len != packed.block_len {
+            return Err(Error::Config(format!(
+                "no artifact profile with T={} for strategy '{}' \
+                 (profile '{profile}' has T={})",
+                packed.block_len,
+                strategy.name(),
+                spec.block_len
+            )));
+        }
         let engine = Engine::load(spec)?;
         let mut tcfg = cfg.train.clone();
         tcfg.log_every = 50;
@@ -79,8 +93,8 @@ pub fn run(strategies: &[StrategyName], max_steps: usize, seed: u64,
         };
         if scale > 1.0 {
             log_info!(
-                "{strategy}: measured {} of {} steps, extrapolating ×{scale:.2}",
-                stats.steps, full_steps
+                "{}: measured {} of {} steps, extrapolating ×{scale:.2}",
+                strategy.label(), stats.steps, full_steps
             );
         }
         rows.push(FullEpochRow {
@@ -100,19 +114,25 @@ pub fn run(strategies: &[StrategyName], max_steps: usize, seed: u64,
 mod tests {
     use super::*;
 
+    use crate::packing::by_name;
+
     #[test]
     fn profiles_match_native_block_lengths() {
-        assert_eq!(profile_for(StrategyName::BLoad), "full");
-        assert_eq!(profile_for(StrategyName::NaivePad), "full");
-        assert_eq!(profile_for(StrategyName::Sampling), "small");
-        assert_eq!(profile_for(StrategyName::MixPad), "mix22");
+        let cfg = ExperimentConfig::default_config().packing;
+        let by = |k: &str| profile_for(by_name(k).unwrap(), &cfg);
+        assert_eq!(by("bload"), "full");
+        assert_eq!(by("naive"), "full");
+        assert_eq!(by("ffd"), "full");
+        assert_eq!(by("bucket"), "full");
+        assert_eq!(by("sampling"), "small");
+        assert_eq!(by("mix_pad"), "mix22");
     }
 
     #[test]
     fn render_reports_ratios_vs_block_pad() {
         let rows = vec![
             FullEpochRow {
-                strategy: StrategyName::NaivePad,
+                strategy: by_name("naive").unwrap(),
                 profile: "full",
                 blocks: 7464,
                 slots: 701_616,
@@ -121,7 +141,7 @@ mod tests {
                 parallel_s: 12.0,
             },
             FullEpochRow {
-                strategy: StrategyName::BLoad,
+                strategy: by_name("bload").unwrap(),
                 profile: "full",
                 blocks: 1829,
                 slots: 171_926,
@@ -136,34 +156,47 @@ mod tests {
     }
 }
 
-/// Render with ratios vs block_pad.
+/// Render with ratios vs block_pad; strategies outside the paper's four
+/// columns have no reference ratio and render "(—)", and when the run
+/// itself omitted the block_pad baseline the measured-ratio column
+/// renders "—" instead of mislabeling raw seconds as a ratio.
 pub fn render(rows: &[FullEpochRow]) -> String {
     let base = rows
         .iter()
-        .find(|r| r.strategy == StrategyName::BLoad)
-        .map(|r| r.parallel_s)
-        .unwrap_or(1.0);
+        .find(|r| r.strategy.name() == "bload")
+        .map(|r| r.parallel_s);
     let mut out = String::from(
         "strategy    profile  blocks   slots     wall      parallel  ratio \
          (paper)\n",
     );
-    let paper = |s: StrategyName| match s {
-        StrategyName::NaivePad => 170.0 / 41.0,
-        StrategyName::Sampling => 18.0 / 41.0,
-        StrategyName::MixPad => 40.0 / 41.0,
-        StrategyName::BLoad => 1.0,
+    let paper = |s: &dyn Packer| -> Option<f64> {
+        match s.name() {
+            "naive" => Some(170.0 / 41.0),
+            "sampling" => Some(18.0 / 41.0),
+            "mix_pad" => Some(40.0 / 41.0),
+            "bload" => Some(1.0),
+            _ => None,
+        }
     };
     for r in rows {
+        let paper_cell = match paper(r.strategy) {
+            Some(p) => format!("{p:.2}x"),
+            None => "—".to_string(),
+        };
+        let ratio_cell = match base {
+            Some(b) => format!("{:.2}x", r.parallel_s / b),
+            None => "—".to_string(),
+        };
         out.push_str(&format!(
-            "{:<11} {:<8} {:<8} {:<9} {:>7.1}s  {:>7.1}s  {:>5.2}x ({:.2}x)\n",
-            r.strategy.paper_label(),
+            "{:<11} {:<8} {:<8} {:<9} {:>7.1}s  {:>7.1}s  {:>6} ({})\n",
+            r.strategy.label(),
             r.profile,
             r.blocks,
             r.slots,
             r.wall_s,
             r.parallel_s,
-            r.parallel_s / base,
-            paper(r.strategy),
+            ratio_cell,
+            paper_cell,
         ));
     }
     out

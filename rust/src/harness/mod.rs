@@ -37,7 +37,8 @@ pub fn scaled_dataset(train_videos: usize, test_videos: usize, seed_sigma: f64)
 /// blocks).
 pub fn scaled_packing() -> PackingConfig {
     PackingConfig {
-        strategy: crate::config::StrategyName::BLoad,
+        // The shim's Default resolves to the bload registry entry.
+        strategy: Default::default(),
         t_max: 24,
         t_block: 8,
         t_mix: 8,

@@ -17,7 +17,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::config::{ExperimentConfig, StrategyName};
+use crate::config::ExperimentConfig;
 use crate::dataset::synthetic::generate;
 use crate::dataset::VideoMeta;
 use crate::ddp::sim;
@@ -25,7 +25,7 @@ use crate::error::{Error, Result};
 use crate::ingest::{self, IngestConfig};
 use crate::loader::Prefetcher;
 use crate::packing::validate::StreamValidator;
-use crate::packing::{pack, Block};
+use crate::packing::{by_name, pack, Block};
 use crate::util::humanize::{commas, rate};
 use crate::util::Rng;
 
@@ -139,7 +139,7 @@ pub fn run(o: &StreamingOptions) -> Result<StreamingReport> {
     let frames = split.total_frames();
 
     // Offline baseline: the paper's packer over the materialized epoch.
-    let offline = pack(StrategyName::BLoad, &split, &cfg.packing, o.seed)?;
+    let offline = pack(by_name("bload")?, &split, &cfg.packing, o.seed)?;
 
     // Online service.
     let mut icfg = IngestConfig::new(t_max);

@@ -3,8 +3,10 @@
 //! The offline pipeline packs an epoch only after the whole split is
 //! known. This subsystem serves the production streaming scenario instead:
 //! sequences arrive continuously from many producers, get packed into
-//! uniform blocks *incrementally* by the windowed
-//! [`OnlinePacker`](crate::packing::online::OnlinePacker), and finished
+//! uniform blocks *incrementally* by the configured strategy's
+//! [`StreamPacker`](crate::packing::StreamPacker) (resolved through the
+//! packing registry; default: BLoad's windowed
+//! [`OnlinePacker`](crate::packing::online::OnlinePacker)), and finished
 //! blocks are dealt round-robin to every DDP rank — all without ever
 //! holding the dataset in memory.
 //!

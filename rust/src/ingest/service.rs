@@ -1,17 +1,21 @@
 //! The streaming packing service: bounded multi-producer ingest queue →
-//! packer thread ([`OnlinePacker`]) → per-rank bounded block channels.
+//! packer thread (the strategy's [`StreamPacker`], resolved through the
+//! [`crate::packing::registry`]) → per-rank bounded block channels.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::thread::JoinHandle;
 
 use crate::dataset::VideoMeta;
 use crate::error::{Error, Result};
-use crate::packing::online::{OnlineConfig, OnlinePacker, OnlineStats};
-use crate::packing::Block;
+use crate::packing::online::{OnlineConfig, OnlineStats};
+use crate::packing::{self, Block, PackContext, Packer, StreamPacker};
 
 /// Service configuration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct IngestConfig {
+    /// Registry key of the packing strategy whose streaming mode drives
+    /// the service (must have one — see [`Packer::streaming`]).
+    pub strategy: String,
     /// Windowed-packer knobs (block length, window watermark, latency).
     pub online: OnlineConfig,
     /// Capacity of the bounded ingest queue (producer backpressure).
@@ -25,9 +29,11 @@ pub struct IngestConfig {
 }
 
 impl IngestConfig {
-    /// Defaults: window 64, no latency flush, queue 256, 1 rank, out 32.
+    /// Defaults: BLoad streaming, window 64, no latency flush, queue 256,
+    /// 1 rank, out 32.
     pub fn new(t_max: usize) -> IngestConfig {
         IngestConfig {
+            strategy: "bload".into(),
             online: OnlineConfig::new(t_max),
             queue_cap: 256,
             ranks: 1,
@@ -140,8 +146,22 @@ pub fn tee_blocks(rx: Receiver<Block>, cap: usize)
 /// handle plus one [`Producer`] (clone it for more producers).
 pub fn start(cfg: IngestConfig) -> Result<(IngestService, Producer)> {
     cfg.validate()?;
-    // Constructing the packer here surfaces config errors synchronously.
-    let packer = OnlinePacker::new(cfg.online, cfg.seed ^ 0x1A6E57)?;
+    // Resolve the strategy's streaming mode through the registry here,
+    // before any thread spawns, so unknown strategies and bad streaming
+    // knobs surface synchronously.
+    let strategy = packing::by_name(&cfg.strategy)?;
+    let ctx = PackContext::streaming(cfg.online.t_max, cfg.online.window,
+                                     cfg.online.max_latency,
+                                     cfg.seed ^ 0x1A6E57);
+    let packer = match strategy.streaming(&ctx) {
+        Some(p) => p?,
+        None => {
+            return Err(Error::Ingest(format!(
+                "strategy '{}' has no streaming mode",
+                strategy.name()
+            )))
+        }
+    };
     let (tx, rx) = sync_channel::<VideoMeta>(cfg.queue_cap);
     let mut out_txs = Vec::with_capacity(cfg.ranks);
     let mut outputs = Vec::with_capacity(cfg.ranks);
@@ -155,9 +175,9 @@ pub fn start(cfg: IngestConfig) -> Result<(IngestService, Producer)> {
     Ok((IngestService { outputs, handle }, Producer { tx }))
 }
 
-/// The packer thread: drain the ingest queue into the online packer and
-/// deal finished blocks to ranks in complete rounds.
-fn pack_loop(cfg: IngestConfig, mut packer: OnlinePacker,
+/// The packer thread: drain the ingest queue into the streaming packer
+/// and deal finished blocks to ranks in complete rounds.
+fn pack_loop(cfg: IngestConfig, mut packer: Box<dyn StreamPacker>,
              rx: Receiver<VideoMeta>, out_txs: Vec<SyncSender<Block>>)
              -> Result<IngestStats> {
     let ranks = cfg.ranks;
@@ -410,5 +430,16 @@ mod tests {
         let mut cfg = IngestConfig::new(94);
         cfg.online.window = 0;
         assert!(start(cfg).is_err());
+    }
+
+    #[test]
+    fn strategy_without_streaming_mode_rejected() {
+        let mut cfg = small_cfg(1);
+        cfg.strategy = "ffd".into();
+        let err = start(cfg).unwrap_err().to_string();
+        assert!(err.contains("no streaming mode"), "{err}");
+        let mut cfg = small_cfg(1);
+        cfg.strategy = "nope".into();
+        assert!(start(cfg).is_err(), "unknown strategy key");
     }
 }

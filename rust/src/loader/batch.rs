@@ -163,16 +163,16 @@ pub fn materialize_batch_cached(split: &Split, blocks: &[(usize, &Block)],
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{ExperimentConfig, StrategyName};
+    use crate::config::ExperimentConfig;
     use crate::dataset::synthetic::{generate, tiny_config};
-    use crate::packing::pack;
+    use crate::packing::{by_name, pack};
 
     fn packed_tiny() -> (crate::dataset::AgSynth, crate::packing::PackedDataset)
     {
         let ds = generate(&tiny_config(), 1);
         let mut cfg = ExperimentConfig::default_config().packing;
         cfg.t_max = 6;
-        let packed = pack(StrategyName::BLoad, &ds.train, &cfg, 0).unwrap();
+        let packed = pack(by_name("bload").unwrap(), &ds.train, &cfg, 0).unwrap();
         (ds, packed)
     }
 
@@ -291,7 +291,7 @@ mod tests {
         let ds = generate(&tiny_config(), 5);
         let mut cfg = ExperimentConfig::default_config().packing;
         cfg.t_mix = 6;
-        let packed = pack(StrategyName::MixPad, &ds.train, &cfg, 0).unwrap();
+        let packed = pack(by_name("mix_pad").unwrap(), &ds.train, &cfg, 0).unwrap();
         // Find a lane whose video is shorter than 6.
         let (idx, block, seg) = packed
             .blocks

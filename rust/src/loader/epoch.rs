@@ -63,15 +63,15 @@ impl EpochPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{ExperimentConfig, StrategyName};
+    use crate::config::ExperimentConfig;
     use crate::dataset::synthetic::generate;
-    use crate::packing::pack;
+    use crate::packing::{by_name, pack};
 
     fn packed() -> crate::packing::PackedDataset {
         let cfg = ExperimentConfig::default_config().dataset.scaled(0.02);
         let ds = generate(&cfg, 1);
         pack(
-            StrategyName::BLoad,
+            by_name("bload").unwrap(),
             &ds.train,
             &ExperimentConfig::default_config().packing,
             0,

@@ -224,15 +224,15 @@ impl Prefetcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{ExperimentConfig, StrategyName};
+    use crate::config::ExperimentConfig;
     use crate::dataset::synthetic::generate;
-    use crate::packing::pack;
+    use crate::packing::{by_name, pack};
 
     fn setup() -> (Arc<Split>, Arc<PackedDataset>) {
         let cfg = ExperimentConfig::default_config().dataset.scaled(0.01);
         let ds = generate(&cfg, 1);
         let packed = pack(
-            StrategyName::BLoad,
+            by_name("bload").unwrap(),
             &ds.train,
             &ExperimentConfig::default_config().packing,
             0,

@@ -23,11 +23,58 @@
 
 use std::collections::BTreeMap;
 
+use crate::config::PackingConfig;
 use crate::dataset::Split;
 use crate::error::{Error, Result};
 use crate::util::Rng;
 
-use super::{Block, PackedDataset};
+use super::online::{OnlineConfig, OnlinePacker};
+use super::{Block, PackContext, PackedDataset, Packer, StreamPacker};
+
+/// Registry entry for the paper's `block_pad` (BLoad) strategy — the
+/// only strategy with a streaming mode today (the windowed
+/// [`OnlinePacker`]).
+#[derive(Debug)]
+pub struct BLoad;
+
+impl Packer for BLoad {
+    fn name(&self) -> &'static str {
+        "bload"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["block_pad", "blockpad", "block"]
+    }
+
+    fn label(&self) -> &'static str {
+        "block_pad"
+    }
+
+    fn describe(&self) -> &'static str {
+        "uniform Random* block packing, zero deletion (paper Figs 5/7)"
+    }
+
+    fn native_block_len(&self, cfg: &PackingConfig) -> usize {
+        cfg.t_max
+    }
+
+    fn pack(&self, split: &Split, ctx: &PackContext)
+            -> Result<PackedDataset> {
+        let mut rng = ctx.rng();
+        pack(split, ctx.block_len, &mut rng)
+    }
+
+    fn streaming(&self, ctx: &PackContext)
+                 -> Option<Result<Box<dyn StreamPacker>>> {
+        let ocfg = OnlineConfig {
+            t_max: ctx.block_len,
+            window: ctx.window,
+            max_latency: ctx.max_latency,
+        };
+        Some(OnlinePacker::new(ocfg, ctx.seed)
+            .map(|p| Box::new(p) as Box<dyn StreamPacker>))
+    }
+}
 
 /// Length-keyed multiset of not-yet-packed videos (the paper's `L_dict`).
 #[derive(Debug)]

@@ -1,0 +1,168 @@
+//! `bucket` — length bucketing, after Khomenko et al., *Accelerating
+//! recurrent neural network training using sequence bucketing and
+//! multi-GPU data parallelization* (IEEE DSMP 2016).
+//!
+//! Sort videos by length descending and cut the order into blocks of
+//! `block_len / w` equal lanes, where `w` is the longest video of the
+//! block: every video in the block pads *within its lane* to `w` (the
+//! pad-to-batch-max rule), so padding is bounded by the intra-bucket
+//! length spread plus the block tail instead of the global `T_max`.
+//! Whole videos only — zero deletion, zero fragmentation — and, unlike
+//! mix pad's fixed global lane, the lane width adapts per block to the
+//! local length scale. Block order is shuffled after packing so training
+//! order is not length-sorted.
+
+use crate::config::PackingConfig;
+use crate::dataset::Split;
+use crate::error::Result;
+use crate::util::Rng;
+
+use super::{Block, PackContext, PackedDataset, Packer};
+
+/// Registry entry for the length-bucketing strategy.
+#[derive(Debug)]
+pub struct Bucket;
+
+impl Packer for Bucket {
+    fn name(&self) -> &'static str {
+        "bucket"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["bucketing", "length_bucket", "khomenko"]
+    }
+
+    fn label(&self) -> &'static str {
+        "bucket"
+    }
+
+    fn describe(&self) -> &'static str {
+        "length bucketing, pad-to-bucket-max lanes (Khomenko et al., \
+         DSMP 2016)"
+    }
+
+    fn native_block_len(&self, cfg: &PackingConfig) -> usize {
+        cfg.t_max
+    }
+
+    fn within_video_padding(&self) -> bool {
+        true
+    }
+
+    fn pack(&self, split: &Split, ctx: &PackContext)
+            -> Result<PackedDataset> {
+        let mut rng = ctx.rng();
+        pack(split, ctx.block_len, &mut rng)
+    }
+}
+
+/// Bucket a split into `block_len`-slot blocks of equal-width lanes.
+pub fn pack(split: &Split, block_len: usize, rng: &mut Rng)
+            -> Result<PackedDataset> {
+    let order = super::whole_videos_desc("bucket", split, block_len)?;
+    let mut blocks = Vec::new();
+    let mut i = 0usize;
+    while i < order.len() {
+        let w = order[i].0; // lane width = longest video of this bucket
+        let lanes = block_len / w;
+        let mut b = Block::new(block_len);
+        for lane in 0..lanes {
+            if i == order.len() {
+                break;
+            }
+            let (_, id) = order[i];
+            // Every lane spans the full bucket width `w`; frames past the
+            // video's real length are within-video padding (counted by
+            // finalize(), allowed by the lenient validate flag).
+            b.place_at(lane * w, id, 0, w)?;
+            i += 1;
+        }
+        blocks.push(b);
+    }
+    // Decouple training order from the length-sorted fill order.
+    rng.shuffle(&mut blocks);
+    Ok(PackedDataset::finalize("bucket", block_len, blocks, split))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::dataset::synthetic::{generate, tiny_config};
+    use crate::packing::validate::validate;
+    use crate::util::Rng;
+
+    #[test]
+    fn zero_deletion_and_validates_leniently() {
+        let cfg = ExperimentConfig::default_config().dataset.scaled(0.05);
+        let ds = generate(&cfg, 3);
+        let packed = pack(&ds.train, 94, &mut Rng::new(7)).unwrap();
+        validate(&packed, &ds.train, true).unwrap();
+        assert_eq!(packed.stats.frames_deleted, 0);
+        assert_eq!(packed.stats.fragmented_videos, 0);
+        assert_eq!(
+            packed.stats.frames_kept + packed.stats.padding,
+            packed.stats.blocks * 94
+        );
+    }
+
+    #[test]
+    fn lanes_are_equal_width_and_aligned() {
+        let cfg = ExperimentConfig::default_config().dataset.scaled(0.03);
+        let ds = generate(&cfg, 4);
+        let packed = pack(&ds.train, 94, &mut Rng::new(2)).unwrap();
+        for b in &packed.blocks {
+            let w = b.segments[0].len;
+            for (lane, s) in b.segments.iter().enumerate() {
+                assert_eq!(s.len, w, "every lane spans the bucket width");
+                assert_eq!(s.at, lane * w, "lanes are contiguous");
+                assert_eq!(s.src_start, 0, "whole videos only");
+            }
+            assert!(w * b.segments.len() <= b.len);
+        }
+    }
+
+    #[test]
+    fn padding_well_below_naive() {
+        // Pad-to-bucket-max beats pad-to-global-max by construction.
+        let cfg = ExperimentConfig::default_config().dataset.scaled(0.2);
+        let ds = generate(&cfg, 2);
+        let packed = pack(&ds.train, 94, &mut Rng::new(3)).unwrap();
+        let naive_padding =
+            ds.train.videos.len() * 94 - ds.train.total_frames();
+        assert!(
+            packed.stats.padding * 2 < naive_padding,
+            "bucket {} vs naive {naive_padding}",
+            packed.stats.padding
+        );
+    }
+
+    #[test]
+    fn every_video_placed_exactly_once() {
+        let cfg = ExperimentConfig::default_config().dataset.scaled(0.02);
+        let ds = generate(&cfg, 5);
+        let packed = pack(&ds.train, 94, &mut Rng::new(9)).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for b in &packed.blocks {
+            for s in &b.segments {
+                assert!(seen.insert(s.video), "video {} twice", s.video);
+            }
+        }
+        assert_eq!(seen.len(), ds.train.videos.len());
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let cfg = ExperimentConfig::default_config().dataset.scaled(0.01);
+        let ds = generate(&cfg, 8);
+        let a = pack(&ds.train, 94, &mut Rng::new(4)).unwrap();
+        let b = pack(&ds.train, 94, &mut Rng::new(4)).unwrap();
+        assert_eq!(a.blocks, b.blocks);
+    }
+
+    #[test]
+    fn rejects_oversized_videos() {
+        let ds = generate(&tiny_config(), 1);
+        assert!(pack(&ds.train, 4, &mut Rng::new(0)).is_err());
+    }
+}

@@ -7,11 +7,48 @@
 //! `(166785 − 40289) + 37712 = 7464·22`, which pins `t_mix = 22`
 //! (DESIGN.md §4).
 
+use crate::config::PackingConfig;
 use crate::dataset::Split;
 use crate::error::{Error, Result};
 use crate::util::Rng;
 
-use super::{Block, Placement, PackedDataset};
+use super::{Block, PackContext, PackedDataset, Packer};
+
+/// Registry entry for the `mix pad` strategy.
+#[derive(Debug)]
+pub struct MixPad;
+
+impl Packer for MixPad {
+    fn name(&self) -> &'static str {
+        "mix_pad"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["mix", "mixpad"]
+    }
+
+    fn label(&self) -> &'static str {
+        "mix pad"
+    }
+
+    fn describe(&self) -> &'static str {
+        "pad/trim every video to the dataset mean length (paper Table I)"
+    }
+
+    fn native_block_len(&self, cfg: &PackingConfig) -> usize {
+        cfg.t_mix
+    }
+
+    fn within_video_padding(&self) -> bool {
+        true
+    }
+
+    fn pack(&self, split: &Split, ctx: &PackContext)
+            -> Result<PackedDataset> {
+        let mut rng = ctx.rng();
+        pack(split, ctx.t_mix, ctx.block_len, &mut rng)
+    }
+}
 
 /// Pad/trim every video to `t_mix`, group `block_len / t_mix` videos per
 /// block (`block_len % t_mix == 0`; `block_len == t_mix` reproduces the
@@ -37,12 +74,7 @@ pub fn pack(split: &Split, t_mix: usize, block_len: usize, rng: &mut Rng)
             // the video's real length are *within-video padding* (the
             // paper pads "by adding 0's or repeating the last entry").
             // finalize() counts only the overlap with [0, len) as real.
-            b.segments.push(Placement {
-                at: slot * t_mix,
-                video: v.id,
-                src_start: 0,
-                len: t_mix,
-            });
+            b.place_at(slot * t_mix, v.id, 0, t_mix)?;
         }
         blocks.push(b);
     }

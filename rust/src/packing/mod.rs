@@ -1,23 +1,33 @@
-//! Packing strategies — the paper's contribution and its three baselines.
+//! Packing strategies — one open [`Packer`] API over the paper's
+//! contribution, its baselines, and bin-packing strategies from the
+//! wider literature.
 //!
 //! A *packed dataset* is a list of fixed-length **blocks**; each block's
 //! time axis is filled by **placements** (contiguous spans of source
-//! videos) with any leftover slots as padding. The four strategies are the
-//! four columns of the paper's Table I:
+//! videos) with any leftover slots as padding. Registered strategies:
 //!
-//! | strategy               | module       | paper figure |
-//! |------------------------|--------------|--------------|
-//! | `0 padding` (naive)    | [`naive`]    | Fig 3        |
-//! | `sampling` (chunking)  | [`sampling`] | Fig 4        |
-//! | `mix pad`              | [`mixpad`]   | —            |
-//! | `block_pad` (BLoad)    | [`bload`]    | Fig 5, Fig 7 |
-//! | `online` (streaming)   | [`online`]   | Fig 7 (windowed) |
+//! | strategy               | module       | source                       |
+//! |------------------------|--------------|------------------------------|
+//! | `0 padding` (naive)    | [`naive`]    | paper Fig 3                  |
+//! | `sampling` (chunking)  | [`sampling`] | paper Fig 4                  |
+//! | `mix pad`              | [`mixpad`]   | paper Table I                |
+//! | `block_pad` (BLoad)    | [`bload`]    | paper Fig 5, Fig 7           |
+//! | `ffd`                  | [`ffd`]      | Krell et al., arXiv:2107.02027 |
+//! | `bucket`               | [`bucket`]   | Khomenko et al., DSMP 2016   |
 //!
-//! `online` is not a Table I column: it is the streaming variant of
-//! `block_pad` used by the [`crate::ingest`] service — the same uniform
-//! `Random*` draw over a sliding candidate pool of at most `W` pending
-//! sequences, emitting blocks incrementally with bounded padding instead
-//! of packing a materialized epoch.
+//! Every strategy is a [`Packer`] trait object in [`registry`], resolved
+//! by string key ([`by_name`]) from the CLI (`--strategy`), config files
+//! (`packing.strategy`), harnesses, and benches. Adding a strategy means
+//! writing its module and adding one line to the registry — Table I
+//! accounting, `bload strategies`, validation, and the invariant
+//! property tests pick it up with no further edits.
+//!
+//! Streaming is part of the same API: [`Packer::streaming`] returns the
+//! strategy's incremental [`StreamPacker`] when it has one. BLoad's is
+//! the windowed [`online::OnlinePacker`] driven by the [`crate::ingest`]
+//! service — the same uniform `Random*` draw over a sliding candidate
+//! pool of at most `W` pending sequences, emitting blocks incrementally
+//! with bounded padding instead of packing a materialized epoch.
 //!
 //! Each block carries the paper's **reset table** — the start offset of
 //! every source sequence inside the block — exported to the model as
@@ -25,18 +35,23 @@
 //! be zeroed exactly at sequence boundaries.
 
 pub mod bload;
+pub mod bucket;
+pub mod ffd;
 pub mod mixpad;
 pub mod naive;
 pub mod online;
 pub mod sampling;
+mod strategy;
 pub mod validate;
 pub mod viz;
 
-use crate::config::{PackingConfig, StrategyName};
+pub use strategy::{by_name, lookup, registry, PackContext, Packer,
+                   StreamPacker};
+
+use crate::config::PackingConfig;
 use crate::dataset::Split;
 use crate::error::{Error, Result};
 use crate::util::humanize::commas;
-use crate::util::Rng;
 
 /// A contiguous span of one source video placed inside a block.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -118,9 +133,37 @@ impl Block {
             .last()
             .map(|s| s.at + s.len)
             .unwrap_or(0);
+        self.place_at(at, video, src_start, len)
+    }
+
+    /// Place a span at an explicit offset, rejecting zero-length spans,
+    /// overlap with the (ordered) existing placements, and block
+    /// overflow. Strategies that lay out offsets themselves (lane
+    /// layouts such as mix pad and bucket) must use this instead of
+    /// pushing `Placement`s directly, so every placement is
+    /// bounds-checked at construction time.
+    pub fn place_at(&mut self, at: usize, video: u32, src_start: usize,
+                    len: usize) -> Result<()> {
+        if len == 0 {
+            return Err(Error::Packing(format!(
+                "zero-length span for video {video}"
+            )));
+        }
+        let cursor = self
+            .segments
+            .last()
+            .map(|s| s.at + s.len)
+            .unwrap_or(0);
+        if at < cursor {
+            return Err(Error::Packing(format!(
+                "span at {at} overlaps previous placement ending at \
+                 {cursor}"
+            )));
+        }
         if at + len > self.len {
             return Err(Error::Packing(format!(
-                "span of {len} does not fit at offset {at} in block of {}",
+                "span [{at}, {}) of video {video} exceeds block len {}",
+                at + len,
                 self.len
             )));
         }
@@ -181,34 +224,29 @@ impl PackedDataset {
     pub fn finalize(strategy: &'static str, block_len: usize,
                     blocks: Vec<Block>, split: &Split) -> PackedDataset {
         use std::collections::HashMap;
-        let total_slots: usize = blocks.iter().map(|b| b.len).sum();
-        let frames_kept: usize = blocks.iter().map(|b| b.used()).sum();
         let source_frames = split.total_frames();
-        let mut seg_count: HashMap<u32, usize> = HashMap::new();
-        for b in &blocks {
-            for s in &b.segments {
-                *seg_count.entry(s.video).or_default() += 1;
-            }
-        }
-        let fragmented = seg_count.values().filter(|&&n| n > 1).count();
         // Deleted = source frames that were never placed. Placements never
         // duplicate frames (validated separately), so kept counts are exact.
-        // mixpad *pads within* videos (a placement may extend past the
-        // video's last real frame), so real content is the part of each
-        // span that overlaps `[0, video_len)`.
+        // Lane strategies *pad within* videos (a placement may extend past
+        // the video's last real frame), so real content is the part of
+        // each span that overlaps `[0, video_len)`.
         let len_by_id: HashMap<u32, usize> = split
             .videos
             .iter()
             .map(|v| (v.id, v.len as usize))
             .collect();
+        let mut total_slots = 0usize;
         let mut placed_real = 0usize;
+        let mut seg_count: HashMap<u32, usize> = HashMap::new();
         for b in &blocks {
+            total_slots += b.len;
             for s in &b.segments {
+                *seg_count.entry(s.video).or_default() += 1;
                 let vlen = len_by_id.get(&s.video).copied().unwrap_or(0);
                 placed_real += s.len.min(vlen.saturating_sub(s.src_start));
             }
         }
-        let _ = frames_kept;
+        let fragmented = seg_count.values().filter(|&&n| n > 1).count();
         let frames_deleted = source_frames.saturating_sub(placed_real);
         PackedDataset {
             block_len,
@@ -227,37 +265,49 @@ impl PackedDataset {
     }
 }
 
-/// Pack a split with the named strategy.
-///
-/// `block_len` is the uniform output block length (the executable's `T`);
-/// pass `cfg.t_max` for paper-exact Table I accounting at full scale.
-pub fn pack_with_block_len(strategy: StrategyName, split: &Split,
-                           cfg: &PackingConfig, block_len: usize, seed: u64)
-                           -> Result<PackedDataset> {
-    let mut rng = Rng::new(seed ^ 0xB10C);
-    match strategy {
-        StrategyName::BLoad => bload::pack(split, block_len, &mut rng),
-        StrategyName::NaivePad => naive::pack(split, block_len),
-        StrategyName::Sampling => {
-            sampling::pack(split, cfg.t_block, block_len, &mut rng)
-        }
-        StrategyName::MixPad => {
-            mixpad::pack(split, cfg.t_mix, block_len, &mut rng)
+/// Shared preprocessing of the whole-video offline packers (ffd,
+/// bucket): reject splits whose longest video exceeds the block or that
+/// contain a zero-length video, then return `(len, id)` pairs sorted by
+/// decreasing length with an id tie-break so layouts are deterministic.
+pub(crate) fn whole_videos_desc(kind: &str, split: &Split, block_len: usize)
+                                -> Result<Vec<(usize, u32)>> {
+    let longest = split.max_len();
+    if longest > block_len {
+        return Err(Error::Packing(format!(
+            "{kind}: block_len {block_len} < longest video ({longest})"
+        )));
+    }
+    let mut order: Vec<(usize, u32)> = split
+        .videos
+        .iter()
+        .map(|v| (v.len as usize, v.id))
+        .collect();
+    order.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    if let Some(&(len, id)) = order.last() {
+        if len == 0 {
+            return Err(Error::Packing(format!(
+                "{kind}: video {id} has zero length"
+            )));
         }
     }
+    Ok(order)
 }
 
-/// Pack with each strategy's *native* block length (paper Table I
-/// accounting): `t_max` for naive/bload, `t_block` for sampling, `t_mix`
-/// for mix pad.
-pub fn pack(strategy: StrategyName, split: &Split, cfg: &PackingConfig,
+/// Pack a split with the given strategy at an explicit uniform block
+/// length (the executable's `T`); pass `cfg.t_max` for paper-exact
+/// Table I accounting at full scale.
+pub fn pack_with_block_len(packer: &dyn Packer, split: &Split,
+                           cfg: &PackingConfig, block_len: usize, seed: u64)
+                           -> Result<PackedDataset> {
+    packer.pack(split, &PackContext::new(cfg, block_len, seed))
+}
+
+/// Pack with the strategy's *native* block length (paper Table I
+/// accounting) — see [`Packer::native_block_len`].
+pub fn pack(packer: &dyn Packer, split: &Split, cfg: &PackingConfig,
             seed: u64) -> Result<PackedDataset> {
-    let block_len = match strategy {
-        StrategyName::BLoad | StrategyName::NaivePad => cfg.t_max,
-        StrategyName::Sampling => cfg.t_block,
-        StrategyName::MixPad => cfg.t_mix,
-    };
-    pack_with_block_len(strategy, split, cfg, block_len, seed)
+    pack_with_block_len(packer, split, cfg, packer.native_block_len(cfg),
+                        seed)
 }
 
 #[cfg(test)]
@@ -285,5 +335,17 @@ mod tests {
         let mut b = Block::new(5);
         b.push(1, 0, 3).unwrap();
         assert!(b.push(2, 0, 3).is_err());
+    }
+
+    #[test]
+    fn place_at_rejects_overlap_overflow_and_empty() {
+        let mut b = Block::new(10);
+        b.place_at(2, 1, 0, 3).unwrap();
+        assert!(b.place_at(4, 2, 0, 2).is_err(), "overlaps [2, 5)");
+        assert!(b.place_at(8, 3, 0, 3).is_err(), "exceeds block len");
+        assert!(b.place_at(5, 4, 0, 0).is_err(), "zero-length span");
+        b.place_at(6, 5, 0, 4).unwrap();
+        assert_eq!(b.used(), 7);
+        assert_eq!(b.reset_table(), vec![2, 6]);
     }
 }

@@ -2,10 +2,42 @@
 //! block, zero-padded to `T_max`. Solves the DDP stall, wastes ~4× compute
 //! on Action Genome (Table I: 534,831 padded frames).
 
+use crate::config::PackingConfig;
 use crate::dataset::Split;
 use crate::error::{Error, Result};
 
-use super::{Block, PackedDataset};
+use super::{Block, PackContext, PackedDataset, Packer};
+
+/// Registry entry for the naive `0 padding` strategy.
+#[derive(Debug)]
+pub struct NaivePad;
+
+impl Packer for NaivePad {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["0_padding", "zero_pad", "naive_pad", "pad"]
+    }
+
+    fn label(&self) -> &'static str {
+        "0 padding"
+    }
+
+    fn describe(&self) -> &'static str {
+        "one zero-padded T_max block per video (paper Fig 3)"
+    }
+
+    fn native_block_len(&self, cfg: &PackingConfig) -> usize {
+        cfg.t_max
+    }
+
+    fn pack(&self, split: &Split, ctx: &PackContext)
+            -> Result<PackedDataset> {
+        pack(split, ctx.block_len)
+    }
+}
 
 /// One block per video, padded to `t_max`.
 pub fn pack(split: &Split, t_max: usize) -> Result<PackedDataset> {

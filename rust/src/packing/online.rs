@@ -1,5 +1,8 @@
 //! Online (streaming) BLoad — windowed block packing over an unbounded
-//! sequence stream.
+//! sequence stream. This is the BLoad strategy's streaming mode: the
+//! [`crate::ingest`] service obtains it through the registry as
+//! `by_name("bload").streaming(ctx)` (a boxed
+//! [`StreamPacker`](super::StreamPacker)), not as a separate code path.
 //!
 //! The paper's Fig 7 algorithm materializes the full length dictionary
 //! `L_dict` before packing an epoch. That rules out streaming ingest, where
@@ -268,6 +271,31 @@ impl OnlinePacker {
         out.push(block);
         self.remaining = self.cfg.t_max;
         self.open_age = 0;
+    }
+}
+
+/// [`OnlinePacker`] is the BLoad strategy's [`super::StreamPacker`]: the
+/// trait surface the ingest service drives, forwarding to the inherent
+/// methods above.
+impl super::StreamPacker for OnlinePacker {
+    fn push(&mut self, id: u32, len: usize) -> Result<Vec<Block>> {
+        OnlinePacker::push(self, id, len)
+    }
+
+    fn tick(&mut self) -> Vec<Block> {
+        OnlinePacker::tick(self)
+    }
+
+    fn pending(&self) -> usize {
+        OnlinePacker::pending(self)
+    }
+
+    fn stats(&self) -> &OnlineStats {
+        OnlinePacker::stats(self)
+    }
+
+    fn finish(self: Box<Self>) -> (Vec<Block>, OnlineStats) {
+        OnlinePacker::finish(*self)
     }
 }
 

@@ -9,11 +9,44 @@
 //! deletes ≈ 92 k of 167 k frames — the paper's "discarding nearly 2/3 of
 //! the data".
 
+use crate::config::PackingConfig;
 use crate::dataset::Split;
 use crate::error::{Error, Result};
 use crate::util::Rng;
 
-use super::{Block, PackedDataset};
+use super::{Block, PackContext, PackedDataset, Packer};
+
+/// Registry entry for the `sampling` (chunking) strategy.
+#[derive(Debug)]
+pub struct Sampling;
+
+impl Packer for Sampling {
+    fn name(&self) -> &'static str {
+        "sampling"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["chunk", "chunking"]
+    }
+
+    fn label(&self) -> &'static str {
+        "sampling"
+    }
+
+    fn describe(&self) -> &'static str {
+        "fixed t_block chunks, remainders deleted (paper Fig 4)"
+    }
+
+    fn native_block_len(&self, cfg: &PackingConfig) -> usize {
+        cfg.t_block
+    }
+
+    fn pack(&self, split: &Split, ctx: &PackContext)
+            -> Result<PackedDataset> {
+        let mut rng = ctx.rng();
+        pack(split, ctx.t_block, ctx.block_len, &mut rng)
+    }
+}
 
 /// Chunk into `t_block` pieces, group whole chunks into blocks of
 /// `block_len` slots (`block_len % t_block == 0`; pass `block_len ==

@@ -1,0 +1,279 @@
+//! The open strategy API: one [`Packer`] trait and a runtime registry.
+//!
+//! Every packing strategy — the paper's four Table I columns and any
+//! later addition — implements [`Packer`] in its own module and appears
+//! as exactly one line in [`registry`]. Consumers (`harness::table1`,
+//! `harness::streaming`, the CLI, `benches/packing.rs`, the config
+//! layer) resolve strategies by string key through the registry instead
+//! of matching a closed enum, so landing a new strategy touches only its
+//! module plus that one registry line.
+//!
+//! Offline and streaming packing share the abstraction: a strategy that
+//! can pack an unbounded arrival stream (today: BLoad's windowed
+//! [`super::online::OnlinePacker`]) exposes it through
+//! [`Packer::streaming`] as a [`StreamPacker`], which the
+//! [`crate::ingest`] service drives — the online path is the BLoad
+//! packer's streaming mode, not a parallel code path.
+
+use crate::config::PackingConfig;
+use crate::dataset::Split;
+use crate::error::{Error, Result};
+use crate::util::Rng;
+
+use super::online::{OnlineConfig, OnlineStats};
+use super::{Block, PackedDataset};
+
+/// Everything a strategy needs to pack: geometry knobs (copied out of
+/// [`PackingConfig`] so streaming callers need no config document), the
+/// uniform output block length, the seed, and the streaming-window knobs
+/// used by [`Packer::streaming`] implementations.
+#[derive(Debug, Clone)]
+pub struct PackContext {
+    /// Uniform output block length (the executable's `T`).
+    pub block_len: usize,
+    /// Chunk length for chunking strategies (`packing.t_block`).
+    pub t_block: usize,
+    /// Target lane length for mix pad (`packing.t_mix`).
+    pub t_mix: usize,
+    /// Seed of the strategy's deterministic RNG.
+    pub seed: u64,
+    /// Sliding-window watermark for streaming modes.
+    pub window: usize,
+    /// Latency flush in ticks for streaming modes (0 = off).
+    pub max_latency: usize,
+}
+
+impl PackContext {
+    /// Context for offline packing at an explicit block length. The
+    /// streaming knobs inherit [`OnlineConfig::new`]'s tuned defaults so
+    /// they live in exactly one place.
+    pub fn new(cfg: &PackingConfig, block_len: usize, seed: u64)
+               -> PackContext {
+        let stream_defaults = OnlineConfig::new(block_len);
+        PackContext {
+            block_len,
+            t_block: cfg.t_block,
+            t_mix: cfg.t_mix,
+            seed,
+            window: stream_defaults.window,
+            max_latency: stream_defaults.max_latency,
+        }
+    }
+
+    /// Context for a streaming session (no offline chunk/mix geometry;
+    /// those knobs default to `block_len`).
+    pub fn streaming(block_len: usize, window: usize, max_latency: usize,
+                     seed: u64) -> PackContext {
+        PackContext {
+            block_len,
+            t_block: block_len,
+            t_mix: block_len,
+            seed,
+            window,
+            max_latency,
+        }
+    }
+
+    /// The strategy RNG for this context — the single derivation point
+    /// of the `seed ^ 0xB10C` whitening every strategy shares, so
+    /// identical seeds keep producing identical layouts across the
+    /// registry.
+    pub fn rng(&self) -> Rng {
+        Rng::new(self.seed ^ 0xB10C)
+    }
+}
+
+/// One packing strategy, registered in [`registry`].
+///
+/// Implementations are stateless unit structs; all run state lives in
+/// the [`PackContext`] and locals, so a single `&'static` instance
+/// serves every caller.
+pub trait Packer: Sync + std::fmt::Debug {
+    /// Canonical registry key (`--strategy <name>`, `packing.strategy`).
+    fn name(&self) -> &'static str;
+
+    /// Accepted spellings besides [`name`](Packer::name) (config
+    /// compatibility; matched case-insensitively).
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// Column label used in the paper's Table I rendering.
+    fn label(&self) -> &'static str;
+
+    /// One-line description with the source citation (shown by
+    /// `bload strategies`).
+    fn describe(&self) -> &'static str;
+
+    /// The strategy's *native* block length for paper-exact Table I
+    /// accounting (`t_max` for whole-video packers, `t_block`/`t_mix`
+    /// for the chunking/lane baselines).
+    fn native_block_len(&self, cfg: &PackingConfig) -> usize;
+
+    /// Whether placements may extend past their video's last real frame
+    /// (within-video padding, validated leniently — mix pad and bucket
+    /// lanes).
+    fn within_video_padding(&self) -> bool {
+        false
+    }
+
+    /// Pack a materialized split into uniform `ctx.block_len` blocks.
+    fn pack(&self, split: &Split, ctx: &PackContext) -> Result<PackedDataset>;
+
+    /// The strategy's streaming mode over an unbounded arrival stream,
+    /// when it has one. `None` means offline-only; `Some(Err)` surfaces
+    /// invalid streaming knobs synchronously.
+    fn streaming(&self, _ctx: &PackContext)
+                 -> Option<Result<Box<dyn StreamPacker>>> {
+        None
+    }
+}
+
+/// Incremental packer over an unbounded sequence stream — the streaming
+/// face of a [`Packer`] (see [`Packer::streaming`]), driven by the
+/// [`crate::ingest`] service.
+///
+/// Session accounting uses [`OnlineStats`] for every implementation:
+/// its counters (received/placed/blocks/slots/padding plus
+/// capacity/latency/end-of-stream flush reasons) describe any bounded
+/// streaming packer's lifecycle, not BLoad specifically — a new
+/// implementation fills the flush counters for whichever of the three
+/// policies it applies. The type lives in [`super::online`] (its first
+/// implementor) and is re-consumed by `ingest::IngestStats` unchanged.
+pub trait StreamPacker: Send {
+    /// Offer one sequence; returns every block the arrival completed.
+    fn push(&mut self, id: u32, len: usize) -> Result<Vec<Block>>;
+
+    /// Advance the latency clock one tick; returns any flushed block.
+    fn tick(&mut self) -> Vec<Block>;
+
+    /// Sequences pending (accepted but not yet in an emitted block).
+    fn pending(&self) -> usize;
+
+    /// Running accounting of the session.
+    fn stats(&self) -> &OnlineStats;
+
+    /// End-of-stream: drain everything pending, returning the tail
+    /// blocks and the final stats.
+    fn finish(self: Box<Self>) -> (Vec<Block>, OnlineStats);
+}
+
+/// All registered strategies, Table I columns first, extensions after.
+/// Adding a strategy = its module + one line here.
+pub fn registry() -> &'static [&'static dyn Packer] {
+    static REGISTRY: [&'static dyn Packer; 6] = [
+        &super::naive::NaivePad,
+        &super::sampling::Sampling,
+        &super::mixpad::MixPad,
+        &super::bload::BLoad,
+        &super::ffd::Ffd,
+        &super::bucket::Bucket,
+    ];
+    &REGISTRY
+}
+
+/// Case-insensitive lookup by key, alias, or Table I label.
+pub fn lookup(name: &str) -> Option<&'static dyn Packer> {
+    let k = name.trim().to_ascii_lowercase();
+    registry().iter().copied().find(|p| {
+        p.name() == k
+            || p.label() == k
+            || p.aliases().iter().any(|&a| a == k)
+    })
+}
+
+/// [`lookup`] that errors with the list of known keys.
+pub fn by_name(name: &str) -> Result<&'static dyn Packer> {
+    lookup(name).ok_or_else(|| {
+        let known: Vec<&str> = registry().iter().map(|p| p.name()).collect();
+        Error::Config(format!(
+            "unknown packing strategy '{name}' (known: {})",
+            known.join("|")
+        ))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::validate::validate;
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::dataset::synthetic::generate;
+
+    #[test]
+    fn registry_keys_unique_and_lookup_resolves_aliases() {
+        // Every spelling lookup() accepts — key, label, alias — must
+        // resolve to exactly one entry; a cross-entry collision would
+        // silently shadow whichever strategy registers later.
+        let mut claimed: std::collections::HashMap<String, &str> =
+            Default::default();
+        for p in registry() {
+            let mut mine: Vec<String> =
+                vec![p.name().to_string(), p.label().to_string()];
+            mine.extend(p.aliases().iter().map(|a| a.to_string()));
+            mine.sort_unstable();
+            mine.dedup(); // name == label within one entry is fine
+            for spelling in mine {
+                if let Some(other) =
+                    claimed.insert(spelling.clone(), p.name())
+                {
+                    panic!(
+                        "spelling '{spelling}' claimed by both {other} \
+                         and {}",
+                        p.name()
+                    );
+                }
+            }
+        }
+        for &(alias, key) in &[
+            ("bload", "bload"),
+            ("block_pad", "bload"),
+            ("BLOCK", "bload"),
+            ("0_padding", "naive"),
+            ("chunking", "sampling"),
+            ("mix", "mix_pad"),
+            ("first_fit_decreasing", "ffd"),
+            ("bucketing", "bucket"),
+        ] {
+            assert_eq!(lookup(alias).unwrap().name(), key, "{alias}");
+        }
+        assert!(lookup("nope").is_none());
+        let err = by_name("nope").unwrap_err().to_string();
+        assert!(err.contains("bload"), "{err}");
+    }
+
+    #[test]
+    fn every_strategy_packs_and_validates_at_native_length() {
+        let cfg = ExperimentConfig::default_config();
+        let ds = generate(&cfg.dataset.scaled(0.01), 5);
+        for &p in registry() {
+            let packed =
+                super::super::pack(p, &ds.train, &cfg.packing, 5)
+                    .unwrap_or_else(|e| panic!("{}: {e}", p.name()));
+            validate(&packed, &ds.train, p.within_video_padding())
+                .unwrap_or_else(|e| panic!("{}: {e}", p.name()));
+            assert_eq!(packed.stats.strategy, p.label());
+            assert_eq!(packed.block_len,
+                       p.native_block_len(&cfg.packing));
+        }
+    }
+
+    #[test]
+    fn only_bload_has_streaming_mode_today() {
+        let cfg = ExperimentConfig::default_config().packing;
+        let ctx = PackContext::new(&cfg, cfg.t_max, 0);
+        for &p in registry() {
+            let has = p.streaming(&ctx).is_some();
+            assert_eq!(has, p.name() == "bload", "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn streaming_context_defaults_cover_block_len() {
+        let ctx = PackContext::streaming(94, 32, 2, 7);
+        assert_eq!(ctx.block_len, 94);
+        assert_eq!(ctx.window, 32);
+        assert_eq!(ctx.max_latency, 2);
+        assert_eq!(ctx.t_block, 94);
+    }
+}

@@ -276,9 +276,10 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{ExperimentConfig, PackingConfig, StrategyName};
+    use crate::config::{ExperimentConfig, PackingConfig};
     use crate::dataset::synthetic::generate;
-    use crate::packing::{pack, Block, PackedDataset, Placement};
+    use crate::packing::{by_name, pack, registry, Block, PackedDataset,
+                         Packer, Placement};
 
     fn small_split() -> crate::dataset::Split {
         let cfg = ExperimentConfig::default_config().dataset.scaled(0.01);
@@ -294,11 +295,11 @@ mod tests {
         let split = small_split();
         let cfg = pack_cfg();
         for seed in 0..25 {
-            for strat in StrategyName::all() {
+            for &strat in registry() {
                 let packed = pack(strat, &split, &cfg, seed).unwrap();
-                let allow = strat == StrategyName::MixPad;
+                let allow = strat.within_video_padding();
                 validate(&packed, &split, allow).unwrap_or_else(|e| {
-                    panic!("{strat} seed {seed}: {e}")
+                    panic!("{} seed {seed}: {e}", strat.name())
                 });
             }
         }
@@ -354,7 +355,7 @@ mod tests {
         let split = small_split();
         let cfg = pack_cfg();
         let mut packed =
-            pack(StrategyName::BLoad, &split, &cfg, 0).unwrap();
+            pack(by_name("bload").unwrap(), &split, &cfg, 0).unwrap();
         packed.stats.padding += 1;
         assert!(validate(&packed, &split, false).is_err());
     }
@@ -363,7 +364,8 @@ mod tests {
     fn stream_accepts_offline_bload_blocks() {
         let split = small_split();
         let packed =
-            pack(StrategyName::BLoad, &split, &pack_cfg(), 3).unwrap();
+            pack(by_name("bload").unwrap(), &split, &pack_cfg(), 3)
+                .unwrap();
         let summary =
             validate_stream(packed.blocks.iter(), &split, packed.block_len)
                 .unwrap();

@@ -83,9 +83,9 @@ pub fn render_packed(packed: &PackedDataset, split: &Split, max_rows: usize)
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{ExperimentConfig, StrategyName};
+    use crate::config::ExperimentConfig;
     use crate::dataset::synthetic::{generate, tiny_config};
-    use crate::packing::pack;
+    use crate::packing::{by_name, pack};
 
     #[test]
     fn renders_toy_dataset_and_blocks() {
@@ -97,7 +97,8 @@ mod tests {
             c.t_max = 6;
             c
         };
-        let packed = pack(StrategyName::BLoad, &ds.train, &cfg, 0).unwrap();
+        let packed =
+            pack(by_name("bload").unwrap(), &ds.train, &cfg, 0).unwrap();
         let fig5 = render_packed(&packed, &ds.train, 50);
         assert!(fig5.contains("block   0"), "{fig5}");
         assert!(fig5.contains("reset="), "{fig5}");
@@ -112,7 +113,8 @@ mod tests {
             c.t_max = 6;
             c
         };
-        let packed = pack(StrategyName::NaivePad, &ds.train, &cfg, 0).unwrap();
+        let packed =
+            pack(by_name("naive").unwrap(), &ds.train, &cfg, 0).unwrap();
         let art = render_packed(&packed, &ds.train, 50);
         assert!(art.contains('░'), "naive padding must be visible\n{art}");
     }

@@ -28,7 +28,7 @@ fn inspect_small_scale() {
 
 #[test]
 fn pack_all_strategies_small_scale() {
-    for s in ["bload", "naive", "sampling", "mix_pad"] {
+    for s in ["bload", "naive", "sampling", "mix_pad", "ffd", "bucket"] {
         assert_eq!(
             run(&argv(&["pack", "--strategy", s, "--scale", "0.02"]))
                 .unwrap(),
@@ -39,6 +39,12 @@ fn pack_all_strategies_small_scale() {
 }
 
 #[test]
+fn strategies_lists_registry() {
+    assert_eq!(run(&argv(&["strategies"])).unwrap(), 0);
+    assert!(run(&argv(&["strategies", "--bogus", "1"])).is_err());
+}
+
+#[test]
 fn pack_rejects_unknown_strategy_and_flags() {
     assert!(run(&argv(&["pack", "--strategy", "bogus"])).is_err());
     assert!(run(&argv(&["pack", "--bogus-flag", "1"])).is_err());
@@ -46,7 +52,8 @@ fn pack_rejects_unknown_strategy_and_flags() {
 
 #[test]
 fn pack_viz_all_figures() {
-    for s in ["none", "bload", "naive", "sampling", "mix_pad"] {
+    for s in ["none", "bload", "naive", "sampling", "mix_pad", "ffd",
+              "bucket"] {
         assert_eq!(
             run(&argv(&["pack-viz", "--strategy", s])).unwrap(),
             0,
@@ -107,7 +114,7 @@ fn ingest_rejects_bad_flags() {
 #[test]
 fn table1_pipeline_level() {
     // Pipeline accounting only (no --full): packs the full AG-Synth split
-    // four ways and prints the paper-side table.
+    // with every registered strategy and prints the paper-side table.
     assert_eq!(run(&argv(&["table1"])).unwrap(), 0);
 }
 

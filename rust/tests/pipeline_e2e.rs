@@ -6,10 +6,11 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use bload::config::{ExperimentConfig, StrategyName};
+use bload::config::ExperimentConfig;
 use bload::dataset::synthetic::generate;
 use bload::loader::{EpochPlan, Prefetcher};
-use bload::packing::{pack, pack_with_block_len, validate::validate};
+use bload::packing::{by_name, pack, pack_with_block_len, registry,
+                     validate::validate, Packer};
 use bload::util::Rng;
 
 #[test]
@@ -18,7 +19,7 @@ fn bload_pipeline_conserves_every_frame() {
     let dcfg = cfg.dataset.scaled(0.02);
     let ds = generate(&dcfg, 7);
     let packed =
-        Arc::new(pack(StrategyName::BLoad, &ds.train, &cfg.packing, 7)
+        Arc::new(pack(by_name("bload").unwrap(), &ds.train, &cfg.packing, 7)
             .unwrap());
     let split = Arc::new(ds.train);
 
@@ -51,7 +52,7 @@ fn multi_rank_epoch_covers_disjoint_blocks_with_equal_steps() {
     let cfg = ExperimentConfig::default_config();
     let ds = generate(&cfg.dataset.scaled(0.02), 1);
     let packed =
-        Arc::new(pack(StrategyName::BLoad, &ds.train, &cfg.packing, 1)
+        Arc::new(pack(by_name("bload").unwrap(), &ds.train, &cfg.packing, 1)
             .unwrap());
     let ranks = 8;
     let mut seen = std::collections::HashSet::new();
@@ -72,12 +73,12 @@ fn all_strategies_produce_loadable_batches() {
     let dcfg = bload::harness::scaled_dataset(120, 30, 0.6);
     let pcfg = bload::harness::scaled_packing();
     let ds = generate(&dcfg, 3);
-    for strategy in StrategyName::all() {
+    for &strategy in registry() {
         let packed = Arc::new(
             pack_with_block_len(strategy, &ds.train, &pcfg, pcfg.t_max, 3)
                 .unwrap(),
         );
-        validate(&packed, &ds.train, strategy == StrategyName::MixPad)
+        validate(&packed, &ds.train, strategy.within_video_padding())
             .unwrap();
         let split = Arc::new(ds.train.clone());
         let plan = EpochPlan::new(&packed, 2, 0, 2, true, 3, 0);
@@ -88,16 +89,20 @@ fn all_strategies_produce_loadable_batches() {
                                        2, 2);
         let b = pf.next().unwrap().unwrap();
         assert_eq!(b.block_len, pcfg.t_max);
-        assert!(b.real_frames > 0, "{strategy}");
+        assert!(b.real_frames > 0, "{}", strategy.name());
         pf.shutdown();
     }
     let _ = cfg;
 }
 
 #[test]
-fn randomized_strategy_invariants_hold() {
-    // Property sweep: over random geometries and seeds, every strategy's
-    // output validates and its conservation law holds.
+fn randomized_registry_invariants_hold() {
+    // Property sweep over the FULL strategy registry: for random
+    // geometries and seeds, every registered strategy's output passes
+    // `packing::validate` (no overlap, in-bounds) and its accounting adds
+    // up — `kept + padding == total_slots` and
+    // `kept + deleted == source frames`. A newly registered strategy is
+    // covered here with zero edits.
     let mut rng = Rng::new(0xFEED);
     for case in 0..30 {
         let mut dcfg = bload::harness::scaled_dataset(
@@ -111,23 +116,26 @@ fn randomized_strategy_invariants_hold() {
         pcfg.t_max = dcfg.max_len.max(4);
         pcfg.t_block = rng.range(1, pcfg.t_max / 2 + 2);
         pcfg.t_mix = rng.range(1, pcfg.t_max + 1);
-        for strategy in StrategyName::all() {
+        for &strategy in registry() {
+            let key = strategy.name();
             let packed = pack(strategy, &ds.train, &pcfg, rng.next_u64())
-                .unwrap_or_else(|e| panic!("case {case} {strategy}: {e}"));
-            validate(&packed, &ds.train, strategy == StrategyName::MixPad)
-                .unwrap_or_else(|e| panic!("case {case} {strategy}: {e}"));
+                .unwrap_or_else(|e| panic!("case {case} {key}: {e}"));
+            validate(&packed, &ds.train, strategy.within_video_padding())
+                .unwrap_or_else(|e| panic!("case {case} {key}: {e}"));
             let s = &packed.stats;
             let total = ds.train.total_frames();
+            assert_eq!(s.frames_kept + s.padding, s.total_slots,
+                       "case {case} {key}: kept + padding == slots");
             assert_eq!(s.frames_kept + s.frames_deleted, total,
-                       "case {case} {strategy}: conservation");
-            match strategy {
-                StrategyName::BLoad | StrategyName::NaivePad => {
-                    assert_eq!(s.frames_deleted, 0);
+                       "case {case} {key}: conservation");
+            match key {
+                // Whole-video packers never delete a frame.
+                "bload" | "naive" | "ffd" | "bucket" => {
+                    assert_eq!(s.frames_deleted, 0, "case {case} {key}");
                 }
-                StrategyName::Sampling => {
-                    assert_eq!(s.padding, 0);
-                }
-                StrategyName::MixPad => {}
+                // Chunking fills every emitted slot exactly.
+                "sampling" => assert_eq!(s.padding, 0, "case {case}"),
+                _ => {}
             }
         }
     }
@@ -141,8 +149,8 @@ fn batches_are_bit_identical_across_runs() {
     let collect = || -> Vec<f32> {
         let ds = generate(&dcfg, 11);
         let packed = Arc::new(
-            pack_with_block_len(StrategyName::BLoad, &ds.train, &pcfg, 24,
-                                11)
+            pack_with_block_len(by_name("bload").unwrap(), &ds.train, &pcfg,
+                                24, 11)
             .unwrap(),
         );
         let split = Arc::new(ds.train);
@@ -165,7 +173,8 @@ fn sampling_chunks_cover_prefixes_only() {
     let pcfg = bload::harness::scaled_packing();
     let ds = generate(&dcfg, 5);
     let packed =
-        pack_with_block_len(StrategyName::Sampling, &ds.train, &pcfg, 24, 5)
+        pack_with_block_len(by_name("sampling").unwrap(), &ds.train, &pcfg,
+                            24, 5)
             .unwrap();
     let mut covered: HashMap<u32, Vec<(usize, usize)>> = HashMap::new();
     for b in &packed.blocks {

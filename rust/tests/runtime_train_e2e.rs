@@ -4,10 +4,10 @@
 
 use std::sync::Arc;
 
-use bload::config::{EvalConfig, ExperimentConfig, StrategyName};
+use bload::config::{EvalConfig, ExperimentConfig};
 use bload::dataset::synthetic::generate;
 use bload::harness::{scaled_dataset, scaled_packing};
-use bload::packing::pack_with_block_len;
+use bload::packing::{by_name, pack_with_block_len};
 use bload::runtime::{ArtifactManifest, Engine};
 use bload::train::Trainer;
 
@@ -28,11 +28,13 @@ fn two_epoch_training_reduces_loss_and_evaluates() {
     let pcfg = scaled_packing();
     let ds = generate(&dcfg, 0);
     let packed = Arc::new(
-        pack_with_block_len(StrategyName::BLoad, &ds.train, &pcfg, 24, 0)
+        pack_with_block_len(by_name("bload").unwrap(), &ds.train, &pcfg,
+                            24, 0)
             .unwrap(),
     );
     let packed_test = Arc::new(
-        pack_with_block_len(StrategyName::BLoad, &ds.test, &pcfg, 24, 1)
+        pack_with_block_len(by_name("bload").unwrap(), &ds.test, &pcfg,
+                            24, 1)
             .unwrap(),
     );
     let mut cfg = ExperimentConfig::default_config();

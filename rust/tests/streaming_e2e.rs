@@ -6,14 +6,14 @@
 
 use std::sync::Arc;
 
-use bload::config::{ExperimentConfig, StrategyName};
+use bload::config::ExperimentConfig;
 use bload::dataset::store::{StoreReader, StoreWriter};
 use bload::dataset::synthetic::generate;
 use bload::ddp::sim;
 use bload::harness::streaming::{self, StreamingOptions};
 use bload::ingest::{self, IngestConfig};
 use bload::loader::Prefetcher;
-use bload::packing::{pack, Block};
+use bload::packing::{by_name, pack, Block};
 
 #[test]
 fn store_reader_feeds_service_and_prefetcher_delivers_every_frame() {
@@ -156,7 +156,8 @@ fn online_vs_offline_padding_is_bounded_by_naive_across_windows() {
     let naive_slots = ds.train.videos.len() * cfg.packing.t_max;
     let naive_padding = naive_slots - ds.train.total_frames();
     let offline =
-        pack(StrategyName::BLoad, &ds.train, &cfg.packing, 1).unwrap();
+        pack(by_name("bload").unwrap(), &ds.train, &cfg.packing, 1)
+            .unwrap();
     for window in [8usize, 64, 512] {
         let mut ocfg =
             bload::packing::online::OnlineConfig::new(cfg.packing.t_max);
