@@ -2,14 +2,19 @@
 //!
 //! Generates the 8-video toy dataset (Fig 1), packs it with every
 //! strategy in the registry, prints the layouts and the Table-I-style
-//! stats, and shows the reset table the recurrent model consumes.
+//! stats, shows the reset table the recurrent model consumes, and
+//! finishes by materializing one epoch of device batches through the
+//! unified `DataLoaderBuilder` pipeline.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
+use std::sync::Arc;
+
 use bload::config::ExperimentConfig;
 use bload::dataset::synthetic::{generate, tiny_config};
+use bload::loader::DataLoaderBuilder;
 use bload::packing::{by_name, pack, registry, validate::validate, viz,
                      Packer};
 
@@ -40,5 +45,23 @@ fn main() -> bload::Result<()> {
              block.seg_ids());
     println!("block 0 frame mask:                             {:?}",
              block.frame_mask());
+
+    // And what training actually consumes: one epoch of device batches
+    // through the unified loader (source → builder → DataLoader).
+    let split = Arc::new(ds.train);
+    let mut loader = DataLoaderBuilder::new()
+        .batch(2)
+        .workers(2)
+        .planned(Arc::clone(&split), Arc::new(packed), 0)?;
+    println!("\n— the unified loader: one epoch of device batches —");
+    while let Some(b) = loader.next() {
+        let b = b?;
+        println!(
+            "step: blocks {:?} | {} real frames / {} slots | feats \
+             [{},{},{},{}]",
+            b.block_ids, b.real_frames, b.slots, b.batch, b.block_len,
+            b.objects, b.feat_dim
+        );
+    }
     Ok(())
 }

@@ -10,8 +10,8 @@
 //!    ingest queue;
 //! 3. the service packs arrivals incrementally with windowed BLoad and
 //!    deals finished blocks round-robin to 2 DDP ranks in equal counts;
-//! 4. rank 0's block stream feeds `Prefetcher::spawn_stream`, so device
-//!    batches materialize while upstream is still packing;
+//! 4. rank 0's block stream feeds a `DataLoaderBuilder::stream` loader,
+//!    so device batches materialize while upstream is still packing;
 //! 5. every delivered block passes the incremental `validate_stream`
 //!    invariants, and the online padding ratio is compared against
 //!    offline BLoad on the same split (must be within 2x).
@@ -28,7 +28,7 @@ use bload::dataset::store::{StoreReader, StoreWriter};
 use bload::dataset::synthetic::generate;
 use bload::dataset::VideoMeta;
 use bload::ingest::{self, IngestConfig};
-use bload::loader::Prefetcher;
+use bload::loader::DataLoaderBuilder;
 use bload::packing::validate::StreamValidator;
 use bload::packing::{by_name, pack, Block};
 use bload::util::humanize::{bytes, commas, rate};
@@ -115,7 +115,7 @@ fn main() -> bload::Result<()> {
     }
     drop(producer);
 
-    // Rank 0: tee blocks into the streaming prefetcher (device batches
+    // Rank 0: tee blocks into a streaming loader (device batches
     // materialize while packing runs); rank 1: collect for validation.
     let mut collectors = Vec::new();
     let rx0 = svc.take_output(0).expect("rank 0 output");
@@ -125,16 +125,19 @@ fn main() -> bload::Result<()> {
     collectors
         .push(std::thread::spawn(move || rx1.iter().collect::<Vec<Block>>()));
 
-    let mut pf =
-        Prefetcher::spawn_stream(Arc::clone(&split), brx, t_max, 2, 4, 4);
+    let mut loader = DataLoaderBuilder::new()
+        .batch(2)
+        .workers(4)
+        .depth(4)
+        .stream(Arc::clone(&split), brx, t_max)?;
     let mut batches = 0usize;
     let mut frames = 0usize;
-    while let Some(b) = pf.next() {
+    while let Some(b) = loader.next() {
         let b = b?;
         batches += 1;
         frames += b.real_frames;
     }
-    pf.shutdown();
+    loader.shutdown();
 
     let dealt = reader.join().expect("reader thread panicked")?;
     println!("shard streamed once: {dealt} videos dealt to producers");

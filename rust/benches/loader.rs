@@ -1,12 +1,13 @@
-//! Streaming-loader throughput: frames/s through the prefetcher at
-//! several worker counts and prefetch depths (backpressure on).
+//! Unified-loader throughput: frames/s through the builder pipeline at
+//! several worker counts and prefetch depths (backpressure on), plus the
+//! per-worker video-cache capacity sweep on a chunked packing.
 
 use std::sync::Arc;
 
 use bload::benchkit::Bencher;
 use bload::config::ExperimentConfig;
 use bload::dataset::synthetic::generate;
-use bload::loader::{EpochPlan, Prefetcher};
+use bload::loader::DataLoaderBuilder;
 use bload::packing::{by_name, pack};
 
 fn main() {
@@ -23,22 +24,25 @@ fn main() {
         for depth in [2usize, 8] {
             let name = format!("loader/workers{workers}/depth{depth}");
             bench.run(&name, frames, "frames", || {
-                let plan = EpochPlan::new(&packed, 1, 0, 2, true, 0, 0);
-                let mut pf = Prefetcher::spawn(Arc::clone(&split),
-                                               Arc::clone(&packed), &plan,
-                                               workers, depth);
+                let mut loader = DataLoaderBuilder::new()
+                    .batch(2)
+                    .workers(workers)
+                    .depth(depth)
+                    .planned(Arc::clone(&split), Arc::clone(&packed), 0)
+                    .unwrap();
                 let mut n = 0usize;
-                while let Some(b) = pf.next() {
+                while let Some(b) = loader.next() {
                     n += b.unwrap().real_frames;
                 }
-                pf.shutdown();
                 n
             });
         }
     }
 
     // Chunked packing hits the per-worker video cache hard: every long
-    // video appears in several blocks (§Perf L3 optimization #3).
+    // video appears in several blocks (§Perf L3 optimization #3). The
+    // `loader.video_cache` knob trades memory for re-synthesis — cap 1
+    // is the no-cache baseline.
     let mut pcfg = cfg.packing.clone();
     pcfg.t_block = 10;
     let chunked = Arc::new(
@@ -47,18 +51,24 @@ fn main() {
     );
     let chunk_frames = chunked.stats.frames_kept as f64;
     for workers in [1usize, 4] {
-        let name = format!("loader/sampling_chunks/workers{workers}");
-        bench.run(&name, chunk_frames, "frames", || {
-            let plan = EpochPlan::new(&chunked, 1, 0, 2, true, 0, 0);
-            let mut pf = Prefetcher::spawn(Arc::clone(&split),
-                                           Arc::clone(&chunked), &plan,
-                                           workers, 4);
-            let mut n = 0usize;
-            while let Some(b) = pf.next() {
-                n += b.unwrap().real_frames;
-            }
-            pf.shutdown();
-            n
-        });
+        for cache in [1usize, 64] {
+            let name = format!(
+                "loader/sampling_chunks/workers{workers}/cache{cache}"
+            );
+            bench.run(&name, chunk_frames, "frames", || {
+                let mut loader = DataLoaderBuilder::new()
+                    .batch(2)
+                    .workers(workers)
+                    .depth(4)
+                    .video_cache(cache)
+                    .planned(Arc::clone(&split), Arc::clone(&chunked), 0)
+                    .unwrap();
+                let mut n = 0usize;
+                while let Some(b) = loader.next() {
+                    n += b.unwrap().real_frames;
+                }
+                n
+            });
+        }
     }
 }

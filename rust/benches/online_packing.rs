@@ -2,11 +2,16 @@
 //! BLoad (frames/s), across window sizes, plus the padding overhead each
 //! window pays. The online packer must keep up with ingest-rate traffic —
 //! it sits on the hot arrival path, unlike the offline packer's
-//! once-per-epoch batch job.
+//! once-per-epoch batch job. A final leg pushes the online packer's
+//! blocks through the unified stream loader, measuring the full
+//! blocks-to-device-batches path.
+
+use std::sync::Arc;
 
 use bload::benchkit::Bencher;
 use bload::config::ExperimentConfig;
 use bload::dataset::synthetic::generate;
+use bload::loader::DataLoaderBuilder;
 use bload::packing::online::{pack_stream, OnlineConfig};
 use bload::packing::{by_name, pack};
 
@@ -60,6 +65,44 @@ fn main() {
                 100.0 * offline.stats.padding as f64
                     / offline.stats.total_slots as f64
             );
+        }
+
+        if scale < 1.0 {
+            // End-to-end streaming: the online packer's blocks through
+            // the unified loader (blocks → device batches), overlapped
+            // with a feeder thread like the ingest service's output.
+            let mut ocfg = OnlineConfig::new(cfg.packing.t_max);
+            ocfg.window = 64;
+            let (blocks, _) =
+                pack_stream(items.iter().copied(), ocfg, 0).unwrap();
+            let split = Arc::new(ds.train.clone());
+            let name =
+                format!("packing/online_w64_stream_loader/scale{scale}");
+            bench.run(&name, frames, "frames", || {
+                let (tx, rx) = std::sync::mpsc::sync_channel(32);
+                let feeder = {
+                    let blocks = blocks.clone();
+                    std::thread::spawn(move || {
+                        for b in blocks {
+                            if tx.send(b).is_err() {
+                                return;
+                            }
+                        }
+                    })
+                };
+                let mut loader = DataLoaderBuilder::new()
+                    .batch(2)
+                    .workers(4)
+                    .depth(4)
+                    .stream(Arc::clone(&split), rx, cfg.packing.t_max)
+                    .unwrap();
+                let mut n = 0usize;
+                while let Some(b) = loader.next() {
+                    n += b.unwrap().real_frames;
+                }
+                feeder.join().unwrap();
+                n
+            });
         }
     }
 }

@@ -4,15 +4,16 @@ use std::sync::Arc;
 
 use crate::config::ExperimentConfig;
 use crate::dataset::stats::SplitStats;
-use crate::dataset::store::StoreWriter;
+use crate::dataset::store::{StoreReader, StoreWriter};
 use crate::dataset::synthetic::generate;
 use crate::error::{Error, Result};
 use crate::harness::{ablation as abl, deadlock, streaming, table1};
+use crate::loader::DataLoaderBuilder;
 use crate::metrics::TextTable;
 use crate::packing::{self, pack, validate::validate, viz, Packer};
 use crate::runtime::{ArtifactManifest, Engine};
 use crate::train::Trainer;
-use crate::util::humanize::commas;
+use crate::util::humanize::{commas, rate};
 
 use super::args::Args;
 
@@ -219,13 +220,108 @@ pub fn train(args: &mut Args) -> Result<i32> {
     Ok(0)
 }
 
+/// `bload replay --store PATH [--strategy S] [--batch N] [--epoch N]
+///               [--seed N] [--verify [--scale F]]`
+///
+/// Replay a persisted dataset shard as a first-class training input: the
+/// store streams back through a CRC-verified
+/// [`crate::loader::StoreSource`], packs with the chosen strategy, and
+/// one epoch of device batches materializes through the standard
+/// builder pipeline. `--verify` additionally regenerates the equivalent
+/// split in memory (`--scale` must match the `gen-data` scale) and
+/// checks the store-backed batches are byte-identical to the offline
+/// in-memory run.
+pub fn replay(args: &mut Args) -> Result<i32> {
+    let store = args.flag_str("store", "agsynth.blds");
+    let strat = strategy_flag(args)?;
+    let batch = args.flag_usize("batch", 2)?;
+    let epoch = args.flag_u64("epoch", 0)?;
+    let seed = args.flag_u64("seed", 0)?;
+    let verify = args.flag_bool("verify");
+    let scale = args.flag_f64("scale", 0.01)?;
+    args.finish()?;
+    let cfg = ExperimentConfig::default_config();
+    let dcfg = cfg.dataset.scaled(scale);
+    let path = std::path::Path::new(&store);
+    let builder = DataLoaderBuilder::from_config(&cfg.loader)
+        .batch(batch)
+        .seed(seed);
+    let t0 = std::time::Instant::now();
+    let mut loader = builder.store(path, &dcfg, strat, &cfg.packing,
+                                   epoch)?;
+    let steps = loader.steps().unwrap_or(0);
+
+    let mut mem_loader = if verify {
+        // The shard records its generation seed; the equivalent
+        // in-memory run regenerates the split from it and packs with the
+        // same strategy and seed.
+        let store_seed = StoreReader::open(path)?.seed();
+        let ds = generate(&dcfg, store_seed);
+        let packed = Arc::new(pack(strat, &ds.train, &cfg.packing, seed)?);
+        Some(builder.planned(Arc::new(ds.train), packed, epoch)?)
+    } else {
+        None
+    };
+
+    let mut frames = 0usize;
+    let mut slots = 0usize;
+    let mut delivered = 0usize;
+    while let Some(b) = loader.next() {
+        let b = b?;
+        frames += b.real_frames;
+        slots += b.slots;
+        delivered += 1;
+        if let Some(mem) = mem_loader.as_mut() {
+            let m = mem.next().ok_or_else(|| {
+                Error::Loader(format!(
+                    "in-memory run ended at step {delivered} but the \
+                     store replay kept going"
+                ))
+            })??;
+            if b.feats != m.feats || b.labels != m.labels
+                || b.frame_mask != m.frame_mask || b.seg_ids != m.seg_ids
+                || b.block_ids != m.block_ids
+            {
+                return Err(Error::Loader(format!(
+                    "store replay diverged from the in-memory run at \
+                     step {} (check --scale/--seed against gen-data)",
+                    delivered - 1
+                )));
+            }
+        }
+    }
+    if let Some(mut mem) = mem_loader.take() {
+        match mem.next() {
+            None => println!(
+                "verify: byte-identical to the in-memory offline run"
+            ),
+            Some(Err(e)) => return Err(e),
+            Some(Ok(_)) => {
+                return Err(Error::Loader(format!(
+                    "store replay ended at step {delivered} but the \
+                     in-memory run kept going"
+                )))
+            }
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "replayed {store}: {delivered}/{steps} steps | {} frames / {} \
+         slots in {dt:.2}s ({})",
+        commas(frames as u64),
+        commas(slots as u64),
+        rate(frames as f64, dt)
+    );
+    Ok(0)
+}
+
 /// `bload ingest [--scale F] [--seed N] [--window N] [--max-latency N]
 ///               [--queue N] [--ranks N] [--batch N] [--workers N]
 ///               [--producers N]`
 ///
 /// Streaming mode: run the online packing service end-to-end (bounded
 /// multi-producer queue → windowed BLoad → per-rank block shards →
-/// streaming prefetcher) and compare its padding ratio and throughput
+/// streaming loader) and compare its padding ratio and throughput
 /// against offline BLoad on the same split.
 pub fn ingest(args: &mut Args) -> Result<i32> {
     let defaults = streaming::StreamingOptions::default();

@@ -13,6 +13,7 @@
 //!   table1         reproduce Table I (add --full for measured runs)
 //!   deadlock-demo  reproduce Fig 2 and show BLoad completing
 //!   ingest         streaming mode: online packing service vs offline
+//!   replay         replay a persisted store shard through the loader
 //!   train          end-to-end training run from a config file
 //!   ablation       reset-table / state-carry ablations (Fig 6)
 //! ```
@@ -48,6 +49,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "epoch-time-full" => commands::epoch_time_full(&mut args),
         "deadlock-demo" => commands::deadlock_demo(&mut args),
         "ingest" => commands::ingest(&mut args),
+        "replay" => commands::replay(&mut args),
         "train" => commands::train(&mut args),
         "ablation" => commands::ablation(&mut args),
         other => {
@@ -80,6 +82,8 @@ streaming support)
     deadlock-demo  reproduce Fig 2 (--ranks N --batch N --timeout-ms N)
     ingest         streaming mode (--window N --max-latency N --queue N \
 --ranks N --producers N)
+    replay         replay a gen-data shard through the loader (--store \
+PATH --strategy S; --verify checks byte-identity vs in-memory)
     train          full training run (--config FILE)
     ablation       reset-table / state-carry ablations (--epochs N)
 
@@ -89,7 +93,7 @@ STREAMING MODE:
     BLoad packer emits uniform blocks incrementally (pool-full /
     max-latency / end-of-stream flushes), blocks shard round-robin to all
     DDP ranks in equal counts, and rank 0 streams device batches through
-    the prefetcher while packing is still running. The report compares
+    a streaming loader while packing is still running. The report compares
     online vs offline padding ratio and checks the schedule on the
     threaded DDP barrier engine.
 

@@ -254,12 +254,20 @@ impl DdpConfig {
     }
 }
 
-/// Streaming loader knobs.
+/// Loading-pipeline knobs, adopted wholesale by
+/// [`crate::loader::DataLoaderBuilder::from_config`].
 #[derive(Debug, Clone)]
 pub struct LoaderConfig {
+    /// Bounded prefetch-channel depth: finished batches buffered ahead
+    /// of the consumer before workers block (backpressure).
     pub prefetch_depth: usize,
+    /// Materialization worker threads per loader.
     pub workers: usize,
+    /// Deterministic epoch shuffle (planned/store sources).
     pub shuffle: bool,
+    /// Per-worker LRU capacity of materialized videos — chunked
+    /// strategies hit one video from several blocks.
+    pub video_cache: usize,
 }
 
 impl LoaderConfig {
@@ -269,11 +277,17 @@ impl LoaderConfig {
             prefetch_depth: r.usize("prefetch_depth", 4)?,
             workers: r.usize("workers", 2)?,
             shuffle: r.bool("shuffle", true)?,
+            video_cache: r.usize("video_cache",
+                                 crate::loader::DEFAULT_VIDEO_CACHE)?,
         };
         r.finish()?;
-        if cfg.prefetch_depth == 0 || cfg.workers == 0 {
+        if cfg.prefetch_depth == 0 || cfg.workers == 0
+            || cfg.video_cache == 0
+        {
             return Err(Error::Config(
-                "loader.prefetch_depth and loader.workers must be >= 1".into(),
+                "loader.prefetch_depth, loader.workers and \
+                 loader.video_cache must be >= 1"
+                    .into(),
             ));
         }
         Ok(cfg)
@@ -429,6 +443,18 @@ mod tests {
         assert_eq!(s.min_len, d.min_len);
         assert_eq!(s.max_len, d.max_len);
         assert!((s.mean_len - d.mean_len).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loader_video_cache_knob_parses_and_validates() {
+        let cfg = ExperimentConfig::default_config();
+        assert_eq!(cfg.loader.video_cache,
+                   crate::loader::DEFAULT_VIDEO_CACHE);
+        let cfg = crate::config::from_str(
+            "<t>", "[loader]\nvideo_cache = 8\n").unwrap();
+        assert_eq!(cfg.loader.video_cache, 8);
+        assert!(crate::config::from_str(
+            "<t>", "[loader]\nvideo_cache = 0\n").is_err());
     }
 
     #[test]

@@ -1,12 +1,21 @@
 //! Fig 2 harness: demonstrate the DDP stall with raw variable-length
 //! batching, then show BLoad packing completing the same epoch.
+//!
+//! The packed arm's per-rank schedule is not predicted in closed form:
+//! each rank's epoch is *driven* through an actual
+//! [`DataLoaderBuilder`](crate::loader::DataLoaderBuilder) loader and
+//! the delivered steps are counted, so the deadlock-freedom check
+//! covers what the loader layer really delivers, device batches and
+//! all.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::config::ExperimentConfig;
 use crate::dataset::synthetic::generate;
 use crate::ddp::sim;
 use crate::error::Result;
+use crate::loader::DataLoaderBuilder;
 use crate::packing::{by_name, pack};
 
 /// Outcome of the demo.
@@ -32,8 +41,29 @@ pub fn run(ranks: usize, batch: usize, seed: u64, timeout_ms: u64)
     let raw_sched = sim::raw_schedule(&ds.train, ranks, batch, seed);
     let raw = sim::demo_raw_deadlock(&ds.train, ranks, batch, seed, timeout);
 
-    let packed = pack(by_name("bload")?, &ds.train, &cfg.packing, seed)?;
-    let packed_sched = sim::packed_schedule(&packed, ranks, batch);
+    let packed =
+        Arc::new(pack(by_name("bload")?, &ds.train, &cfg.packing, seed)?);
+    let split = Arc::new(ds.train);
+    // Drive each rank's epoch through a real loader and count the
+    // steps it actually delivers (one block = block_len
+    // frame-synchronous iterations) — the schedule fed to the barrier
+    // engine is measured, not predicted.
+    let builder = DataLoaderBuilder::new().batch(batch).seed(seed);
+    let mut packed_sched = Vec::with_capacity(ranks);
+    for r in 0..ranks {
+        let mut loader = builder.clone().shard(ranks, r).planned(
+            Arc::clone(&split),
+            Arc::clone(&packed),
+            0,
+        )?;
+        let mut steps = 0u64;
+        while let Some(b) = loader.next() {
+            let b = b?;
+            steps += 1;
+            debug_assert_eq!(b.block_len, packed.block_len);
+        }
+        packed_sched.push(steps * packed.block_len as u64);
+    }
     let packed_report = sim::run(&packed_sched, timeout);
 
     Ok(DeadlockDemo {

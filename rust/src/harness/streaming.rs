@@ -5,7 +5,7 @@
 //!
 //! ```text
 //! producers ─► bounded queue ─► OnlinePacker ─► per-rank round-robin
-//!     rank 0 ─► Prefetcher::spawn_stream ─► DeviceBatches (timed)
+//!     rank 0 ─► DataLoaderBuilder::stream ─► DeviceBatches (timed)
 //!     rank 1.. ─► collected
 //! ```
 //!
@@ -23,7 +23,7 @@ use crate::dataset::VideoMeta;
 use crate::ddp::sim;
 use crate::error::{Error, Result};
 use crate::ingest::{self, IngestConfig};
-use crate::loader::Prefetcher;
+use crate::loader::DataLoaderBuilder;
 use crate::packing::validate::StreamValidator;
 use crate::packing::{by_name, pack, Block};
 use crate::util::humanize::{commas, rate};
@@ -44,7 +44,7 @@ pub struct StreamingOptions {
     pub ranks: usize,
     /// Blocks per device batch on the measured rank.
     pub batch: usize,
-    /// Prefetcher worker threads on the measured rank.
+    /// Loader worker threads on the measured rank.
     pub workers: usize,
     /// Concurrent producer threads feeding the queue.
     pub producers: usize,
@@ -170,8 +170,8 @@ pub fn run(o: &StreamingOptions) -> Result<StreamingReport> {
     drop(producer);
 
     let t0 = Instant::now();
-    // Rank 0 tees into the streaming prefetcher so device batches
-    // materialize while upstream is still packing; other ranks collect.
+    // Rank 0 tees into a streaming loader so device batches materialize
+    // while upstream is still packing; other ranks collect.
     let mut collectors = Vec::new();
     let mut pf = None;
     for r in 0..o.ranks {
@@ -180,29 +180,28 @@ pub fn run(o: &StreamingOptions) -> Result<StreamingReport> {
             let (brx, tee) =
                 ingest::tee_blocks(rx, o.queue_cap.max(4));
             collectors.push(tee);
-            pf = Some(Prefetcher::spawn_stream(
-                Arc::clone(&split),
-                brx,
-                t_max,
-                o.batch,
-                o.workers,
-                4,
-            ));
+            pf = Some(
+                DataLoaderBuilder::new()
+                    .batch(o.batch)
+                    .workers(o.workers)
+                    .depth(4)
+                    .stream(Arc::clone(&split), brx, t_max)?,
+            );
         } else {
             collectors.push(std::thread::spawn(move || {
                 rx.iter().collect::<Vec<Block>>()
             }));
         }
     }
-    let mut pf = pf.expect("rank 0 always exists");
+    let mut loader = pf.expect("rank 0 always exists");
     let mut steps_rank0 = 0usize;
     let mut frames_streamed = 0usize;
-    while let Some(b) = pf.next() {
+    while let Some(b) = loader.next() {
         let b = b?;
         steps_rank0 += 1;
         frames_streamed += b.real_frames;
     }
-    pf.shutdown();
+    loader.shutdown();
     for f in feeders {
         f.join()
             .map_err(|_| Error::Ingest("producer thread panicked".into()))?;

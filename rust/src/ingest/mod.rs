@@ -34,9 +34,12 @@
 //!   shard video-by-video; its metadata goes straight into a
 //!   [`Producer`].
 //!
-//! Consumers drain per-rank receivers ([`IngestService::take_output`]) —
-//! e.g. through [`crate::loader::Prefetcher::spawn_stream`], which
-//! materializes device batches from a block stream — then call
+//! Consumers drain per-rank receivers ([`IngestService::take_output`]),
+//! or take a rank's stream directly as a
+//! [`DataLoader`](crate::loader::DataLoader) via
+//! [`IngestService::take_loader`] (the loader's
+//! [`StreamSource`](crate::loader::StreamSource) materializes device
+//! batches while upstream is still packing) — then call
 //! [`IngestService::join`] for the final [`IngestStats`].
 
 pub mod service;

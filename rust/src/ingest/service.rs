@@ -103,12 +103,39 @@ impl Producer {
 pub struct IngestService {
     outputs: Vec<Option<Receiver<Block>>>,
     handle: JoinHandle<Result<IngestStats>>,
+    block_len: usize,
 }
 
 impl IngestService {
     /// Take rank `rank`'s block receiver (once).
     pub fn take_output(&mut self, rank: usize) -> Option<Receiver<Block>> {
         self.outputs.get_mut(rank).and_then(Option::take)
+    }
+
+    /// Uniform block length of every emitted block (`online.t_max`).
+    pub fn block_len(&self) -> usize {
+        self.block_len
+    }
+
+    /// Take rank `rank`'s block stream as a ready
+    /// [`DataLoader`](crate::loader::DataLoader) (once): the stream
+    /// plugs into `builder` as a
+    /// [`StreamSource`](crate::loader::StreamSource), so device batches
+    /// materialize while upstream is still packing. Batch size, workers,
+    /// depth and cache come from the builder.
+    pub fn take_loader(&mut self, rank: usize,
+                       split: std::sync::Arc<crate::dataset::Split>,
+                       builder: &crate::loader::DataLoaderBuilder)
+                       -> Option<Result<crate::loader::DataLoader>> {
+        // Reject a bad builder *before* consuming the rank's channel, so
+        // a failed call can be retried with fixed knobs instead of
+        // silently losing the rank's block stream.
+        if let Err(e) = builder.validate() {
+            return Some(Err(e));
+        }
+        let block_len = self.block_len;
+        self.take_output(rank)
+            .map(|rx| builder.stream(split, rx, block_len))
     }
 
     /// Wait for the packer thread and return the session stats.
@@ -123,11 +150,12 @@ impl IngestService {
 }
 
 /// Tee one rank's block stream: every block is forwarded into a bounded
-/// channel (for a live consumer such as
-/// [`crate::loader::Prefetcher::spawn_stream`]) while a clone is kept for
-/// end-of-stream validation. Returns the forward receiver and the join
-/// handle yielding the kept blocks. A dropped forward consumer stops the
-/// forwarding silently; collection continues either way.
+/// channel (for a live consumer such as a
+/// [`DataLoaderBuilder::stream`](crate::loader::DataLoaderBuilder::stream)
+/// loader) while a clone is kept for end-of-stream validation. Returns
+/// the forward receiver and the join handle yielding the kept blocks. A
+/// dropped forward consumer stops the forwarding silently; collection
+/// continues either way.
 pub fn tee_blocks(rx: Receiver<Block>, cap: usize)
                   -> (Receiver<Block>, JoinHandle<Vec<Block>>) {
     let (tx, out) = sync_channel(cap);
@@ -170,9 +198,17 @@ pub fn start(cfg: IngestConfig) -> Result<(IngestService, Producer)> {
         out_txs.push(btx);
         outputs.push(Some(brx));
     }
+    let block_len = cfg.online.t_max;
     let handle =
         std::thread::spawn(move || pack_loop(cfg, packer, rx, out_txs));
-    Ok((IngestService { outputs, handle }, Producer { tx }))
+    Ok((
+        IngestService {
+            outputs,
+            handle,
+            block_len,
+        },
+        Producer { tx },
+    ))
 }
 
 /// The packer thread: drain the ingest queue into the streaming packer
@@ -335,6 +371,40 @@ mod tests {
         .unwrap();
         assert_eq!(summary.frames_placed, ds.train.total_frames());
         assert_eq!(summary.blocks, stats.blocks_per_rank());
+    }
+
+    #[test]
+    fn take_loader_materializes_batches_off_the_stream() {
+        let dcfg = ExperimentConfig::default_config().dataset.scaled(0.01);
+        let ds = generate(&dcfg, 4);
+        let split = std::sync::Arc::new(ds.train);
+        let (mut svc, producer) = start(small_cfg(1)).unwrap();
+        assert_eq!(svc.block_len(), 94);
+        let feeder = {
+            let metas = split.videos.clone();
+            std::thread::spawn(move || {
+                for m in metas {
+                    producer.send(m).unwrap();
+                }
+            })
+        };
+        let builder =
+            crate::loader::DataLoaderBuilder::new().batch(2).workers(2);
+        let mut loader = svc
+            .take_loader(0, std::sync::Arc::clone(&split), &builder)
+            .expect("rank 0 taken once")
+            .unwrap();
+        // Taken outputs cannot be taken again.
+        assert!(svc.take_loader(0, split.clone(), &builder).is_none());
+        let mut frames = 0usize;
+        while let Some(b) = loader.next() {
+            frames += b.unwrap().real_frames;
+        }
+        loader.shutdown();
+        feeder.join().unwrap();
+        let stats = svc.join().unwrap();
+        assert_eq!(stats.dropped_blocks, 0);
+        assert_eq!(frames, split.total_frames());
     }
 
     #[test]

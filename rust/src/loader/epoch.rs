@@ -1,6 +1,7 @@
 //! Epoch planning: deterministic shuffle → rank shard → fixed-size batch
-//! schedule. The plan is pure bookkeeping (indices only); materialization
-//! happens in the prefetcher.
+//! schedule. The plan is pure bookkeeping (indices only); a
+//! [`PlannedSource`](super::PlannedSource) serves it to the loader's
+//! materialization engine.
 
 use crate::packing::PackedDataset;
 use crate::util::Rng;

@@ -1,30 +1,54 @@
-//! Streaming block loader: shuffling, rank sharding, batch assembly and
-//! threaded prefetch with bounded-queue backpressure.
+//! The unified data-loading pipeline: block sources, a builder that owns
+//! every loading knob, and one threaded materialization engine.
 //!
-//! The pipeline per epoch:
+//! BLoad makes every block the same length, so loading — not padding
+//! arithmetic — is the performance-critical surface. The pipeline is
+//! split accordingly:
 //!
 //! ```text
-//! PackedDataset ──shuffle──► shard(rank) ──► batch(B blocks) ──►
-//!     materialize (worker threads, bounded channel) ──► DeviceBatch
+//!            BlockSource                      DataLoaderBuilder
+//!  PlannedSource  PackedDataset + EpochPlan ─┐  .workers .depth .batch
+//!  StreamSource   ingest Receiver<Block>    ─┼► .shuffle .shard .seed
+//!  StoreSource    persisted .blds shard     ─┘  .video_cache
+//!                                                    │ spawn
+//!                                                    ▼
+//!            DataLoader::next() ──► DeviceBatch (step order)
 //! ```
 //!
-//! Streaming mode ([`Prefetcher::spawn_stream`]) replaces the first three
-//! stages with a live `Receiver<Block>` from the [`crate::ingest`]
-//! service; batches materialize in arrival order while upstream is still
-//! packing.
+//! * **Sources** ([`source`]) yield `(step, blocks)` work units:
+//!   [`PlannedSource`] schedules a finished [`PackedDataset`] through an
+//!   [`EpochPlan`] (deterministic shuffle → rank shard → fixed batches),
+//!   [`StreamSource`] groups a live block stream from the
+//!   [`crate::ingest`] service in arrival order, and [`StoreSource`]
+//!   replays a persisted CRC-checked shard byte-identically to the
+//!   equivalent in-memory run. Custom sources implement [`BlockSource`]
+//!   and plug in via [`DataLoaderBuilder::source`].
+//! * **The builder** ([`prefetch`]) owns shuffle/shard/batch/workers/
+//!   depth/video-cache knobs and adopts the config file's `[loader]`
+//!   section through [`DataLoaderBuilder::from_config`].
+//! * **The engine** ([`DataLoader`]) materializes units on worker
+//!   threads over a bounded channel (backpressure), re-orders delivery
+//!   to step order (deterministic regardless of worker timing), and
+//!   joins its workers on drop — abandoning a loader mid-epoch never
+//!   leaks threads.
 //!
 //! A [`DeviceBatch`] is exactly what one rank feeds its `grad_step`
-//! executable: `feats [B,T,O,F]`, `labels [B,T,O,C]`, `frame_mask [B,T]`,
-//! `seg_ids [B,T]` (as f32 for the HLO interface), plus block provenance
-//! for recurrent-state management.
+//! executable: `feats [B,T,O,F]`, `labels [B,T,O,C]`, `frame_mask
+//! [B,T]`, `seg_ids [B,T]` (as f32 for the HLO interface), plus block
+//! provenance for recurrent-state management.
+//!
+//! [`PackedDataset`]: crate::packing::PackedDataset
 
 pub mod batch;
 pub mod epoch;
 pub mod prefetch;
 pub mod shard;
+pub mod source;
 
 pub use batch::{materialize_batch, materialize_batch_cached, DeviceBatch,
                 VideoCache};
 pub use epoch::EpochPlan;
-pub use prefetch::Prefetcher;
+pub use prefetch::{DataLoader, DataLoaderBuilder, DEFAULT_VIDEO_CACHE};
 pub use shard::shard_blocks;
+pub use source::{BlockSource, PlannedSource, StoreSource, StreamSource,
+                 WorkUnit};

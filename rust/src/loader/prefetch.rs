@@ -1,221 +1,347 @@
-//! Threaded prefetcher with bounded-queue backpressure.
+//! The materialization engine: one source-agnostic threaded prefetcher
+//! behind a builder.
 //!
-//! Worker threads materialize [`DeviceBatch`]es ahead of the consumer; a
-//! bounded channel throttles them when the trainer falls behind (classic
-//! producer/consumer backpressure — no unbounded memory growth). Batches
-//! are re-ordered to the schedule order before delivery so training is
-//! deterministic regardless of worker timing.
+//! [`DataLoaderBuilder`] owns every loading knob (shuffle, rank shard,
+//! batch size, worker count, prefetch depth, per-worker video-cache
+//! capacity) and produces a [`DataLoader`] over any
+//! [`BlockSource`](super::BlockSource) — planned, streaming, or
+//! store-backed. Worker threads claim [`WorkUnit`](super::WorkUnit)s
+//! from the shared source, materialize them into
+//! [`DeviceBatch`](DeviceBatch)es, and push into a bounded channel
+//! (classic producer/consumer backpressure — no unbounded memory
+//! growth). Batches are re-ordered to step order before delivery, so
+//! training is deterministic regardless of worker timing.
 //!
-//! Two sources feed a prefetcher:
-//!
-//! * [`Prefetcher::spawn`] — a finished [`PackedDataset`] plus an
-//!   [`EpochPlan`] (the offline path);
-//! * [`Prefetcher::spawn_stream`] — a live `Receiver<Block>` from the
-//!   [`crate::ingest`] service: batches materialize while upstream is
-//!   still packing, and the epoch length is unknown until the stream
-//!   ends.
-//!
-//! Built on `std::sync::mpsc` + threads (no tokio offline); the channel
-//! bound is implemented with a semaphore-style token pool.
+//! Built on `std::sync::mpsc` + threads (no tokio offline); dropping a
+//! loader mid-epoch drains the channel and joins every worker, so an
+//! early trainer exit or harness error path never leaks detached
+//! threads. Planned and store sources always join promptly; a stream
+//! source's workers can only be joined once the upstream block channel
+//! sends or closes (see [`DataLoader`]'s `Drop`).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use crate::config::{DatasetConfig, LoaderConfig, PackingConfig};
 use crate::dataset::Split;
 use crate::error::{Error, Result};
-use crate::packing::{Block, PackedDataset};
+use crate::packing::{Block, PackedDataset, Packer};
 
-use super::batch::{materialize_batch_cached, DeviceBatch};
+use super::batch::{materialize_batch_cached, DeviceBatch, VideoCache};
 use super::epoch::EpochPlan;
+use super::source::{BlockSource, PlannedSource, StoreSource, StreamSource};
 
-/// Streaming producer of one epoch's batches for one rank.
-pub struct Prefetcher {
-    rx: Receiver<(usize, Result<DeviceBatch>)>,
+/// Default per-worker [`VideoCache`] capacity (`loader.video_cache`).
+pub const DEFAULT_VIDEO_CACHE: usize = 64;
+
+/// Every knob of the loading pipeline, in one place.
+///
+/// ```text
+/// builder.planned(split, packed, epoch)   offline epoch
+/// builder.stream(split, rx, block_len)    live ingest blocks
+/// builder.store(path, dcfg, packer, pcfg, epoch)   persisted shard
+/// builder.source(Arc<dyn BlockSource>)    anything else
+/// ```
+///
+/// Construct with [`DataLoaderBuilder::new`] or straight from the
+/// config file's `[loader]` section with
+/// [`DataLoaderBuilder::from_config`], then chain setters. Builders are
+/// cheap to clone — the per-rank pattern is one base builder plus
+/// `.shard(ranks, r)` per rank.
+#[derive(Debug, Clone)]
+pub struct DataLoaderBuilder {
+    workers: usize,
+    depth: usize,
+    video_cache: usize,
+    batch: usize,
+    shuffle: bool,
+    seed: u64,
+    ranks: usize,
+    rank: usize,
+}
+
+impl Default for DataLoaderBuilder {
+    fn default() -> Self {
+        DataLoaderBuilder::new()
+    }
+}
+
+impl DataLoaderBuilder {
+    pub fn new() -> DataLoaderBuilder {
+        DataLoaderBuilder {
+            workers: 2,
+            depth: 4,
+            video_cache: DEFAULT_VIDEO_CACHE,
+            batch: 1,
+            shuffle: true,
+            seed: 0,
+            ranks: 1,
+            rank: 0,
+        }
+    }
+
+    /// Adopt the `[loader]` config section (workers, prefetch depth,
+    /// shuffle, video-cache capacity). Batch size, sharding and seed stay
+    /// at their defaults — chain [`batch`](Self::batch),
+    /// [`shard`](Self::shard) and [`seed`](Self::seed) after.
+    pub fn from_config(cfg: &LoaderConfig) -> DataLoaderBuilder {
+        DataLoaderBuilder::new()
+            .workers(cfg.workers)
+            .depth(cfg.prefetch_depth)
+            .video_cache(cfg.video_cache)
+            .shuffle(cfg.shuffle)
+    }
+
+    /// Materialization worker threads (≥ 1).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    /// Bounded prefetch-channel depth (≥ 1): finished batches buffered
+    /// ahead of the consumer before workers block.
+    pub fn depth(mut self, n: usize) -> Self {
+        self.depth = n;
+        self
+    }
+
+    /// Per-worker LRU capacity for materialized videos (≥ 1). Chunked
+    /// strategies hit the same video from several blocks; the cache
+    /// avoids re-synthesizing the prefix each time.
+    pub fn video_cache(mut self, n: usize) -> Self {
+        self.video_cache = n;
+        self
+    }
+
+    /// Blocks per step (≥ 1).
+    pub fn batch(mut self, n: usize) -> Self {
+        self.batch = n;
+        self
+    }
+
+    /// Shuffle the epoch deterministically (planned/store sources only).
+    pub fn shuffle(mut self, on: bool) -> Self {
+        self.shuffle = on;
+        self
+    }
+
+    /// Seed of the epoch shuffle and of store-replay packing.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Schedule this loader as `rank` of `ranks` (planned/store sources
+    /// only; stream sources are sharded upstream by the ingest service).
+    pub fn shard(mut self, ranks: usize, rank: usize) -> Self {
+        self.ranks = ranks;
+        self.rank = rank;
+        self
+    }
+
+    pub(crate) fn validate(&self) -> Result<()> {
+        if self.workers == 0 || self.depth == 0 || self.batch == 0
+            || self.video_cache == 0
+        {
+            return Err(Error::Loader(
+                "loader workers, depth, batch and video_cache must be \
+                 >= 1"
+                    .into(),
+            ));
+        }
+        if self.rank >= self.ranks {
+            return Err(Error::Loader(format!(
+                "rank {} out of {} ranks",
+                self.rank, self.ranks
+            )));
+        }
+        Ok(())
+    }
+
+    fn plan(&self, packed: &PackedDataset, epoch: u64) -> EpochPlan {
+        EpochPlan::new(packed, self.ranks, self.rank, self.batch,
+                       self.shuffle, self.seed, epoch)
+    }
+
+    /// Offline epoch over a finished [`PackedDataset`]: deterministic
+    /// shuffle → this rank's shard → fixed-size steps.
+    pub fn planned(&self, split: Arc<Split>, packed: Arc<PackedDataset>,
+                   epoch: u64) -> Result<DataLoader> {
+        self.validate()?;
+        let plan = self.plan(&packed, epoch);
+        self.spawn(Arc::new(PlannedSource::new(split, packed, plan)))
+    }
+
+    /// Live block stream (e.g. one rank's output of the
+    /// [`crate::ingest`] service): steps of [`batch`](Self::batch)
+    /// blocks in arrival order, the final step possibly smaller.
+    pub fn stream(&self, split: Arc<Split>, blocks: Receiver<Block>,
+                  block_len: usize) -> Result<DataLoader> {
+        self.validate()?;
+        self.spawn(Arc::new(StreamSource::new(split, blocks, block_len,
+                                              self.batch)))
+    }
+
+    /// Replay a persisted dataset shard
+    /// ([`crate::dataset::store`] format): the shard's metadata streams
+    /// back CRC-verified, the split rebuilds from the recorded generator
+    /// seed, and `packer` packs it — batches come out byte-identical to
+    /// the equivalent in-memory offline run.
+    pub fn store(&self, path: &std::path::Path, dcfg: &DatasetConfig,
+                 packer: &dyn Packer, pcfg: &PackingConfig, epoch: u64)
+                 -> Result<DataLoader> {
+        self.validate()?;
+        let source = StoreSource::open(path, dcfg, packer, pcfg,
+                                       self.seed,
+                                       |packed| self.plan(packed, epoch))?;
+        self.spawn(Arc::new(source))
+    }
+
+    /// Any custom [`BlockSource`]. This is the open extension point:
+    /// planned/stream/store above all route through it.
+    pub fn source(&self, source: Arc<dyn BlockSource>)
+                  -> Result<DataLoader> {
+        self.validate()?;
+        self.spawn(source)
+    }
+
+    fn spawn(&self, source: Arc<dyn BlockSource>) -> Result<DataLoader> {
+        let (tx, rx) = sync_channel(self.depth);
+        let mut workers = Vec::with_capacity(self.workers);
+        for _ in 0..self.workers {
+            let tx = tx.clone();
+            let source = Arc::clone(&source);
+            let cache_cap = self.video_cache;
+            workers.push(std::thread::spawn(move || {
+                let split = Arc::clone(source.split());
+                let block_len = source.block_len();
+                let mut cache = VideoCache::new(cache_cap);
+                while let Some(unit) = source.next_unit() {
+                    let refs: Vec<(usize, &Block)> = unit
+                        .blocks
+                        .iter()
+                        .map(|(i, b)| (*i, b))
+                        .collect();
+                    let out = materialize_batch_cached(
+                        &split, &refs, block_len, &mut cache);
+                    // Send until the consumer drains (backpressure); a
+                    // dropped receiver just ends the worker.
+                    if tx.send((unit.step, out)).is_err() {
+                        return;
+                    }
+                }
+            }));
+        }
+        Ok(DataLoader {
+            rx: Some(rx),
+            workers,
+            pending: HashMap::new(),
+            next_step: 0,
+            source,
+            done: false,
+        })
+    }
+}
+
+/// Streaming producer of one epoch's batches for one rank, built by
+/// [`DataLoaderBuilder`]. Call [`next`](DataLoader::next) until `None`;
+/// dropping the loader (at any point) joins its workers.
+pub struct DataLoader {
+    /// `Some` until drop; taken first so blocked workers unblock.
+    rx: Option<Receiver<(usize, Result<DeviceBatch>)>>,
     workers: Vec<JoinHandle<()>>,
     /// Re-order buffer: step → batch.
     pending: HashMap<usize, Result<DeviceBatch>>,
     next_step: usize,
-    total_steps: usize,
-    /// `Some` in stream mode: steps claimed by workers so far. Stream
-    /// mode's step count is open-ended, so a closed channel means
-    /// end-of-stream — unless fewer steps were delivered than claimed,
-    /// which means a worker died.
-    claimed: Option<Arc<AtomicUsize>>,
+    source: Arc<dyn BlockSource>,
+    done: bool,
 }
 
-impl Prefetcher {
-    /// Spawn `workers` threads materializing the plan's batches; at most
-    /// `depth` finished batches are buffered (per worker channel slot
-    /// semantics of `sync_channel`).
-    pub fn spawn(split: Arc<Split>, packed: Arc<PackedDataset>,
-                 plan: &EpochPlan, workers: usize, depth: usize)
-                 -> Prefetcher {
-        assert!(workers > 0 && depth > 0);
-        let total_steps = plan.steps();
-        let (tx, rx) = sync_channel(depth);
-        let mut handles = Vec::with_capacity(workers);
-        for w in 0..workers {
-            let tx = tx.clone();
-            let split = Arc::clone(&split);
-            let packed = Arc::clone(&packed);
-            // Strided assignment: worker w takes steps w, w+W, w+2W...
-            let steps: Vec<(usize, Vec<usize>)> = plan
-                .batches
-                .iter()
-                .enumerate()
-                .skip(w)
-                .step_by(workers)
-                .map(|(i, b)| (i, b.clone()))
-                .collect();
-            handles.push(std::thread::spawn(move || {
-                // Per-worker LRU: chunked strategies hit the same video
-                // from several blocks (§Perf L3 optimization #3).
-                let mut cache = super::batch::VideoCache::new(64);
-                for (step, block_ids) in steps {
-                    let refs: Vec<(usize, &crate::packing::Block)> = block_ids
-                        .iter()
-                        .map(|&i| (i, &packed.blocks[i]))
-                        .collect();
-                    let out = materialize_batch_cached(
-                        &split, &refs, packed.block_len, &mut cache);
-                    // Send blocks until the consumer drains (backpressure);
-                    // a dropped receiver just ends the worker.
-                    if tx.send((step, out)).is_err() {
-                        return;
-                    }
-                }
-            }));
-        }
-        Prefetcher {
-            rx,
-            workers: handles,
-            pending: HashMap::new(),
-            next_step: 0,
-            total_steps,
-            claimed: None,
-        }
+impl DataLoader {
+    /// Total steps when the source knows them up front (planned and
+    /// store sources); `None` for open-ended streams.
+    pub fn steps(&self) -> Option<usize> {
+        self.source.steps()
     }
 
-    /// Spawn workers materializing batches straight off a **block
-    /// stream** (e.g. one rank's output of the ingest service).
-    ///
-    /// Blocks are grouped into steps of `batch` in arrival order; the
-    /// final step may be smaller when the stream ends mid-batch. Delivery
-    /// is in step order, `next` returns `None` once the stream is drained.
-    /// `block_ids` of emitted batches number the stream's blocks
-    /// sequentially from 0.
-    pub fn spawn_stream(split: Arc<Split>, blocks: Receiver<Block>,
-                        block_len: usize, batch: usize, workers: usize,
-                        depth: usize) -> Prefetcher {
-        assert!(workers > 0 && depth > 0 && batch > 0);
-        let (tx, rx) = sync_channel(depth);
-        let source = Arc::new(Mutex::new(blocks));
-        let next_id = Arc::new(AtomicUsize::new(0));
-        let mut handles = Vec::with_capacity(workers);
-        for _ in 0..workers {
-            let tx = tx.clone();
-            let split = Arc::clone(&split);
-            let source = Arc::clone(&source);
-            let next_id = Arc::clone(&next_id);
-            handles.push(std::thread::spawn(move || {
-                let mut cache = super::batch::VideoCache::new(64);
-                loop {
-                    // Pull one step's blocks and claim its index under
-                    // the same lock, so step numbering matches arrival
-                    // order even with many workers.
-                    let (step, chunk) = {
-                        let source =
-                            source.lock().expect("block source lock");
-                        let mut chunk = Vec::with_capacity(batch);
-                        while chunk.len() < batch {
-                            match source.recv() {
-                                Ok(b) => chunk.push(b),
-                                Err(_) => break, // stream ended
-                            }
-                        }
-                        if chunk.is_empty() {
-                            return;
-                        }
-                        (next_id.fetch_add(1, Ordering::SeqCst), chunk)
-                    };
-                    let base = step * batch;
-                    let refs: Vec<(usize, &Block)> = chunk
-                        .iter()
-                        .enumerate()
-                        .map(|(i, b)| (base + i, b))
-                        .collect();
-                    let out = materialize_batch_cached(
-                        &split, &refs, block_len, &mut cache);
-                    if tx.send((step, out)).is_err() {
-                        return;
-                    }
-                }
-            }));
-        }
-        Prefetcher {
-            rx,
-            workers: handles,
-            pending: HashMap::new(),
-            next_step: 0,
-            total_steps: usize::MAX,
-            claimed: Some(next_id),
-        }
+    /// The source this loader materializes from.
+    pub fn source(&self) -> &Arc<dyn BlockSource> {
+        &self.source
     }
 
-    /// Next batch in schedule order; `None` when the epoch is done (or,
-    /// in stream mode, when the block stream is drained).
+    /// Next batch in step order; `None` when the epoch is done (or, in
+    /// stream mode, when the block stream is drained).
     pub fn next(&mut self) -> Option<Result<DeviceBatch>> {
-        if self.next_step >= self.total_steps {
+        if self.done {
             return None;
         }
+        if let Some(total) = self.source.steps() {
+            if self.next_step >= total {
+                self.done = true;
+                return None;
+            }
+        }
+        let rx = self.rx.as_ref().expect("rx lives until drop");
         loop {
             if let Some(b) = self.pending.remove(&self.next_step) {
                 self.next_step += 1;
                 return Some(b);
             }
-            match self.rx.recv() {
+            match rx.recv() {
                 Ok((step, batch)) => {
                     self.pending.insert(step, batch);
                 }
-                Err(_) if self.claimed.is_some() => {
-                    // Stream mode: every worker exited. On a clean
-                    // end-of-stream every claimed step was sent and
-                    // drained, so delivery caught up with the claim
-                    // counter; falling short means a worker died
-                    // mid-step (even on the very last one) and silently
-                    // truncating the epoch would hide it.
-                    let claimed = self
-                        .claimed
-                        .as_ref()
-                        .expect("guarded by match arm")
-                        .load(Ordering::SeqCst);
+                Err(_) => {
+                    // Every worker exited. On a clean end every claimed
+                    // step was delivered and drained; falling short means
+                    // a worker died mid-step (even on the very last one)
+                    // and silently truncating the epoch would hide it.
+                    self.done = true;
+                    let claimed = self.source.claimed();
                     if self.next_step < claimed {
                         return Some(Err(Error::Loader(format!(
-                            "stream prefetch worker died: only {} of \
-                             {claimed} claimed step(s) were delivered",
+                            "loader worker died: only {} of {claimed} \
+                             claimed step(s) were delivered",
                             self.next_step
                         ))));
                     }
+                    if let Some(total) = self.source.steps() {
+                        if self.next_step < total {
+                            return Some(Err(Error::Loader(format!(
+                                "loader workers died before step {}",
+                                self.next_step
+                            ))));
+                        }
+                    }
                     return None;
-                }
-                Err(_) => {
-                    // All workers exited without producing our step.
-                    return Some(Err(Error::Loader(format!(
-                        "prefetch workers died before step {}",
-                        self.next_step
-                    ))));
                 }
             }
         }
     }
 
-    /// Join workers (drains remaining output).
+    /// Explicitly end the loader (identical to dropping it): drains the
+    /// channel and joins worker threads.
     pub fn shutdown(self) {
-        drop(self.rx);
-        for h in self.workers {
+        drop(self);
+    }
+}
+
+impl Drop for DataLoader {
+    /// Abandoning a loader mid-epoch must not leak detached threads:
+    /// dropping the receiver first fails any worker blocked on a full
+    /// channel, then every worker is joined.
+    ///
+    /// Planned/store sources join promptly (workers only ever block on
+    /// the batch channel). A stream source's workers may be parked in
+    /// `recv` on the upstream block channel; the join then waits until
+    /// that channel delivers or closes — bounded by the upstream's
+    /// lifetime (the ingest service closes rank channels on shutdown),
+    /// and the same wait the explicit shutdown always had.
+    fn drop(&mut self) {
+        drop(self.rx.take());
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
@@ -244,51 +370,89 @@ mod tests {
     #[test]
     fn delivers_all_steps_in_order() {
         let (split, packed) = setup();
+        let builder = DataLoaderBuilder::new()
+            .batch(2)
+            .workers(3)
+            .depth(2)
+            .seed(3);
         let plan = EpochPlan::new(&packed, 1, 0, 2, true, 3, 0);
         let want_steps = plan.steps();
         assert!(want_steps >= 2, "need a few steps, got {want_steps}");
-        let mut pf =
-            Prefetcher::spawn(split, Arc::clone(&packed), &plan, 3, 2);
+        let mut loader = builder
+            .planned(split, Arc::clone(&packed), 0)
+            .unwrap();
+        assert_eq!(loader.steps(), Some(want_steps));
         let mut got = 0;
-        while let Some(batch) = pf.next() {
+        while let Some(batch) = loader.next() {
             let batch = batch.unwrap();
             assert_eq!(batch.block_ids, plan.batches[got]);
             got += 1;
         }
         assert_eq!(got, want_steps);
-        pf.shutdown();
     }
 
     #[test]
     fn deterministic_across_worker_counts() {
         let (split, packed) = setup();
-        let plan = EpochPlan::new(&packed, 1, 0, 2, true, 3, 1);
         let collect = |workers: usize| {
-            let mut pf = Prefetcher::spawn(
-                Arc::clone(&split),
-                Arc::clone(&packed),
-                &plan,
-                workers,
-                2,
-            );
+            let mut loader = DataLoaderBuilder::new()
+                .batch(2)
+                .workers(workers)
+                .depth(2)
+                .seed(3)
+                .planned(Arc::clone(&split), Arc::clone(&packed), 1)
+                .unwrap();
             let mut sums = Vec::new();
-            while let Some(b) = pf.next() {
+            while let Some(b) = loader.next() {
                 let b = b.unwrap();
                 sums.push(b.feats.iter().sum::<f32>());
             }
-            pf.shutdown();
             sums
         };
         assert_eq!(collect(1), collect(4));
     }
 
     #[test]
-    fn early_drop_does_not_hang() {
+    fn drop_mid_epoch_joins_workers() {
         let (split, packed) = setup();
-        let plan = EpochPlan::new(&packed, 1, 0, 1, true, 3, 0);
-        let mut pf = Prefetcher::spawn(split, packed, &plan, 2, 1);
-        let _first = pf.next();
-        pf.shutdown(); // consumer walks away mid-epoch; workers must exit
+        let mut loader = DataLoaderBuilder::new()
+            .batch(1)
+            .workers(2)
+            .depth(1)
+            .planned(split, packed, 0)
+            .unwrap();
+        let _first = loader.next();
+        drop(loader); // consumer walks away mid-epoch; workers must exit
+    }
+
+    #[test]
+    fn builder_rejects_zero_knobs_and_bad_rank() {
+        let (split, packed) = setup();
+        for bad in [
+            DataLoaderBuilder::new().workers(0),
+            DataLoaderBuilder::new().depth(0),
+            DataLoaderBuilder::new().batch(0),
+            DataLoaderBuilder::new().video_cache(0),
+            DataLoaderBuilder::new().shard(2, 2),
+        ] {
+            assert!(bad
+                .planned(Arc::clone(&split), Arc::clone(&packed), 0)
+                .is_err());
+        }
+    }
+
+    #[test]
+    fn from_config_adopts_loader_section() {
+        let mut cfg = ExperimentConfig::default_config().loader;
+        cfg.workers = 5;
+        cfg.prefetch_depth = 7;
+        cfg.video_cache = 9;
+        cfg.shuffle = false;
+        let b = DataLoaderBuilder::from_config(&cfg);
+        assert_eq!(b.workers, 5);
+        assert_eq!(b.depth, 7);
+        assert_eq!(b.video_cache, 9);
+        assert!(!b.shuffle);
     }
 
     #[test]
@@ -308,12 +472,17 @@ mod tests {
             })
         };
         let batch = 2;
-        let mut pf = Prefetcher::spawn_stream(
-            Arc::clone(&split), brx, packed.block_len, batch, 3, 2);
+        let mut loader = DataLoaderBuilder::new()
+            .batch(batch)
+            .workers(3)
+            .depth(2)
+            .stream(Arc::clone(&split), brx, packed.block_len)
+            .unwrap();
+        assert_eq!(loader.steps(), None);
         let mut frames = 0usize;
         let mut blocks_seen = 0usize;
         let mut steps = 0usize;
-        while let Some(b) = pf.next() {
+        while let Some(b) = loader.next() {
             let b = b.unwrap();
             assert!(b.batch <= batch && b.batch > 0);
             frames += b.real_frames;
@@ -321,7 +490,6 @@ mod tests {
             steps += 1;
         }
         feeder.join().unwrap();
-        pf.shutdown();
         assert_eq!(blocks_seen, n_blocks);
         assert_eq!(steps, (n_blocks + batch - 1) / batch);
         let want: usize = packed.blocks.iter().map(|b| b.used()).sum();
@@ -343,14 +511,17 @@ mod tests {
                     }
                 })
             };
-            let mut pf = Prefetcher::spawn_stream(
-                Arc::clone(&split), brx, packed.block_len, 2, workers, 3);
+            let mut loader = DataLoaderBuilder::new()
+                .batch(2)
+                .workers(workers)
+                .depth(3)
+                .stream(Arc::clone(&split), brx, packed.block_len)
+                .unwrap();
             let mut sums = Vec::new();
-            while let Some(b) = pf.next() {
+            while let Some(b) = loader.next() {
                 sums.push(b.unwrap().feats.iter().sum::<f32>());
             }
             feeder.join().unwrap();
-            pf.shutdown();
             sums
         };
         assert_eq!(collect(1), collect(4));
@@ -362,8 +533,60 @@ mod tests {
         let (btx, brx) =
             std::sync::mpsc::sync_channel::<crate::packing::Block>(1);
         drop(btx);
-        let mut pf = Prefetcher::spawn_stream(split, brx, 94, 2, 2, 2);
-        assert!(pf.next().is_none());
-        pf.shutdown();
+        let mut loader = DataLoaderBuilder::new()
+            .batch(2)
+            .stream(split, brx, 94)
+            .unwrap();
+        assert!(loader.next().is_none());
+    }
+
+    #[test]
+    fn custom_source_plugs_into_the_engine() {
+        use super::super::WorkUnit;
+        // The open extension point: a hand-rolled single-step source.
+        struct OneStep {
+            split: Arc<Split>,
+            block: Block,
+            block_len: usize,
+            claimed: std::sync::atomic::AtomicUsize,
+        }
+        impl BlockSource for OneStep {
+            fn split(&self) -> &Arc<Split> {
+                &self.split
+            }
+            fn block_len(&self) -> usize {
+                self.block_len
+            }
+            fn next_unit(&self) -> Option<WorkUnit> {
+                use std::sync::atomic::Ordering;
+                if self.claimed.fetch_add(1, Ordering::SeqCst) > 0 {
+                    return None;
+                }
+                Some(WorkUnit {
+                    step: 0,
+                    blocks: vec![(0, self.block.clone())],
+                })
+            }
+            fn claimed(&self) -> usize {
+                use std::sync::atomic::Ordering;
+                self.claimed.load(Ordering::SeqCst).min(1)
+            }
+            fn steps(&self) -> Option<usize> {
+                Some(1)
+            }
+        }
+        let (split, packed) = setup();
+        let source = Arc::new(OneStep {
+            split,
+            block: packed.blocks[0].clone(),
+            block_len: packed.block_len,
+            claimed: std::sync::atomic::AtomicUsize::new(0),
+        });
+        let mut loader =
+            DataLoaderBuilder::new().source(source).unwrap();
+        let b = loader.next().unwrap().unwrap();
+        assert_eq!(b.block_ids, vec![0]);
+        assert_eq!(b.real_frames, packed.blocks[0].used());
+        assert!(loader.next().is_none());
     }
 }

@@ -1,0 +1,462 @@
+//! Block sources: where a [`DataLoader`](super::DataLoader)'s work units
+//! come from.
+//!
+//! The loader layer is split into *sources* (this module) and one
+//! *materialization engine* ([`super::prefetch`]). A source hands out
+//! [`WorkUnit`]s — `(step, blocks)` pairs — to however many worker
+//! threads the engine spawns; the engine turns each unit into a
+//! [`DeviceBatch`](super::DeviceBatch) and re-orders delivery to step
+//! order. Three sources ship:
+//!
+//! * [`PlannedSource`] — the offline path: a finished
+//!   [`PackedDataset`] scheduled by an [`EpochPlan`] (deterministic
+//!   shuffle → rank shard → fixed batches).
+//! * [`StreamSource`] — the online path: a live `Receiver<Block>` (e.g.
+//!   one rank's output of the [`crate::ingest`] service), grouped into
+//!   steps in arrival order; the step count is unknown until the stream
+//!   ends.
+//! * [`StoreSource`] — replay of a persisted dataset: a
+//!   [`StoreReader`](crate::dataset::store::StoreReader) shard streamed
+//!   (CRC-verified) back into a split, packed, and scheduled exactly like
+//!   the offline path — byte-identical batches to the equivalent
+//!   in-memory run.
+//!
+//! New sources (remote shards, async fetchers, multi-epoch pipelines)
+//! implement the trait and plug into
+//! [`DataLoaderBuilder::source`](super::DataLoaderBuilder::source)
+//! without touching the engine.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+
+use crate::config::{DatasetConfig, PackingConfig};
+use crate::dataset::store::StoreReader;
+use crate::dataset::synthetic::GeneratorSpec;
+use crate::dataset::Split;
+use crate::error::{Error, Result};
+use crate::packing::{pack, Block, PackedDataset, Packer};
+
+use super::epoch::EpochPlan;
+
+/// One step's worth of work: the step index plus the blocks (with their
+/// global block ids) that materialize into that step's
+/// [`DeviceBatch`](super::DeviceBatch).
+#[derive(Debug, Clone)]
+pub struct WorkUnit {
+    /// Delivery-order index of this unit within the epoch.
+    pub step: usize,
+    /// `(block id, block)` pairs; ids flow into
+    /// [`DeviceBatch::block_ids`](super::DeviceBatch::block_ids) for
+    /// recurrent-state management.
+    pub blocks: Vec<(usize, Block)>,
+}
+
+/// A source of equal-length packed blocks, consumed step-by-step by the
+/// loader's worker threads.
+///
+/// Implementations are shared across workers behind an `Arc`, so
+/// [`next_unit`](BlockSource::next_unit) must be safe to race: each call
+/// *claims* the next unit exactly once (interior mutability — an atomic
+/// cursor for planned sources, a locked receiver for streams).
+pub trait BlockSource: Send + Sync + 'static {
+    /// The split every block's content materializes against.
+    fn split(&self) -> &Arc<Split>;
+
+    /// Uniform length of every emitted block.
+    fn block_len(&self) -> usize;
+
+    /// Claim the next work unit; `None` once the source is exhausted.
+    fn next_unit(&self) -> Option<WorkUnit>;
+
+    /// Units claimed by workers so far. The loader compares this against
+    /// what was actually delivered to distinguish a clean end from a
+    /// worker dying mid-step (which must surface as an error, not a
+    /// silently truncated epoch).
+    ///
+    /// **Contract**: count only claims for which
+    /// [`next_unit`](Self::next_unit) actually returned a unit — calls
+    /// that found the source exhausted must not inflate the count (cap
+    /// a raw cursor at the real unit total, as [`PlannedSource`] does),
+    /// or every clean epoch end with racing workers reports a spurious
+    /// worker death.
+    fn claimed(&self) -> usize;
+
+    /// Total step count when known up front (planned sources); `None`
+    /// for open-ended streams.
+    fn steps(&self) -> Option<usize>;
+}
+
+/// Offline source: a [`PackedDataset`] scheduled by an [`EpochPlan`].
+///
+/// Workers claim plan steps through a shared atomic cursor; each unit's
+/// content is fully determined by the plan, so delivery is deterministic
+/// regardless of worker count or timing.
+pub struct PlannedSource {
+    split: Arc<Split>,
+    packed: Arc<PackedDataset>,
+    plan: EpochPlan,
+    next: AtomicUsize,
+}
+
+impl PlannedSource {
+    pub fn new(split: Arc<Split>, packed: Arc<PackedDataset>,
+               plan: EpochPlan) -> PlannedSource {
+        PlannedSource {
+            split,
+            packed,
+            plan,
+            next: AtomicUsize::new(0),
+        }
+    }
+
+    /// The schedule this source serves.
+    pub fn plan(&self) -> &EpochPlan {
+        &self.plan
+    }
+
+    /// The packed dataset this source serves blocks of.
+    pub fn packed(&self) -> &Arc<PackedDataset> {
+        &self.packed
+    }
+}
+
+impl BlockSource for PlannedSource {
+    fn split(&self) -> &Arc<Split> {
+        &self.split
+    }
+
+    fn block_len(&self) -> usize {
+        self.packed.block_len
+    }
+
+    fn next_unit(&self) -> Option<WorkUnit> {
+        let step = self.next.fetch_add(1, Ordering::SeqCst);
+        let batch = self.plan.batches.get(step)?;
+        let blocks = batch
+            .iter()
+            .map(|&i| (i, self.packed.blocks[i].clone()))
+            .collect();
+        Some(WorkUnit { step, blocks })
+    }
+
+    fn claimed(&self) -> usize {
+        // The cursor overshoots by one per worker at exhaustion.
+        self.next.load(Ordering::SeqCst).min(self.plan.steps())
+    }
+
+    fn steps(&self) -> Option<usize> {
+        Some(self.plan.steps())
+    }
+}
+
+/// Streaming source: a live block channel grouped into fixed-size steps
+/// in arrival order.
+///
+/// Workers pull one step's blocks and claim its index under the same
+/// lock, so step numbering matches arrival order even with many workers.
+/// The final step may be smaller when the stream ends mid-batch. Block
+/// ids number the stream's blocks sequentially from 0.
+pub struct StreamSource {
+    split: Arc<Split>,
+    block_len: usize,
+    batch: usize,
+    rx: Mutex<Receiver<Block>>,
+    claimed: AtomicUsize,
+}
+
+impl StreamSource {
+    pub fn new(split: Arc<Split>, blocks: Receiver<Block>,
+               block_len: usize, batch: usize) -> StreamSource {
+        assert!(batch > 0);
+        StreamSource {
+            split,
+            block_len,
+            batch,
+            rx: Mutex::new(blocks),
+            claimed: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl BlockSource for StreamSource {
+    fn split(&self) -> &Arc<Split> {
+        &self.split
+    }
+
+    fn block_len(&self) -> usize {
+        self.block_len
+    }
+
+    fn next_unit(&self) -> Option<WorkUnit> {
+        // A poisoned lock means a sibling worker died mid-claim; stop
+        // pulling — the loader's claimed-vs-delivered check reports it.
+        let rx = self.rx.lock().ok()?;
+        let mut chunk = Vec::with_capacity(self.batch);
+        while chunk.len() < self.batch {
+            match rx.recv() {
+                Ok(b) => chunk.push(b),
+                Err(_) => break, // stream ended
+            }
+        }
+        if chunk.is_empty() {
+            return None;
+        }
+        let step = self.claimed.fetch_add(1, Ordering::SeqCst);
+        let base = step * self.batch;
+        Some(WorkUnit {
+            step,
+            blocks: chunk
+                .into_iter()
+                .enumerate()
+                .map(|(i, b)| (base + i, b))
+                .collect(),
+        })
+    }
+
+    fn claimed(&self) -> usize {
+        self.claimed.load(Ordering::SeqCst)
+    }
+
+    fn steps(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Replay source: a persisted dataset shard
+/// ([`crate::dataset::store`] format) as a first-class training input.
+///
+/// Opening the source streams the shard's *metadata* through
+/// [`StoreReader::next_meta`] — O(1) memory, with the CRC footer verified
+/// before any batch materializes — then rebuilds the deterministic split
+/// from the store's recorded generator seed, packs it with the given
+/// strategy, and schedules it exactly like [`PlannedSource`]. A
+/// store-backed epoch is therefore byte-identical to the equivalent
+/// in-memory offline epoch (same dataset config, seeds and builder
+/// knobs).
+pub struct StoreSource {
+    inner: PlannedSource,
+    store_seed: u64,
+}
+
+impl StoreSource {
+    /// Open `path` and schedule it with `plan_of` (the caller — normally
+    /// [`DataLoaderBuilder`](super::DataLoaderBuilder) — supplies rank
+    /// sharding, shuffling and batching). `dcfg` must describe the
+    /// generator family the shard was written from; its geometry is
+    /// checked against the store header. `pack_seed` drives the packing
+    /// strategy's draw, matching the offline `pack(...)` call.
+    pub fn open<F>(path: &Path, dcfg: &DatasetConfig,
+                   packer: &dyn Packer, pcfg: &PackingConfig,
+                   pack_seed: u64, plan_of: F) -> Result<StoreSource>
+    where
+        F: FnOnce(&PackedDataset) -> EpochPlan,
+    {
+        let mut reader = StoreReader::open(path)?;
+        let geometry = reader.geometry();
+        if geometry != (dcfg.objects, dcfg.feat_dim, dcfg.classes) {
+            return Err(Error::Dataset(format!(
+                "{}: store geometry {:?} != dataset config ({}, {}, {})",
+                path.display(),
+                geometry,
+                dcfg.objects,
+                dcfg.feat_dim,
+                dcfg.classes
+            )));
+        }
+        let store_seed = reader.seed();
+        let mut videos = Vec::with_capacity(reader.total_videos());
+        while let Some(meta) = reader.next_meta() {
+            videos.push(meta?);
+        }
+        let split = Arc::new(Split {
+            videos,
+            spec: GeneratorSpec::new(dcfg, store_seed),
+        });
+        let packed = Arc::new(pack(packer, &split, pcfg, pack_seed)?);
+        let plan = plan_of(&packed);
+        Ok(StoreSource {
+            inner: PlannedSource::new(split, packed, plan),
+            store_seed,
+        })
+    }
+
+    /// The generator seed recorded in the shard header.
+    pub fn store_seed(&self) -> u64 {
+        self.store_seed
+    }
+
+    /// The packed dataset rebuilt from the shard.
+    pub fn packed(&self) -> &Arc<PackedDataset> {
+        self.inner.packed()
+    }
+}
+
+impl BlockSource for StoreSource {
+    fn split(&self) -> &Arc<Split> {
+        self.inner.split()
+    }
+
+    fn block_len(&self) -> usize {
+        self.inner.block_len()
+    }
+
+    fn next_unit(&self) -> Option<WorkUnit> {
+        self.inner.next_unit()
+    }
+
+    fn claimed(&self) -> usize {
+        self.inner.claimed()
+    }
+
+    fn steps(&self) -> Option<usize> {
+        self.inner.steps()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::dataset::synthetic::generate;
+    use crate::packing::by_name;
+
+    fn setup() -> (Arc<Split>, Arc<PackedDataset>) {
+        let cfg = ExperimentConfig::default_config();
+        let ds = generate(&cfg.dataset.scaled(0.01), 1);
+        let packed = Arc::new(
+            pack(by_name("bload").unwrap(), &ds.train, &cfg.packing, 1)
+                .unwrap(),
+        );
+        (Arc::new(ds.train), packed)
+    }
+
+    #[test]
+    fn planned_source_claims_each_step_once() {
+        let (split, packed) = setup();
+        let plan = EpochPlan::new(&packed, 1, 0, 2, true, 3, 0);
+        let total = plan.steps();
+        assert!(total >= 2);
+        let src = PlannedSource::new(split, packed, plan);
+        assert_eq!(src.steps(), Some(total));
+        let mut seen = std::collections::HashSet::new();
+        while let Some(unit) = src.next_unit() {
+            assert!(seen.insert(unit.step), "step {} twice", unit.step);
+            assert_eq!(unit.blocks.len(), 2);
+        }
+        assert_eq!(seen.len(), total);
+        assert_eq!(src.claimed(), total);
+        // Exhausted sources stay exhausted and keep claimed stable.
+        assert!(src.next_unit().is_none());
+        assert_eq!(src.claimed(), total);
+    }
+
+    #[test]
+    fn stream_source_groups_in_arrival_order_with_partial_tail() {
+        let (split, packed) = setup();
+        let n = packed.blocks.len();
+        let (tx, rx) = std::sync::mpsc::sync_channel(n);
+        for b in &packed.blocks {
+            tx.send(b.clone()).unwrap();
+        }
+        drop(tx);
+        let batch = 2;
+        let src = StreamSource::new(split, rx, packed.block_len, batch);
+        assert_eq!(src.steps(), None);
+        let mut blocks_seen = 0usize;
+        let mut step = 0usize;
+        while let Some(unit) = src.next_unit() {
+            assert_eq!(unit.step, step);
+            assert!(!unit.blocks.is_empty() && unit.blocks.len() <= batch);
+            for (k, (id, _)) in unit.blocks.iter().enumerate() {
+                assert_eq!(*id, step * batch + k, "sequential block ids");
+            }
+            blocks_seen += unit.blocks.len();
+            step += 1;
+        }
+        assert_eq!(blocks_seen, n);
+        assert_eq!(step, (n + batch - 1) / batch);
+        assert_eq!(src.claimed(), step);
+    }
+
+    #[test]
+    fn store_source_round_trips_the_split() {
+        use crate::dataset::store::StoreWriter;
+        let cfg = ExperimentConfig::default_config();
+        let dcfg = cfg.dataset.scaled(0.005);
+        let ds = generate(&dcfg, 9);
+        let path = std::env::temp_dir().join(format!(
+            "bload_store_source_{}.blds",
+            std::process::id()
+        ));
+        let mut w = StoreWriter::create(
+            &path,
+            9,
+            (dcfg.objects as u32, dcfg.feat_dim as u32,
+             dcfg.classes as u32),
+            ds.train.videos.len() as u32,
+        )
+        .unwrap();
+        for v in &ds.train.videos {
+            w.append(&ds.train.spec.materialize(*v)).unwrap();
+        }
+        w.finish().unwrap();
+
+        let src = StoreSource::open(
+            &path,
+            &dcfg,
+            by_name("bload").unwrap(),
+            &cfg.packing,
+            9,
+            |packed| EpochPlan::new(packed, 1, 0, 2, true, 9, 0),
+        )
+        .unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(src.store_seed(), 9);
+        assert_eq!(src.split().videos, ds.train.videos);
+        // Same split + same pack seed => identical blocks.
+        let offline = pack(by_name("bload").unwrap(), &ds.train,
+                           &cfg.packing, 9)
+            .unwrap();
+        assert_eq!(src.packed().blocks, offline.blocks);
+    }
+
+    #[test]
+    fn store_source_rejects_geometry_mismatch() {
+        use crate::dataset::store::StoreWriter;
+        let cfg = ExperimentConfig::default_config();
+        let dcfg = cfg.dataset.scaled(0.005);
+        let ds = generate(&dcfg, 2);
+        let path = std::env::temp_dir().join(format!(
+            "bload_store_source_geom_{}.blds",
+            std::process::id()
+        ));
+        let mut w = StoreWriter::create(
+            &path,
+            2,
+            (dcfg.objects as u32, dcfg.feat_dim as u32,
+             dcfg.classes as u32),
+            ds.train.videos.len() as u32,
+        )
+        .unwrap();
+        for v in &ds.train.videos {
+            w.append(&ds.train.spec.materialize(*v)).unwrap();
+        }
+        w.finish().unwrap();
+        let mut wrong = dcfg.clone();
+        wrong.feat_dim += 1;
+        let err = StoreSource::open(
+            &path,
+            &wrong,
+            by_name("bload").unwrap(),
+            &cfg.packing,
+            2,
+            |packed| EpochPlan::new(packed, 1, 0, 2, true, 2, 0),
+        )
+        .unwrap_err()
+        .to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("geometry"), "{err}");
+    }
+}

@@ -18,7 +18,7 @@ use crate::ddp::collective::by_name;
 use crate::ddp::GradSynchronizer;
 use crate::error::{Error, Result};
 use crate::eval::RecallAccumulator;
-use crate::loader::{EpochPlan, Prefetcher};
+use crate::loader::{DataLoader, DataLoaderBuilder};
 use crate::log_info;
 use crate::metrics::Timings;
 use crate::model::StateManager;
@@ -114,13 +114,17 @@ impl Trainer {
                               max_steps: usize) -> Result<EpochStats> {
         let ranks = self.ddp_cfg.ranks;
         let batch = self.ddp_cfg.batch_per_rank;
-        let plans: Vec<EpochPlan> = (0..ranks)
+        let builder = DataLoaderBuilder::from_config(&self.loader_cfg)
+            .seed(self.seed)
+            .batch(batch);
+        let mut loaders: Vec<DataLoader> = (0..ranks)
             .map(|r| {
-                EpochPlan::new(packed, ranks, r, batch,
-                               self.loader_cfg.shuffle, self.seed, epoch)
+                builder.clone().shard(ranks, r).planned(
+                    Arc::clone(split), Arc::clone(packed), epoch)
             })
-            .collect();
-        let mut steps = plans[0].steps();
+            .collect::<Result<_>>()?;
+        let mut steps =
+            loaders[0].steps().expect("planned loaders know their length");
         if max_steps > 0 {
             steps = steps.min(max_steps);
         }
@@ -131,14 +135,6 @@ impl Trainer {
                 packed.blocks.len()
             )));
         }
-        let mut prefetchers: Vec<Prefetcher> = plans
-            .iter()
-            .map(|p| {
-                Prefetcher::spawn(Arc::clone(split), Arc::clone(packed), p,
-                                  self.loader_cfg.workers,
-                                  self.loader_cfg.prefetch_depth)
-            })
-            .collect();
         for st in &mut self.states {
             st.reset();
         }
@@ -161,7 +157,7 @@ impl Trainer {
             for rank in 0..ranks {
                 let batch_data = self
                     .timings
-                    .time("loader.next", || prefetchers[rank].next())
+                    .time("loader.next", || loaders[rank].next())
                     .ok_or_else(|| {
                         Error::Train(format!(
                             "rank {rank} ran out of batches at step {step}"
@@ -230,9 +226,10 @@ impl Trainer {
                 );
             }
         }
-        for pf in prefetchers.drain(..) {
-            pf.shutdown();
-        }
+        // Dropping the loaders joins their workers — in the capped case
+        // this abandons the epoch mid-stream, which the loader's Drop
+        // handles without leaking threads.
+        drop(loaders);
         let stats = EpochStats {
             epoch,
             steps,
@@ -259,15 +256,16 @@ impl Trainer {
                     -> Result<f64> {
         let spec = &self.engine.spec;
         let b = spec.batch;
-        let plan = EpochPlan::new(packed, 1, 0, b, false, self.seed, 0);
-        let mut pf = Prefetcher::spawn(Arc::clone(split), Arc::clone(packed),
-                                       &plan, self.loader_cfg.workers,
-                                       self.loader_cfg.prefetch_depth);
+        let mut loader = DataLoaderBuilder::from_config(&self.loader_cfg)
+            .shuffle(false)
+            .seed(self.seed)
+            .batch(b)
+            .planned(Arc::clone(split), Arc::clone(packed), 0)?;
         let mut acc = RecallAccumulator::new();
         let mut state_mgr =
             StateManager::new(spec.state_dim, self.train_cfg.carry_state);
         let params_lit = self.engine.params_literal(&self.params)?;
-        while let Some(batch) = pf.next() {
+        while let Some(batch) = loader.next() {
             let batch = batch?;
             let blocks: Vec<&Block> = batch
                 .block_ids
@@ -282,7 +280,7 @@ impl Trainer {
                            b, spec.block_len, spec.objects, spec.classes,
                            eval_cfg.recall_k);
         }
-        pf.shutdown();
+        loader.shutdown();
         if acc.frames == 0 {
             return Err(Error::Train("evaluation saw zero frames".into()));
         }

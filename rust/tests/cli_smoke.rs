@@ -81,6 +81,39 @@ fn gen_data_writes_store() {
 }
 
 #[test]
+fn replay_round_trips_gen_data_with_verify() {
+    let out = std::env::temp_dir().join(format!(
+        "bload_cli_replay_{}.blds",
+        std::process::id()
+    ));
+    let out_s = out.to_str().unwrap().to_string();
+    assert_eq!(
+        run(&argv(&[
+            "gen-data", "--out", &out_s, "--scale", "0.005", "--seed", "5",
+        ]))
+        .unwrap(),
+        0
+    );
+    // Store-backed epoch must be byte-identical to the in-memory run.
+    assert_eq!(
+        run(&argv(&[
+            "replay", "--store", &out_s, "--scale", "0.005", "--verify",
+        ]))
+        .unwrap(),
+        0
+    );
+    // A wrong generation scale changes the video set: the loaders
+    // diverge and verify must fail loudly instead of passing silently.
+    assert!(run(&argv(&[
+        "replay", "--store", &out_s, "--scale", "0.002", "--verify",
+    ]))
+    .is_err());
+    std::fs::remove_file(&out).ok();
+    assert!(run(&argv(&["replay", "--store", &out_s])).is_err(),
+            "missing store file must error");
+}
+
+#[test]
 fn deadlock_demo_completes() {
     assert_eq!(
         run(&argv(&[

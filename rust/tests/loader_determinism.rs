@@ -1,0 +1,179 @@
+//! Loader determinism properties: for a fixed `(seed, epoch)` the
+//! builder pipeline must deliver the exact same `DeviceBatch` sequence
+//! regardless of `workers` and `depth`, in both planned and stream
+//! modes — worker scheduling may reorder *materialization*, never
+//! *delivery*. Plus the stream-mode worker-death contract: a worker dying
+//! after claiming a step surfaces as a truncated-epoch error, not a
+//! silently shorter epoch.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use bload::config::ExperimentConfig;
+use bload::dataset::synthetic::generate;
+use bload::dataset::Split;
+use bload::loader::{BlockSource, DataLoaderBuilder, DeviceBatch, WorkUnit};
+use bload::packing::{by_name, pack, Block, PackedDataset};
+
+fn setup(seed: u64) -> (Arc<Split>, Arc<PackedDataset>) {
+    let cfg = ExperimentConfig::default_config();
+    let ds = generate(&cfg.dataset.scaled(0.01), seed);
+    let packed = Arc::new(
+        pack(by_name("bload").unwrap(), &ds.train, &cfg.packing, seed)
+            .unwrap(),
+    );
+    (Arc::new(ds.train), packed)
+}
+
+/// Everything observable about one batch, for exact sequence comparison.
+fn fingerprint(b: &DeviceBatch) -> (Vec<usize>, Vec<u32>, Vec<u32>,
+                                    Vec<u32>, Vec<u32>, usize, usize) {
+    // f32 payloads compare bitwise via their bit patterns.
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect();
+    (
+        b.block_ids.clone(),
+        bits(&b.feats),
+        bits(&b.labels),
+        bits(&b.frame_mask),
+        bits(&b.seg_ids),
+        b.real_frames,
+        b.slots,
+    )
+}
+
+#[test]
+fn planned_sequence_invariant_under_workers_and_depth() {
+    let (split, packed) = setup(5);
+    let runs: Vec<Vec<_>> = [(1usize, 1usize), (1, 4), (2, 2), (4, 1),
+                             (4, 8), (8, 3)]
+        .iter()
+        .map(|&(workers, depth)| {
+            let mut loader = DataLoaderBuilder::new()
+                .batch(2)
+                .workers(workers)
+                .depth(depth)
+                .seed(21)
+                .shard(2, 1)
+                .planned(Arc::clone(&split), Arc::clone(&packed), 3)
+                .unwrap();
+            let mut out = Vec::new();
+            while let Some(b) = loader.next() {
+                out.push(fingerprint(&b.unwrap()));
+            }
+            out
+        })
+        .collect();
+    assert!(runs[0].len() >= 2, "need a few steps, got {}", runs[0].len());
+    for (i, r) in runs.iter().enumerate().skip(1) {
+        assert_eq!(
+            *r, runs[0],
+            "planned run {i} diverged from the single-worker baseline"
+        );
+    }
+}
+
+#[test]
+fn stream_sequence_invariant_under_workers_and_depth() {
+    let (split, packed) = setup(6);
+    let runs: Vec<Vec<_>> = [(1usize, 1usize), (2, 3), (4, 2), (8, 8)]
+        .iter()
+        .map(|&(workers, depth)| {
+            let (tx, rx) = std::sync::mpsc::sync_channel(4);
+            let feeder = {
+                let packed = Arc::clone(&packed);
+                std::thread::spawn(move || {
+                    for b in &packed.blocks {
+                        if tx.send(b.clone()).is_err() {
+                            return;
+                        }
+                    }
+                })
+            };
+            let mut loader = DataLoaderBuilder::new()
+                .batch(3)
+                .workers(workers)
+                .depth(depth)
+                .stream(Arc::clone(&split), rx, packed.block_len)
+                .unwrap();
+            let mut out = Vec::new();
+            while let Some(b) = loader.next() {
+                out.push(fingerprint(&b.unwrap()));
+            }
+            feeder.join().unwrap();
+            out
+        })
+        .collect();
+    assert!(runs[0].len() >= 2, "need a few steps, got {}", runs[0].len());
+    for (i, r) in runs.iter().enumerate().skip(1) {
+        assert_eq!(
+            *r, runs[0],
+            "stream run {i} diverged from the single-worker baseline"
+        );
+    }
+}
+
+/// Stream-shaped source whose second unit kills the claiming worker
+/// (panics after bumping the claim counter) — the "worker died mid-step"
+/// scenario the loader must turn into an error.
+struct DyingSource {
+    split: Arc<Split>,
+    block: Block,
+    block_len: usize,
+    claimed: AtomicUsize,
+}
+
+impl BlockSource for DyingSource {
+    fn split(&self) -> &Arc<Split> {
+        &self.split
+    }
+
+    fn block_len(&self) -> usize {
+        self.block_len
+    }
+
+    fn next_unit(&self) -> Option<WorkUnit> {
+        let step = self.claimed.fetch_add(1, Ordering::SeqCst);
+        if step >= 1 {
+            // Claimed but never delivered: the worker thread dies here.
+            panic!("simulated loader-worker death");
+        }
+        Some(WorkUnit {
+            step,
+            blocks: vec![(step, self.block.clone())],
+        })
+    }
+
+    fn claimed(&self) -> usize {
+        self.claimed.load(Ordering::SeqCst)
+    }
+
+    fn steps(&self) -> Option<usize> {
+        None // open-ended, like a stream
+    }
+}
+
+#[test]
+fn stream_worker_death_truncates_epoch_with_error() {
+    let (split, packed) = setup(7);
+    let source = Arc::new(DyingSource {
+        split,
+        block: packed.blocks[0].clone(),
+        block_len: packed.block_len,
+        claimed: AtomicUsize::new(0),
+    });
+    // One worker: it delivers step 0, then dies claiming step 1.
+    let mut loader = DataLoaderBuilder::new()
+        .workers(1)
+        .depth(2)
+        .source(source)
+        .unwrap();
+    let first = loader.next().expect("step 0 delivered");
+    assert_eq!(first.unwrap().block_ids, vec![0]);
+    let err = loader
+        .next()
+        .expect("death must surface as an error, not a clean end")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("died"), "{err}");
+    assert!(loader.next().is_none(), "loader is done after the error");
+}

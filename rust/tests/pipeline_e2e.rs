@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use bload::config::ExperimentConfig;
 use bload::dataset::synthetic::generate;
-use bload::loader::{EpochPlan, Prefetcher};
+use bload::loader::{DataLoaderBuilder, EpochPlan};
 use bload::packing::{by_name, pack, pack_with_block_len, registry,
                      validate::validate, Packer};
 use bload::util::Rng;
@@ -25,10 +25,15 @@ fn bload_pipeline_conserves_every_frame() {
 
     // Stream one epoch on one rank; count per-video frames delivered.
     let plan = EpochPlan::new(&packed, 1, 0, 2, true, 7, 0);
-    let mut pf = Prefetcher::spawn(Arc::clone(&split), Arc::clone(&packed),
-                                   &plan, 3, 4);
+    let mut loader = DataLoaderBuilder::new()
+        .batch(2)
+        .workers(3)
+        .depth(4)
+        .seed(7)
+        .planned(Arc::clone(&split), Arc::clone(&packed), 0)
+        .unwrap();
     let mut frames_delivered = 0usize;
-    while let Some(b) = pf.next() {
+    while let Some(b) = loader.next() {
         let b = b.unwrap();
         frames_delivered += b.real_frames;
         // Mask and seg ids agree on occupancy for bload.
@@ -36,7 +41,7 @@ fn bload_pipeline_conserves_every_frame() {
             assert_eq!(b.frame_mask[i] > 0.5, b.seg_ids[i] >= 0.0);
         }
     }
-    pf.shutdown();
+    loader.shutdown();
     // Equal-shard epoch may drop a remainder batch but nothing else.
     let expected: usize = plan
         .batches
@@ -81,16 +86,21 @@ fn all_strategies_produce_loadable_batches() {
         validate(&packed, &ds.train, strategy.within_video_padding())
             .unwrap();
         let split = Arc::new(ds.train.clone());
-        let plan = EpochPlan::new(&packed, 2, 0, 2, true, 3, 0);
-        if plan.steps() == 0 {
+        let mut loader = DataLoaderBuilder::new()
+            .batch(2)
+            .workers(2)
+            .depth(2)
+            .seed(3)
+            .shard(2, 0)
+            .planned(split, Arc::clone(&packed), 0)
+            .unwrap();
+        if loader.steps() == Some(0) {
             continue;
         }
-        let mut pf = Prefetcher::spawn(split, Arc::clone(&packed), &plan,
-                                       2, 2);
-        let b = pf.next().unwrap().unwrap();
+        let b = loader.next().unwrap().unwrap();
         assert_eq!(b.block_len, pcfg.t_max);
         assert!(b.real_frames > 0, "{}", strategy.name());
-        pf.shutdown();
+        loader.shutdown();
     }
     let _ = cfg;
 }
@@ -154,16 +164,90 @@ fn batches_are_bit_identical_across_runs() {
             .unwrap(),
         );
         let split = Arc::new(ds.train);
-        let plan = EpochPlan::new(&packed, 2, 1, 2, true, 11, 4);
-        let mut pf = Prefetcher::spawn(split, packed, &plan, 4, 3);
+        let mut loader = DataLoaderBuilder::new()
+            .batch(2)
+            .workers(4)
+            .depth(3)
+            .seed(11)
+            .shard(2, 1)
+            .planned(split, packed, 4)
+            .unwrap();
         let mut out = Vec::new();
-        while let Some(b) = pf.next() {
+        while let Some(b) = loader.next() {
             out.extend(b.unwrap().feats);
         }
-        pf.shutdown();
+        loader.shutdown();
         out
     };
     assert_eq!(collect(), collect());
+}
+
+#[test]
+fn store_replay_is_byte_identical_to_in_memory_run() {
+    // The StoreSource acceptance bar: a persisted shard replayed through
+    // the builder pipeline delivers exactly the bytes of the equivalent
+    // in-memory offline epoch — same shuffle, same sharding, same
+    // content.
+    use bload::dataset::store::StoreWriter;
+    let cfg = ExperimentConfig::default_config();
+    let dcfg = cfg.dataset.scaled(0.01);
+    let gen_seed = 13u64;
+    let ds = generate(&dcfg, gen_seed);
+
+    let path = std::env::temp_dir().join(format!(
+        "bload_replay_e2e_{}.blds",
+        std::process::id()
+    ));
+    let mut w = StoreWriter::create(
+        &path,
+        gen_seed,
+        (dcfg.objects as u32, dcfg.feat_dim as u32, dcfg.classes as u32),
+        ds.train.videos.len() as u32,
+    )
+    .unwrap();
+    for v in &ds.train.videos {
+        w.append(&ds.train.spec.materialize(*v)).unwrap();
+    }
+    w.finish().unwrap();
+
+    let builder = DataLoaderBuilder::new()
+        .batch(2)
+        .workers(3)
+        .depth(2)
+        .seed(13)
+        .shard(2, 1);
+    let mut from_store = builder
+        .store(&path, &dcfg, by_name("bload").unwrap(), &cfg.packing, 2)
+        .unwrap();
+    let packed = Arc::new(
+        pack(by_name("bload").unwrap(), &ds.train, &cfg.packing, 13)
+            .unwrap(),
+    );
+    let mut in_memory = builder
+        .planned(Arc::new(ds.train), packed, 2)
+        .unwrap();
+
+    assert_eq!(from_store.steps(), in_memory.steps());
+    assert!(from_store.steps().unwrap_or(0) > 0, "epoch has steps");
+    loop {
+        match (from_store.next(), in_memory.next()) {
+            (None, None) => break,
+            (Some(a), Some(b)) => {
+                let (a, b) = (a.unwrap(), b.unwrap());
+                assert_eq!(a.block_ids, b.block_ids);
+                assert_eq!(a.feats, b.feats);
+                assert_eq!(a.labels, b.labels);
+                assert_eq!(a.frame_mask, b.frame_mask);
+                assert_eq!(a.seg_ids, b.seg_ids);
+            }
+            (a, b) => panic!(
+                "step-count mismatch: store {:?} vs memory {:?}",
+                a.map(|r| r.is_ok()),
+                b.map(|r| r.is_ok())
+            ),
+        }
+    }
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]

@@ -1,6 +1,6 @@
 //! Integration: the streaming ingest subsystem end-to-end — disk shard →
 //! StoreReader → bounded queue → windowed online BLoad → per-rank block
-//! shards → streaming prefetcher — against the offline pipeline's
+//! shards → streaming loader — against the offline pipeline's
 //! guarantees. Composition only; per-module behaviour lives in unit
 //! tests.
 
@@ -12,7 +12,7 @@ use bload::dataset::synthetic::generate;
 use bload::ddp::sim;
 use bload::harness::streaming::{self, StreamingOptions};
 use bload::ingest::{self, IngestConfig};
-use bload::loader::Prefetcher;
+use bload::loader::DataLoaderBuilder;
 use bload::packing::{by_name, pack, Block};
 
 #[test]
@@ -57,16 +57,20 @@ fn store_reader_feeds_service_and_prefetcher_delivers_every_frame() {
         })
     };
 
-    // Tee rank 0 into the streaming prefetcher and keep the blocks.
+    // Tee rank 0 into a streaming loader and keep the blocks.
     let rx = svc.take_output(0).unwrap();
     let (brx, tee) = ingest::tee_blocks(rx, 16);
-    let mut pf =
-        Prefetcher::spawn_stream(Arc::clone(&split), brx, t_max, 2, 3, 3);
+    let mut loader = DataLoaderBuilder::new()
+        .batch(2)
+        .workers(3)
+        .depth(3)
+        .stream(Arc::clone(&split), brx, t_max)
+        .unwrap();
     let mut frames = 0usize;
-    while let Some(b) = pf.next() {
+    while let Some(b) = loader.next() {
         frames += b.unwrap().real_frames;
     }
-    pf.shutdown();
+    loader.shutdown();
     feeder.join().unwrap();
     let blocks = tee.join().unwrap();
     let stats = svc.join().unwrap();
