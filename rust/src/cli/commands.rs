@@ -3,11 +3,14 @@
 use std::sync::Arc;
 
 use crate::config::ExperimentConfig;
+use crate::dataset::shardstore::{ShardPool, ShardSetManifest,
+                                 ShardSetWriter};
 use crate::dataset::stats::SplitStats;
 use crate::dataset::store::{StoreReader, StoreWriter};
 use crate::dataset::synthetic::generate;
 use crate::error::{Error, Result};
-use crate::harness::{ablation as abl, deadlock, streaming, table1};
+use crate::harness::{ablation as abl, deadlock, shardset, streaming,
+                     table1};
 use crate::loader::DataLoaderBuilder;
 use crate::metrics::TextTable;
 use crate::packing::{self, pack, validate::validate, viz, Packer};
@@ -62,12 +65,26 @@ pub fn inspect(args: &mut Args) -> Result<i32> {
     Ok(0)
 }
 
-/// `bload pack --strategy S [--scale F] [--seed N]`
+/// `bload pack --strategy S [--scale F] [--seed N]
+///             [--shards N [--out DIR]]`
+///
+/// With `--shards N` the generated split is additionally persisted as a
+/// sharded store ([`crate::dataset::shardstore`] layout): `N` `.blds`
+/// shard files written on parallel worker threads plus a `shards.json`
+/// manifest. Replay it with `bload replay --store DIR`.
 pub fn pack_cmd(args: &mut Args) -> Result<i32> {
     let strat = strategy_flag(args)?;
     let scale = args.flag_f64("scale", 1.0)?;
     let seed = args.flag_u64("seed", 0)?;
+    let shards = args.flag_usize("shards", 0)?;
+    let out = args.flag_str("out", "");
     args.finish()?;
+    if shards == 0 && !out.is_empty() {
+        return Err(Error::Config(
+            "--out needs --shards N (how many shard files to write)"
+                .into(),
+        ));
+    }
     let cfg = ExperimentConfig::default_config();
     let ds = generate(&cfg.dataset.scaled(scale), seed);
     let t0 = std::time::Instant::now();
@@ -82,6 +99,25 @@ pub fn pack_cmd(args: &mut Args) -> Result<i32> {
         crate::util::humanize::rate(ds.train.total_frames() as f64,
                                     dt.as_secs_f64())
     );
+    if shards > 0 {
+        let dir = if out.is_empty() {
+            format!("agsynth-{shards}shards")
+        } else {
+            out
+        };
+        let t0 = std::time::Instant::now();
+        let manifest = ShardSetWriter::new(&dir, seed, shards)?
+            .write(&ds.train)?;
+        println!(
+            "wrote {} videos / {} frames into {} shard(s) under {dir}/ \
+             in {} ({} bytes + shards.json)",
+            commas(manifest.total_videos() as u64),
+            commas(manifest.total_frames() as u64),
+            manifest.shards.len(),
+            crate::util::humanize::duration(t0.elapsed()),
+            commas(manifest.total_bytes())
+        );
+    }
     Ok(0)
 }
 
@@ -220,15 +256,19 @@ pub fn train(args: &mut Args) -> Result<i32> {
     Ok(0)
 }
 
-/// `bload replay --store PATH [--strategy S] [--batch N] [--epoch N]
-///               [--seed N] [--verify [--scale F]]`
+/// `bload replay --store PATH|DIR [--strategy S] [--batch N]
+///               [--epoch N] [--seed N] [--verify [--scale F]]`
 ///
-/// Replay a persisted dataset shard as a first-class training input: the
-/// store streams back through a CRC-verified
-/// [`crate::loader::StoreSource`], packs with the chosen strategy, and
-/// one epoch of device batches materializes through the standard
-/// builder pipeline. `--verify` additionally regenerates the equivalent
-/// split in memory (`--scale` must match the `gen-data` scale) and
+/// Replay a persisted dataset as a first-class training input. A file
+/// path streams back through a CRC-verified
+/// [`crate::loader::StoreSource`]; a **directory** is treated as a
+/// sharded store ([`crate::dataset::shardstore`] layout) and replays
+/// through a [`crate::loader::ShardSource`] — every shard CRC-verified
+/// in parallel, content served by the concurrent shard pool. Either way
+/// the split packs with the chosen strategy and one epoch of device
+/// batches materializes through the standard builder pipeline.
+/// `--verify` additionally regenerates the equivalent split in memory
+/// (`--scale` must match the `gen-data` / `pack --shards` scale) and
 /// checks the store-backed batches are byte-identical to the offline
 /// in-memory run.
 pub fn replay(args: &mut Args) -> Result<i32> {
@@ -243,19 +283,27 @@ pub fn replay(args: &mut Args) -> Result<i32> {
     let cfg = ExperimentConfig::default_config();
     let dcfg = cfg.dataset.scaled(scale);
     let path = std::path::Path::new(&store);
+    let sharded = path.is_dir();
     let builder = DataLoaderBuilder::from_config(&cfg.loader)
         .batch(batch)
         .seed(seed);
     let t0 = std::time::Instant::now();
-    let mut loader = builder.store(path, &dcfg, strat, &cfg.packing,
-                                   epoch)?;
+    let mut loader = if sharded {
+        builder.shards(path, &dcfg, strat, &cfg.packing, epoch)?
+    } else {
+        builder.store(path, &dcfg, strat, &cfg.packing, epoch)?
+    };
     let steps = loader.steps().unwrap_or(0);
 
     let mut mem_loader = if verify {
-        // The shard records its generation seed; the equivalent
+        // The store records its generation seed; the equivalent
         // in-memory run regenerates the split from it and packs with the
         // same strategy and seed.
-        let store_seed = StoreReader::open(path)?.seed();
+        let store_seed = if sharded {
+            ShardSetManifest::load(path)?.seed
+        } else {
+            StoreReader::open(path)?.seed()
+        };
         let ds = generate(&dcfg, store_seed);
         let packed = Arc::new(pack(strat, &ds.train, &cfg.packing, seed)?);
         Some(builder.planned(Arc::new(ds.train), packed, epoch)?)
@@ -372,6 +420,79 @@ pub fn strategies(args: &mut Args) -> Result<i32> {
         "{} strategies registered; `--strategy <name>` and \
          `packing.strategy` accept any name or alias.",
         packing::registry().len()
+    );
+    Ok(0)
+}
+
+/// `bload shards --dir DIR` — inspect a sharded store: load
+/// `shards.json`, open the [`ShardPool`] (which CRC-verifies every
+/// shard against both its footer and the manifest), and print the
+/// per-shard table.
+///
+/// `bload shards --bench [--scale F] [--seed N] [--shards N]
+/// [--readers N]` — run the self-contained sharded-store scenario
+/// instead: parallel shard write vs single-file write, concurrent pool
+/// replay vs the sequential reader, and the byte-identity check of a
+/// shard-backed epoch.
+pub fn shards_cmd(args: &mut Args) -> Result<i32> {
+    let dir = args.flag_str("dir", "");
+    let bench = args.flag_bool("bench");
+    let defaults = shardset::ShardSetOptions::default();
+    let opts = shardset::ShardSetOptions {
+        scale: args.flag_f64("scale", defaults.scale)?,
+        seed: args.flag_u64("seed", defaults.seed)?,
+        shards: args.flag_usize("shards", defaults.shards)?,
+        readers: args.flag_usize("readers", defaults.readers)?,
+        batch: args.flag_usize("batch", defaults.batch)?,
+    };
+    args.finish()?;
+    if bench {
+        if !dir.is_empty() {
+            return Err(Error::Config(
+                "--bench runs a self-contained scenario on synthetic \
+                 data; it cannot benchmark an existing --dir (drop one \
+                 of the two flags)"
+                    .into(),
+            ));
+        }
+        let report = shardset::run(&opts)?;
+        print!("{}", shardset::render(&report));
+        return Ok(0);
+    }
+    if dir.is_empty() {
+        return Err(Error::Config(
+            "pass --dir DIR to inspect a shard set, or --bench for the \
+             self-contained scenario"
+                .into(),
+        ));
+    }
+    let path = std::path::Path::new(&dir);
+    let t0 = std::time::Instant::now();
+    let pool = ShardPool::open(path)?;
+    let dt = t0.elapsed();
+    let m = pool.manifest();
+    let mut t = TextTable::new(&[
+        "shard", "videos", "frames", "bytes", "crc32",
+    ]);
+    for e in &m.shards {
+        t.row(&[
+            e.file.clone(),
+            commas(e.videos as u64),
+            commas(e.frames as u64),
+            commas(e.bytes),
+            format!("{:#010x}", e.crc32),
+        ]);
+    }
+    println!("{}", t.render());
+    let (o, f, c) = pool.geometry();
+    println!(
+        "seed {} | geometry ({o}, {f}, {c}) | {} videos / {} frames in \
+         {} shard(s); every shard CRC-verified in {}",
+        pool.seed(),
+        commas(m.total_videos() as u64),
+        commas(m.total_frames() as u64),
+        m.shards.len(),
+        crate::util::humanize::duration(dt)
     );
     Ok(0)
 }

@@ -8,12 +8,14 @@
 //!   gen-data       generate + persist an AG-Synth dataset store
 //!   inspect        dataset statistics (Fig 1 histogram)
 //!   strategies     list the packing-strategy registry
-//!   pack           pack a split and print stats (+ validation)
+//!   pack           pack a split and print stats (+ validation);
+//!                  --shards N persists a sharded store
 //!   pack-viz       ASCII rendering of packed blocks (Figs 1/3/4/5)
 //!   table1         reproduce Table I (add --full for measured runs)
 //!   deadlock-demo  reproduce Fig 2 and show BLoad completing
 //!   ingest         streaming mode: online packing service vs offline
-//!   replay         replay a persisted store shard through the loader
+//!   replay         replay a persisted store (file or shard dir)
+//!   shards         inspect a sharded store / run the shard scenario
 //!   train          end-to-end training run from a config file
 //!   ablation       reset-table / state-carry ablations (Fig 6)
 //! ```
@@ -50,6 +52,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "deadlock-demo" => commands::deadlock_demo(&mut args),
         "ingest" => commands::ingest(&mut args),
         "replay" => commands::replay(&mut args),
+        "shards" => commands::shards_cmd(&mut args),
         "train" => commands::train(&mut args),
         "ablation" => commands::ablation(&mut args),
         other => {
@@ -73,7 +76,8 @@ COMMANDS:
     inspect        dataset statistics (--scale F) (Fig 1)
     strategies     list the packing-strategy registry (keys, aliases, \
 streaming support)
-    pack           pack + validate (--strategy S) (--scale F)
+    pack           pack + validate (--strategy S) (--scale F); \
+--shards N [--out DIR] also writes a sharded store
     pack-viz       ASCII block layouts (--strategy S) (Figs 1/3/4/5)
     table1         reproduce Table I (--full to train; --epochs N; \
 --videos N; --include-naive)
@@ -82,8 +86,11 @@ streaming support)
     deadlock-demo  reproduce Fig 2 (--ranks N --batch N --timeout-ms N)
     ingest         streaming mode (--window N --max-latency N --queue N \
 --ranks N --producers N)
-    replay         replay a gen-data shard through the loader (--store \
-PATH --strategy S; --verify checks byte-identity vs in-memory)
+    replay         replay a persisted store through the loader (--store \
+PATH or shard DIR --strategy S; --verify checks byte-identity vs \
+in-memory)
+    shards         inspect a sharded store (--dir DIR: per-shard table, \
+CRC verification) or --bench the shard scenario (--shards N --readers N)
     train          full training run (--config FILE)
     ablation       reset-table / state-carry ablations (--epochs N)
 
@@ -96,6 +103,16 @@ STREAMING MODE:
     a streaming loader while packing is still running. The report compares
     online vs offline padding ratio and checks the schedule on the
     threaded DDP barrier engine.
+
+SHARDED STORES:
+    `bload pack --shards N [--out DIR]` persists the split as N `.blds`
+    shard files (written on parallel threads) plus a shards.json manifest
+    recording seed, geometry and per-shard CRCs. `bload replay --store
+    DIR` replays the set through the concurrent ShardPool — every shard
+    CRC-verified, batches byte-identical to the single-file and in-memory
+    runs for any shard count. `bload shards --dir DIR` prints and
+    verifies the manifest; `bload shards --bench` measures parallel
+    write and multi-reader replay against the single-file baseline.
 
 COMMON FLAGS:
     --seed N           PRNG seed (default 0)

@@ -12,12 +12,24 @@
 //!   latent AR(1) process plus a *history* component that is only
 //!   predictable from previous frames (the mechanism behind the recall@20
 //!   column: chunking severs history, BLoad's reset table preserves it).
-//! * [`store`] — an optional on-disk binary format (header + CRC32
-//!   footer) so examples can persist materialized datasets.
+//! * [`store`] — the single-file on-disk binary format (`.blds`: header
+//!   + CRC32 footer) for persisting materialized datasets, streamable in
+//!   O(one video) memory.
+//! * [`shardstore`] — the scaled-out layout: a directory of `N` `.blds`
+//!   shard files plus a `shards.json` manifest (seed, geometry,
+//!   per-shard video ranges and CRCs). A parallel
+//!   [`ShardSetWriter`](shardstore::ShardSetWriter) writes shards on
+//!   worker threads, a [`RollingShardWriter`](shardstore::RollingShardWriter)
+//!   persists live streams shard-by-shard, and a concurrent
+//!   [`ShardPool`](shardstore::ShardPool) serves random-access decoded
+//!   videos to many loaders through one shared bounded cache. Written by
+//!   `bload pack --shards N`, replayed by `bload replay <dir>`,
+//!   inspected by `bload shards`.
 //! * [`stats`] — split statistics used by calibration checks and `bload
 //!   inspect`.
 
 pub mod distribution;
+pub mod shardstore;
 pub mod stats;
 pub mod store;
 pub mod synthetic;

@@ -29,11 +29,67 @@ use crate::util::crc32::Hasher;
 
 use super::{VideoData, VideoMeta};
 
-const MAGIC: &[u8; 4] = b"BLDS";
+pub(crate) const MAGIC: &[u8; 4] = b"BLDS";
 const VERSION: u32 = 1;
 
-/// Writer that streams videos to disk while hashing.
+/// Serialize the 28-byte store header that follows the magic (shared
+/// with the sharded layout in [`crate::dataset::shardstore`]).
+pub(crate) fn encode_header(seed: u64, geometry: (u32, u32, u32),
+                            n_videos: u32) -> Vec<u8> {
+    let mut header = Vec::with_capacity(28);
+    header.extend_from_slice(&VERSION.to_le_bytes());
+    header.extend_from_slice(&seed.to_le_bytes());
+    header.extend_from_slice(&geometry.0.to_le_bytes());
+    header.extend_from_slice(&geometry.1.to_le_bytes());
+    header.extend_from_slice(&geometry.2.to_le_bytes());
+    header.extend_from_slice(&n_videos.to_le_bytes());
+    header
+}
+
+/// Check `v` against the store geometry and its own declared length.
+pub(crate) fn check_video(v: &VideoData, geometry: (u32, u32, u32))
+                          -> Result<()> {
+    let (o, f, c) = geometry;
+    if (v.objects as u32, v.feat_dim as u32, v.classes as u32) != (o, f, c)
+    {
+        return Err(Error::Dataset(format!(
+            "video {} geometry ({},{},{}) != store ({o},{f},{c})",
+            v.id, v.objects, v.feat_dim, v.classes
+        )));
+    }
+    if v.feats.len() != v.len * v.objects * v.feat_dim
+        || v.labels.len() != v.len * v.objects * v.classes
+    {
+        return Err(Error::Dataset(format!(
+            "video {} buffer sizes inconsistent with len {}",
+            v.id, v.len
+        )));
+    }
+    Ok(())
+}
+
+/// Serialize one video record (`id`, `len`, payload) exactly as it lives
+/// in a store body. Callers validate with [`check_video`] first.
+pub(crate) fn encode_record(v: &VideoData) -> Vec<u8> {
+    let mut buf =
+        Vec::with_capacity(8 + 4 * (v.feats.len() + v.labels.len()));
+    buf.extend_from_slice(&v.id.to_le_bytes());
+    buf.extend_from_slice(&(v.len as u32).to_le_bytes());
+    for x in &v.feats {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    for y in &v.labels {
+        buf.extend_from_slice(&y.to_le_bytes());
+    }
+    buf
+}
+
+/// Writer that streams videos to disk while hashing. IO and consistency
+/// errors name the destination: the file path when created through
+/// [`create`](StoreWriter::create) / [`with_label`](StoreWriter::with_label),
+/// `<store>` for anonymous sinks.
 pub struct StoreWriter<W: Write> {
+    label: String,
     out: W,
     hasher: Hasher,
     geometry: (u32, u32, u32),
@@ -47,25 +103,33 @@ impl StoreWriter<BufWriter<std::fs::File>> {
                   n_videos: u32) -> Result<Self> {
         let file = std::fs::File::create(path)
             .map_err(|e| Error::io(path.display(), e))?;
-        StoreWriter::new(BufWriter::new(file), seed, geometry, n_videos)
+        StoreWriter::with_label(&path.display().to_string(),
+                                BufWriter::new(file), seed, geometry,
+                                n_videos)
     }
 }
 
 impl<W: Write> StoreWriter<W> {
-    pub fn new(mut out: W, seed: u64, geometry: (u32, u32, u32),
+    /// Write to an anonymous sink; errors are labelled `<store>`. Prefer
+    /// [`with_label`](StoreWriter::with_label) when a path (or any other
+    /// name) is known.
+    pub fn new(out: W, seed: u64, geometry: (u32, u32, u32),
                n_videos: u32) -> Result<Self> {
+        StoreWriter::with_label("<store>", out, seed, geometry, n_videos)
+    }
+
+    /// Write to any sink, labelling errors with `label` (use the path
+    /// for files).
+    pub fn with_label(label: &str, mut out: W, seed: u64,
+                      geometry: (u32, u32, u32), n_videos: u32)
+                      -> Result<Self> {
         let mut hasher = Hasher::new();
-        out.write_all(MAGIC).map_err(|e| Error::io("<store>", e))?;
-        let mut header = Vec::with_capacity(32);
-        header.extend_from_slice(&VERSION.to_le_bytes());
-        header.extend_from_slice(&seed.to_le_bytes());
-        header.extend_from_slice(&geometry.0.to_le_bytes());
-        header.extend_from_slice(&geometry.1.to_le_bytes());
-        header.extend_from_slice(&geometry.2.to_le_bytes());
-        header.extend_from_slice(&n_videos.to_le_bytes());
+        out.write_all(MAGIC).map_err(|e| Error::io(label, e))?;
+        let header = encode_header(seed, geometry, n_videos);
         hasher.update(&header);
-        out.write_all(&header).map_err(|e| Error::io("<store>", e))?;
+        out.write_all(&header).map_err(|e| Error::io(label, e))?;
         Ok(StoreWriter {
+            label: label.to_string(),
             out,
             hasher,
             geometry,
@@ -75,53 +139,32 @@ impl<W: Write> StoreWriter<W> {
     }
 
     pub fn append(&mut self, v: &VideoData) -> Result<()> {
-        let (o, f, c) = self.geometry;
-        if (v.objects as u32, v.feat_dim as u32, v.classes as u32)
-            != (o, f, c)
-        {
-            return Err(Error::Dataset(format!(
-                "video {} geometry ({},{},{}) != store ({o},{f},{c})",
-                v.id, v.objects, v.feat_dim, v.classes
-            )));
-        }
-        if v.feats.len() != v.len * v.objects * v.feat_dim
-            || v.labels.len() != v.len * v.objects * v.classes
-        {
-            return Err(Error::Dataset(format!(
-                "video {} buffer sizes inconsistent with len {}",
-                v.id, v.len
-            )));
-        }
-        let mut buf = Vec::with_capacity(8 + 4 * (v.feats.len() + v.labels.len()));
-        buf.extend_from_slice(&v.id.to_le_bytes());
-        buf.extend_from_slice(&(v.len as u32).to_le_bytes());
-        for x in &v.feats {
-            buf.extend_from_slice(&x.to_le_bytes());
-        }
-        for y in &v.labels {
-            buf.extend_from_slice(&y.to_le_bytes());
-        }
+        check_video(v, self.geometry)?;
+        let buf = encode_record(v);
         self.hasher.update(&buf);
-        self.out.write_all(&buf).map_err(|e| Error::io("<store>", e))?;
+        self.out
+            .write_all(&buf)
+            .map_err(|e| Error::io(&self.label, e))?;
         self.written += 1;
         Ok(())
     }
 
-    /// Write the CRC footer and flush. Must have appended exactly the
-    /// declared number of videos.
-    pub fn finish(mut self) -> Result<()> {
+    /// Write the CRC footer and flush, returning the footer CRC (the
+    /// sharded layout records it in `shards.json`). Must have appended
+    /// exactly the declared number of videos.
+    pub fn finish(mut self) -> Result<u32> {
         if self.written != self.expected {
             return Err(Error::Dataset(format!(
-                "store expected {} videos, got {}",
-                self.expected, self.written
+                "{}: store expected {} videos, got {}",
+                self.label, self.expected, self.written
             )));
         }
         let crc = self.hasher.finalize();
         self.out
             .write_all(&crc.to_le_bytes())
             .and_then(|_| self.out.flush())
-            .map_err(|e| Error::io("<store>", e))?;
-        Ok(())
+            .map_err(|e| Error::io(&self.label, e))?;
+        Ok(crc)
     }
 }
 
@@ -157,6 +200,10 @@ pub struct StoreReader<R: Read> {
     size: Option<u64>,
     verified: bool,
     failed: bool,
+    /// Byte staging buffer reused across videos (replay hot path).
+    scratch: Vec<u8>,
+    /// The verified footer CRC, once the stream reached it.
+    crc: Option<u32>,
 }
 
 impl StoreReader<BufReader<std::fs::File>> {
@@ -214,11 +261,28 @@ impl<R: Read> StoreReader<R> {
             size: None,
             verified: false,
             failed: false,
+            scratch: Vec::new(),
+            crc: None,
         })
     }
 
     pub fn seed(&self) -> u64 {
         self.seed
+    }
+
+    /// Bytes consumed so far from the start of the source. Before a
+    /// [`next`](Iterator::next) / [`next_meta`](StoreReader::next_meta)
+    /// call this is the byte offset of the next record — the sharded
+    /// store's [`ShardPool`](crate::dataset::shardstore::ShardPool)
+    /// builds its random-access index from it.
+    pub fn offset(&self) -> u64 {
+        self.offset
+    }
+
+    /// The footer CRC, available once the stream verified it (i.e. after
+    /// iteration returned `None` cleanly).
+    pub fn crc(&self) -> Option<u32> {
+        self.crc
     }
 
     /// `(objects, feat_dim, classes)` declared by the header.
@@ -254,23 +318,34 @@ impl<R: Read> StoreReader<R> {
 
     /// Read `n` f32s in bounded chunks: the vector only grows as bytes
     /// actually arrive, so a corrupt record length on a short source hits
-    /// the truncation error instead of a giant upfront allocation.
+    /// the truncation error instead of a giant upfront allocation. The
+    /// byte staging buffer is owned by the reader and reused across
+    /// videos, so steady-state replay allocates only the returned vector.
     fn read_f32s(&mut self, n: usize) -> Result<Vec<f32>> {
         const CHUNK_F32S: usize = 1 << 16; // 256 KiB per read
         let mut out = Vec::with_capacity(n.min(CHUNK_F32S));
-        let mut raw = vec![0u8; 4 * n.min(CHUNK_F32S)];
+        let mut raw = std::mem::take(&mut self.scratch);
+        let need = 4 * n.min(CHUNK_F32S);
+        if raw.len() < need {
+            raw.resize(need, 0);
+        }
         let mut remaining = n;
+        let mut result = Ok(());
         while remaining > 0 {
             let take = remaining.min(CHUNK_F32S);
             let buf = &mut raw[..4 * take];
-            self.read_tracked(buf)?;
+            if let Err(e) = self.read_tracked(buf) {
+                result = Err(e);
+                break;
+            }
             out.extend(
                 buf.chunks_exact(4)
                     .map(|b| f32::from_le_bytes(b.try_into().unwrap())),
             );
             remaining -= take;
         }
-        Ok(out)
+        self.scratch = raw;
+        result.map(|()| out)
     }
 
     /// Hash past `n` payload bytes through a fixed scratch buffer
@@ -423,6 +498,7 @@ impl<R: Read> StoreReader<R> {
             Err(e) => return Err(Error::io(&self.src, e)),
         }
         self.verified = true;
+        self.crc = Some(want);
         Ok(())
     }
 }
@@ -500,6 +576,85 @@ mod tests {
             assert_eq!(a.labels, b.labels);
         }
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn zero_video_store_round_trips() {
+        let path = tmpfile("empty.blds");
+        let w = StoreWriter::create(&path, 3, (4, 12, 10), 0).unwrap();
+        let crc = w.finish().unwrap();
+        let (seed, back) = read_store(&path).unwrap();
+        assert_eq!(seed, 3);
+        assert!(back.is_empty());
+        // Streaming over the empty store verifies the footer too, and
+        // reports the CRC the writer returned.
+        let mut r = StoreReader::open(&path).unwrap();
+        assert_eq!(r.total_videos(), 0);
+        assert!(r.next_meta().is_none());
+        assert_eq!(r.crc(), Some(crc));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncation_mid_record_reports_offset() {
+        // Cut inside the *second* record's payload: the first video must
+        // stream out intact, then the cut surfaces as truncation at the
+        // exact offset where reading stopped.
+        let cfg = tiny_config();
+        let spec = GeneratorSpec::new(&cfg, 5);
+        let vids: Vec<_> = (0..2)
+            .map(|i| spec.materialize(VideoMeta { id: i, len: 4 }))
+            .collect();
+        let path = tmpfile("midrec.blds");
+        let mut w = StoreWriter::create(&path, 5, (4, 12, 10), 2).unwrap();
+        for v in &vids {
+            w.append(v).unwrap();
+        }
+        w.finish().unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let record = 8 + 4 * (vids[0].feats.len() + vids[0].labels.len());
+        let cut = 4 + 28 + record + record / 2;
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        let mut r = StoreReader::open(&path).unwrap();
+        let first = r.next().unwrap().unwrap();
+        assert_eq!(first.feats, vids[0].feats);
+        let err = r.next().unwrap().unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        assert!(err.contains("byte offset"), "{err}");
+        assert!(r.next().is_none(), "reader is fused after failure");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn writer_errors_name_the_destination() {
+        // Consistency errors from a path-created writer carry the path...
+        let cfg = tiny_config();
+        let spec = GeneratorSpec::new(&cfg, 5);
+        let v = spec.materialize(VideoMeta { id: 0, len: 4 });
+        let path = tmpfile("label.blds");
+        let mut w = StoreWriter::create(&path, 5, (4, 12, 10), 2).unwrap();
+        w.append(&v).unwrap();
+        let err = w.finish().unwrap_err().to_string();
+        assert!(err.contains("label.blds"), "{err}");
+        std::fs::remove_file(&path).ok();
+        // ...IO errors from a labelled sink carry the label.
+        struct Full;
+        impl std::io::Write for Full {
+            fn write(&mut self, _: &[u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "disk full",
+                ))
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let err = StoreWriter::with_label("remote.blds", Full, 5,
+                                          (4, 12, 10), 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("remote.blds"), "{err}");
     }
 
     #[test]

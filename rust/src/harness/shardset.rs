@@ -1,0 +1,303 @@
+//! Sharded-store scenario: parallel shard writing, concurrent
+//! [`ShardPool`](crate::dataset::shardstore::ShardPool) replay vs the
+//! single-file reader, and byte-identity of the shard-backed epoch.
+//!
+//! Self-contained (writes into a scratch directory under the system
+//! temp dir, removed afterwards); driven by `bload shards --bench`.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::ExperimentConfig;
+use crate::dataset::shardstore::{ShardPool, ShardSetWriter};
+use crate::dataset::store::{StoreReader, StoreWriter};
+use crate::dataset::synthetic::generate;
+use crate::error::{Error, Result};
+use crate::loader::DataLoaderBuilder;
+use crate::packing::{by_name, pack};
+use crate::util::humanize::{commas, duration, rate};
+
+/// Scenario knobs (defaults match `bload shards --bench` with no flags).
+#[derive(Debug, Clone)]
+pub struct ShardSetOptions {
+    /// Dataset scale factor over Action-Genome geometry.
+    pub scale: f64,
+    pub seed: u64,
+    /// Shard files to split the store into.
+    pub shards: usize,
+    /// Concurrent pool readers in the replay measurement (>= 1).
+    pub readers: usize,
+    /// Blocks per step in the byte-identity epoch check.
+    pub batch: usize,
+}
+
+impl Default for ShardSetOptions {
+    fn default() -> Self {
+        ShardSetOptions {
+            scale: 0.02,
+            seed: 0,
+            shards: 4,
+            readers: 2,
+            batch: 2,
+        }
+    }
+}
+
+/// Everything the scenario measured.
+#[derive(Debug, Clone)]
+pub struct ShardSetReport {
+    pub videos: usize,
+    pub frames: usize,
+    pub shards: usize,
+    pub readers: usize,
+    /// Total shard-file bytes.
+    pub bytes: u64,
+    /// Parallel shard-set write wall time.
+    pub shard_write_s: f64,
+    /// Equivalent single-file write wall time.
+    pub single_write_s: f64,
+    /// Pool open (parallel scan + CRC verify + index) wall time.
+    pub verify_s: f64,
+    /// Sequential single-file full decode wall time.
+    pub single_read_s: f64,
+    /// Full decode through the pool with `readers` threads.
+    pub pool_read_s: f64,
+    /// Steps of the byte-identity epoch (shard-backed vs in-memory).
+    pub steps: usize,
+}
+
+/// Run the scenario. Errors if the shard-backed epoch diverges from the
+/// in-memory epoch by a single byte.
+pub fn run(opts: &ShardSetOptions) -> Result<ShardSetReport> {
+    if opts.readers == 0 || opts.shards == 0 || opts.batch == 0 {
+        return Err(Error::Config(
+            "shards, readers and batch must be >= 1".into(),
+        ));
+    }
+    let scratch = std::env::temp_dir().join(format!(
+        "bload_shardset_bench_{}_{}",
+        std::process::id(),
+        opts.seed
+    ));
+    std::fs::remove_dir_all(&scratch).ok();
+    std::fs::create_dir_all(&scratch)
+        .map_err(|e| Error::io(scratch.display(), e))?;
+    let result = run_in(opts, &scratch);
+    std::fs::remove_dir_all(&scratch).ok();
+    result
+}
+
+fn run_in(opts: &ShardSetOptions, scratch: &Path)
+          -> Result<ShardSetReport> {
+    let cfg = ExperimentConfig::default_config();
+    let dcfg = cfg.dataset.scaled(opts.scale);
+    let ds = generate(&dcfg, opts.seed);
+    let split = Arc::new(ds.train);
+    let videos = split.videos.len();
+    let frames = split.total_frames();
+    let geometry = (dcfg.objects as u32, dcfg.feat_dim as u32,
+                    dcfg.classes as u32);
+
+    // Parallel sharded write vs the single-file baseline.
+    let shard_dir = scratch.join("set");
+    let t0 = Instant::now();
+    let manifest = ShardSetWriter::new(&shard_dir, opts.seed,
+                                       opts.shards)?
+        .write(&split)?;
+    let shard_write_s = t0.elapsed().as_secs_f64();
+
+    let single = scratch.join("single.blds");
+    let t0 = Instant::now();
+    let mut w = StoreWriter::create(&single, opts.seed, geometry,
+                                    videos as u32)?;
+    for m in &split.videos {
+        w.append(&split.spec.materialize(*m))?;
+    }
+    w.finish()?;
+    let single_write_s = t0.elapsed().as_secs_f64();
+
+    // Pool open = scan + CRC verify + byte index, in parallel.
+    let t0 = Instant::now();
+    let pool = Arc::new(ShardPool::open(&shard_dir)?);
+    let verify_s = t0.elapsed().as_secs_f64();
+
+    // Full decode: one sequential cursor vs `readers` concurrent pool
+    // readers over disjoint slices (each video decoded exactly once in
+    // both arms).
+    let t0 = Instant::now();
+    let mut n = 0usize;
+    for v in StoreReader::open(&single)? {
+        n += v?.len;
+    }
+    if n != frames {
+        return Err(Error::Dataset(format!(
+            "single-file decode saw {n} frames, expected {frames}"
+        )));
+    }
+    let single_read_s = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let ids: Vec<u32> = split.videos.iter().map(|v| v.id).collect();
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::with_capacity(opts.readers);
+        for r in 0..opts.readers {
+            let pool = Arc::clone(&pool);
+            let slice: Vec<u32> = ids
+                .iter()
+                .skip(r)
+                .step_by(opts.readers)
+                .copied()
+                .collect();
+            handles.push(s.spawn(move || -> Result<usize> {
+                let mut frames = 0usize;
+                for id in slice {
+                    frames += pool.get(id)?.len;
+                }
+                Ok(frames)
+            }));
+        }
+        let mut total = 0usize;
+        for h in handles {
+            total += h.join().map_err(|_| {
+                Error::Dataset("pool reader thread panicked".into())
+            })??;
+        }
+        if total != frames {
+            return Err(Error::Dataset(format!(
+                "pool decode saw {total} frames, expected {frames}"
+            )));
+        }
+        Ok(())
+    })?;
+    let pool_read_s = t0.elapsed().as_secs_f64();
+
+    // Byte-identity: a shard-backed epoch vs the in-memory epoch.
+    let packer = by_name("bload")?;
+    let builder = DataLoaderBuilder::new()
+        .batch(opts.batch)
+        .workers(2)
+        .depth(2)
+        .seed(opts.seed);
+    let mut from_shards = builder.shards(&shard_dir, &dcfg, packer,
+                                         &cfg.packing, 0)?;
+    let packed = Arc::new(pack(packer, &split, &cfg.packing,
+                               opts.seed)?);
+    let mut in_memory =
+        builder.planned(Arc::clone(&split), packed, 0)?;
+    let mut steps = 0usize;
+    loop {
+        match (from_shards.next(), in_memory.next()) {
+            (None, None) => break,
+            (Some(a), Some(b)) => {
+                let (a, b) = (a?, b?);
+                if a.feats != b.feats
+                    || a.labels != b.labels
+                    || a.frame_mask != b.frame_mask
+                    || a.seg_ids != b.seg_ids
+                    || a.block_ids != b.block_ids
+                {
+                    return Err(Error::Loader(format!(
+                        "shard-backed epoch diverged from the \
+                         in-memory epoch at step {steps}"
+                    )));
+                }
+                steps += 1;
+            }
+            _ => {
+                return Err(Error::Loader(
+                    "shard-backed and in-memory epochs have \
+                     different step counts"
+                        .into(),
+                ))
+            }
+        }
+    }
+    Ok(ShardSetReport {
+        videos,
+        frames,
+        shards: manifest.shards.len(),
+        readers: opts.readers,
+        bytes: manifest.total_bytes(),
+        shard_write_s,
+        single_write_s,
+        verify_s,
+        single_read_s,
+        pool_read_s,
+        steps,
+    })
+}
+
+/// Human-readable report.
+pub fn render(r: &ShardSetReport) -> String {
+    let dur = |s: f64| duration(std::time::Duration::from_secs_f64(s));
+    let speedup = if r.pool_read_s > 0.0 {
+        r.single_read_s / r.pool_read_s
+    } else {
+        f64::INFINITY
+    };
+    let mut out = String::new();
+    out.push_str("— sharded store scenario —\n");
+    out.push_str(&format!(
+        "dataset   {} videos / {} frames — {} shard(s), {} bytes\n",
+        commas(r.videos as u64),
+        commas(r.frames as u64),
+        r.shards,
+        commas(r.bytes)
+    ));
+    out.push_str(&format!(
+        "write     parallel {}-shard {} vs single-file {}\n",
+        r.shards,
+        dur(r.shard_write_s),
+        dur(r.single_write_s)
+    ));
+    out.push_str(&format!(
+        "verify    pool open (scan + CRC + index) {}\n",
+        dur(r.verify_s)
+    ));
+    out.push_str(&format!(
+        "replay    single-file {} ({}) | pool x{} readers {} ({}) — \
+         {speedup:.2}x\n",
+        dur(r.single_read_s),
+        rate(r.videos as f64, r.single_read_s),
+        r.readers,
+        dur(r.pool_read_s),
+        rate(r.videos as f64, r.pool_read_s)
+    ));
+    out.push_str(&format!(
+        "epoch     {} step(s) byte-identical to the in-memory run\n",
+        r.steps
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_runs_and_verifies_identity() {
+        let report = run(&ShardSetOptions {
+            scale: 0.01,
+            seed: 2,
+            shards: 3,
+            readers: 2,
+            batch: 2,
+        })
+        .unwrap();
+        assert!(report.steps > 0);
+        assert_eq!(report.shards, 3);
+        assert!(report.frames > 0);
+        let text = render(&report);
+        assert!(text.contains("byte-identical"), "{text}");
+    }
+
+    #[test]
+    fn rejects_zero_knobs() {
+        assert!(run(&ShardSetOptions {
+            readers: 0,
+            ..Default::default()
+        })
+        .is_err());
+    }
+}

@@ -33,6 +33,14 @@
 //! * **Disk feeds** — [`crate::dataset::store::StoreReader`] streams a
 //!   shard video-by-video; its metadata goes straight into a
 //!   [`Producer`].
+//! * **Disk sinks** — the [`sink`] module persists the same stream
+//!   shard-by-shard: materialized videos flow over a second bounded
+//!   queue into a
+//!   [`RollingShardWriter`](crate::dataset::shardstore::RollingShardWriter),
+//!   cutting a new `.blds` shard every `per_shard` videos and
+//!   finalizing a `shards.json` manifest — so a live ingest session
+//!   leaves behind a sharded store that replays byte-identically
+//!   through [`ShardSource`](crate::loader::ShardSource).
 //!
 //! Consumers drain per-rank receivers ([`IngestService::take_output`]),
 //! or take a rank's stream directly as a
@@ -43,6 +51,8 @@
 //! [`IngestService::join`] for the final [`IngestStats`].
 
 pub mod service;
+pub mod sink;
 
 pub use service::{start, tee_blocks, IngestConfig, IngestService,
                   IngestStats, Producer};
+pub use sink::{start_sink, ShardSink, SinkConfig, SinkProducer};

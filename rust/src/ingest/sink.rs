@@ -1,0 +1,304 @@
+//! Shard-writer sink: persist an ingest stream shard-by-shard while the
+//! packing service runs.
+//!
+//! The [`super::service`] packs sequences the moment they arrive; this
+//! sink gives the same stream a durable form. Materialized videos flow
+//! over a bounded queue (backpressure, like the ingest queue) into one
+//! writer thread that appends them to a
+//! [`RollingShardWriter`](crate::dataset::shardstore::RollingShardWriter):
+//! a new `.blds` shard file is cut every `per_shard` videos, and
+//! [`ShardSink::join`] finalizes `shards.json`. Because the sink
+//! preserves its own arrival order, the persisted shard set replays
+//! through [`ShardSource`](crate::loader::ShardSource) byte-identically
+//! to an offline run over the same sequence of videos.
+//!
+//! ```text
+//!  producers ──► ingest queue ──► OnlinePacker ──► per-rank blocks
+//!      │
+//!      └───────► sink queue ───► RollingShardWriter ──► shard-000.blds
+//!                (bounded)        (cut every N videos)   shard-001.blds
+//!                                                        shards.json
+//! ```
+
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::thread::JoinHandle;
+
+use crate::dataset::shardstore::{RollingShardWriter, ShardSetManifest};
+use crate::dataset::VideoData;
+use crate::error::{Error, Result};
+
+/// Sink configuration.
+#[derive(Debug, Clone)]
+pub struct SinkConfig {
+    /// Shard-set directory (created if absent).
+    pub dir: PathBuf,
+    /// Generator seed recorded in every shard header and the manifest —
+    /// replay rebuilds the split from it.
+    pub seed: u64,
+    /// `(objects, feat_dim, classes)` of every incoming video.
+    pub geometry: (u32, u32, u32),
+    /// Videos per shard file before the writer cuts a new one.
+    pub per_shard: usize,
+    /// Capacity of the bounded sink queue (producer backpressure).
+    pub queue_cap: usize,
+}
+
+impl SinkConfig {
+    /// Defaults: 512 videos per shard, queue of 64.
+    pub fn new(dir: impl Into<PathBuf>, seed: u64,
+               geometry: (u32, u32, u32)) -> SinkConfig {
+        SinkConfig {
+            dir: dir.into(),
+            seed,
+            geometry,
+            per_shard: 512,
+            queue_cap: 64,
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.per_shard == 0 || self.queue_cap == 0 {
+            return Err(Error::Ingest(
+                "sink per_shard and queue_cap must be >= 1".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Cloneable producer handle feeding the sink queue.
+#[derive(Debug, Clone)]
+pub struct SinkProducer {
+    tx: SyncSender<VideoData>,
+}
+
+impl SinkProducer {
+    /// Enqueue one materialized video for persistence. Blocks while the
+    /// queue is full (backpressure); errors once the sink has stopped
+    /// (e.g. after a disk error — [`ShardSink::join`] has the cause).
+    pub fn send(&self, video: VideoData) -> Result<()> {
+        self.tx.send(video).map_err(|_| {
+            Error::Ingest(
+                "shard sink queue is closed (writer stopped)".into(),
+            )
+        })
+    }
+}
+
+/// Handle to a running shard sink. Drop every [`SinkProducer`] clone to
+/// signal end-of-stream, then [`join`](ShardSink::join) for the final
+/// manifest.
+pub struct ShardSink {
+    handle: JoinHandle<Result<ShardSetManifest>>,
+}
+
+impl ShardSink {
+    /// Wait for the writer thread; returns the finalized manifest.
+    pub fn join(self) -> Result<ShardSetManifest> {
+        self.handle
+            .join()
+            .map_err(|_| Error::Ingest("sink thread panicked".into()))?
+    }
+}
+
+/// Start the sink: opens the rolling writer (directory errors surface
+/// synchronously), spawns the writer thread, and returns the handle plus
+/// one [`SinkProducer`] (clone it for more producers).
+pub fn start_sink(cfg: SinkConfig) -> Result<(ShardSink, SinkProducer)> {
+    cfg.validate()?;
+    let mut writer = RollingShardWriter::create(&cfg.dir, cfg.seed,
+                                                cfg.geometry,
+                                                cfg.per_shard)?;
+    let (tx, rx) = sync_channel::<VideoData>(cfg.queue_cap);
+    let handle = std::thread::spawn(move || -> Result<ShardSetManifest> {
+        // An append error stops the loop; dropping `rx` closes the
+        // queue so blocked producers fail fast instead of hanging.
+        for video in rx {
+            writer.append(&video)?;
+        }
+        writer.finish()
+    });
+    Ok((ShardSink { handle }, SinkProducer { tx }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::dataset::shardstore::ShardPool;
+    use crate::dataset::synthetic::generate;
+    use crate::dataset::VideoMeta;
+    use crate::ingest::{self, IngestConfig};
+    use crate::loader::EpochPlan;
+    use crate::packing::{by_name, pack, Block};
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "bload_sink_{}_{name}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    #[test]
+    fn sink_persists_a_live_ingest_stream() {
+        // The full streaming shape: one producer loop feeds the packing
+        // service *and* the sink; when both drain, the persisted shard
+        // set replays into the exact offline pipeline.
+        let cfg = ExperimentConfig::default_config();
+        let dcfg = cfg.dataset.scaled(0.01);
+        let seed = 17u64;
+        let ds = generate(&dcfg, seed);
+        let dir = tmpdir("live");
+        let geometry = (dcfg.objects as u32, dcfg.feat_dim as u32,
+                        dcfg.classes as u32);
+
+        let mut icfg = IngestConfig::new(dcfg.max_len.max(4));
+        icfg.queue_cap = 8;
+        icfg.online.window = 16;
+        let (mut svc, producer) = ingest::start(icfg).unwrap();
+        let mut scfg = SinkConfig::new(&dir, seed, geometry);
+        scfg.per_shard = 7; // several shard cuts at this scale
+        let (sink, sink_tx) = start_sink(scfg).unwrap();
+
+        let feeder = {
+            let metas = ds.train.videos.clone();
+            let spec = ds.train.spec.clone();
+            std::thread::spawn(move || {
+                for m in metas {
+                    sink_tx.send(spec.materialize(m)).unwrap();
+                    producer.send(m).unwrap();
+                }
+                // Producers drop here: both streams see end-of-input.
+            })
+        };
+        let rx = svc.take_output(0).unwrap();
+        let blocks: Vec<Block> = rx.iter().collect();
+        feeder.join().unwrap();
+        let stats = svc.join().unwrap();
+        assert!(!blocks.is_empty());
+        assert_eq!(stats.dropped_blocks, 0);
+
+        let manifest = sink.join().unwrap();
+        assert_eq!(manifest.total_videos(), ds.train.videos.len());
+        assert_eq!(manifest.total_frames(), ds.train.total_frames());
+        assert!(manifest.shards.len() >= 2, "{}", manifest.shards.len());
+
+        // The persisted set is the same split, byte-for-byte.
+        let pool = ShardPool::open(&dir).unwrap();
+        assert_eq!(pool.videos(), &ds.train.videos[..]);
+        let src = crate::loader::ShardSource::open(
+            &dir,
+            &dcfg,
+            by_name("bload").unwrap(),
+            &cfg.packing,
+            seed,
+            |packed| EpochPlan::new(packed, 1, 0, 2, true, seed, 0),
+        )
+        .unwrap();
+        let offline = pack(by_name("bload").unwrap(), &ds.train,
+                           &cfg.packing, seed)
+            .unwrap();
+        assert_eq!(src.packed().blocks, offline.blocks);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sink_multi_producer_counts_add_up() {
+        let cfg = ExperimentConfig::default_config();
+        let dcfg = cfg.dataset.scaled(0.01);
+        let ds = generate(&dcfg, 3);
+        let dir = tmpdir("multi");
+        let geometry = (dcfg.objects as u32, dcfg.feat_dim as u32,
+                        dcfg.classes as u32);
+        let mut scfg = SinkConfig::new(&dir, 3, geometry);
+        scfg.per_shard = 5;
+        scfg.queue_cap = 2;
+        let (sink, tx) = start_sink(scfg).unwrap();
+        let halves: Vec<Vec<VideoMeta>> = vec![
+            ds.train.videos.iter().step_by(2).copied().collect(),
+            ds.train.videos.iter().skip(1).step_by(2).copied().collect(),
+        ];
+        let mut feeders = Vec::new();
+        for metas in halves {
+            let tx = tx.clone();
+            let spec = ds.train.spec.clone();
+            feeders.push(std::thread::spawn(move || {
+                for m in metas {
+                    tx.send(spec.materialize(m)).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        for f in feeders {
+            f.join().unwrap();
+        }
+        let manifest = sink.join().unwrap();
+        // Interleaving is arbitrary, but nothing is lost or duplicated.
+        assert_eq!(manifest.total_videos(), ds.train.videos.len());
+        assert_eq!(manifest.total_frames(), ds.train.total_frames());
+        let pool = ShardPool::open(&dir).unwrap();
+        let mut ids: Vec<u32> =
+            pool.videos().iter().map(|v| v.id).collect();
+        ids.sort_unstable();
+        let mut want: Vec<u32> =
+            ds.train.videos.iter().map(|v| v.id).collect();
+        want.sort_unstable();
+        assert_eq!(ids, want);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sink_geometry_mismatch_stops_the_sink() {
+        let dir = tmpdir("badgeom");
+        let (sink, tx) =
+            start_sink(SinkConfig::new(&dir, 0, (4, 12, 10))).unwrap();
+        let bad = VideoData {
+            id: 1,
+            feats: vec![0.0; 2 * 3 * 5],
+            labels: vec![0.0; 2 * 3 * 2],
+            len: 2,
+            objects: 3,
+            feat_dim: 5,
+            classes: 2,
+        };
+        tx.send(bad).unwrap();
+        // The writer thread hits the geometry error and closes the
+        // queue; sending eventually fails.
+        let mut saw_err = false;
+        for i in 0..200u32 {
+            let filler = VideoData {
+                id: 2 + i,
+                feats: vec![0.0; 2 * 4 * 12],
+                labels: vec![0.0; 2 * 4 * 10],
+                len: 2,
+                objects: 4,
+                feat_dim: 12,
+                classes: 10,
+            };
+            if tx.send(filler).is_err() {
+                saw_err = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        drop(tx);
+        assert!(saw_err, "sink queue never closed after writer error");
+        let err = sink.join().unwrap_err().to_string();
+        assert!(err.contains("geometry"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sink_rejects_bad_config() {
+        let dir = tmpdir("badcfg");
+        let mut cfg = SinkConfig::new(&dir, 0, (1, 1, 1));
+        cfg.per_shard = 0;
+        assert!(start_sink(cfg).is_err());
+        let mut cfg = SinkConfig::new(&dir, 0, (1, 1, 1));
+        cfg.queue_cap = 0;
+        assert!(start_sink(cfg).is_err());
+    }
+}

@@ -2,8 +2,10 @@
 //! buffers the `grad_step` / `infer_step` artifacts consume.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
-use crate::dataset::Split;
+use crate::dataset::shardstore::ShardPool;
+use crate::dataset::{Split, VideoData, VideoMeta};
 use crate::error::{Error, Result};
 use crate::packing::Block;
 
@@ -32,6 +34,38 @@ pub struct DeviceBatch {
     pub slots: usize,
 }
 
+/// A source of decoded video content for batch materialization.
+///
+/// The default loading path synthesizes videos deterministically per
+/// worker (through a [`VideoCache`]); a provider replaces that with a
+/// *shared* content source — the canonical one being the sharded
+/// store's [`ShardPool`], whose capacity-bounded cache is shared by
+/// every worker of every loader on the pool. Implementations must be
+/// safe to call from many worker threads at once.
+pub trait VideoProvider: Send + Sync + 'static {
+    /// Fetch the decoded content of `meta` (shared, immutable).
+    fn fetch(&self, split: &Split, meta: VideoMeta)
+             -> Result<Arc<VideoData>>;
+}
+
+impl VideoProvider for ShardPool {
+    /// Serve the stored record (disk read through the pool's shared
+    /// cache); `split` is only consulted by the synthetic fallback
+    /// paths, never here.
+    fn fetch(&self, _split: &Split, meta: VideoMeta)
+             -> Result<Arc<VideoData>> {
+        let video = self.get(meta.id)?;
+        if video.len != meta.len as usize {
+            return Err(Error::Loader(format!(
+                "shard pool holds video {} with len {}, split expects \
+                 {}",
+                meta.id, video.len, meta.len
+            )));
+        }
+        Ok(video)
+    }
+}
+
 /// Bounded LRU of materialized videos, owned per loader worker.
 ///
 /// Chunked strategies (sampling) place several spans of one video into
@@ -41,7 +75,7 @@ pub struct DeviceBatch {
 #[derive(Debug)]
 pub struct VideoCache {
     cap: usize,
-    map: HashMap<u32, crate::dataset::VideoData>,
+    map: HashMap<u32, Arc<VideoData>>,
     order: std::collections::VecDeque<u32>,
     pub hits: u64,
     pub misses: u64,
@@ -58,8 +92,7 @@ impl VideoCache {
         }
     }
 
-    fn get(&mut self, split: &Split, meta: crate::dataset::VideoMeta)
-           -> &crate::dataset::VideoData {
+    fn get(&mut self, split: &Split, meta: VideoMeta) -> Arc<VideoData> {
         if self.map.contains_key(&meta.id) {
             self.hits += 1;
         } else {
@@ -69,10 +102,11 @@ impl VideoCache {
                     self.map.remove(&old);
                 }
             }
-            self.map.insert(meta.id, split.spec.materialize(meta));
+            self.map
+                .insert(meta.id, Arc::new(split.spec.materialize(meta)));
             self.order.push_back(meta.id);
         }
-        &self.map[&meta.id]
+        Arc::clone(&self.map[&meta.id])
     }
 }
 
@@ -93,6 +127,28 @@ pub fn materialize_batch(split: &Split, blocks: &[(usize, &Block)],
 pub fn materialize_batch_cached(split: &Split, blocks: &[(usize, &Block)],
                                 block_len: usize, cache: &mut VideoCache)
                                 -> Result<DeviceBatch> {
+    fill_batch(split, blocks, block_len,
+               &mut |meta| Ok(cache.get(split, meta)))
+}
+
+/// [`materialize_batch`] over a shared [`VideoProvider`] (e.g. a
+/// [`ShardPool`]) instead of per-worker synthesis — the store-backed
+/// path, where one decoded video feeds every worker of every loader.
+pub fn materialize_batch_provider(split: &Split,
+                                  blocks: &[(usize, &Block)],
+                                  block_len: usize,
+                                  provider: &dyn VideoProvider)
+                                  -> Result<DeviceBatch> {
+    fill_batch(split, blocks, block_len,
+               &mut |meta| provider.fetch(split, meta))
+}
+
+/// The one fill loop behind every materialization entry point; `fetch`
+/// resolves a video's decoded content (worker cache, shared pool, ...).
+fn fill_batch(split: &Split, blocks: &[(usize, &Block)],
+              block_len: usize,
+              fetch: &mut dyn FnMut(VideoMeta) -> Result<Arc<VideoData>>)
+              -> Result<DeviceBatch> {
     let spec = &split.spec;
     let (o, f, c) = (spec.objects, spec.feat_dim, spec.classes);
     let b = blocks.len();
@@ -129,13 +185,13 @@ pub fn materialize_batch_cached(split: &Split, blocks: &[(usize, &Block)],
             let vlen = *lens.get(&s.video).ok_or_else(|| {
                 Error::Loader(format!("unknown video {}", s.video))
             })?;
-            let meta = crate::dataset::VideoMeta {
+            let meta = VideoMeta {
                 id: s.video,
                 len: vlen as u32,
             };
-            // Deterministic regeneration through the worker's LRU —
-            // multiple spans of one video synthesize it once.
-            let video = cache.get(split, meta);
+            // Spans of one video resolve the content once per fetch
+            // scope (worker LRU or shared pool cache).
+            let video = fetch(meta)?;
             for k in 0..s.len {
                 let slot = s.at + k;
                 let src = s.src_start + k;
@@ -284,6 +340,33 @@ mod tests {
         let refs: Vec<(usize, &Block)> =
             packed.blocks.iter().take(1).enumerate().collect();
         assert!(materialize_batch(&ds.train, &refs, 8).is_err());
+    }
+
+    #[test]
+    fn provider_path_matches_synthesized_path() {
+        use crate::dataset::shardstore::{ShardPool, ShardSetWriter};
+        let (ds, packed) = packed_tiny();
+        let dir = std::env::temp_dir().join(format!(
+            "bload_batch_provider_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        ShardSetWriter::new(&dir, 1, 2)
+            .unwrap()
+            .write(&ds.train)
+            .unwrap();
+        let pool = ShardPool::open(&dir).unwrap();
+        let refs: Vec<(usize, &Block)> =
+            packed.blocks.iter().take(2).enumerate().collect();
+        let via_pool =
+            materialize_batch_provider(&ds.train, &refs, 6, &pool)
+                .unwrap();
+        let via_synth = materialize_batch(&ds.train, &refs, 6).unwrap();
+        assert_eq!(via_pool.feats, via_synth.feats);
+        assert_eq!(via_pool.labels, via_synth.labels);
+        assert_eq!(via_pool.frame_mask, via_synth.frame_mask);
+        assert_eq!(via_pool.seg_ids, via_synth.seg_ids);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //!            BlockSource                      DataLoaderBuilder
 //!  PlannedSource  PackedDataset + EpochPlan ─┐  .workers .depth .batch
 //!  StreamSource   ingest Receiver<Block>    ─┼► .shuffle .shard .seed
-//!  StoreSource    persisted .blds shard     ─┘  .video_cache
+//!  StoreSource    persisted .blds file      ─┤  .video_cache
+//!  ShardSource    sharded store + ShardPool ─┘
 //!                                                    │ spawn
 //!                                                    ▼
 //!            DataLoader::next() ──► DeviceBatch (step order)
@@ -19,10 +20,15 @@
 //!   [`PlannedSource`] schedules a finished [`PackedDataset`] through an
 //!   [`EpochPlan`] (deterministic shuffle → rank shard → fixed batches),
 //!   [`StreamSource`] groups a live block stream from the
-//!   [`crate::ingest`] service in arrival order, and [`StoreSource`]
+//!   [`crate::ingest`] service in arrival order, [`StoreSource`]
 //!   replays a persisted CRC-checked shard byte-identically to the
-//!   equivalent in-memory run. Custom sources implement [`BlockSource`]
-//!   and plug in via [`DataLoaderBuilder::source`].
+//!   equivalent in-memory run, and [`ShardSource`] replays a *sharded*
+//!   store ([`crate::dataset::shardstore`]) whose content is served by
+//!   the concurrent, shared-cache
+//!   [`ShardPool`](crate::dataset::shardstore::ShardPool) (the
+//!   [`VideoProvider`] hook on [`BlockSource`]). Custom sources
+//!   implement [`BlockSource`] and plug in via
+//!   [`DataLoaderBuilder::source`].
 //! * **The builder** ([`prefetch`]) owns shuffle/shard/batch/workers/
 //!   depth/video-cache knobs and adopts the config file's `[loader]`
 //!   section through [`DataLoaderBuilder::from_config`].
@@ -45,10 +51,11 @@ pub mod prefetch;
 pub mod shard;
 pub mod source;
 
-pub use batch::{materialize_batch, materialize_batch_cached, DeviceBatch,
-                VideoCache};
+pub use batch::{materialize_batch, materialize_batch_cached,
+                materialize_batch_provider, DeviceBatch, VideoCache,
+                VideoProvider};
 pub use epoch::EpochPlan;
 pub use prefetch::{DataLoader, DataLoaderBuilder, DEFAULT_VIDEO_CACHE};
 pub use shard::shard_blocks;
-pub use source::{BlockSource, PlannedSource, StoreSource, StreamSource,
-                 WorkUnit};
+pub use source::{BlockSource, PlannedSource, ShardSource, StoreSource,
+                 StreamSource, WorkUnit};

@@ -29,9 +29,11 @@ use crate::dataset::Split;
 use crate::error::{Error, Result};
 use crate::packing::{Block, PackedDataset, Packer};
 
-use super::batch::{materialize_batch_cached, DeviceBatch, VideoCache};
+use super::batch::{materialize_batch_cached, materialize_batch_provider,
+                   DeviceBatch, VideoCache};
 use super::epoch::EpochPlan;
-use super::source::{BlockSource, PlannedSource, StoreSource, StreamSource};
+use super::source::{BlockSource, PlannedSource, ShardSource, StoreSource,
+                    StreamSource};
 
 /// Default per-worker [`VideoCache`] capacity (`loader.video_cache`).
 pub const DEFAULT_VIDEO_CACHE: usize = 64;
@@ -42,6 +44,7 @@ pub const DEFAULT_VIDEO_CACHE: usize = 64;
 /// builder.planned(split, packed, epoch)   offline epoch
 /// builder.stream(split, rx, block_len)    live ingest blocks
 /// builder.store(path, dcfg, packer, pcfg, epoch)   persisted shard
+/// builder.shards(dir, dcfg, packer, pcfg, epoch)   sharded store dir
 /// builder.source(Arc<dyn BlockSource>)    anything else
 /// ```
 ///
@@ -199,6 +202,23 @@ impl DataLoaderBuilder {
         self.spawn(Arc::new(source))
     }
 
+    /// Replay a sharded store directory
+    /// ([`crate::dataset::shardstore`] layout): every shard is scanned
+    /// and CRC-verified in parallel, the split rebuilds from the
+    /// manifest's generator seed, and content reads back through the
+    /// shared [`ShardPool`](crate::dataset::shardstore::ShardPool) —
+    /// batches come out byte-identical to the single-file and in-memory
+    /// runs for any shard count.
+    pub fn shards(&self, dir: &std::path::Path, dcfg: &DatasetConfig,
+                  packer: &dyn Packer, pcfg: &PackingConfig, epoch: u64)
+                  -> Result<DataLoader> {
+        self.validate()?;
+        let source = ShardSource::open(dir, dcfg, packer, pcfg,
+                                       self.seed,
+                                       |packed| self.plan(packed, epoch))?;
+        self.spawn(Arc::new(source))
+    }
+
     /// Any custom [`BlockSource`]. This is the open extension point:
     /// planned/stream/store above all route through it.
     pub fn source(&self, source: Arc<dyn BlockSource>)
@@ -217,6 +237,10 @@ impl DataLoaderBuilder {
             workers.push(std::thread::spawn(move || {
                 let split = Arc::clone(source.split());
                 let block_len = source.block_len();
+                // Sources with a shared content provider (shard pools)
+                // bypass per-worker synthesis entirely; everyone else
+                // keeps a worker-local LRU of synthesized videos.
+                let provider = source.video_provider();
                 let mut cache = VideoCache::new(cache_cap);
                 while let Some(unit) = source.next_unit() {
                     let refs: Vec<(usize, &Block)> = unit
@@ -224,8 +248,12 @@ impl DataLoaderBuilder {
                         .iter()
                         .map(|(i, b)| (*i, b))
                         .collect();
-                    let out = materialize_batch_cached(
-                        &split, &refs, block_len, &mut cache);
+                    let out = match provider.as_deref() {
+                        Some(p) => materialize_batch_provider(
+                            &split, &refs, block_len, p),
+                        None => materialize_batch_cached(
+                            &split, &refs, block_len, &mut cache),
+                    };
                     // Send until the consumer drains (backpressure); a
                     // dropped receiver just ends the worker.
                     if tx.send((unit.step, out)).is_err() {

@@ -6,7 +6,7 @@
 //! [`WorkUnit`]s — `(step, blocks)` pairs — to however many worker
 //! threads the engine spawns; the engine turns each unit into a
 //! [`DeviceBatch`](super::DeviceBatch) and re-orders delivery to step
-//! order. Three sources ship:
+//! order. Four sources ship:
 //!
 //! * [`PlannedSource`] — the offline path: a finished
 //!   [`PackedDataset`] scheduled by an [`EpochPlan`] (deterministic
@@ -20,6 +20,13 @@
 //!   (CRC-verified) back into a split, packed, and scheduled exactly like
 //!   the offline path — byte-identical batches to the equivalent
 //!   in-memory run.
+//! * [`ShardSource`] — replay of a *sharded* store
+//!   ([`crate::dataset::shardstore`]): the manifest's shards are scanned
+//!   and CRC-verified in parallel, the split rebuilds from the manifest
+//!   seed (byte-identical batches for any shard count), and batch
+//!   content reads back through the concurrent
+//!   [`ShardPool`](crate::dataset::shardstore::ShardPool) — a shared
+//!   cache serving every worker of every loader on the pool.
 //!
 //! New sources (remote shards, async fetchers, multi-epoch pipelines)
 //! implement the trait and plug into
@@ -32,12 +39,14 @@ use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
 
 use crate::config::{DatasetConfig, PackingConfig};
+use crate::dataset::shardstore::ShardPool;
 use crate::dataset::store::StoreReader;
 use crate::dataset::synthetic::GeneratorSpec;
 use crate::dataset::Split;
 use crate::error::{Error, Result};
 use crate::packing::{pack, Block, PackedDataset, Packer};
 
+use super::batch::VideoProvider;
 use super::epoch::EpochPlan;
 
 /// One step's worth of work: the step index plus the blocks (with their
@@ -86,6 +95,15 @@ pub trait BlockSource: Send + Sync + 'static {
     /// Total step count when known up front (planned sources); `None`
     /// for open-ended streams.
     fn steps(&self) -> Option<usize>;
+
+    /// Shared content source for this source's videos, when it has one.
+    /// `None` (the default) means workers synthesize content
+    /// deterministically through their per-worker
+    /// [`VideoCache`](super::VideoCache); [`ShardSource`] returns its
+    /// [`ShardPool`] so all workers share one decoded-video cache.
+    fn video_provider(&self) -> Option<Arc<dyn VideoProvider>> {
+        None
+    }
 }
 
 /// Offline source: a [`PackedDataset`] scheduled by an [`EpochPlan`].
@@ -315,6 +333,113 @@ impl BlockSource for StoreSource {
     }
 }
 
+/// Replay source over a **sharded** store directory
+/// ([`crate::dataset::shardstore`] layout).
+///
+/// Opening the source opens a [`ShardPool`]: every shard is scanned and
+/// CRC-verified (footer *and* manifest `crc32`) in parallel before any
+/// batch materializes. The split rebuilds from the manifest's recorded
+/// generator seed in global video order — shards hold contiguous ranges,
+/// so the rebuilt split, the packing, and the schedule are identical to
+/// the single-file and in-memory pipelines *for any shard count*.
+///
+/// Unlike [`StoreSource`] (which re-synthesizes content per worker),
+/// batch content is served by the pool: actual stored bytes, decoded
+/// once into a shared capacity-bounded cache that every worker of every
+/// loader over this source hits concurrently.
+pub struct ShardSource {
+    inner: PlannedSource,
+    pool: Arc<ShardPool>,
+}
+
+impl ShardSource {
+    /// Open the shard set at `dir` and schedule it with `plan_of` (the
+    /// caller — normally
+    /// [`DataLoaderBuilder`](super::DataLoaderBuilder) — supplies rank
+    /// sharding, shuffling and batching). `dcfg` must describe the
+    /// generator family the shards were written from; its geometry is
+    /// checked against the manifest. `pack_seed` drives the packing
+    /// strategy's draw, matching the offline `pack(...)` call.
+    pub fn open<F>(dir: &Path, dcfg: &DatasetConfig,
+                   packer: &dyn Packer, pcfg: &PackingConfig,
+                   pack_seed: u64, plan_of: F) -> Result<ShardSource>
+    where
+        F: FnOnce(&PackedDataset) -> EpochPlan,
+    {
+        let pool = Arc::new(ShardPool::open(dir)?);
+        ShardSource::from_pool(pool, dcfg, packer, pcfg, pack_seed,
+                               plan_of)
+    }
+
+    /// Build over an already-open pool — many loaders (ranks, epochs)
+    /// can share one pool and its cache.
+    pub fn from_pool<F>(pool: Arc<ShardPool>, dcfg: &DatasetConfig,
+                        packer: &dyn Packer, pcfg: &PackingConfig,
+                        pack_seed: u64, plan_of: F) -> Result<ShardSource>
+    where
+        F: FnOnce(&PackedDataset) -> EpochPlan,
+    {
+        let geometry = pool.geometry();
+        if geometry != (dcfg.objects, dcfg.feat_dim, dcfg.classes) {
+            return Err(Error::Dataset(format!(
+                "shard set geometry {:?} != dataset config ({}, {}, {})",
+                geometry, dcfg.objects, dcfg.feat_dim, dcfg.classes
+            )));
+        }
+        let split = Arc::new(Split {
+            videos: pool.videos().to_vec(),
+            spec: GeneratorSpec::new(dcfg, pool.seed()),
+        });
+        let packed = Arc::new(pack(packer, &split, pcfg, pack_seed)?);
+        let plan = plan_of(&packed);
+        Ok(ShardSource {
+            inner: PlannedSource::new(split, packed, plan),
+            pool,
+        })
+    }
+
+    /// The generator seed recorded in the manifest.
+    pub fn store_seed(&self) -> u64 {
+        self.pool.seed()
+    }
+
+    /// The shared pool serving this source's content.
+    pub fn pool(&self) -> &Arc<ShardPool> {
+        &self.pool
+    }
+
+    /// The packed dataset rebuilt from the shard set.
+    pub fn packed(&self) -> &Arc<PackedDataset> {
+        self.inner.packed()
+    }
+}
+
+impl BlockSource for ShardSource {
+    fn split(&self) -> &Arc<Split> {
+        self.inner.split()
+    }
+
+    fn block_len(&self) -> usize {
+        self.inner.block_len()
+    }
+
+    fn next_unit(&self) -> Option<WorkUnit> {
+        self.inner.next_unit()
+    }
+
+    fn claimed(&self) -> usize {
+        self.inner.claimed()
+    }
+
+    fn steps(&self) -> Option<usize> {
+        self.inner.steps()
+    }
+
+    fn video_provider(&self) -> Option<Arc<dyn VideoProvider>> {
+        Some(Arc::clone(&self.pool) as Arc<dyn VideoProvider>)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -420,6 +545,77 @@ mod tests {
                            &cfg.packing, 9)
             .unwrap();
         assert_eq!(src.packed().blocks, offline.blocks);
+    }
+
+    #[test]
+    fn shard_source_round_trips_split_for_any_shard_count() {
+        use crate::dataset::shardstore::ShardSetWriter;
+        let cfg = ExperimentConfig::default_config();
+        let dcfg = cfg.dataset.scaled(0.005);
+        let ds = generate(&dcfg, 9);
+        let offline = pack(by_name("bload").unwrap(), &ds.train,
+                           &cfg.packing, 9)
+            .unwrap();
+        for shards in [1usize, 3] {
+            let dir = std::env::temp_dir().join(format!(
+                "bload_shard_source_{}_{shards}",
+                std::process::id()
+            ));
+            std::fs::remove_dir_all(&dir).ok();
+            ShardSetWriter::new(&dir, 9, shards)
+                .unwrap()
+                .write(&ds.train)
+                .unwrap();
+            let src = ShardSource::open(
+                &dir,
+                &dcfg,
+                by_name("bload").unwrap(),
+                &cfg.packing,
+                9,
+                |packed| EpochPlan::new(packed, 1, 0, 2, true, 9, 0),
+            )
+            .unwrap();
+            assert_eq!(src.store_seed(), 9, "{shards} shard(s)");
+            assert_eq!(src.split().videos, ds.train.videos,
+                       "{shards} shard(s)");
+            // Same split + same pack seed => identical blocks, no
+            // matter how the bytes were sharded.
+            assert_eq!(src.packed().blocks, offline.blocks,
+                       "{shards} shard(s)");
+            assert!(src.video_provider().is_some());
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn shard_source_rejects_geometry_mismatch() {
+        use crate::dataset::shardstore::ShardSetWriter;
+        let cfg = ExperimentConfig::default_config();
+        let dcfg = cfg.dataset.scaled(0.005);
+        let ds = generate(&dcfg, 4);
+        let dir = std::env::temp_dir().join(format!(
+            "bload_shard_source_geom_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        ShardSetWriter::new(&dir, 4, 2)
+            .unwrap()
+            .write(&ds.train)
+            .unwrap();
+        let mut wrong = dcfg.clone();
+        wrong.objects += 1;
+        let err = ShardSource::open(
+            &dir,
+            &wrong,
+            by_name("bload").unwrap(),
+            &cfg.packing,
+            4,
+            |packed| EpochPlan::new(packed, 1, 0, 2, true, 4, 0),
+        )
+        .unwrap_err()
+        .to_string();
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(err.contains("geometry"), "{err}");
     }
 
     #[test]

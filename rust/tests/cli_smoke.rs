@@ -114,6 +114,64 @@ fn replay_round_trips_gen_data_with_verify() {
 }
 
 #[test]
+fn pack_shards_writes_set_inspects_and_replays_with_verify() {
+    let dir = std::env::temp_dir().join(format!(
+        "bload_cli_shards_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    let dir_s = dir.to_str().unwrap().to_string();
+    assert_eq!(
+        run(&argv(&[
+            "pack", "--strategy", "bload", "--scale", "0.01", "--seed",
+            "5", "--shards", "3", "--out", &dir_s,
+        ]))
+        .unwrap(),
+        0
+    );
+    assert!(dir.join("shards.json").exists());
+    assert!(dir.join("shard-002.blds").exists());
+    // Inspect verifies every shard CRC.
+    assert_eq!(run(&argv(&["shards", "--dir", &dir_s])).unwrap(), 0);
+    // Shard-backed replay must be byte-identical to the in-memory run.
+    assert_eq!(
+        run(&argv(&[
+            "replay", "--store", &dir_s, "--scale", "0.01", "--seed",
+            "5", "--verify",
+        ]))
+        .unwrap(),
+        0
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn pack_rejects_out_without_shards() {
+    assert!(run(&argv(&["pack", "--scale", "0.01", "--out", "/tmp/x"]))
+        .is_err());
+}
+
+#[test]
+fn shards_bench_scenario_completes() {
+    assert_eq!(
+        run(&argv(&[
+            "shards", "--bench", "--scale", "0.01", "--shards", "2",
+            "--readers", "2",
+        ]))
+        .unwrap(),
+        0
+    );
+}
+
+#[test]
+fn shards_requires_dir_or_bench_but_not_both() {
+    assert!(run(&argv(&["shards"])).is_err());
+    assert!(run(&argv(&["shards", "--dir", "/nope/missing"])).is_err());
+    assert!(run(&argv(&["shards", "--bogus", "1"])).is_err());
+    assert!(run(&argv(&["shards", "--dir", "/x", "--bench"])).is_err());
+}
+
+#[test]
 fn deadlock_demo_completes() {
     assert_eq!(
         run(&argv(&[

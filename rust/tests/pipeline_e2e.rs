@@ -251,6 +251,83 @@ fn store_replay_is_byte_identical_to_in_memory_run() {
 }
 
 #[test]
+fn shard_replay_is_byte_identical_for_any_shard_count() {
+    // The shardstore acceptance bar, extending
+    // `store_replay_is_byte_identical_to_in_memory_run`: the same split
+    // packed to 1, 2 and 5 shards replays — through the concurrent
+    // ShardPool, actual stored bytes, multiple workers — the exact batch
+    // sequence of the in-memory offline epoch, shuffle, sharding and
+    // content included.
+    use bload::dataset::shardstore::ShardSetWriter;
+    let cfg = ExperimentConfig::default_config();
+    let dcfg = cfg.dataset.scaled(0.01);
+    let gen_seed = 13u64;
+    let ds = generate(&dcfg, gen_seed);
+
+    let builder = DataLoaderBuilder::new()
+        .batch(2)
+        .workers(3)
+        .depth(2)
+        .seed(13)
+        .shard(2, 1);
+    let packed = Arc::new(
+        pack(by_name("bload").unwrap(), &ds.train, &cfg.packing, 13)
+            .unwrap(),
+    );
+    let split = Arc::new(ds.train);
+    let collect_memory = || {
+        let mut loader = builder
+            .planned(Arc::clone(&split), Arc::clone(&packed), 2)
+            .unwrap();
+        let mut out = Vec::new();
+        while let Some(b) = loader.next() {
+            out.push(b.unwrap());
+        }
+        out
+    };
+    let reference = collect_memory();
+    assert!(!reference.is_empty(), "epoch has steps");
+
+    for shards in [1usize, 2, 5] {
+        let dir = std::env::temp_dir().join(format!(
+            "bload_shard_replay_e2e_{}_{shards}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        ShardSetWriter::new(&dir, gen_seed, shards)
+            .unwrap()
+            .write(&split)
+            .unwrap();
+        let mut loader = builder
+            .shards(&dir, &dcfg, by_name("bload").unwrap(),
+                    &cfg.packing, 2)
+            .unwrap();
+        assert_eq!(loader.steps(), Some(reference.len()),
+                   "{shards} shard(s)");
+        for (step, want) in reference.iter().enumerate() {
+            let got = loader
+                .next()
+                .unwrap_or_else(|| {
+                    panic!("{shards} shard(s): ended at step {step}")
+                })
+                .unwrap();
+            assert_eq!(got.block_ids, want.block_ids,
+                       "{shards} shard(s), step {step}");
+            assert_eq!(got.feats, want.feats,
+                       "{shards} shard(s), step {step}");
+            assert_eq!(got.labels, want.labels,
+                       "{shards} shard(s), step {step}");
+            assert_eq!(got.frame_mask, want.frame_mask,
+                       "{shards} shard(s), step {step}");
+            assert_eq!(got.seg_ids, want.seg_ids,
+                       "{shards} shard(s), step {step}");
+        }
+        assert!(loader.next().is_none(), "{shards} shard(s)");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
 fn sampling_chunks_cover_prefixes_only() {
     // Each video's delivered frames are exactly frames [0, k*t_block).
     let dcfg = bload::harness::scaled_dataset(80, 10, 0.6);

@@ -3,15 +3,17 @@
 #
 #   scripts/check.sh
 #
-# Mirrors CI: formatting, lints as errors, compile-check of every
-# non-test target (benches + examples don't build under `cargo test`),
-# then the full test suite. Runtime tests that need AOT artifacts skip
-# themselves when artifacts/manifest.json is absent, so the suite is
-# self-contained.
+# Mirrors CI: formatting, lints as errors, rustdoc with warnings as
+# errors (broken intra-doc links rot silently otherwise), compile-check
+# of every non-test target (benches + examples don't build under `cargo
+# test`), then the full test suite. Runtime tests that need AOT
+# artifacts skip themselves when artifacts/manifest.json is absent, so
+# the suite is self-contained.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo fmt --check \
   && cargo clippy -- -D warnings \
+  && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps \
   && cargo build --benches --examples \
   && cargo test -q
