@@ -1,45 +1,8 @@
-//! Fig 6 ablation bench: value of the reset table and of cross-chunk
-//! state carry, measured as recall@20 after a short training run per arm.
-//!
-//! Requires `make artifacts` (the `small` profile); skips otherwise.
-//! Set BLOAD_BENCH_FAST=1 to shrink the run.
-
-use bload::harness::ablation::{render, run, AblationOptions};
+//! Thin wrapper over the `ablation_reset` suite in `bload::benchkit::suites`
+//! (the measurement code lives library-side so `bload bench` can run
+//! it in-process). `BLOAD_BENCH_FAST=1` selects smoke iterations and
+//! smoke geometry.
 
 fn main() {
-    let fast = std::env::var("BLOAD_BENCH_FAST").as_deref() == Ok("1");
-    let opts = AblationOptions {
-        train_videos: if fast { 200 } else { 600 },
-        test_videos: if fast { 60 } else { 150 },
-        epochs: if fast { 2 } else { 5 },
-        ..AblationOptions::default()
-    };
-    if !std::path::Path::new(&opts.artifacts_dir)
-        .join("manifest.json")
-        .exists()
-    {
-        println!("skipping ablation_reset: artifacts not built");
-        return;
-    }
-    let t0 = std::time::Instant::now();
-    match run(&opts) {
-        Ok(rows) => {
-            println!("{}", render(&rows));
-            println!("({:.1}s total)", t0.elapsed().as_secs_f64());
-            // The reproduction claims:
-            let by = |n: &str| {
-                rows.iter()
-                    .find(|r| r.name.starts_with(n))
-                    .map(|r| r.recall_pct)
-                    .unwrap()
-            };
-            let with = by("block_pad + reset");
-            let without = by("block_pad, reset stripped");
-            println!(
-                "reset table contributes {:+.1} recall@20 points",
-                with - without
-            );
-        }
-        Err(e) => println!("ablation failed: {e}"),
-    }
+    bload::benchkit::suites::run_bench_main("ablation_reset");
 }

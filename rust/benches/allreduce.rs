@@ -1,47 +1,8 @@
-//! All-reduce bench: ring vs naive over the DDS-lite gradient size at the
-//! paper's 8-rank topology, across bucket sizes (elements/s through the
-//! synchronizer).
-
-use bload::benchkit::Bencher;
-use bload::ddp::collective::{NaiveAllReduce, RingAllReduce};
-use bload::ddp::GradSynchronizer;
-use bload::util::Rng;
-
-fn grads(r: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
-    let mut rng = Rng::new(seed);
-    (0..r)
-        .map(|_| (0..n).map(|_| rng.f32() - 0.5).collect())
-        .collect()
-}
+//! Thin wrapper over the `allreduce` suite in `bload::benchkit::suites`
+//! (the measurement code lives library-side so `bload bench` can run
+//! it in-process). `BLOAD_BENCH_FAST=1` selects smoke iterations and
+//! smoke geometry.
 
 fn main() {
-    let bench = Bencher::from_env();
-    let ranks = 8usize;
-    // 48,666 = the `small` DDS-lite parameter count; 1 M = a larger model.
-    for n in [48_666usize, 1_000_000] {
-        let base = grads(ranks, n, 7);
-        for bucket in [1usize << 12, 1 << 16, usize::MAX] {
-            let blabel = if bucket == usize::MAX {
-                "all".to_string()
-            } else {
-                format!("{}k", bucket >> 10)
-            };
-            let mut sync_ring = GradSynchronizer::new(
-                Box::new(RingAllReduce), bucket.min(n));
-            let name = format!("allreduce/ring/n{n}/bucket{blabel}");
-            bench.run(&name, (n * ranks) as f64, "elems", || {
-                let mut g = base.clone();
-                sync_ring.sync(&mut g);
-                g
-            });
-        }
-        let mut sync_naive =
-            GradSynchronizer::new(Box::new(NaiveAllReduce), n);
-        let name = format!("allreduce/naive/n{n}/bucketall");
-        bench.run(&name, (n * ranks) as f64, "elems", || {
-            let mut g = base.clone();
-            sync_naive.sync(&mut g);
-            g
-        });
-    }
+    bload::benchkit::suites::run_bench_main("allreduce");
 }

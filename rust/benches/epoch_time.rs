@@ -1,81 +1,8 @@
-//! Table I row 3 (measured): one full training epoch per strategy through
-//! the complete stack (pack → shard → prefetch → grad_step → all-reduce →
-//! apply_update) at the scaled geometry. The paper's column is minutes on
-//! 8×A100; the *ratios* between strategies are the reproduction target
-//! (cost model: 4.15 / 0.44 / 0.98 / 1.00 — DESIGN.md §4).
-//!
-//! Requires `make artifacts` (the `small` profile); skips otherwise.
-
-use std::sync::Arc;
-
-use bload::benchkit::Bencher;
-use bload::config::ExperimentConfig;
-use bload::dataset::synthetic::generate;
-use bload::harness::{scaled_dataset, scaled_packing};
-use bload::packing::{pack_with_block_len, registry, Packer};
-use bload::runtime::{ArtifactManifest, Engine};
-use bload::train::Trainer;
+//! Thin wrapper over the `epoch_time` suite in `bload::benchkit::suites`
+//! (the measurement code lives library-side so `bload bench` can run
+//! it in-process). `BLOAD_BENCH_FAST=1` selects smoke iterations and
+//! smoke geometry.
 
 fn main() {
-    let manifest = match ArtifactManifest::load(
-        std::path::Path::new("artifacts"),
-    ) {
-        Ok(m) => m,
-        Err(e) => {
-            println!("skipping epoch_time: {e}");
-            return;
-        }
-    };
-    let spec = match manifest.profile("small") {
-        Ok(s) => s.clone(),
-        Err(e) => {
-            println!("skipping epoch_time: {e}");
-            return;
-        }
-    };
-    let bench = Bencher {
-        warmup: 1,
-        iters: 3,
-    };
-    let dcfg = scaled_dataset(700, 150, 0.6);
-    let pcfg = scaled_packing();
-    let ds = generate(&dcfg, 0);
-    let train_split = Arc::new(ds.train);
-
-    let mut results: Vec<(&'static dyn Packer, f64)> = Vec::new();
-    for &strategy in registry() {
-        let packed = Arc::new(
-            pack_with_block_len(strategy, &train_split, &pcfg, pcfg.t_max, 0)
-                .unwrap(),
-        );
-        let engine = Engine::load(spec.clone()).unwrap();
-        let mut cfg = ExperimentConfig::default_config();
-        cfg.train.log_every = 0;
-        let mut trainer = Trainer::new(engine, cfg.train.clone(),
-                                       cfg.ddp.clone(), cfg.loader.clone(),
-                                       0)
-            .unwrap();
-        let slots: usize =
-            packed.blocks.iter().map(|b| b.len).sum();
-        let name = format!("epoch_time/{}", strategy.name());
-        let mut epoch = 0u64;
-        let r = bench.run(&name, slots as f64, "slots", || {
-            let s = trainer
-                .train_epoch(&train_split, &packed, epoch)
-                .unwrap();
-            epoch += 1;
-            s
-        });
-        results.push((strategy, r.mean_s));
-    }
-    let base = results
-        .iter()
-        .find(|(s, _)| s.name() == "bload")
-        .map(|(_, t)| *t)
-        .unwrap();
-    println!("\nmeasured epoch-time ratios vs block_pad:");
-    for (s, t) in &results {
-        println!("  {:<12} {:.2}x", s.label(), t / base);
-    }
-    println!("paper ratios (Table I columns): 4.15x / 0.44x / 0.98x / 1.00x");
+    bload::benchkit::suites::run_bench_main("epoch_time");
 }

@@ -1,40 +1,8 @@
-//! Fig 2 bench: time-to-detection of the DDP stall (the paper's failure is
-//! *silent*; ours must be detected promptly and deterministically), plus
-//! the equal-schedule completion latency with BLoad packing.
-
-use std::time::Duration;
-
-use bload::benchkit::Bencher;
-use bload::config::ExperimentConfig;
-use bload::dataset::synthetic::generate;
-use bload::ddp::sim;
-use bload::packing::{by_name, pack};
+//! Thin wrapper over the `fig2_deadlock` suite in `bload::benchkit::suites`
+//! (the measurement code lives library-side so `bload bench` can run
+//! it in-process). `BLOAD_BENCH_FAST=1` selects smoke iterations and
+//! smoke geometry.
 
 fn main() {
-    let bench = Bencher::from_env();
-    let cfg = ExperimentConfig::default_config();
-    let ds = generate(&cfg.dataset.scaled(0.01), 3);
-
-    // Detection latency at several timeout budgets.
-    for timeout_ms in [50u64, 200] {
-        let name = format!("fig2/raw_deadlock_detect/{timeout_ms}ms");
-        bench.run(&name, 0.0, "", || {
-            let report = sim::run(&[3, 9], Duration::from_millis(timeout_ms));
-            assert!(report.deadlocked());
-            report
-        });
-    }
-
-    // Packed equal-schedule completion at the paper's 8-rank topology.
-    let packed =
-        pack(by_name("bload").unwrap(), &ds.train, &cfg.packing, 0)
-            .unwrap();
-    let sched = sim::packed_schedule(&packed, 8, 2);
-    let iters = sched[0] as f64 * 8.0;
-    bench.run("fig2/bload_packed_completion/8ranks", iters, "barrier-waits",
-              || {
-        let report = sim::run(&sched, Duration::from_secs(5));
-        assert!(report.completed);
-        report
-    });
+    bload::benchkit::suites::run_bench_main("fig2_deadlock");
 }

@@ -1,74 +1,8 @@
-//! Unified-loader throughput: frames/s through the builder pipeline at
-//! several worker counts and prefetch depths (backpressure on), plus the
-//! per-worker video-cache capacity sweep on a chunked packing.
-
-use std::sync::Arc;
-
-use bload::benchkit::Bencher;
-use bload::config::ExperimentConfig;
-use bload::dataset::synthetic::generate;
-use bload::loader::DataLoaderBuilder;
-use bload::packing::{by_name, pack};
+//! Thin wrapper over the `loader` suite in `bload::benchkit::suites`
+//! (the measurement code lives library-side so `bload bench` can run
+//! it in-process). `BLOAD_BENCH_FAST=1` selects smoke iterations and
+//! smoke geometry.
 
 fn main() {
-    let bench = Bencher::from_env();
-    let cfg = ExperimentConfig::default_config();
-    let ds = generate(&cfg.dataset.scaled(0.03), 0);
-    let packed =
-        Arc::new(pack(by_name("bload").unwrap(), &ds.train, &cfg.packing, 0)
-            .unwrap());
-    let split = Arc::new(ds.train);
-    let frames = split.total_frames() as f64;
-
-    for workers in [1usize, 2, 4, 8] {
-        for depth in [2usize, 8] {
-            let name = format!("loader/workers{workers}/depth{depth}");
-            bench.run(&name, frames, "frames", || {
-                let mut loader = DataLoaderBuilder::new()
-                    .batch(2)
-                    .workers(workers)
-                    .depth(depth)
-                    .planned(Arc::clone(&split), Arc::clone(&packed), 0)
-                    .unwrap();
-                let mut n = 0usize;
-                while let Some(b) = loader.next() {
-                    n += b.unwrap().real_frames;
-                }
-                n
-            });
-        }
-    }
-
-    // Chunked packing hits the per-worker video cache hard: every long
-    // video appears in several blocks (§Perf L3 optimization #3). The
-    // `loader.video_cache` knob trades memory for re-synthesis — cap 1
-    // is the no-cache baseline.
-    let mut pcfg = cfg.packing.clone();
-    pcfg.t_block = 10;
-    let chunked = Arc::new(
-        bload::packing::pack(by_name("sampling").unwrap(), &split, &pcfg, 0)
-            .unwrap(),
-    );
-    let chunk_frames = chunked.stats.frames_kept as f64;
-    for workers in [1usize, 4] {
-        for cache in [1usize, 64] {
-            let name = format!(
-                "loader/sampling_chunks/workers{workers}/cache{cache}"
-            );
-            bench.run(&name, chunk_frames, "frames", || {
-                let mut loader = DataLoaderBuilder::new()
-                    .batch(2)
-                    .workers(workers)
-                    .depth(4)
-                    .video_cache(cache)
-                    .planned(Arc::clone(&split), Arc::clone(&chunked), 0)
-                    .unwrap();
-                let mut n = 0usize;
-                while let Some(b) = loader.next() {
-                    n += b.unwrap().real_frames;
-                }
-                n
-            });
-        }
-    }
+    bload::benchkit::suites::run_bench_main("loader");
 }

@@ -1,108 +1,8 @@
-//! Online-packing throughput: the windowed streaming packer vs offline
-//! BLoad (frames/s), across window sizes, plus the padding overhead each
-//! window pays. The online packer must keep up with ingest-rate traffic —
-//! it sits on the hot arrival path, unlike the offline packer's
-//! once-per-epoch batch job. A final leg pushes the online packer's
-//! blocks through the unified stream loader, measuring the full
-//! blocks-to-device-batches path.
-
-use std::sync::Arc;
-
-use bload::benchkit::Bencher;
-use bload::config::ExperimentConfig;
-use bload::dataset::synthetic::generate;
-use bload::loader::DataLoaderBuilder;
-use bload::packing::online::{pack_stream, OnlineConfig};
-use bload::packing::{by_name, pack};
+//! Thin wrapper over the `online_packing` suite in `bload::benchkit::suites`
+//! (the measurement code lives library-side so `bload bench` can run
+//! it in-process). `BLOAD_BENCH_FAST=1` selects smoke iterations and
+//! smoke geometry.
 
 fn main() {
-    let bench = Bencher::from_env();
-    let cfg = ExperimentConfig::default_config();
-    for scale in [0.1f64, 1.0] {
-        let dcfg = cfg.dataset.scaled(scale);
-        let ds = generate(&dcfg, 0);
-        let frames = ds.train.total_frames() as f64;
-        let items: Vec<(u32, usize)> = ds
-            .train
-            .videos
-            .iter()
-            .map(|v| (v.id, v.len as usize))
-            .collect();
-
-        let mut seed = 0u64;
-        bench.run(
-            &format!("packing/offline_bload/scale{scale}"),
-            frames,
-            "frames",
-            || {
-                seed += 1;
-                pack(by_name("bload").unwrap(), &ds.train, &cfg.packing,
-                     seed)
-                    .unwrap()
-            },
-        );
-
-        for window in [16usize, 64, 256] {
-            let mut ocfg = OnlineConfig::new(cfg.packing.t_max);
-            ocfg.window = window;
-            let mut seed = 0u64;
-            let name =
-                format!("packing/online_w{window}/scale{scale}");
-            bench.run(&name, frames, "frames", || {
-                seed += 1;
-                pack_stream(items.iter().copied(), ocfg, seed).unwrap()
-            });
-            // One representative run for the padding overhead line.
-            let (_, stats) =
-                pack_stream(items.iter().copied(), ocfg, 0).unwrap();
-            let offline =
-                pack(by_name("bload").unwrap(), &ds.train, &cfg.packing, 0)
-                    .unwrap();
-            println!(
-                "  padding: online_w{window} {:.3}% vs offline {:.3}% \
-                 (scale {scale})",
-                100.0 * stats.padding_ratio(),
-                100.0 * offline.stats.padding as f64
-                    / offline.stats.total_slots as f64
-            );
-        }
-
-        if scale < 1.0 {
-            // End-to-end streaming: the online packer's blocks through
-            // the unified loader (blocks → device batches), overlapped
-            // with a feeder thread like the ingest service's output.
-            let mut ocfg = OnlineConfig::new(cfg.packing.t_max);
-            ocfg.window = 64;
-            let (blocks, _) =
-                pack_stream(items.iter().copied(), ocfg, 0).unwrap();
-            let split = Arc::new(ds.train.clone());
-            let name =
-                format!("packing/online_w64_stream_loader/scale{scale}");
-            bench.run(&name, frames, "frames", || {
-                let (tx, rx) = std::sync::mpsc::sync_channel(32);
-                let feeder = {
-                    let blocks = blocks.clone();
-                    std::thread::spawn(move || {
-                        for b in blocks {
-                            if tx.send(b).is_err() {
-                                return;
-                            }
-                        }
-                    })
-                };
-                let mut loader = DataLoaderBuilder::new()
-                    .batch(2)
-                    .workers(4)
-                    .depth(4)
-                    .stream(Arc::clone(&split), rx, cfg.packing.t_max)
-                    .unwrap();
-                let mut n = 0usize;
-                while let Some(b) = loader.next() {
-                    n += b.unwrap().real_frames;
-                }
-                feeder.join().unwrap();
-                n
-            });
-        }
-    }
+    bload::benchkit::suites::run_bench_main("online_packing");
 }

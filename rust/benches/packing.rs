@@ -1,27 +1,8 @@
-//! Packing-throughput bench: every registered strategy at several
-//! dataset scales (frames/s). The BLoad packer is `O(N·T_max)`; no
-//! strategy may become the pipeline bottleneck (packing happens once per
-//! epoch). New registry entries are benched automatically.
-
-use bload::benchkit::Bencher;
-use bload::config::ExperimentConfig;
-use bload::dataset::synthetic::generate;
-use bload::packing::{pack, registry, Packer};
+//! Thin wrapper over the `packing` suite in `bload::benchkit::suites`
+//! (the measurement code lives library-side so `bload bench` can run
+//! it in-process). `BLOAD_BENCH_FAST=1` selects smoke iterations and
+//! smoke geometry.
 
 fn main() {
-    let bench = Bencher::from_env();
-    let cfg = ExperimentConfig::default_config();
-    for scale in [0.1f64, 1.0] {
-        let dcfg = cfg.dataset.scaled(scale);
-        let ds = generate(&dcfg, 0);
-        let frames = ds.train.total_frames() as f64;
-        for &strategy in registry() {
-            let name = format!("packing/{}/scale{scale}", strategy.name());
-            let mut seed = 0u64;
-            bench.run(&name, frames, "frames", || {
-                seed += 1;
-                pack(strategy, &ds.train, &cfg.packing, seed).unwrap()
-            });
-        }
-    }
+    bload::benchkit::suites::run_bench_main("packing");
 }

@@ -1,75 +1,8 @@
-//! PJRT execution latency: grad_step / infer_step / apply_update on the
-//! built artifact profiles. This is the per-iteration compute floor of the
-//! whole system — the denominator of the Table I time column.
-//!
-//! Skips profiles whose artifacts are not built (run `make artifacts`).
-
-use bload::benchkit::Bencher;
-use bload::loader::DeviceBatch;
-use bload::runtime::{ArtifactManifest, Engine, ProfileSpec};
-
-fn fake_batch(spec: &ProfileSpec) -> DeviceBatch {
-    let (b, t, o, f, c) = (spec.batch, spec.block_len, spec.objects,
-                           spec.feat_dim, spec.classes);
-    DeviceBatch {
-        feats: vec![0.3; b * t * o * f],
-        labels: vec![1.0; b * t * o * c],
-        frame_mask: vec![1.0; b * t],
-        seg_ids: vec![0.0; b * t],
-        block_ids: (0..b).collect(),
-        batch: b,
-        block_len: t,
-        objects: o,
-        feat_dim: f,
-        classes: c,
-        real_frames: b * t,
-        slots: b * t,
-    }
-}
+//! Thin wrapper over the `runtime_exec` suite in `bload::benchkit::suites`
+//! (the measurement code lives library-side so `bload bench` can run
+//! it in-process). `BLOAD_BENCH_FAST=1` selects smoke iterations and
+//! smoke geometry.
 
 fn main() {
-    let bench = Bencher::from_env();
-    let dir = std::path::Path::new("artifacts");
-    let manifest = match ArtifactManifest::load(dir) {
-        Ok(m) => m,
-        Err(e) => {
-            println!("skipping runtime_exec: {e}");
-            return;
-        }
-    };
-    for spec in &manifest.profiles {
-        let engine = match Engine::load(spec.clone()) {
-            Ok(e) => e,
-            Err(e) => {
-                println!("skipping profile '{}': {e}", spec.name);
-                continue;
-            }
-        };
-        let batch = fake_batch(spec);
-        let frames = (spec.batch * spec.block_len) as f64;
-        let params = spec.load_init_params().unwrap();
-        let state = vec![0.0; spec.batch * spec.state_dim];
-
-        bench.run(
-            &format!("runtime/{}/grad_step", spec.name),
-            frames,
-            "frames",
-            || engine.grad_step(&params, &batch, &state).unwrap(),
-        );
-        bench.run(
-            &format!("runtime/{}/infer_step", spec.name),
-            frames,
-            "frames",
-            || engine.infer_step(&params, &batch, &state).unwrap(),
-        );
-        let mut p = params.clone();
-        let mut m = vec![0.0; p.len()];
-        let g = vec![1e-4f32; p.len()];
-        bench.run(
-            &format!("runtime/{}/apply_update", spec.name),
-            spec.param_count as f64,
-            "params",
-            || engine.apply_update(&mut p, &mut m, &g, 0.01, 0.9).unwrap(),
-        );
-    }
+    bload::benchkit::suites::run_bench_main("runtime_exec");
 }

@@ -1,94 +1,8 @@
-//! Sharded-store replay throughput: the single-file sequential
-//! `StoreReader` decode vs the concurrent `ShardPool` at 1/2/4 readers
-//! (videos/s), plus the pool-open (scan + CRC verify + index) cost.
-//!
-//! The pool is opened with a cache of 1 so every `get` measures a real
-//! seek + decode; readers walk disjoint id slices, so the comparison is
-//! decode-for-decode against the sequential baseline.
-
-use std::sync::Arc;
-
-use bload::benchkit::Bencher;
-use bload::config::ExperimentConfig;
-use bload::dataset::shardstore::{ShardPool, ShardSetWriter};
-use bload::dataset::store::{StoreReader, StoreWriter};
-use bload::dataset::synthetic::generate;
+//! Thin wrapper over the `shard_replay` suite in `bload::benchkit::suites`
+//! (the measurement code lives library-side so `bload bench` can run
+//! it in-process). `BLOAD_BENCH_FAST=1` selects smoke iterations and
+//! smoke geometry.
 
 fn main() {
-    let bench = Bencher::from_env();
-    let cfg = ExperimentConfig::default_config();
-    let dcfg = cfg.dataset.scaled(0.02);
-    let ds = generate(&dcfg, 0);
-    let split = &ds.train;
-    let videos = split.videos.len() as f64;
-
-    let scratch = std::env::temp_dir().join(format!(
-        "bload_bench_shard_replay_{}",
-        std::process::id()
-    ));
-    std::fs::remove_dir_all(&scratch).ok();
-    std::fs::create_dir_all(&scratch).unwrap();
-    let geometry = (dcfg.objects as u32, dcfg.feat_dim as u32,
-                    dcfg.classes as u32);
-
-    let single = scratch.join("single.blds");
-    let mut w = StoreWriter::create(&single, 0, geometry,
-                                    split.videos.len() as u32)
-        .unwrap();
-    for m in &split.videos {
-        w.append(&split.spec.materialize(*m)).unwrap();
-    }
-    w.finish().unwrap();
-
-    let shard_dir = scratch.join("set");
-    ShardSetWriter::new(&shard_dir, 0, 4)
-        .unwrap()
-        .write(split)
-        .unwrap();
-
-    bench.run("shard_replay/single_file", videos, "videos", || {
-        let mut n = 0usize;
-        for v in StoreReader::open(&single).unwrap() {
-            n += v.unwrap().len;
-        }
-        n
-    });
-
-    bench.run("shard_replay/pool_open_verify", videos, "videos", || {
-        ShardPool::open(&shard_dir).unwrap().videos().len()
-    });
-
-    let pool =
-        Arc::new(ShardPool::open_with_cache(&shard_dir, 1).unwrap());
-    let ids: Vec<u32> = split.videos.iter().map(|v| v.id).collect();
-    for readers in [1usize, 2, 4] {
-        let name = format!("shard_replay/pool/readers{readers}");
-        bench.run(&name, videos, "videos", || {
-            std::thread::scope(|s| {
-                let mut handles = Vec::with_capacity(readers);
-                for r in 0..readers {
-                    let pool = Arc::clone(&pool);
-                    let slice: Vec<u32> = ids
-                        .iter()
-                        .skip(r)
-                        .step_by(readers)
-                        .copied()
-                        .collect();
-                    handles.push(s.spawn(move || {
-                        let mut n = 0usize;
-                        for id in slice {
-                            n += pool.get(id).unwrap().len;
-                        }
-                        n
-                    }));
-                }
-                handles
-                    .into_iter()
-                    .map(|h| h.join().unwrap())
-                    .sum::<usize>()
-            })
-        });
-    }
-
-    std::fs::remove_dir_all(&scratch).ok();
+    bload::benchkit::suites::run_bench_main("shard_replay");
 }

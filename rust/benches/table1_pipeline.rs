@@ -1,21 +1,8 @@
-//! Table I (pipeline level): regenerate the paper's padding / deletion /
-//! cost-model rows at full Action-Genome scale and print the table next to
-//! the paper's values. This bench is the canonical regeneration target for
-//! Table I rows 1–3 (see DESIGN.md §4); row 4 (recall) comes from
-//! `ablation_reset`/`epoch_time` or `bload table1 --full`.
-
-use bload::benchkit::Bencher;
-use bload::harness::table1;
+//! Thin wrapper over the `table1_pipeline` suite in `bload::benchkit::suites`
+//! (the measurement code lives library-side so `bload bench` can run
+//! it in-process). `BLOAD_BENCH_FAST=1` selects smoke iterations and
+//! smoke geometry.
 
 fn main() {
-    let bench = Bencher::from_env();
-    let mut rows = None;
-    bench.run("table1/pipeline_accounting", 166_785.0, "frames", || {
-        rows = Some(table1::pipeline_rows(0).unwrap());
-    });
-    let report = table1::Table1Report {
-        rows: rows.unwrap(),
-        measured: false,
-    };
-    println!("{}", table1::render(&report));
+    bload::benchkit::suites::run_bench_main("table1_pipeline");
 }

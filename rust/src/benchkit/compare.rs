@@ -1,0 +1,377 @@
+//! Baseline comparison: flag perf regressions between two [`Report`]s.
+//!
+//! [`compare()`] matches benchmarks by name and classifies each pair with
+//! a noise-tolerant rule: a benchmark **regresses** only when its mean
+//! slows down beyond [`CompareConfig::mean_pct`] *and* its p50
+//! corroborates beyond [`CompareConfig::p50_pct`] — a single outlier
+//! iteration moves the mean but not the median, so CI-runner jitter
+//! doesn't flap the gate. Improvements are flagged symmetrically.
+//! Benchmarks present on only one side (renames, deleted or newly added
+//! suites) are listed separately: they never trip the regression exit
+//! code, but they are rendered loudly so a rename can't silently drop
+//! coverage.
+//!
+//! This is the engine behind `bload bench --compare BASELINE.json`,
+//! which exits nonzero iff [`Comparison::gate_failed`]: a real
+//! regression, or a smoke-vs-full geometry mismatch between the two
+//! reports (same-named benchmarks then ran different workloads, so
+//! every verdict would be noise — that must not pass silently).
+
+use crate::metrics::TextTable;
+use crate::util::humanize;
+
+use super::report::Report;
+
+/// Noise thresholds, in percent slowdown.
+#[derive(Debug, Clone, Copy)]
+pub struct CompareConfig {
+    /// Mean slowdown beyond this is a candidate regression.
+    pub mean_pct: f64,
+    /// p50 must corroborate by at least this much for the candidate to
+    /// count (filters single-outlier mean shifts).
+    pub p50_pct: f64,
+}
+
+impl Default for CompareConfig {
+    fn default() -> Self {
+        CompareConfig {
+            mean_pct: 20.0,
+            p50_pct: 10.0,
+        }
+    }
+}
+
+/// Per-benchmark classification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Within noise in at least one of mean/p50.
+    Ok,
+    /// Faster beyond threshold on both mean and p50.
+    Improved,
+    /// Slower beyond threshold on both mean and p50.
+    Regressed,
+}
+
+impl Verdict {
+    fn label(&self) -> &'static str {
+        match self {
+            Verdict::Ok => "ok",
+            Verdict::Improved => "improved",
+            Verdict::Regressed => "REGRESSED",
+        }
+    }
+}
+
+/// One matched benchmark's baseline-vs-current numbers.
+#[derive(Debug, Clone)]
+pub struct Delta {
+    pub name: String,
+    pub base_mean_s: f64,
+    pub cur_mean_s: f64,
+    pub base_p50_s: f64,
+    pub cur_p50_s: f64,
+    /// Mean slowdown in percent (positive = current is slower).
+    pub mean_delta_pct: f64,
+    /// p50 slowdown in percent (positive = current is slower).
+    pub p50_delta_pct: f64,
+    pub verdict: Verdict,
+}
+
+/// The outcome of comparing two reports.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub cfg: CompareConfig,
+    /// Set when the two reports were measured at different geometry
+    /// (smoke vs full): same-named benchmarks then ran different
+    /// workloads and every verdict is meaningless, so the gate fails
+    /// with this message instead of reporting bogus regressions.
+    pub geometry_mismatch: Option<String>,
+    /// Benchmarks present in both reports, baseline order.
+    pub deltas: Vec<Delta>,
+    /// In the baseline but not the current report (renames land here).
+    pub missing: Vec<String>,
+    /// In the current report but not the baseline.
+    pub added: Vec<String>,
+}
+
+fn pct_change(base: f64, cur: f64) -> f64 {
+    if base > 0.0 {
+        (cur - base) / base * 100.0
+    } else if cur > 0.0 {
+        100.0
+    } else {
+        0.0
+    }
+}
+
+/// Match two reports by benchmark name and classify every pair.
+pub fn compare(base: &Report, cur: &Report, cfg: CompareConfig)
+               -> Comparison {
+    let mode = |smoke: bool| if smoke { "smoke" } else { "full" };
+    let geometry_mismatch = (base.meta.smoke != cur.meta.smoke).then(|| {
+        format!(
+            "baseline is a {}-geometry report but the current report is \
+             {}-geometry; same-named benchmarks ran different workloads \
+             (refresh the baseline with the matching geometry)",
+            mode(base.meta.smoke),
+            mode(cur.meta.smoke)
+        )
+    });
+    let mut deltas = Vec::new();
+    let mut missing = Vec::new();
+    for e in &base.entries {
+        let b = &e.result;
+        let Some(c) = cur.get(&b.name) else {
+            missing.push(b.name.clone());
+            continue;
+        };
+        let mean_delta_pct = pct_change(b.mean_s, c.mean_s);
+        let p50_delta_pct = pct_change(b.p50_s, c.p50_s);
+        let verdict = if mean_delta_pct > cfg.mean_pct
+            && p50_delta_pct > cfg.p50_pct
+        {
+            Verdict::Regressed
+        } else if mean_delta_pct < -cfg.mean_pct
+            && p50_delta_pct < -cfg.p50_pct
+        {
+            Verdict::Improved
+        } else {
+            Verdict::Ok
+        };
+        deltas.push(Delta {
+            name: b.name.clone(),
+            base_mean_s: b.mean_s,
+            cur_mean_s: c.mean_s,
+            base_p50_s: b.p50_s,
+            cur_p50_s: c.p50_s,
+            mean_delta_pct,
+            p50_delta_pct,
+            verdict,
+        });
+    }
+    let added = cur
+        .entries
+        .iter()
+        .filter(|e| base.get(&e.result.name).is_none())
+        .map(|e| e.result.name.clone())
+        .collect();
+    Comparison {
+        cfg,
+        geometry_mismatch,
+        deltas,
+        missing,
+        added,
+    }
+}
+
+impl Comparison {
+    /// The benchmarks that regressed beyond the thresholds.
+    pub fn regressions(&self) -> Vec<&Delta> {
+        self.deltas
+            .iter()
+            .filter(|d| d.verdict == Verdict::Regressed)
+            .collect()
+    }
+
+    pub fn has_regressions(&self) -> bool {
+        !self.regressions().is_empty()
+    }
+
+    /// Should `bload bench --compare` exit nonzero? True on any real
+    /// regression, and on a geometry mismatch (the verdicts are
+    /// meaningless, which must not pass silently).
+    pub fn gate_failed(&self) -> bool {
+        self.geometry_mismatch.is_some() || self.has_regressions()
+    }
+
+    /// Render the comparison table plus the missing/added/summary lines.
+    pub fn render(&self) -> String {
+        let dur = |s: f64| {
+            humanize::duration(std::time::Duration::from_secs_f64(s))
+        };
+        let mut out = String::new();
+        if let Some(msg) = &self.geometry_mismatch {
+            out.push_str(&format!("WARNING: geometry mismatch — {msg}\n"));
+        }
+        let mut t = TextTable::new(&[
+            "benchmark", "base mean", "cur mean", "Δmean", "Δp50",
+            "verdict",
+        ]);
+        for d in &self.deltas {
+            t.row(&[
+                d.name.clone(),
+                dur(d.base_mean_s),
+                dur(d.cur_mean_s),
+                format!("{:+.1}%", d.mean_delta_pct),
+                format!("{:+.1}%", d.p50_delta_pct),
+                d.verdict.label().to_string(),
+            ]);
+        }
+        out.push_str(&t.render());
+        for name in &self.missing {
+            out.push_str(&format!(
+                "missing from current report (renamed or removed?): \
+                 {name}\n"
+            ));
+        }
+        for name in &self.added {
+            out.push_str(&format!("new in current report: {name}\n"));
+        }
+        let regressed = self.regressions().len();
+        let improved = self
+            .deltas
+            .iter()
+            .filter(|d| d.verdict == Verdict::Improved)
+            .count();
+        out.push_str(&format!(
+            "{} compared | {regressed} regressed, {improved} improved \
+             (thresholds: mean +{:.0}% with p50 +{:.0}% corroboration) \
+             | {} missing, {} new\n",
+            self.deltas.len(),
+            self.cfg.mean_pct,
+            self.cfg.p50_pct,
+            self.missing.len(),
+            self.added.len()
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::report::{Report, RunMeta};
+    use super::super::{BenchResult, Bencher};
+    use super::*;
+
+    fn result(name: &str, mean_s: f64, p50_s: f64) -> BenchResult {
+        BenchResult {
+            name: name.into(),
+            iters: 5,
+            mean_s,
+            p50_s,
+            p95_s: mean_s * 1.2,
+            min_s: mean_s * 0.8,
+            throughput: None,
+        }
+    }
+
+    fn report(results: Vec<BenchResult>) -> Report {
+        let mut r = Report::new(RunMeta::capture(
+            "test",
+            &Bencher::quick(),
+            false,
+        ));
+        r.push_suite("s", results);
+        r
+    }
+
+    #[test]
+    fn identical_reports_have_no_regressions() {
+        let base = report(vec![result("a", 1.0, 1.0), result("b", 2.0, 2.0)]);
+        let cmp = compare(&base, &base.clone(), CompareConfig::default());
+        assert_eq!(cmp.deltas.len(), 2);
+        assert!(!cmp.has_regressions());
+        assert!(cmp.deltas.iter().all(|d| d.verdict == Verdict::Ok));
+        assert!(cmp.missing.is_empty() && cmp.added.is_empty());
+    }
+
+    #[test]
+    fn verdicts_at_under_and_over_threshold() {
+        let base = report(vec![
+            result("under", 1.0, 1.0),
+            result("at", 1.0, 1.0),
+            result("over", 1.0, 1.0),
+        ]);
+        let cur = report(vec![
+            result("under", 1.19, 1.19),
+            // Exactly +20% mean is NOT beyond the threshold (strict >).
+            result("at", 1.20, 1.20),
+            result("over", 1.30, 1.30),
+        ]);
+        let cmp = compare(&base, &cur, CompareConfig::default());
+        let by = |n: &str| {
+            cmp.deltas.iter().find(|d| d.name == n).unwrap().verdict
+        };
+        assert_eq!(by("under"), Verdict::Ok);
+        assert_eq!(by("at"), Verdict::Ok);
+        assert_eq!(by("over"), Verdict::Regressed);
+        assert!(cmp.has_regressions());
+        assert_eq!(cmp.regressions().len(), 1);
+        assert!(cmp.render().contains("REGRESSED"));
+    }
+
+    #[test]
+    fn p50_must_corroborate_mean_shift() {
+        // One outlier iteration: mean +50% but the median barely moved.
+        // The jitter filter must NOT call this a regression.
+        let base = report(vec![result("jittery", 1.0, 1.0)]);
+        let cur = report(vec![result("jittery", 1.5, 1.05)]);
+        let cmp = compare(&base, &cur, CompareConfig::default());
+        assert_eq!(cmp.deltas[0].verdict, Verdict::Ok);
+        assert!(!cmp.has_regressions());
+    }
+
+    #[test]
+    fn improvements_flagged_symmetrically() {
+        let base = report(vec![result("fast_now", 2.0, 2.0)]);
+        let cur = report(vec![result("fast_now", 1.0, 1.0)]);
+        let cmp = compare(&base, &cur, CompareConfig::default());
+        assert_eq!(cmp.deltas[0].verdict, Verdict::Improved);
+        assert!(!cmp.has_regressions());
+        assert!(cmp.render().contains("improved"));
+    }
+
+    #[test]
+    fn missing_and_renamed_benchmarks_reported_not_gated() {
+        let base = report(vec![result("old_name", 1.0, 1.0)]);
+        let cur = report(vec![result("new_name", 1.0, 1.0)]);
+        let cmp = compare(&base, &cur, CompareConfig::default());
+        assert!(cmp.deltas.is_empty());
+        assert_eq!(cmp.missing, vec!["old_name".to_string()]);
+        assert_eq!(cmp.added, vec!["new_name".to_string()]);
+        // A rename must not trip the gate, but must be visible.
+        assert!(!cmp.has_regressions());
+        let rendered = cmp.render();
+        assert!(rendered.contains("old_name"), "{rendered}");
+        assert!(rendered.contains("renamed or removed"), "{rendered}");
+        assert!(rendered.contains("new in current report: new_name"),
+                "{rendered}");
+    }
+
+    #[test]
+    fn smoke_vs_full_geometry_mismatch_fails_the_gate() {
+        let mut base = Report::new(RunMeta::capture(
+            "full",
+            &Bencher::default(),
+            false,
+        ));
+        base.push_suite("s", vec![result("a", 1.0, 1.0)]);
+        let mut cur = Report::new(RunMeta::capture(
+            "smoke",
+            &Bencher::smoke(),
+            true,
+        ));
+        cur.push_suite("s", vec![result("a", 1.0, 1.0)]);
+        let cmp = compare(&base, &cur, CompareConfig::default());
+        // Identical numbers, but the workloads differed: not a
+        // regression, yet the gate must not pass silently.
+        assert!(!cmp.has_regressions());
+        assert!(cmp.gate_failed());
+        let rendered = cmp.render();
+        assert!(rendered.contains("geometry mismatch"), "{rendered}");
+        // Matching geometry passes.
+        let same = compare(&cur, &cur.clone(), CompareConfig::default());
+        assert!(!same.gate_failed());
+    }
+
+    #[test]
+    fn zero_baseline_handled() {
+        let base = report(vec![result("z", 0.0, 0.0)]);
+        let cur = report(vec![result("z", 0.1, 0.1)]);
+        let cmp = compare(&base, &cur, CompareConfig::default());
+        assert_eq!(cmp.deltas[0].mean_delta_pct, 100.0);
+        assert_eq!(cmp.deltas[0].verdict, Verdict::Regressed);
+        let same = compare(&base, &base.clone(), CompareConfig::default());
+        assert_eq!(same.deltas[0].verdict, Verdict::Ok);
+    }
+}

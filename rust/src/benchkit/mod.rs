@@ -1,20 +1,58 @@
-//! Criterion-lite benchmark harness (criterion is unavailable offline).
+//! Performance-measurement subsystem (criterion is unavailable offline).
 //!
-//! Provides warmup + timed iterations with mean/p50/p95 statistics,
-//! throughput units, and a stable one-line output format that
-//! `cargo bench` benches (with `harness = false`) print:
+//! Grown from a timing helper into the repo's perf-regression
+//! infrastructure, in four layers:
 //!
-//! ```text
-//! bench packing/bload/full      mean 12.31ms  p50 12.12ms  p95 13.40ms  thr 13.5M frames/s  (n=30)
-//! ```
+//! * **[`Bencher`]** — warmup + timed iterations with mean/p50/p95
+//!   statistics and throughput units, printing the stable one-line
+//!   format every bench target emits:
+//!
+//!   ```text
+//!   bench packing/bload/scale1    mean 12.31ms  p50 12.12ms  p95 13.40ms  thr 13.5M frames/s  (n=30)
+//!   ```
+//!
+//! * **[`report`]** — machine-readable aggregation: a [`Report`] bundles
+//!   every [`BenchResult`] of a run with environment metadata (git rev,
+//!   host parallelism, build profile, iteration config) and round-trips
+//!   through the repo's hand-rolled [`crate::jsonio`] as
+//!   `BENCH_<label>.json`.
+//!
+//! * **[`compare`]** — baseline comparison: match two reports by
+//!   benchmark name and flag regressions beyond a noise threshold
+//!   (mean +20% with p50 corroboration by default), the engine behind
+//!   `bload bench --compare BASELINE.json`.
+//!
+//! * **[`suites`]** — a registry of named benchmark suites mirroring
+//!   [`crate::packing::registry`]: every `rust/benches/*.rs` binary is a
+//!   thin `main` over a library-side suite, and `bload bench` runs any
+//!   subset in-process (`--smoke` for CI-sized geometry).
+//!
+//! # Environment knobs
+//!
+//! [`Bencher::from_env`] honours three variables, **validated** — an
+//! unparsable value is a hard [`Error::Config`](crate::Error), never a
+//! silent fallback:
+//!
+//! | variable             | accepted values     | effect                     |
+//! |----------------------|---------------------|----------------------------|
+//! | `BLOAD_BENCH_FAST`   | `1`/`true`, `0`/`false` | `1` = smoke iterations *and* smoke geometry in bench binaries |
+//! | `BLOAD_BENCH_WARMUP` | unsigned integer    | override warmup iterations |
+//! | `BLOAD_BENCH_ITERS`  | unsigned integer ≥1 | override timed iterations  |
+
+pub mod compare;
+pub mod report;
+pub mod suites;
+
+pub use report::{BenchEntry, Report, RunMeta};
 
 use std::time::{Duration, Instant};
 
+use crate::error::{Error, Result};
 use crate::util::humanize;
 use crate::util::stats::{percentile_sorted, Summary};
 
 /// One benchmark's timing result.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BenchResult {
     pub name: String,
     pub iters: usize,
@@ -23,17 +61,15 @@ pub struct BenchResult {
     pub p95_s: f64,
     pub min_s: f64,
     /// Optional throughput: (items per iteration, unit label).
-    pub throughput: Option<(f64, &'static str)>,
+    pub throughput: Option<(f64, String)>,
 }
 
 impl BenchResult {
     pub fn line(&self) -> String {
-        let thr = match self.throughput {
+        let thr = match &self.throughput {
             Some((items, unit)) => format!(
                 "  thr {} {unit}/s",
-                humanize::rate(items, self.mean_s)
-                    .trim_end_matches("/s")
-                    .to_string()
+                humanize::rate(*items, self.mean_s).trim_end_matches("/s")
             ),
             None => String::new(),
         };
@@ -64,7 +100,44 @@ impl Default for Bencher {
     }
 }
 
+/// Validated boolean env knob: `1`/`true` → true, `0`/`false`/empty →
+/// false, unset → `None`, anything else → a config error naming the
+/// variable and the offending value.
+fn env_flag(name: &str) -> Result<Option<bool>> {
+    match std::env::var(name) {
+        Err(_) => Ok(None),
+        Ok(v) => match v.trim() {
+            "1" | "true" => Ok(Some(true)),
+            "0" | "false" | "" => Ok(Some(false)),
+            other => Err(Error::Config(format!(
+                "{name} expects 1/true or 0/false, got '{other}'"
+            ))),
+        },
+    }
+}
+
+/// Validated integer env knob: unset → `None`, unparsable → a config
+/// error naming the variable and the offending value.
+fn env_usize(name: &str) -> Result<Option<usize>> {
+    match std::env::var(name) {
+        Err(_) => Ok(None),
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) => Ok(Some(n)),
+            Err(_) => Err(Error::Config(format!(
+                "{name} expects an unsigned integer, got '{v}'"
+            ))),
+        },
+    }
+}
+
+/// Is `BLOAD_BENCH_FAST` set (validated)? Bench binaries use this to
+/// select smoke geometry; see [`suites::run_bench_main`].
+pub fn fast_mode_from_env() -> Result<bool> {
+    Ok(env_flag("BLOAD_BENCH_FAST")?.unwrap_or(false))
+}
+
 impl Bencher {
+    /// Short runs for tests and ad-hoc checks.
     pub fn quick() -> Bencher {
         Bencher {
             warmup: 1,
@@ -72,18 +145,58 @@ impl Bencher {
         }
     }
 
-    /// Honour `BLOAD_BENCH_FAST=1` (CI smoke mode).
-    pub fn from_env() -> Bencher {
-        if std::env::var("BLOAD_BENCH_FAST").as_deref() == Ok("1") {
-            Bencher::quick()
-        } else {
-            Bencher::default()
+    /// CI smoke iterations — the fewest samples that still yield a
+    /// meaningful p50 for [`compare`]'s corroboration check.
+    pub fn smoke() -> Bencher {
+        Bencher {
+            warmup: 1,
+            iters: 3,
+        }
+    }
+
+    /// [`Bencher::default`] adjusted by the validated environment knobs
+    /// (see the module docs): `BLOAD_BENCH_FAST=1` selects
+    /// [`Bencher::smoke`], then `BLOAD_BENCH_WARMUP` / `BLOAD_BENCH_ITERS`
+    /// override the individual fields. Unparsable values are errors.
+    pub fn from_env() -> Result<Bencher> {
+        Bencher::from_env_or(Bencher::default())
+    }
+
+    /// [`Bencher::from_env`] starting from an explicit base (e.g.
+    /// [`Bencher::smoke`] for `bload bench --smoke`) instead of the
+    /// default; the same env overrides apply on top.
+    pub fn from_env_or(base: Bencher) -> Result<Bencher> {
+        let mut b = base;
+        if env_flag("BLOAD_BENCH_FAST")?.unwrap_or(false) {
+            b = Bencher::smoke();
+        }
+        if let Some(w) = env_usize("BLOAD_BENCH_WARMUP")? {
+            b.warmup = w;
+        }
+        if let Some(i) = env_usize("BLOAD_BENCH_ITERS")? {
+            if i == 0 {
+                return Err(Error::Config(
+                    "BLOAD_BENCH_ITERS must be >= 1".into(),
+                ));
+            }
+            b.iters = i;
+        }
+        Ok(b)
+    }
+
+    /// Cap this bencher for a heavy suite (real training epochs, full
+    /// ablation arms): never run more than `warmup`/`iters`.
+    pub fn capped(&self, warmup: usize, iters: usize) -> Bencher {
+        let capped_iters = self.iters.min(iters);
+        Bencher {
+            warmup: self.warmup.min(warmup),
+            iters: if capped_iters == 0 { 1 } else { capped_iters },
         }
     }
 
     /// Run `f` repeatedly; `items` is the per-iteration work amount for
     /// throughput reporting (pass 0.0 to omit).
-    pub fn run<T>(&self, name: &str, items: f64, unit: &'static str,
+    pub fn run<T>(&self, name: &str, items: f64, unit: &str,
                   mut f: impl FnMut() -> T) -> BenchResult {
         for _ in 0..self.warmup {
             std::hint::black_box(f());
@@ -104,7 +217,7 @@ impl Bencher {
             p50_s: percentile_sorted(&sorted, 50.0),
             p95_s: percentile_sorted(&sorted, 95.0),
             min_s: sorted[0],
-            throughput: (items > 0.0).then_some((items, unit)),
+            throughput: (items > 0.0).then(|| (items, unit.to_string())),
         };
         println!("{}", result.line());
         result
@@ -137,5 +250,62 @@ mod tests {
         let r = Bencher::quick().run("x", 0.0, "items", || 1);
         assert!(r.throughput.is_none());
         assert!(!r.line().contains("thr"));
+    }
+
+    #[test]
+    fn capped_never_exceeds_limits() {
+        let b = Bencher::default().capped(1, 3);
+        assert_eq!(b.warmup, 1);
+        assert_eq!(b.iters, 3);
+        let tiny = Bencher {
+            warmup: 0,
+            iters: 1,
+        }
+        .capped(1, 3);
+        assert_eq!(tiny.warmup, 0);
+        assert_eq!(tiny.iters, 1);
+    }
+
+    /// All env-knob cases in ONE test: the variables are process-global
+    /// and the test runner is multi-threaded, so splitting these into
+    /// separate tests would race on set_var/remove_var.
+    #[test]
+    fn env_knobs_validated_not_silently_ignored() {
+        const FAST: &str = "BLOAD_BENCH_FAST";
+        const WARMUP: &str = "BLOAD_BENCH_WARMUP";
+        const ITERS: &str = "BLOAD_BENCH_ITERS";
+        for k in [FAST, WARMUP, ITERS] {
+            std::env::remove_var(k);
+        }
+        let b = Bencher::from_env().unwrap();
+        assert_eq!(b.iters, Bencher::default().iters);
+
+        std::env::set_var(FAST, "1");
+        let b = Bencher::from_env().unwrap();
+        assert_eq!(b.iters, Bencher::smoke().iters, "FAST = smoke iters");
+
+        std::env::set_var(FAST, "maybe");
+        let e = Bencher::from_env().unwrap_err().to_string();
+        assert!(e.contains(FAST) && e.contains("maybe"), "{e}");
+        std::env::remove_var(FAST);
+
+        std::env::set_var(WARMUP, "0");
+        std::env::set_var(ITERS, "7");
+        let b = Bencher::from_env().unwrap();
+        assert_eq!((b.warmup, b.iters), (0, 7));
+
+        std::env::set_var(ITERS, "0");
+        assert!(Bencher::from_env().is_err(), "iters must be >= 1");
+        std::env::set_var(ITERS, "lots");
+        let e = Bencher::from_env().unwrap_err().to_string();
+        assert!(e.contains(ITERS) && e.contains("lots"), "{e}");
+        std::env::remove_var(WARMUP);
+        std::env::remove_var(ITERS);
+
+        // Overrides apply on top of an explicit base too.
+        std::env::set_var(WARMUP, "2");
+        let b = Bencher::from_env_or(Bencher::smoke()).unwrap();
+        assert_eq!((b.warmup, b.iters), (2, Bencher::smoke().iters));
+        std::env::remove_var(WARMUP);
     }
 }

@@ -1,0 +1,420 @@
+//! Machine-readable benchmark reports.
+//!
+//! A [`Report`] aggregates one `bload bench` (or bench-binary) run:
+//! every [`BenchResult`] tagged with its suite, plus a [`RunMeta`]
+//! header capturing the environment the numbers were measured in — git
+//! revision, host parallelism, build profile, and the iteration config
+//! — so a report is interpretable (and comparable, see
+//! [`super::compare`]) long after the run. Serialization is the repo's
+//! hand-rolled [`crate::jsonio`] (no external deps), written as
+//! `BENCH_<label>.json` at the repo root by `bload bench --json`.
+//!
+//! Format (`"format": 1`):
+//!
+//! ```text
+//! {
+//!   "format": 1,
+//!   "meta": { "label", "git_rev", "parallelism", "profile",
+//!             "warmup", "iters", "smoke", "created_unix" },
+//!   "benchmarks": [ { "suite", "name", "iters", "mean_s", "p50_s",
+//!                     "p95_s", "min_s", "throughput": {"items","unit"}? } ]
+//! }
+//! ```
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::jsonio::{parse, to_string_pretty, Value};
+
+use super::{BenchResult, Bencher};
+
+/// Current report format version.
+pub const FORMAT: usize = 1;
+
+/// Environment metadata of one benchmark run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunMeta {
+    /// Run label (`smoke`, `full`, or a bench-binary name).
+    pub label: String,
+    /// `git rev-parse --short HEAD` at measurement time (or `unknown`).
+    pub git_rev: String,
+    /// Host `available_parallelism` at measurement time.
+    pub parallelism: usize,
+    /// Build profile the numbers were measured under.
+    pub profile: String,
+    /// Warmup iterations per benchmark.
+    pub warmup: usize,
+    /// Timed iterations per benchmark.
+    pub iters: usize,
+    /// Was this a scaled-down smoke-geometry run?
+    pub smoke: bool,
+    /// Unix timestamp (seconds) of the run.
+    pub created_unix: u64,
+}
+
+impl RunMeta {
+    /// Capture the current environment.
+    pub fn capture(label: &str, bench: &Bencher, smoke: bool) -> RunMeta {
+        RunMeta {
+            label: label.to_string(),
+            git_rev: git_rev(),
+            parallelism: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            profile: if cfg!(debug_assertions) {
+                "debug".to_string()
+            } else {
+                "release".to_string()
+            },
+            warmup: bench.warmup,
+            iters: bench.iters,
+            smoke,
+            created_unix: std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
+        }
+    }
+}
+
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// One report row: a [`BenchResult`] tagged with the suite it ran in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchEntry {
+    pub suite: String,
+    pub result: BenchResult,
+}
+
+/// A full benchmark run: metadata + every result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Report {
+    pub meta: RunMeta,
+    pub entries: Vec<BenchEntry>,
+}
+
+impl Report {
+    pub fn new(meta: RunMeta) -> Report {
+        Report {
+            meta,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Append a suite's results.
+    pub fn push_suite(&mut self, suite: &str, results: Vec<BenchResult>) {
+        for result in results {
+            self.entries.push(BenchEntry {
+                suite: suite.to_string(),
+                result,
+            });
+        }
+    }
+
+    /// Look a benchmark up by name.
+    pub fn get(&self, name: &str) -> Option<&BenchResult> {
+        self.entries
+            .iter()
+            .map(|e| &e.result)
+            .find(|r| r.name == name)
+    }
+
+    /// Serialize to a [`Value`] tree.
+    pub fn to_value(&self) -> Value {
+        let benchmarks: Vec<Value> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let r = &e.result;
+                let throughput = match &r.throughput {
+                    Some((items, unit)) => Value::object(vec![
+                        ("items", Value::num(*items)),
+                        ("unit", Value::str(unit.clone())),
+                    ]),
+                    None => Value::Null,
+                };
+                Value::object(vec![
+                    ("suite", Value::str(e.suite.clone())),
+                    ("name", Value::str(r.name.clone())),
+                    ("iters", Value::int(r.iters as i64)),
+                    ("mean_s", Value::num(r.mean_s)),
+                    ("p50_s", Value::num(r.p50_s)),
+                    ("p95_s", Value::num(r.p95_s)),
+                    ("min_s", Value::num(r.min_s)),
+                    ("throughput", throughput),
+                ])
+            })
+            .collect();
+        Value::object(vec![
+            ("format", Value::int(FORMAT as i64)),
+            (
+                "meta",
+                Value::object(vec![
+                    ("label", Value::str(self.meta.label.clone())),
+                    ("git_rev", Value::str(self.meta.git_rev.clone())),
+                    ("parallelism", Value::int(self.meta.parallelism as i64)),
+                    ("profile", Value::str(self.meta.profile.clone())),
+                    ("warmup", Value::int(self.meta.warmup as i64)),
+                    ("iters", Value::int(self.meta.iters as i64)),
+                    ("smoke", Value::Bool(self.meta.smoke)),
+                    ("created_unix",
+                     Value::int(self.meta.created_unix as i64)),
+                ]),
+            ),
+            ("benchmarks", Value::array(benchmarks)),
+        ])
+    }
+
+    /// Serialize as pretty JSON.
+    pub fn to_json(&self) -> String {
+        to_string_pretty(&self.to_value())
+    }
+
+    /// Parse a report back out of a [`Value`] tree.
+    pub fn from_value(v: &Value) -> Result<Report> {
+        let bad = |what: &str| {
+            Error::Bench(format!("malformed bench report: {what}"))
+        };
+        let format = v
+            .get("format")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| bad("missing 'format'"))?;
+        if format != FORMAT {
+            return Err(Error::Bench(format!(
+                "unsupported bench report format {format} (expected \
+                 {FORMAT})"
+            )));
+        }
+        let m = v.get("meta").ok_or_else(|| bad("missing 'meta'"))?;
+        let mstr = |key: &str| -> Result<String> {
+            Ok(m.get(key)
+                .and_then(Value::as_str)
+                .ok_or_else(|| bad(&format!("meta.{key}")))?
+                .to_string())
+        };
+        let musize = |key: &str| -> Result<usize> {
+            m.get(key)
+                .and_then(Value::as_usize)
+                .ok_or_else(|| bad(&format!("meta.{key}")))
+        };
+        let meta = RunMeta {
+            label: mstr("label")?,
+            git_rev: mstr("git_rev")?,
+            parallelism: musize("parallelism")?,
+            profile: mstr("profile")?,
+            warmup: musize("warmup")?,
+            iters: musize("iters")?,
+            smoke: m
+                .get("smoke")
+                .and_then(Value::as_bool)
+                .ok_or_else(|| bad("meta.smoke"))?,
+            created_unix: musize("created_unix")? as u64,
+        };
+        let mut entries = Vec::new();
+        let benchmarks = v
+            .get("benchmarks")
+            .and_then(Value::as_array)
+            .ok_or_else(|| bad("missing 'benchmarks'"))?;
+        for b in benchmarks {
+            let bstr = |key: &str| -> Result<String> {
+                Ok(b.get(key)
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| bad(&format!("benchmark.{key}")))?
+                    .to_string())
+            };
+            let bnum = |key: &str| -> Result<f64> {
+                b.get(key)
+                    .and_then(Value::as_f64)
+                    .ok_or_else(|| bad(&format!("benchmark.{key}")))
+            };
+            let throughput = match b.get("throughput") {
+                None | Some(Value::Null) => None,
+                Some(t) => Some((
+                    t.get("items")
+                        .and_then(Value::as_f64)
+                        .ok_or_else(|| bad("throughput.items"))?,
+                    t.get("unit")
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| bad("throughput.unit"))?
+                        .to_string(),
+                )),
+            };
+            entries.push(BenchEntry {
+                suite: bstr("suite")?,
+                result: BenchResult {
+                    name: bstr("name")?,
+                    iters: b
+                        .get("iters")
+                        .and_then(Value::as_usize)
+                        .ok_or_else(|| bad("benchmark.iters"))?,
+                    mean_s: bnum("mean_s")?,
+                    p50_s: bnum("p50_s")?,
+                    p95_s: bnum("p95_s")?,
+                    min_s: bnum("min_s")?,
+                    throughput,
+                },
+            });
+        }
+        Ok(Report { meta, entries })
+    }
+
+    /// Parse from JSON text.
+    pub fn from_json(text: &str) -> Result<Report> {
+        Report::from_value(&parse(text)?)
+    }
+
+    /// Write the report to `path` as pretty JSON.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json())
+            .map_err(|e| Error::io(path.display(), e))
+    }
+
+    /// Load a report from a JSON file; errors name the file (inside the
+    /// variant, so the `bench error:` / `parse error` prefix renders
+    /// once).
+    pub fn load(path: impl AsRef<Path>) -> Result<Report> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(path.display(), e))?;
+        Report::from_json(&text).map_err(|e| match e {
+            Error::Bench(m) => {
+                Error::Bench(format!("{}: {m}", path.display()))
+            }
+            Error::Parse { line, col, msg, .. } => Error::Parse {
+                file: path.display().to_string(),
+                line,
+                col,
+                msg,
+            },
+            other => other,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> Report {
+        let mut r = Report::new(RunMeta {
+            label: "smoke".into(),
+            git_rev: "abc123".into(),
+            parallelism: 8,
+            profile: "release".into(),
+            warmup: 1,
+            iters: 3,
+            smoke: true,
+            created_unix: 1_753_000_000,
+        });
+        r.push_suite(
+            "packing",
+            vec![
+                BenchResult {
+                    name: "packing/bload/scale0.1".into(),
+                    iters: 3,
+                    mean_s: 0.012,
+                    p50_s: 0.011,
+                    p95_s: 0.015,
+                    min_s: 0.010,
+                    throughput: Some((16_000.0, "frames".into())),
+                },
+                BenchResult {
+                    name: "packing/naive/scale0.1".into(),
+                    iters: 3,
+                    mean_s: 0.002,
+                    p50_s: 0.002,
+                    p95_s: 0.003,
+                    min_s: 0.002,
+                    throughput: None,
+                },
+            ],
+        );
+        r
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless() {
+        let r = sample_report();
+        let parsed = Report::from_json(&r.to_json()).unwrap();
+        assert_eq!(parsed, r);
+        assert_eq!(parsed.entries.len(), 2);
+        assert_eq!(
+            parsed.get("packing/bload/scale0.1").unwrap().throughput,
+            Some((16_000.0, "frames".to_string()))
+        );
+        assert!(parsed.get("packing/naive/scale0.1").unwrap()
+            .throughput
+            .is_none());
+        assert!(parsed.get("nope").is_none());
+    }
+
+    #[test]
+    fn save_load_file_round_trip() {
+        let r = sample_report();
+        let path = std::env::temp_dir().join(format!(
+            "bload_benchkit_report_{}.json",
+            std::process::id()
+        ));
+        r.save(&path).unwrap();
+        let loaded = Report::load(&path).unwrap();
+        assert_eq!(loaded, r);
+        std::fs::remove_file(&path).ok();
+        let e = Report::load(&path).unwrap_err().to_string();
+        assert!(e.contains("bload_benchkit_report"), "{e}");
+    }
+
+    #[test]
+    fn malformed_reports_error_clearly() {
+        assert!(Report::from_json("not json at all").is_err());
+        let e = Report::from_json("{}").unwrap_err().to_string();
+        assert!(e.contains("format"), "{e}");
+        let e = Report::from_json(r#"{"format": 99}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("99"), "{e}");
+        // A benchmark row missing a stat field names the field.
+        let text = sample_report()
+            .to_json()
+            .replace("\"mean_s\"", "\"renamed_s\"");
+        let e = Report::from_json(&text).unwrap_err().to_string();
+        assert!(e.contains("mean_s"), "{e}");
+    }
+
+    #[test]
+    fn load_names_the_file_without_double_prefix() {
+        let path = std::env::temp_dir().join(format!(
+            "bload_benchkit_badreport_{}.json",
+            std::process::id()
+        ));
+        std::fs::write(&path, "{}").unwrap();
+        let e = Report::load(&path).unwrap_err().to_string();
+        assert!(e.contains("bload_benchkit_badreport"), "{e}");
+        assert_eq!(e.matches("bench error:").count(), 1, "{e}");
+        // Parse errors get the real path in their location info.
+        std::fs::write(&path, "not json").unwrap();
+        let e = Report::load(&path).unwrap_err().to_string();
+        assert!(e.contains("bload_benchkit_badreport"), "{e}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn capture_records_environment() {
+        let meta = RunMeta::capture("full", &Bencher::default(), false);
+        assert_eq!(meta.label, "full");
+        assert!(meta.parallelism >= 1);
+        assert!(meta.profile == "debug" || meta.profile == "release");
+        assert_eq!(meta.warmup, Bencher::default().warmup);
+        assert!(!meta.smoke);
+    }
+}

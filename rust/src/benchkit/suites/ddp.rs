@@ -1,0 +1,131 @@
+//! DDP-side suites: all-reduce synchronizer throughput and the Fig 2
+//! deadlock-detection / packed-completion latencies.
+
+use std::time::Duration;
+
+use crate::benchkit::{BenchResult, Bencher};
+use crate::config::ExperimentConfig;
+use crate::dataset::synthetic::generate;
+use crate::ddp::collective::{NaiveAllReduce, RingAllReduce};
+use crate::ddp::{sim, GradSynchronizer};
+use crate::error::Result;
+use crate::packing::{by_name, pack};
+use crate::util::Rng;
+
+use super::{Suite, SuiteOptions};
+
+fn grads(r: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..r)
+        .map(|_| (0..n).map(|_| rng.f32() - 0.5).collect())
+        .collect()
+}
+
+/// All-reduce bench: ring vs naive over the DDS-lite gradient size at
+/// the paper's 8-rank topology, across bucket sizes (elements/s through
+/// the synchronizer).
+#[derive(Debug)]
+pub struct Allreduce;
+
+impl Suite for Allreduce {
+    fn name(&self) -> &'static str {
+        "allreduce"
+    }
+
+    fn describe(&self) -> &'static str {
+        "ring vs naive all-reduce across gradient and bucket sizes"
+    }
+
+    fn run(&self, bench: &Bencher, opts: &SuiteOptions)
+           -> Result<Vec<BenchResult>> {
+        let ranks = 8usize;
+        // 48,666 = the `small` DDS-lite parameter count; 1 M = a larger
+        // model.
+        let sizes: &[usize] =
+            if opts.smoke { &[48_666] } else { &[48_666, 1_000_000] };
+        let buckets: &[usize] = if opts.smoke {
+            &[1 << 16, usize::MAX]
+        } else {
+            &[1 << 12, 1 << 16, usize::MAX]
+        };
+        let mut out = Vec::new();
+        for &n in sizes {
+            let base = grads(ranks, n, 7);
+            for &bucket in buckets {
+                let blabel = if bucket == usize::MAX {
+                    "all".to_string()
+                } else {
+                    format!("{}k", bucket >> 10)
+                };
+                let mut sync_ring = GradSynchronizer::new(
+                    Box::new(RingAllReduce), bucket.min(n));
+                let name = format!("allreduce/ring/n{n}/bucket{blabel}");
+                out.push(bench.run(&name, (n * ranks) as f64, "elems",
+                                   || {
+                    let mut g = base.clone();
+                    sync_ring.sync(&mut g);
+                    g
+                }));
+            }
+            let mut sync_naive =
+                GradSynchronizer::new(Box::new(NaiveAllReduce), n);
+            let name = format!("allreduce/naive/n{n}/bucketall");
+            out.push(bench.run(&name, (n * ranks) as f64, "elems", || {
+                let mut g = base.clone();
+                sync_naive.sync(&mut g);
+                g
+            }));
+        }
+        Ok(out)
+    }
+}
+
+/// Fig 2 bench: time-to-detection of the DDP stall (the paper's failure
+/// is *silent*; ours must be detected promptly and deterministically),
+/// plus the equal-schedule completion latency with BLoad packing.
+#[derive(Debug)]
+pub struct Fig2Deadlock;
+
+impl Suite for Fig2Deadlock {
+    fn name(&self) -> &'static str {
+        "fig2_deadlock"
+    }
+
+    fn describe(&self) -> &'static str {
+        "DDP stall time-to-detection + packed-schedule completion"
+    }
+
+    fn run(&self, bench: &Bencher, opts: &SuiteOptions)
+           -> Result<Vec<BenchResult>> {
+        // Detection cost is dominated by the timeout budget itself, so
+        // smoke shrinks the budgets, not just the iteration counts.
+        let timeouts: &[u64] = if opts.smoke { &[20] } else { &[50, 200] };
+        let ranks = if opts.smoke { 4 } else { 8 };
+        let cfg = ExperimentConfig::default_config();
+        let ds = generate(&cfg.dataset.scaled(0.01), 3);
+        let mut out = Vec::new();
+
+        for &timeout_ms in timeouts {
+            let name = format!("fig2/raw_deadlock_detect/{timeout_ms}ms");
+            out.push(bench.run(&name, 0.0, "", || {
+                let report =
+                    sim::run(&[3, 9], Duration::from_millis(timeout_ms));
+                assert!(report.deadlocked());
+                report
+            }));
+        }
+
+        // Packed equal-schedule completion.
+        let packed =
+            pack(by_name("bload")?, &ds.train, &cfg.packing, 0)?;
+        let sched = sim::packed_schedule(&packed, ranks, 2);
+        let iters = sched[0] as f64 * ranks as f64;
+        let name = format!("fig2/bload_packed_completion/{ranks}ranks");
+        out.push(bench.run(&name, iters, "barrier-waits", || {
+            let report = sim::run(&sched, Duration::from_secs(5));
+            assert!(report.completed);
+            report
+        }));
+        Ok(out)
+    }
+}

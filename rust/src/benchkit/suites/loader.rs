@@ -1,0 +1,98 @@
+//! Unified-loader throughput suite: frames/s through the builder
+//! pipeline across worker counts and prefetch depths (backpressure on),
+//! plus the per-worker video-cache capacity sweep on a chunked packing.
+
+use std::sync::Arc;
+
+use crate::benchkit::{BenchResult, Bencher};
+use crate::config::ExperimentConfig;
+use crate::dataset::synthetic::generate;
+use crate::error::Result;
+use crate::loader::DataLoaderBuilder;
+use crate::packing::{by_name, pack};
+
+use super::{Suite, SuiteOptions};
+
+/// See the module docs.
+#[derive(Debug)]
+pub struct Loader;
+
+impl Suite for Loader {
+    fn name(&self) -> &'static str {
+        "loader"
+    }
+
+    fn describe(&self) -> &'static str {
+        "builder-pipeline throughput: workers × depth + video-cache sweep"
+    }
+
+    fn run(&self, bench: &Bencher, opts: &SuiteOptions)
+           -> Result<Vec<BenchResult>> {
+        let scale = if opts.smoke { 0.01 } else { 0.03 };
+        let worker_counts: &[usize] =
+            if opts.smoke { &[1, 4] } else { &[1, 2, 4, 8] };
+        let depths: &[usize] = if opts.smoke { &[2] } else { &[2, 8] };
+        let cache_workers: &[usize] =
+            if opts.smoke { &[1] } else { &[1, 4] };
+
+        let cfg = ExperimentConfig::default_config();
+        let ds = generate(&cfg.dataset.scaled(scale), 0);
+        let packed = Arc::new(pack(by_name("bload")?, &ds.train,
+                                   &cfg.packing, 0)?);
+        let split = Arc::new(ds.train);
+        let frames = split.total_frames() as f64;
+        let mut out = Vec::new();
+
+        for &workers in worker_counts {
+            for &depth in depths {
+                let name =
+                    format!("loader/workers{workers}/depth{depth}");
+                out.push(bench.run(&name, frames, "frames", || {
+                    let mut loader = DataLoaderBuilder::new()
+                        .batch(2)
+                        .workers(workers)
+                        .depth(depth)
+                        .planned(Arc::clone(&split), Arc::clone(&packed), 0)
+                        .unwrap();
+                    let mut n = 0usize;
+                    while let Some(b) = loader.next() {
+                        n += b.unwrap().real_frames;
+                    }
+                    n
+                }));
+            }
+        }
+
+        // Chunked packing hits the per-worker video cache hard: every
+        // long video appears in several blocks. The `loader.video_cache`
+        // knob trades memory for re-synthesis — cap 1 is the no-cache
+        // baseline.
+        let mut pcfg = cfg.packing.clone();
+        pcfg.t_block = 10;
+        let chunked = Arc::new(pack(by_name("sampling")?, &split, &pcfg, 0)?);
+        let chunk_frames = chunked.stats.frames_kept as f64;
+        for &workers in cache_workers {
+            for cache in [1usize, 64] {
+                let name = format!(
+                    "loader/sampling_chunks/workers{workers}/cache{cache}"
+                );
+                out.push(bench.run(&name, chunk_frames, "frames", || {
+                    let mut loader = DataLoaderBuilder::new()
+                        .batch(2)
+                        .workers(workers)
+                        .depth(4)
+                        .video_cache(cache)
+                        .planned(Arc::clone(&split), Arc::clone(&chunked),
+                                 0)
+                        .unwrap();
+                    let mut n = 0usize;
+                    while let Some(b) = loader.next() {
+                        n += b.unwrap().real_frames;
+                    }
+                    n
+                }));
+            }
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,236 @@
+//! The benchmark-suite registry — [`crate::packing::registry`]'s
+//! pattern applied to performance measurement.
+//!
+//! Every `rust/benches/*.rs` binary is a thin `main` over exactly one
+//! library-side [`Suite`] registered here, so the same measurement code
+//! runs three ways:
+//!
+//! * `cargo bench --bench <name>` — the classic per-target binary
+//!   ([`run_bench_main`]);
+//! * `bload bench [--suite A,B] [--smoke] [--json PATH]` — any subset
+//!   in-process, aggregated into a [`Report`] ([`run_suites`]);
+//! * CI — the `bench-smoke` job runs the full registry at smoke
+//!   geometry and compares the report against a committed baseline.
+//!
+//! Each suite implements scaled-down **smoke** geometry
+//! ([`SuiteOptions::smoke`]): smaller datasets, fewer sweep points,
+//! same benchmark *names* wherever the sweep point survives, so smoke
+//! reports stay comparable run-over-run. Suites that need built PJRT
+//! artifacts ([`Suite::skip_reason`]) skip themselves cleanly instead
+//! of failing the run.
+
+pub mod ddp;
+pub mod loader;
+pub mod packing;
+pub mod runtime;
+pub mod shard_replay;
+pub mod table1;
+
+use crate::error::{Error, Result};
+
+use super::report::{Report, RunMeta};
+use super::{BenchResult, Bencher};
+
+/// Options threaded through every suite run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SuiteOptions {
+    /// Scaled-down CI geometry (smaller datasets, fewer sweep points).
+    pub smoke: bool,
+}
+
+/// One registered benchmark suite. Implementations are stateless unit
+/// structs, mirroring [`crate::packing::Packer`].
+pub trait Suite: Sync {
+    /// Registry key — also the `rust/benches/` binary name.
+    fn name(&self) -> &'static str;
+
+    /// One-line description (shown by `bload bench --list`).
+    fn describe(&self) -> &'static str;
+
+    /// `Some(reason)` when the suite cannot run in this environment
+    /// (e.g. PJRT artifacts not built); the runner skips it cleanly.
+    fn skip_reason(&self, _opts: &SuiteOptions) -> Option<String> {
+        None
+    }
+
+    /// Run every benchmark in the suite, returning the results in
+    /// execution order. Implementations print each result line as it
+    /// lands (via [`Bencher::run`]).
+    fn run(&self, bench: &Bencher, opts: &SuiteOptions)
+           -> Result<Vec<BenchResult>>;
+}
+
+/// All registered suites, hot-path suites first.
+/// Adding a suite = its module + one line here (+ a thin bench binary).
+pub fn registry() -> &'static [&'static dyn Suite] {
+    static REGISTRY: [&'static dyn Suite; 10] = [
+        &packing::Packing,
+        &packing::OnlinePacking,
+        &loader::Loader,
+        &shard_replay::ShardReplay,
+        &ddp::Allreduce,
+        &ddp::Fig2Deadlock,
+        &table1::Table1Pipeline,
+        &runtime::RuntimeExec,
+        &runtime::EpochTime,
+        &runtime::AblationReset,
+    ];
+    &REGISTRY
+}
+
+/// Lookup by registry key.
+pub fn by_name(name: &str) -> Result<&'static dyn Suite> {
+    let k = name.trim().to_ascii_lowercase();
+    registry()
+        .iter()
+        .copied()
+        .find(|s| s.name() == k)
+        .ok_or_else(|| {
+            let known: Vec<&str> =
+                registry().iter().map(|s| s.name()).collect();
+            Error::Bench(format!(
+                "unknown bench suite '{name}' (known: {})",
+                known.join("|")
+            ))
+        })
+}
+
+/// What a multi-suite run produced: the [`Report`] holding every
+/// *completed* suite's results, plus any suites that failed — a late
+/// failure must not discard minutes of finished measurements, so the
+/// caller can still save/compare the partial report before surfacing
+/// the failures.
+pub struct SuiteRunOutcome {
+    pub report: Report,
+    /// `(suite name, error)` for every suite whose run errored.
+    pub failures: Vec<(&'static str, Error)>,
+}
+
+/// Run `suites` in order, collecting everything into one [`Report`]
+/// labelled `smoke`/`full`. Environment-gated suites announce why they
+/// skipped; a suite that errors is recorded in
+/// [`SuiteRunOutcome::failures`] and the remaining suites still run.
+pub fn run_suites(suites: &[&'static dyn Suite], bench: &Bencher,
+                  opts: &SuiteOptions) -> SuiteRunOutcome {
+    let label = if opts.smoke { "smoke" } else { "full" };
+    let mut report = Report::new(RunMeta::capture(label, bench, opts.smoke));
+    let mut failures = Vec::new();
+    for &suite in suites {
+        if let Some(reason) = suite.skip_reason(opts) {
+            println!("suite {}: skipped ({reason})", suite.name());
+            continue;
+        }
+        println!("— suite {} —", suite.name());
+        match suite.run(bench, opts) {
+            Ok(results) => report.push_suite(suite.name(), results),
+            Err(e) => {
+                eprintln!("suite {} failed: {e}", suite.name());
+                failures.push((suite.name(), e));
+            }
+        }
+    }
+    SuiteRunOutcome { report, failures }
+}
+
+/// Entry point shared by every thin `rust/benches/*.rs` binary: resolve
+/// the suite, honour the env knobs (`BLOAD_BENCH_FAST=1` selects smoke
+/// iterations *and* smoke geometry), run, and exit nonzero on error.
+pub fn run_bench_main(name: &str) {
+    if let Err(e) = bench_main_inner(name) {
+        eprintln!("bench {name} failed: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn bench_main_inner(name: &str) -> Result<()> {
+    let suite = by_name(name)?;
+    let opts = SuiteOptions {
+        smoke: super::fast_mode_from_env()?,
+    };
+    let bench = Bencher::from_env()?;
+    if let Some(reason) = suite.skip_reason(&opts) {
+        println!("skipping {name}: {reason}");
+        return Ok(());
+    }
+    suite.run(&bench, &opts)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_unique_and_resolvable() {
+        let mut seen = std::collections::BTreeSet::new();
+        for &s in registry() {
+            assert!(seen.insert(s.name()), "duplicate suite {}", s.name());
+            assert!(!s.describe().is_empty());
+            assert_eq!(by_name(s.name()).unwrap().name(), s.name());
+            assert_eq!(
+                by_name(&s.name().to_ascii_uppercase()).unwrap().name(),
+                s.name(),
+                "lookup is case-insensitive"
+            );
+        }
+        assert_eq!(registry().len(), 10, "one suite per bench binary");
+        let e = by_name("nope").unwrap_err().to_string();
+        assert!(e.contains("packing"), "error lists known suites: {e}");
+    }
+
+    #[test]
+    fn run_suites_records_meta_and_skips() {
+        // The artifacts-gated suites skip without built artifacts; an
+        // empty selection still yields a well-formed report.
+        let outcome =
+            run_suites(&[], &Bencher::smoke(), &SuiteOptions { smoke: true });
+        assert!(outcome.failures.is_empty());
+        assert!(outcome.report.entries.is_empty());
+        assert_eq!(outcome.report.meta.label, "smoke");
+        assert!(outcome.report.meta.smoke);
+        assert_eq!(outcome.report.meta.iters, Bencher::smoke().iters);
+    }
+
+    #[test]
+    fn run_suites_keeps_completed_results_past_a_failure() {
+        #[derive(Debug)]
+        struct Good;
+        impl Suite for Good {
+            fn name(&self) -> &'static str {
+                "good"
+            }
+            fn describe(&self) -> &'static str {
+                "completes"
+            }
+            fn run(&self, bench: &Bencher, _opts: &SuiteOptions)
+                   -> Result<Vec<BenchResult>> {
+                Ok(vec![bench.run("good/one", 0.0, "", || 1)])
+            }
+        }
+        #[derive(Debug)]
+        struct Bad;
+        impl Suite for Bad {
+            fn name(&self) -> &'static str {
+                "bad"
+            }
+            fn describe(&self) -> &'static str {
+                "errors"
+            }
+            fn run(&self, _bench: &Bencher, _opts: &SuiteOptions)
+                   -> Result<Vec<BenchResult>> {
+                Err(Error::Bench("boom".into()))
+            }
+        }
+        static GOOD: Good = Good;
+        static BAD: Bad = Bad;
+        let outcome = run_suites(
+            &[&BAD, &GOOD],
+            &Bencher::smoke(),
+            &SuiteOptions::default(),
+        );
+        // The failure is recorded AND the later suite's results survive.
+        assert_eq!(outcome.failures.len(), 1);
+        assert_eq!(outcome.failures[0].0, "bad");
+        assert!(outcome.report.get("good/one").is_some());
+    }
+}

@@ -1,0 +1,168 @@
+//! Packing-throughput suites: every registered offline strategy, and
+//! the windowed streaming packer vs offline BLoad.
+
+use std::sync::Arc;
+
+use crate::benchkit::{BenchResult, Bencher};
+use crate::config::ExperimentConfig;
+use crate::dataset::synthetic::generate;
+use crate::error::Result;
+use crate::loader::DataLoaderBuilder;
+use crate::packing::online::{pack_stream, OnlineConfig};
+use crate::packing::{by_name, pack, registry};
+
+use super::{Suite, SuiteOptions};
+
+/// Offline packing throughput for every registry entry at several
+/// dataset scales (frames/s). The BLoad packer is `O(N·T_max)`; no
+/// strategy may become the pipeline bottleneck (packing happens once
+/// per epoch). New registry entries are benched automatically.
+#[derive(Debug)]
+pub struct Packing;
+
+impl Suite for Packing {
+    fn name(&self) -> &'static str {
+        "packing"
+    }
+
+    fn describe(&self) -> &'static str {
+        "offline packing throughput, every registered strategy"
+    }
+
+    fn run(&self, bench: &Bencher, opts: &SuiteOptions)
+           -> Result<Vec<BenchResult>> {
+        let scales: &[f64] = if opts.smoke { &[0.02] } else { &[0.1, 1.0] };
+        let cfg = ExperimentConfig::default_config();
+        let mut out = Vec::new();
+        for &scale in scales {
+            let dcfg = cfg.dataset.scaled(scale);
+            let ds = generate(&dcfg, 0);
+            let frames = ds.train.total_frames() as f64;
+            for &strategy in registry() {
+                let name =
+                    format!("packing/{}/scale{scale}", strategy.name());
+                let mut seed = 0u64;
+                out.push(bench.run(&name, frames, "frames", || {
+                    seed += 1;
+                    pack(strategy, &ds.train, &cfg.packing, seed).unwrap()
+                }));
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Online-packing throughput: the windowed streaming packer vs offline
+/// BLoad (frames/s) across window sizes, the padding overhead each
+/// window pays, and a final leg pushing the online packer's blocks
+/// through the unified stream loader (blocks → device batches). The
+/// online packer sits on the hot arrival path, unlike the offline
+/// packer's once-per-epoch batch job.
+#[derive(Debug)]
+pub struct OnlinePacking;
+
+impl Suite for OnlinePacking {
+    fn name(&self) -> &'static str {
+        "online_packing"
+    }
+
+    fn describe(&self) -> &'static str {
+        "windowed streaming packer vs offline BLoad + stream loader leg"
+    }
+
+    fn run(&self, bench: &Bencher, opts: &SuiteOptions)
+           -> Result<Vec<BenchResult>> {
+        let scales: &[f64] = if opts.smoke { &[0.02] } else { &[0.1, 1.0] };
+        let windows: &[usize] =
+            if opts.smoke { &[16, 64] } else { &[16, 64, 256] };
+        let cfg = ExperimentConfig::default_config();
+        let mut out = Vec::new();
+        for &scale in scales {
+            let dcfg = cfg.dataset.scaled(scale);
+            let ds = generate(&dcfg, 0);
+            let frames = ds.train.total_frames() as f64;
+            let items: Vec<(u32, usize)> = ds
+                .train
+                .videos
+                .iter()
+                .map(|v| (v.id, v.len as usize))
+                .collect();
+
+            let mut seed = 0u64;
+            let name = format!("online_packing/offline_bload/scale{scale}");
+            out.push(bench.run(&name, frames, "frames", || {
+                seed += 1;
+                pack(by_name("bload").unwrap(), &ds.train, &cfg.packing,
+                     seed)
+                    .unwrap()
+            }));
+            // Offline reference for the per-window padding lines
+            // (window-independent, so packed once per scale).
+            let offline = pack(by_name("bload")?, &ds.train,
+                               &cfg.packing, 0)?;
+
+            for &window in windows {
+                let mut ocfg = OnlineConfig::new(cfg.packing.t_max);
+                ocfg.window = window;
+                let mut seed = 0u64;
+                let name =
+                    format!("online_packing/w{window}/scale{scale}");
+                out.push(bench.run(&name, frames, "frames", || {
+                    seed += 1;
+                    pack_stream(items.iter().copied(), ocfg, seed).unwrap()
+                }));
+                // One representative run for the padding overhead line.
+                let (_, stats) =
+                    pack_stream(items.iter().copied(), ocfg, 0)?;
+                println!(
+                    "  padding: online_w{window} {:.3}% vs offline \
+                     {:.3}% (scale {scale})",
+                    100.0 * stats.padding_ratio(),
+                    100.0 * offline.stats.padding as f64
+                        / offline.stats.total_slots as f64
+                );
+            }
+
+            if scale < 1.0 {
+                // End-to-end streaming: the online packer's blocks
+                // through the unified loader (blocks → device batches),
+                // overlapped with a feeder thread like the ingest
+                // service's output.
+                let mut ocfg = OnlineConfig::new(cfg.packing.t_max);
+                ocfg.window = 64;
+                let (blocks, _) =
+                    pack_stream(items.iter().copied(), ocfg, 0)?;
+                let split = Arc::new(ds.train.clone());
+                let name = format!(
+                    "online_packing/w64_stream_loader/scale{scale}"
+                );
+                out.push(bench.run(&name, frames, "frames", || {
+                    let (tx, rx) = std::sync::mpsc::sync_channel(32);
+                    let feeder = {
+                        let blocks = blocks.clone();
+                        std::thread::spawn(move || {
+                            for b in blocks {
+                                if tx.send(b).is_err() {
+                                    return;
+                                }
+                            }
+                        })
+                    };
+                    let mut loader = DataLoaderBuilder::new()
+                        .batch(2)
+                        .workers(4)
+                        .depth(4)
+                        .stream(Arc::clone(&split), rx, cfg.packing.t_max)
+                        .unwrap();
+                    let mut n = 0usize;
+                    while let Some(b) = loader.next() {
+                        n += b.unwrap().real_frames;
+                    }
+                    feeder.join().unwrap();
+                    n
+                }));
+            }
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,115 @@
+//! Sharded-store replay suite: single-file sequential `StoreReader`
+//! decode vs the concurrent `ShardPool` at several reader counts
+//! (videos/s), plus the pool-open (scan + CRC verify + index) cost.
+//!
+//! The pool is opened with a cache of 1 so every `get` measures a real
+//! seek + decode; readers walk disjoint id slices, so the comparison is
+//! decode-for-decode against the sequential baseline.
+
+use std::sync::Arc;
+
+use crate::benchkit::{BenchResult, Bencher};
+use crate::config::ExperimentConfig;
+use crate::dataset::shardstore::{ShardPool, ShardSetWriter};
+use crate::dataset::store::{StoreReader, StoreWriter};
+use crate::dataset::synthetic::generate;
+use crate::error::Result;
+
+use super::{Suite, SuiteOptions};
+
+/// See the module docs.
+#[derive(Debug)]
+pub struct ShardReplay;
+
+impl Suite for ShardReplay {
+    fn name(&self) -> &'static str {
+        "shard_replay"
+    }
+
+    fn describe(&self) -> &'static str {
+        "single-file StoreReader vs concurrent ShardPool replay"
+    }
+
+    fn run(&self, bench: &Bencher, opts: &SuiteOptions)
+           -> Result<Vec<BenchResult>> {
+        let (scale, shards) = if opts.smoke { (0.005, 2) } else { (0.02, 4) };
+        let reader_counts: &[usize] =
+            if opts.smoke { &[1, 2] } else { &[1, 2, 4] };
+
+        let cfg = ExperimentConfig::default_config();
+        let dcfg = cfg.dataset.scaled(scale);
+        let ds = generate(&dcfg, 0);
+        let split = &ds.train;
+        let videos = split.videos.len() as f64;
+
+        let scratch = std::env::temp_dir().join(format!(
+            "bload_bench_shard_replay_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&scratch).ok();
+        std::fs::create_dir_all(&scratch)
+            .map_err(|e| crate::error::Error::io(scratch.display(), e))?;
+        let geometry = (dcfg.objects as u32, dcfg.feat_dim as u32,
+                        dcfg.classes as u32);
+
+        let single = scratch.join("single.blds");
+        let mut w = StoreWriter::create(&single, 0, geometry,
+                                        split.videos.len() as u32)?;
+        for m in &split.videos {
+            w.append(&split.spec.materialize(*m))?;
+        }
+        w.finish()?;
+
+        let shard_dir = scratch.join("set");
+        ShardSetWriter::new(&shard_dir, 0, shards)?.write(split)?;
+
+        let mut out = Vec::new();
+        out.push(bench.run("shard_replay/single_file", videos, "videos",
+                           || {
+            let mut n = 0usize;
+            for v in StoreReader::open(&single).unwrap() {
+                n += v.unwrap().len;
+            }
+            n
+        }));
+
+        out.push(bench.run("shard_replay/pool_open_verify", videos,
+                           "videos", || {
+            ShardPool::open(&shard_dir).unwrap().videos().len()
+        }));
+
+        let pool = Arc::new(ShardPool::open_with_cache(&shard_dir, 1)?);
+        let ids: Vec<u32> = split.videos.iter().map(|v| v.id).collect();
+        for &readers in reader_counts {
+            let name = format!("shard_replay/pool/readers{readers}");
+            out.push(bench.run(&name, videos, "videos", || {
+                std::thread::scope(|s| {
+                    let mut handles = Vec::with_capacity(readers);
+                    for r in 0..readers {
+                        let pool = Arc::clone(&pool);
+                        let slice: Vec<u32> = ids
+                            .iter()
+                            .skip(r)
+                            .step_by(readers)
+                            .copied()
+                            .collect();
+                        handles.push(s.spawn(move || {
+                            let mut n = 0usize;
+                            for id in slice {
+                                n += pool.get(id).unwrap().len;
+                            }
+                            n
+                        }));
+                    }
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().unwrap())
+                        .sum::<usize>()
+                })
+            }));
+        }
+
+        std::fs::remove_dir_all(&scratch).ok();
+        Ok(out)
+    }
+}

@@ -1,0 +1,44 @@
+//! Table I pipeline-accounting suite: regenerate the paper's padding /
+//! deletion / cost-model rows and time the regeneration itself. This is
+//! the canonical target for Table I rows 1–3; row 4 (recall) comes from
+//! the `ablation_reset` / `epoch_time` suites or `bload table1 --full`.
+
+use crate::benchkit::{BenchResult, Bencher};
+use crate::error::Result;
+use crate::harness::table1 as t1;
+
+use super::{Suite, SuiteOptions};
+
+/// See the module docs.
+#[derive(Debug)]
+pub struct Table1Pipeline;
+
+impl Suite for Table1Pipeline {
+    fn name(&self) -> &'static str {
+        "table1_pipeline"
+    }
+
+    fn describe(&self) -> &'static str {
+        "Table I padding/deletion/cost-model accounting, all strategies"
+    }
+
+    fn run(&self, bench: &Bencher, opts: &SuiteOptions)
+           -> Result<Vec<BenchResult>> {
+        // Full mode packs the paper-scale split (7,464 videos) with
+        // every strategy per iteration; smoke scales the split down and
+        // keeps the identical accounting path.
+        let scale = if opts.smoke { 0.05 } else { 1.0 };
+        let frames = 166_785.0 * scale;
+        let mut rows = None;
+        let name = format!("table1/pipeline_accounting/scale{scale}");
+        let r = bench.run(&name, frames, "frames", || {
+            rows = Some(t1::pipeline_rows_scaled(scale, 0).unwrap());
+        });
+        let report = t1::Table1Report {
+            rows: rows.expect("at least one iteration ran"),
+            measured: false,
+        };
+        println!("{}", t1::render(&report));
+        Ok(vec![r])
+    }
+}

@@ -60,6 +60,17 @@ impl Args {
             .unwrap_or_else(|| default.to_string())
     }
 
+    /// Comma-separated list flag: `--suite a,b,c` → `["a","b","c"]`.
+    /// Empty segments are dropped; an absent flag yields an empty list.
+    pub fn flag_strs(&mut self, name: &str) -> Vec<String> {
+        self.flag_str(name, "")
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect()
+    }
+
     pub fn flag_bool(&mut self, name: &str) -> bool {
         self.consumed.insert(name.to_string());
         matches!(
@@ -148,6 +159,20 @@ mod tests {
     #[test]
     fn double_positional_rejected() {
         assert!(Args::parse(&argv(&["a", "b"])).is_err());
+    }
+
+    #[test]
+    fn list_flag_splits_on_commas() {
+        let mut a = Args::parse(&argv(&[
+            "bench", "--suite", "packing, loader,,shard_replay",
+        ]))
+        .unwrap();
+        assert_eq!(
+            a.flag_strs("suite"),
+            vec!["packing", "loader", "shard_replay"]
+        );
+        assert!(a.flag_strs("absent").is_empty());
+        a.finish().unwrap();
     }
 
     #[test]

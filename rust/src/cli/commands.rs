@@ -2,6 +2,9 @@
 
 use std::sync::Arc;
 
+use crate::benchkit::compare::{compare, CompareConfig};
+use crate::benchkit::suites::{self, Suite, SuiteOptions};
+use crate::benchkit::{Bencher, Report};
 use crate::config::ExperimentConfig;
 use crate::dataset::shardstore::{ShardPool, ShardSetManifest,
                                  ShardSetWriter};
@@ -494,6 +497,137 @@ pub fn shards_cmd(args: &mut Args) -> Result<i32> {
         m.shards.len(),
         crate::util::humanize::duration(dt)
     );
+    Ok(0)
+}
+
+/// `bload bench [--list] [--suite A,B,..] [--smoke] [--json PATH]
+///              [--compare BASELINE.json [--report CURRENT.json]]
+///              [--threshold PCT] [--p50-threshold PCT]`
+///
+/// The unified benchmark runner over [`crate::benchkit::suites`]:
+///
+/// * `--list` prints the suite registry and exits.
+/// * Default: run every suite (artifact-gated ones skip themselves)
+///   with [`Bencher::from_env`] iterations; `--suite` selects a comma
+///   list; `--smoke` switches to scaled-down CI geometry + smoke
+///   iterations; `--json PATH` writes the aggregated
+///   [`Report`].
+/// * `--compare BASELINE.json` afterwards compares the fresh run
+///   against the baseline report and exits nonzero on any regression
+///   beyond the noise thresholds (mean `--threshold`% slower, default
+///   20, corroborated by p50 `--p50-threshold`%, default 10) or on a
+///   smoke-vs-full geometry mismatch between the reports. With
+///   `--report CURRENT.json` no benches run at all — the two report
+///   files are compared directly (what CI's advisory gate does).
+pub fn bench(args: &mut Args) -> Result<i32> {
+    let list = args.flag_bool("list");
+    let smoke = args.flag_bool("smoke");
+    let suite_names = args.flag_strs("suite");
+    let json = args.flag_str("json", "");
+    let compare_path = args.flag_str("compare", "");
+    let report_path = args.flag_str("report", "");
+    let ccfg = CompareConfig {
+        mean_pct: args.flag_f64("threshold", 20.0)?,
+        p50_pct: args.flag_f64("p50-threshold", 10.0)?,
+    };
+    args.finish()?;
+
+    if list {
+        let opts = SuiteOptions { smoke };
+        let mut t = TextTable::new(&["suite", "status", "description"]);
+        for &s in suites::registry() {
+            let status = match s.skip_reason(&opts) {
+                Some(_) => "skip",
+                None => "ready",
+            };
+            t.row(&[
+                s.name().to_string(),
+                status.to_string(),
+                s.describe().to_string(),
+            ]);
+        }
+        println!("{}", t.render());
+        println!(
+            "{} suites registered; `--suite <a,b>` runs a subset, \
+             `--smoke` uses CI geometry.",
+            suites::registry().len()
+        );
+        return Ok(0);
+    }
+
+    if !report_path.is_empty() {
+        // Pure file-vs-file comparison: no benches run.
+        if compare_path.is_empty() {
+            return Err(Error::Config(
+                "--report CURRENT.json needs --compare BASELINE.json \
+                 (the two reports to diff)"
+                    .into(),
+            ));
+        }
+        if smoke || !json.is_empty() || !suite_names.is_empty() {
+            return Err(Error::Config(
+                "--report compares two existing report files; \
+                 --smoke/--suite/--json apply only to a fresh run \
+                 (drop them, or drop --report to run the benches)"
+                    .into(),
+            ));
+        }
+        let base = Report::load(&compare_path)?;
+        let cur = Report::load(&report_path)?;
+        let cmp = compare(&base, &cur, ccfg);
+        print!("{}", cmp.render());
+        return Ok(if cmp.gate_failed() { 1 } else { 0 });
+    }
+
+    let selected: Vec<&'static dyn Suite> = if suite_names.is_empty() {
+        suites::registry().to_vec()
+    } else {
+        suite_names
+            .iter()
+            .map(|n| suites::by_name(n))
+            .collect::<Result<_>>()?
+    };
+    let base_iters =
+        if smoke { Bencher::smoke() } else { Bencher::default() };
+    let bencher = Bencher::from_env_or(base_iters)?;
+    let opts = SuiteOptions { smoke };
+    let outcome = suites::run_suites(&selected, &bencher, &opts);
+    let report = outcome.report;
+    println!(
+        "{} benchmark(s) across {} suite(s) | rev {} | {} | warmup {} \
+         iters {}{}",
+        report.entries.len(),
+        selected.len(),
+        report.meta.git_rev,
+        report.meta.profile,
+        report.meta.warmup,
+        report.meta.iters,
+        if smoke { " | smoke geometry" } else { "" }
+    );
+    if !json.is_empty() {
+        // Saved before failures are surfaced, so a late suite error
+        // never discards the completed suites' measurements.
+        report.save(&json)?;
+        println!("wrote {json}");
+    }
+    if !outcome.failures.is_empty() {
+        let names: Vec<&str> =
+            outcome.failures.iter().map(|(n, _)| *n).collect();
+        let (_, first) = &outcome.failures[0];
+        return Err(Error::Bench(format!(
+            "{} suite(s) failed ({}); first error: {first}",
+            outcome.failures.len(),
+            names.join(", ")
+        )));
+    }
+    if !compare_path.is_empty() {
+        let baseline = Report::load(&compare_path)?;
+        let cmp = compare(&baseline, &report, ccfg);
+        print!("{}", cmp.render());
+        if cmp.gate_failed() {
+            return Ok(1);
+        }
+    }
     Ok(0)
 }
 

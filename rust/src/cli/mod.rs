@@ -18,6 +18,8 @@
 //!   shards         inspect a sharded store / run the shard scenario
 //!   train          end-to-end training run from a config file
 //!   ablation       reset-table / state-carry ablations (Fig 6)
+//!   bench          unified benchmark runner (suites, JSON reports,
+//!                  baseline comparison)
 //! ```
 
 pub mod args;
@@ -55,6 +57,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "shards" => commands::shards_cmd(&mut args),
         "train" => commands::train(&mut args),
         "ablation" => commands::ablation(&mut args),
+        "bench" => commands::bench(&mut args),
         other => {
             eprintln!("unknown command '{other}'\n{}", help());
             Ok(2)
@@ -93,6 +96,9 @@ in-memory)
 CRC verification) or --bench the shard scenario (--shards N --readers N)
     train          full training run (--config FILE)
     ablation       reset-table / state-carry ablations (--epochs N)
+    bench          run benchmark suites in-process (--list; --suite a,b; \
+--smoke; --json PATH; --compare BASELINE.json [--report CURRENT.json] \
+exits nonzero on regressions beyond --threshold/--p50-threshold)
 
 STREAMING MODE:
     `bload ingest` runs the online packing service: sequences arrive from
@@ -113,6 +119,16 @@ SHARDED STORES:
     runs for any shard count. `bload shards --dir DIR` prints and
     verifies the manifest; `bload shards --bench` measures parallel
     write and multi-reader replay against the single-file baseline.
+
+BENCHMARKS:
+    `bload bench` runs the registered benchmark suites (the same code
+    behind every `cargo bench` target) in one process. `--smoke` uses
+    CI-sized geometry, `--json BENCH_smoke.json` writes a structured
+    report with env metadata (git rev, parallelism, profile, iteration
+    config), and `--compare BASELINE.json` flags benchmarks whose mean
+    slowed beyond the noise threshold with p50 corroboration, exiting
+    nonzero so CI can gate on it. `bload bench --list` shows the
+    registry.
 
 COMMON FLAGS:
     --seed N           PRNG seed (default 0)

@@ -65,6 +65,9 @@ pub enum Error {
     /// Training loop errors (NaN loss, checkpoint IO...).
     Train(String),
 
+    /// Benchmark subsystem failures (malformed reports, unknown suites).
+    Bench(String),
+
     /// Underlying XLA/PJRT error.
     Xla(String),
 
@@ -112,6 +115,7 @@ impl fmt::Display for Error {
                  expected {expected:?}, got {got:?}"
             ),
             Error::Train(m) => write!(f, "train error: {m}"),
+            Error::Bench(m) => write!(f, "bench error: {m}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Io { path, source } => {
                 write!(f, "io error on {path}: {source}")

@@ -96,8 +96,17 @@ impl Default for Table1Options {
 /// Level 1: exact pipeline accounting at paper scale, one row per
 /// registry entry.
 pub fn pipeline_rows(seed: u64) -> Result<Vec<StrategyRow>> {
+    pipeline_rows_scaled(1.0, seed)
+}
+
+/// [`pipeline_rows`] on a scaled-down split (same length distribution,
+/// `scale` × the video counts) — the smoke geometry of the
+/// `table1_pipeline` bench suite. `scale = 1.0` is the paper-exact
+/// accounting.
+pub fn pipeline_rows_scaled(scale: f64, seed: u64)
+                            -> Result<Vec<StrategyRow>> {
     let cfg = ExperimentConfig::default_config();
-    let ds = generate(&cfg.dataset, seed);
+    let ds = generate(&cfg.dataset.scaled(scale), seed);
     let mut rows = Vec::new();
     for &strat in registry() {
         let packed = pack(strat, &ds.train, &cfg.packing, seed)?;
@@ -330,6 +339,20 @@ mod tests {
         assert!((r_naive - 4.15).abs() < 0.4, "naive ratio {r_naive}");
         assert!((r_samp - 0.44).abs() < 0.1, "sampling ratio {r_samp}");
         assert!((r_mix - 0.98).abs() < 0.12, "mix ratio {r_mix}");
+    }
+
+    #[test]
+    fn scaled_accounting_covers_every_strategy() {
+        // The bench suites' smoke geometry: same accounting path at a
+        // fraction of the paper split.
+        let rows = pipeline_rows_scaled(0.02, 0).unwrap();
+        assert_eq!(rows.len(), crate::packing::registry().len());
+        let bload = rows
+            .iter()
+            .find(|r| r.strategy.name() == "bload")
+            .unwrap();
+        assert_eq!(bload.deleted, 0);
+        assert!(bload.slots_full > 0);
     }
 
     #[test]

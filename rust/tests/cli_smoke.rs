@@ -210,6 +210,115 @@ fn table1_pipeline_level() {
 }
 
 #[test]
+fn bench_list_and_flag_errors() {
+    assert_eq!(run(&argv(&["bench", "--list"])).unwrap(), 0);
+    // Unknown suites and unknown flags are hard errors.
+    assert!(run(&argv(&["bench", "--suite", "nope"])).is_err());
+    assert!(run(&argv(&["bench", "--bogus", "1"])).is_err());
+    // --report is meaningless without the baseline to diff against.
+    assert!(run(&argv(&["bench", "--report", "/tmp/x.json"])).is_err());
+    // File-vs-file mode runs nothing: run-only flags are rejected, not
+    // silently ignored.
+    assert!(run(&argv(&[
+        "bench", "--smoke", "--compare", "/tmp/a.json", "--report",
+        "/tmp/b.json",
+    ]))
+    .is_err());
+}
+
+#[test]
+fn bench_smoke_suite_writes_valid_json_report() {
+    let out = std::env::temp_dir().join(format!(
+        "bload_cli_bench_{}.json",
+        std::process::id()
+    ));
+    let out_s = out.to_str().unwrap().to_string();
+    assert_eq!(
+        run(&argv(&[
+            "bench", "--smoke", "--suite", "packing", "--json", &out_s,
+        ]))
+        .unwrap(),
+        0
+    );
+    let report = bload::benchkit::Report::load(&out).unwrap();
+    assert!(report.meta.smoke);
+    assert_eq!(report.meta.label, "smoke");
+    assert!(
+        !report.entries.is_empty(),
+        "packing suite produced no results"
+    );
+    assert!(report.entries.iter().all(|e| e.suite == "packing"));
+    assert!(report
+        .entries
+        .iter()
+        .all(|e| e.result.mean_s >= 0.0 && e.result.iters > 0));
+    // Comparing a report against itself through the CLI exits 0.
+    assert_eq!(
+        run(&argv(&[
+            "bench", "--compare", &out_s, "--report", &out_s,
+        ]))
+        .unwrap(),
+        0
+    );
+    std::fs::remove_file(&out).ok();
+}
+
+#[test]
+fn bench_compare_gates_on_injected_regression() {
+    use bload::benchkit::{BenchResult, Bencher, Report, RunMeta};
+    let mut base = Report::new(RunMeta::capture(
+        "smoke",
+        &Bencher::smoke(),
+        true,
+    ));
+    base.push_suite(
+        "s",
+        vec![BenchResult {
+            name: "s/hot_path".into(),
+            iters: 3,
+            mean_s: 1.0,
+            p50_s: 1.0,
+            p95_s: 1.2,
+            min_s: 0.9,
+            throughput: None,
+        }],
+    );
+    let mut slow = base.clone();
+    slow.entries[0].result.mean_s = 2.0;
+    slow.entries[0].result.p50_s = 2.0;
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let base_p = dir.join(format!("bload_cli_bench_base_{pid}.json"));
+    let slow_p = dir.join(format!("bload_cli_bench_slow_{pid}.json"));
+    base.save(&base_p).unwrap();
+    slow.save(&slow_p).unwrap();
+    let base_s = base_p.to_str().unwrap().to_string();
+    let slow_s = slow_p.to_str().unwrap().to_string();
+    // Identical: exit 0. Injected 2x regression: exit 1.
+    assert_eq!(
+        run(&argv(&["bench", "--compare", &base_s, "--report", &base_s]))
+            .unwrap(),
+        0
+    );
+    assert_eq!(
+        run(&argv(&["bench", "--compare", &base_s, "--report", &slow_s]))
+            .unwrap(),
+        1
+    );
+    // The regression is noise-gated: a custom threshold admits it.
+    assert_eq!(
+        run(&argv(&[
+            "bench", "--compare", &base_s, "--report", &slow_s,
+            "--threshold", "150", "--p50-threshold", "150",
+        ]))
+        .unwrap(),
+        0
+    );
+    std::fs::remove_file(&base_p).ok();
+    std::fs::remove_file(&slow_p).ok();
+}
+
+#[test]
 fn train_rejects_missing_config() {
     assert!(run(&argv(&["train", "--config", "/nope/missing.toml"]))
         .is_err());

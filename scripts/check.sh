@@ -6,9 +6,13 @@
 # Mirrors CI: formatting, lints as errors, rustdoc with warnings as
 # errors (broken intra-doc links rot silently otherwise), compile-check
 # of every non-test target (benches + examples don't build under `cargo
-# test`), then the full test suite. Runtime tests that need AOT
-# artifacts skip themselves when artifacts/manifest.json is absent, so
-# the suite is self-contained.
+# test`), the full test suite, then the bench-smoke run CI's
+# `bench-smoke` job performs — every registered suite at smoke geometry,
+# report written to BENCH_smoke.json (compare against a recorded
+# baseline with `bload bench --compare benches/baseline.json --report
+# BENCH_smoke.json`). Runtime tests/suites that need AOT artifacts skip
+# themselves when artifacts/manifest.json is absent, so the gate is
+# self-contained.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -16,4 +20,5 @@ cargo fmt --check \
   && cargo clippy -- -D warnings \
   && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps \
   && cargo build --benches --examples \
-  && cargo test -q
+  && cargo test -q \
+  && cargo run --release -- bench --smoke --json BENCH_smoke.json
