@@ -17,9 +17,17 @@
 //!   "meta": { "label", "git_rev", "parallelism", "profile",
 //!             "warmup", "iters", "smoke", "created_unix" },
 //!   "benchmarks": [ { "suite", "name", "iters", "mean_s", "p50_s",
-//!                     "p95_s", "min_s", "throughput": {"items","unit"}? } ]
+//!                     "p95_s", "min_s", "throughput": {"items","unit"}? } ],
+//!   "telemetry": { ...crate::telemetry snapshot, format 1... }?
 //! }
 //! ```
+//!
+//! The optional `telemetry` key embeds a
+//! [`crate::telemetry::Snapshot`] taken at the end of the run, so a
+//! bench report carries the instrumentation counters (cache hit rates,
+//! queue depths, padding ratios) that explain its timings. Readers
+//! that predate the key ignore it; [`Report::from_value`] preserves it
+//! verbatim when present.
 
 use std::path::Path;
 
@@ -101,6 +109,10 @@ pub struct BenchEntry {
 pub struct Report {
     pub meta: RunMeta,
     pub entries: Vec<BenchEntry>,
+    /// Telemetry snapshot taken at the end of the run (see
+    /// [`crate::telemetry::snapshot`]); `None` for reports written
+    /// before the key existed or runs without instrumentation.
+    pub telemetry: Option<Value>,
 }
 
 impl Report {
@@ -108,6 +120,7 @@ impl Report {
         Report {
             meta,
             entries: Vec::new(),
+            telemetry: None,
         }
     }
 
@@ -155,7 +168,7 @@ impl Report {
                 ])
             })
             .collect();
-        Value::object(vec![
+        let mut fields = vec![
             ("format", Value::int(FORMAT as i64)),
             (
                 "meta",
@@ -172,7 +185,11 @@ impl Report {
                 ]),
             ),
             ("benchmarks", Value::array(benchmarks)),
-        ])
+        ];
+        if let Some(t) = &self.telemetry {
+            fields.push(("telemetry", t.clone()));
+        }
+        Value::object(fields)
     }
 
     /// Serialize as pretty JSON.
@@ -265,7 +282,11 @@ impl Report {
                 },
             });
         }
-        Ok(Report { meta, entries })
+        Ok(Report {
+            meta,
+            entries,
+            telemetry: v.get("telemetry").cloned(),
+        })
     }
 
     /// Parse from JSON text.
@@ -406,6 +427,27 @@ mod tests {
         let e = Report::load(&path).unwrap_err().to_string();
         assert!(e.contains("bload_benchkit_badreport"), "{e}");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn telemetry_key_round_trips_and_is_optional() {
+        // Serialized against tests that reset the global registry.
+        let _g = crate::telemetry::test_guard();
+        // Absent: no key in the JSON, parses back as None.
+        let r = sample_report();
+        assert!(r.telemetry.is_none());
+        assert!(!r.to_json().contains("\"telemetry\""));
+        // Present: preserved verbatim through a round trip.
+        let mut r = sample_report();
+        crate::telemetry::counter("report.test.marker").inc();
+        r.telemetry = Some(crate::telemetry::snapshot().to_value());
+        let parsed = Report::from_json(&r.to_json()).unwrap();
+        assert_eq!(parsed, r);
+        let snap = crate::telemetry::Snapshot::from_value(
+            parsed.telemetry.as_ref().unwrap(),
+        )
+        .unwrap();
+        assert!(snap.counter("report.test.marker") >= 1);
     }
 
     #[test]

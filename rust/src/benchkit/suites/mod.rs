@@ -129,6 +129,10 @@ pub fn run_suites(suites: &[&'static dyn Suite], bench: &Bencher,
             }
         }
     }
+    // Embed the telemetry counters the instrumented suites accumulated,
+    // so a saved report explains its own timings (cache hit rates, queue
+    // depths, padding) without a separate `bload top --snapshot` run.
+    report.telemetry = Some(crate::telemetry::snapshot().to_value());
     SuiteRunOutcome { report, failures }
 }
 

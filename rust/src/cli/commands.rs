@@ -12,12 +12,13 @@ use crate::dataset::stats::SplitStats;
 use crate::dataset::store::{StoreReader, StoreWriter};
 use crate::dataset::synthetic::generate;
 use crate::error::{Error, Result};
-use crate::harness::{ablation as abl, deadlock, shardset, streaming,
-                     table1};
+use crate::harness::{ablation as abl, deadlock, observe, shardset,
+                     streaming, table1};
 use crate::loader::DataLoaderBuilder;
 use crate::metrics::TextTable;
 use crate::packing::{self, pack, validate::validate, viz, Packer};
 use crate::runtime::{ArtifactManifest, Engine};
+use crate::telemetry::{self, blocks::MetricBlock};
 use crate::train::Trainer;
 use crate::util::humanize::{commas, rate};
 
@@ -629,6 +630,157 @@ pub fn bench(args: &mut Args) -> Result<i32> {
         }
     }
     Ok(0)
+}
+
+/// `bload top [--snapshot [--out PATH]] [--list] [--scale F] [--seed N]
+///            [--ranks N] [--shards N] [--refresh-ms N]`
+///
+/// Live telemetry dashboard over [`crate::telemetry`]. Drives the
+/// observability scenario ([`crate::harness::observe`]: streaming
+/// ingest + loader, shard-store replay, mock per-rank training loop)
+/// and renders every registered metric block
+/// ([`telemetry::blocks::registry`]) — refreshed every `--refresh-ms`
+/// while the pipeline runs, with a final frame once it completes.
+///
+/// * `--snapshot` skips the dashboard and emits the end-of-run
+///   [`telemetry::Snapshot`] as stable format-1 JSON (stdout, or
+///   `--out PATH`) for CI artifacts and diffing.
+/// * `--list` prints the metric-block registry and exits.
+pub fn top(args: &mut Args) -> Result<i32> {
+    let list = args.flag_bool("list");
+    let snapshot_mode = args.flag_bool("snapshot");
+    let out = args.flag_str("out", "");
+    let defaults = observe::ObserveOptions::default();
+    let opts = observe::ObserveOptions {
+        scale: args.flag_f64("scale", defaults.scale)?,
+        seed: args.flag_u64("seed", defaults.seed)?,
+        ranks: args.flag_usize("ranks", defaults.ranks)?,
+        shards: args.flag_usize("shards", defaults.shards)?,
+    };
+    let refresh_ms = args.flag_u64("refresh-ms", 250)?;
+    args.finish()?;
+
+    if list {
+        let mut t = TextTable::new(&["block", "aliases", "description"]);
+        for &b in telemetry::blocks::registry() {
+            t.row(&[
+                b.name().to_string(),
+                b.aliases().join(","),
+                b.describe().to_string(),
+            ]);
+        }
+        println!("{}", t.render());
+        println!(
+            "{} metric blocks registered; `--snapshot` emits format-1 \
+             JSON instead of the dashboard.",
+            telemetry::blocks::registry().len()
+        );
+        return Ok(0);
+    }
+    if !out.is_empty() && !snapshot_mode {
+        return Err(Error::Config(
+            "--out needs --snapshot (where to write the JSON snapshot)"
+                .into(),
+        ));
+    }
+
+    // A fresh registry so the emitted numbers describe exactly this run.
+    telemetry::reset();
+
+    if snapshot_mode {
+        let snap = observe::run(&opts)?;
+        let text = crate::jsonio::to_string_pretty(&snap.to_value());
+        if out.is_empty() {
+            println!("{text}");
+        } else {
+            std::fs::write(&out, &text)
+                .map_err(|e| Error::io(&out, e))?;
+            println!(
+                "wrote telemetry snapshot ({} counters, {} gauges, {} \
+                 histograms) to {out}",
+                snap.counters.len(),
+                snap.gauges.len(),
+                snap.histograms.len()
+            );
+        }
+        return Ok(0);
+    }
+
+    // Live dashboard: the pipeline runs on a worker thread while this
+    // thread repaints the block registry from periodic snapshots. Log
+    // lines are diverted through the pluggable sink (the dashboard owns
+    // the terminal) and the most recent ones shown in a footer.
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Mutex;
+    let logs: Arc<Mutex<Vec<String>>> = Arc::default();
+    let sink_logs = Arc::clone(&logs);
+    crate::logging::set_sink(Some(Arc::new(move |line: &str| {
+        sink_logs.lock().unwrap_or_else(|p| p.into_inner())
+            .push(line.to_string());
+    })));
+    let done = Arc::new(AtomicBool::new(false));
+    let worker = {
+        let done = Arc::clone(&done);
+        let opts = opts.clone();
+        std::thread::spawn(move || {
+            let r = observe::run(&opts);
+            done.store(true, Ordering::Release);
+            r
+        })
+    };
+    while !done.load(Ordering::Acquire) {
+        print!("{}", render_top_frame(&telemetry::snapshot(), &logs,
+                                      true));
+        flush_stdout();
+        std::thread::sleep(std::time::Duration::from_millis(
+            refresh_ms.max(20),
+        ));
+    }
+    let result = worker.join().map_err(|_| {
+        Error::Runtime("top: observability pipeline panicked".into())
+    });
+    crate::logging::set_sink(None);
+    let snap = result??;
+    print!("{}", render_top_frame(&snap, &logs, false));
+    flush_stdout();
+    Ok(0)
+}
+
+/// One dashboard frame: every registered block rendered against `snap`,
+/// plus the tail of the diverted log lines. `live` frames clear the
+/// terminal first; the final frame appends normally so it survives in
+/// scrollback.
+fn render_top_frame(snap: &telemetry::Snapshot,
+                    logs: &std::sync::Mutex<Vec<String>>, live: bool)
+                    -> String {
+    let mut out = String::new();
+    if live {
+        out.push_str("\x1b[2J\x1b[H");
+    }
+    out.push_str(&format!(
+        "bload top — {} counters, {} gauges, {} histograms{}\n",
+        snap.counters.len(),
+        snap.gauges.len(),
+        snap.histograms.len(),
+        if live { "  (ctrl-c to quit)" } else { "  (final)" }
+    ));
+    for &b in telemetry::blocks::registry() {
+        out.push_str(&format!("  {:<10} {}\n", b.name(),
+                              b.render(snap)));
+    }
+    let logs = logs.lock().unwrap_or_else(|p| p.into_inner());
+    if !logs.is_empty() {
+        out.push_str("  — recent log lines —\n");
+        for line in logs.iter().rev().take(3).rev() {
+            out.push_str(&format!("  {line}\n"));
+        }
+    }
+    out
+}
+
+fn flush_stdout() {
+    use std::io::Write;
+    std::io::stdout().flush().ok();
 }
 
 /// `bload ablation [--epochs N] [--videos N]`

@@ -20,6 +20,7 @@
 //!   ablation       reset-table / state-carry ablations (Fig 6)
 //!   bench          unified benchmark runner (suites, JSON reports,
 //!                  baseline comparison)
+//!   top            live telemetry dashboard / JSON metric snapshots
 //! ```
 
 pub mod args;
@@ -58,6 +59,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "train" => commands::train(&mut args),
         "ablation" => commands::ablation(&mut args),
         "bench" => commands::bench(&mut args),
+        "top" => commands::top(&mut args),
         other => {
             eprintln!("unknown command '{other}'\n{}", help());
             Ok(2)
@@ -99,6 +101,9 @@ CRC verification) or --bench the shard scenario (--shards N --readers N)
     bench          run benchmark suites in-process (--list; --suite a,b; \
 --smoke; --json PATH; --compare BASELINE.json [--report CURRENT.json] \
 exits nonzero on regressions beyond --threshold/--p50-threshold)
+    top            live telemetry dashboard over the instrumented \
+pipeline (--refresh-ms N); --snapshot [--out PATH] emits format-1 JSON; \
+--list shows the metric-block registry
 
 STREAMING MODE:
     `bload ingest` runs the online packing service: sequences arrive from
@@ -129,6 +134,16 @@ BENCHMARKS:
     slowed beyond the noise threshold with p50 corroboration, exiting
     nonzero so CI can gate on it. `bload bench --list` shows the
     registry.
+
+OBSERVABILITY:
+    `bload top` drives a scaled-down end-to-end pipeline (streaming
+    ingest + prefetch loader, shard-store replay, a mock per-rank DDP
+    training loop) and renders the telemetry block registry — queue
+    depth, flush causes, cache hit rates, per-shard reads, per-rank
+    step times, padding ratio — live, refreshing in place. `bload top
+    --snapshot` runs the same pipeline headless and emits the metric
+    registry as stable format-1 JSON for CI artifacts; `bload bench`
+    embeds the same snapshot under the report's `telemetry` key.
 
 COMMON FLAGS:
     --seed N           PRNG seed (default 0)

@@ -63,6 +63,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
 use crate::jsonio::{self, Value};
+use crate::telemetry::{self, names};
 use crate::util::crc32::Hasher;
 
 use super::store::{check_video, encode_header, encode_record,
@@ -637,6 +638,14 @@ pub struct ShardPool {
     cache: Mutex<PoolCache>,
     hits: AtomicU64,
     misses: AtomicU64,
+    // Telemetry handles resolved at open; the read path touches only
+    // atomics plus one histogram sample per disk read.
+    t_hits: Arc<telemetry::Counter>,
+    t_misses: Arc<telemetry::Counter>,
+    t_reads: Arc<telemetry::Counter>,
+    t_shard_reads: Vec<Arc<telemetry::Counter>>,
+    t_read_s: Arc<telemetry::Histogram>,
+    t_lock_wait: Arc<telemetry::Histogram>,
 }
 
 impl ShardPool {
@@ -651,9 +660,15 @@ impl ShardPool {
     pub fn open_with_cache(dir: &Path, cache_cap: usize)
                            -> Result<ShardPool> {
         let manifest = ShardSetManifest::load(dir)?;
+        let t_scans = telemetry::counter(names::SHARD_SCANS);
+        let t_scan_s = telemetry::histogram(names::SHARD_SCAN_S);
         let scans = run_waves(&manifest.shards, |entry| {
-            scan_shard(&dir.join(&entry.file), entry, manifest.seed,
-                       manifest.geometry)
+            let t0 = std::time::Instant::now();
+            let out = scan_shard(&dir.join(&entry.file), entry,
+                                 manifest.seed, manifest.geometry);
+            t_scan_s.record(t0.elapsed().as_secs_f64());
+            t_scans.inc();
+            out
         });
         let mut videos =
             Vec::with_capacity(manifest.total_videos());
@@ -682,6 +697,9 @@ impl ShardPool {
             files.push(Mutex::new(scan.file));
             labels.push(scan.label);
         }
+        let t_shard_reads = (0..files.len())
+            .map(|i| telemetry::counter(&names::shard_reads(i)))
+            .collect();
         Ok(ShardPool {
             manifest,
             videos,
@@ -695,6 +713,12 @@ impl ShardPool {
             }),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            t_hits: telemetry::counter(names::SHARD_CACHE_HITS),
+            t_misses: telemetry::counter(names::SHARD_CACHE_MISSES),
+            t_reads: telemetry::counter(names::SHARD_READS),
+            t_shard_reads,
+            t_read_s: telemetry::histogram(names::SHARD_READ_S),
+            t_lock_wait: telemetry::histogram(names::SHARD_LOCK_WAIT_S),
         })
     }
 
@@ -732,10 +756,12 @@ impl ShardPool {
             let cache = lock(&self.cache);
             if let Some(v) = cache.map.get(&id) {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                self.t_hits.inc();
                 return Ok(Arc::clone(v));
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
+        self.t_misses.inc();
         let loc = *self.index.get(&id).ok_or_else(|| {
             Error::Dataset(format!(
                 "video {id} is not in the shard set"
@@ -766,12 +792,18 @@ impl ShardPool {
         let n_labels = len * o * c;
         let label = &self.labels[loc.shard as usize];
         let mut buf = vec![0u8; 8 + 4 * (n_feats + n_labels)];
+        let read_t0 = std::time::Instant::now();
         {
+            let lock_t0 = std::time::Instant::now();
             let mut file = lock(&self.files[loc.shard as usize]);
+            self.t_lock_wait.record(lock_t0.elapsed().as_secs_f64());
             file.seek(SeekFrom::Start(loc.offset))
                 .and_then(|_| file.read_exact(&mut buf))
                 .map_err(|e| Error::io(label, e))?;
         }
+        self.t_read_s.record(read_t0.elapsed().as_secs_f64());
+        self.t_reads.inc();
+        self.t_shard_reads[loc.shard as usize].inc();
         let rid = u32::from_le_bytes(buf[0..4].try_into().unwrap());
         let rlen = u32::from_le_bytes(buf[4..8].try_into().unwrap());
         if rid != id || rlen != loc.len {

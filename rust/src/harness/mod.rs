@@ -4,6 +4,7 @@
 pub mod ablation;
 pub mod deadlock;
 pub mod epoch_full;
+pub mod observe;
 pub mod shardset;
 pub mod streaming;
 pub mod table1;

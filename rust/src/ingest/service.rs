@@ -3,12 +3,14 @@
 //! [`crate::packing::registry`]) → per-rank bounded block channels.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::dataset::VideoMeta;
 use crate::error::{Error, Result};
 use crate::packing::online::{OnlineConfig, OnlineStats};
 use crate::packing::{self, Block, PackContext, Packer, StreamPacker};
+use crate::telemetry::{self, names};
 
 /// Service configuration.
 #[derive(Debug, Clone)]
@@ -81,6 +83,9 @@ impl IngestStats {
 #[derive(Debug, Clone)]
 pub struct Producer {
     tx: SyncSender<VideoMeta>,
+    // Telemetry handles resolved once at `start`, shared by clones.
+    arrivals: Arc<telemetry::Counter>,
+    depth: Arc<telemetry::Gauge>,
 }
 
 impl Producer {
@@ -91,7 +96,10 @@ impl Producer {
             Error::Ingest(
                 "ingest queue is closed (service stopped)".into(),
             )
-        })
+        })?;
+        self.arrivals.inc();
+        self.depth.add(1.0);
+        Ok(())
     }
 }
 
@@ -207,7 +215,11 @@ pub fn start(cfg: IngestConfig) -> Result<(IngestService, Producer)> {
             handle,
             block_len,
         },
-        Producer { tx },
+        Producer {
+            tx,
+            arrivals: telemetry::counter(names::INGEST_ARRIVALS),
+            depth: telemetry::gauge(names::INGEST_QUEUE_DEPTH),
+        },
     ))
 }
 
@@ -219,6 +231,10 @@ fn pack_loop(cfg: IngestConfig, mut packer: Box<dyn StreamPacker>,
     let ranks = cfg.ranks;
     let mut round: Vec<Block> = Vec::with_capacity(ranks);
     let mut per_rank_blocks = vec![0usize; ranks];
+    // Handles resolved once — the loop body touches only atomics.
+    let session_t0 = std::time::Instant::now();
+    let t_depth = telemetry::gauge(names::INGEST_QUEUE_DEPTH);
+    let t_blocks = telemetry::counter(names::INGEST_BLOCKS);
 
     let mut dispatch = |blocks: Vec<Block>,
                         round: &mut Vec<Block>|
@@ -233,6 +249,7 @@ fn pack_loop(cfg: IngestConfig, mut packer: Box<dyn StreamPacker>,
                         ))
                     })?;
                     per_rank_blocks[r] += 1;
+                    t_blocks.inc();
                 }
             }
         }
@@ -243,6 +260,7 @@ fn pack_loop(cfg: IngestConfig, mut packer: Box<dyn StreamPacker>,
     // progress, so `max_latency` bounds how many arrivals an open block
     // may wait before flushing.
     while let Ok(meta) = rx.recv() {
+        t_depth.sub(1.0);
         let emitted = packer.push(meta.id, meta.len as usize)?;
         dispatch(emitted, &mut round)?;
         let emitted = packer.tick();
@@ -258,6 +276,24 @@ fn pack_loop(cfg: IngestConfig, mut packer: Box<dyn StreamPacker>,
     let dropped_blocks = round.len();
     let dropped_frames = round.iter().map(|b| b.used()).sum();
     drop(round);
+
+    // Session accounting: flush causes and throughput, visible on the
+    // `ingest` metric block.
+    telemetry::counter(names::INGEST_FLUSH_POOL_FULL)
+        .add(packing.flush_pool_full as u64);
+    telemetry::counter(names::INGEST_FLUSH_LATENCY)
+        .add(packing.flush_latency as u64);
+    telemetry::counter(names::INGEST_FLUSH_EOS)
+        .add(packing.flush_eos as u64);
+    telemetry::counter(names::INGEST_DROPPED_BLOCKS)
+        .add(dropped_blocks as u64);
+    telemetry::counter(names::INGEST_DROPPED_FRAMES)
+        .add(dropped_frames as u64);
+    let elapsed = session_t0.elapsed().as_secs_f64();
+    if elapsed > 0.0 {
+        telemetry::gauge(names::INGEST_BLOCKS_PER_S)
+            .set(packing.blocks as f64 / elapsed);
+    }
 
     Ok(IngestStats {
         packing,

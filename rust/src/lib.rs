@@ -32,6 +32,7 @@ pub mod metrics;
 pub mod model;
 pub mod packing;
 pub mod runtime;
+pub mod telemetry;
 pub mod train;
 pub mod util;
 

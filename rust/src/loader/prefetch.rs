@@ -28,6 +28,7 @@ use crate::config::{DatasetConfig, LoaderConfig, PackingConfig};
 use crate::dataset::Split;
 use crate::error::{Error, Result};
 use crate::packing::{Block, PackedDataset, Packer};
+use crate::telemetry::{self, names};
 
 use super::batch::{materialize_batch_cached, materialize_batch_provider,
                    DeviceBatch, VideoCache};
@@ -230,7 +231,7 @@ impl DataLoaderBuilder {
     fn spawn(&self, source: Arc<dyn BlockSource>) -> Result<DataLoader> {
         let (tx, rx) = sync_channel(self.depth);
         let mut workers = Vec::with_capacity(self.workers);
-        for _ in 0..self.workers {
+        for worker in 0..self.workers {
             let tx = tx.clone();
             let source = Arc::clone(&source);
             let cache_cap = self.video_cache;
@@ -242,24 +243,45 @@ impl DataLoaderBuilder {
                 // keeps a worker-local LRU of synthesized videos.
                 let provider = source.video_provider();
                 let mut cache = VideoCache::new(cache_cap);
+                // Telemetry handles resolved once per worker; the loop
+                // pays one histogram sample + one atomic per batch.
+                let t_active =
+                    telemetry::gauge(names::LOADER_WORKERS_ACTIVE);
+                let t_batches = telemetry::counter(names::LOADER_BATCHES);
+                let t_worker = telemetry::counter(
+                    &names::loader_worker_batches(worker));
+                let t_materialize =
+                    telemetry::histogram(names::LOADER_MATERIALIZE_S);
+                t_active.add(1.0);
                 while let Some(unit) = source.next_unit() {
                     let refs: Vec<(usize, &Block)> = unit
                         .blocks
                         .iter()
                         .map(|(i, b)| (*i, b))
                         .collect();
+                    let t0 = std::time::Instant::now();
                     let out = match provider.as_deref() {
                         Some(p) => materialize_batch_provider(
                             &split, &refs, block_len, p),
                         None => materialize_batch_cached(
                             &split, &refs, block_len, &mut cache),
                     };
+                    t_materialize.record(t0.elapsed().as_secs_f64());
+                    t_batches.inc();
+                    t_worker.inc();
                     // Send until the consumer drains (backpressure); a
                     // dropped receiver just ends the worker.
                     if tx.send((unit.step, out)).is_err() {
-                        return;
+                        break;
                     }
                 }
+                // Flush the worker-local cache tallies on exit (hit/miss
+                // fields are plain u64s — no per-access atomics).
+                telemetry::counter(names::LOADER_CACHE_HITS)
+                    .add(cache.hits);
+                telemetry::counter(names::LOADER_CACHE_MISSES)
+                    .add(cache.misses);
+                t_active.sub(1.0);
             }));
         }
         Ok(DataLoader {

@@ -4,4 +4,4 @@ pub mod table;
 pub mod timer;
 
 pub use table::TextTable;
-pub use timer::{ScopedTimer, Timings};
+pub use timer::{quantiles, Quantiles, ScopedTimer, Timings};

@@ -1,14 +1,43 @@
 //! Named wall-clock timers with aggregation.
+//!
+//! `Timings` retains every sample (not just a running mean) so callers
+//! can ask for tail latencies. The percentile math lives in a single
+//! free function, [`quantiles`], which the `telemetry` latency
+//! histograms reuse — one percentile path, so the two timing surfaces
+//! cannot drift apart.
 
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
-use crate::util::stats::Welford;
+use crate::util::stats::percentile_sorted;
 
-/// Aggregated timings keyed by label.
+/// Tail-latency summary of one sample set (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quantiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// p50/p95/p99 of an *unsorted* sample set; `None` when empty. The one
+/// shared percentile path for [`Timings`] and `telemetry::Histogram`.
+pub fn quantiles(samples: &[f64]) -> Option<Quantiles> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Some(Quantiles {
+        p50: percentile_sorted(&sorted, 50.0),
+        p95: percentile_sorted(&sorted, 95.0),
+        p99: percentile_sorted(&sorted, 99.0),
+    })
+}
+
+/// Aggregated timings keyed by label. Stores raw samples in seconds.
 #[derive(Debug, Default)]
 pub struct Timings {
-    entries: BTreeMap<String, Welford>,
+    entries: BTreeMap<String, Vec<f64>>,
 }
 
 impl Timings {
@@ -19,7 +48,7 @@ impl Timings {
     pub fn record(&mut self, label: &str, d: Duration) {
         self.entries
             .entry(label.to_string())
-            .or_insert_with(Welford::new)
+            .or_default()
             .push(d.as_secs_f64());
     }
 
@@ -34,34 +63,63 @@ impl Timings {
     pub fn total_seconds(&self, label: &str) -> f64 {
         self.entries
             .get(label)
-            .map(|w| w.mean() * w.count() as f64)
+            .map(|xs| xs.iter().sum())
             .unwrap_or(0.0)
     }
 
     pub fn count(&self, label: &str) -> u64 {
-        self.entries.get(label).map(|w| w.count()).unwrap_or(0)
+        self.entries.get(label).map(|xs| xs.len() as u64).unwrap_or(0)
     }
 
     pub fn mean_seconds(&self, label: &str) -> f64 {
-        self.entries.get(label).map(|w| w.mean()).unwrap_or(0.0)
+        match self.entries.get(label) {
+            Some(xs) if !xs.is_empty() => {
+                xs.iter().sum::<f64>() / xs.len() as f64
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Tail latencies for `label` (`None` if never recorded).
+    pub fn quantiles(&self, label: &str) -> Option<Quantiles> {
+        self.entries.get(label).and_then(|xs| quantiles(xs))
+    }
+
+    pub fn p50_seconds(&self, label: &str) -> f64 {
+        self.quantiles(label).map(|q| q.p50).unwrap_or(0.0)
+    }
+
+    pub fn p95_seconds(&self, label: &str) -> f64 {
+        self.quantiles(label).map(|q| q.p95).unwrap_or(0.0)
+    }
+
+    pub fn p99_seconds(&self, label: &str) -> f64 {
+        self.quantiles(label).map(|q| q.p99).unwrap_or(0.0)
     }
 
     /// Multi-line report sorted by total time, descending.
     pub fn report(&self) -> String {
-        let mut rows: Vec<(String, f64, u64, f64)> = self
+        let mut rows: Vec<(String, f64, u64, f64, f64)> = self
             .entries
-            .iter()
-            .map(|(k, w)| {
-                (k.clone(), w.mean() * w.count() as f64, w.count(), w.mean())
+            .keys()
+            .map(|k| {
+                (
+                    k.clone(),
+                    self.total_seconds(k),
+                    self.count(k),
+                    self.mean_seconds(k),
+                    self.p95_seconds(k),
+                )
             })
             .collect();
         rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         let mut out = String::new();
-        for (label, total, count, mean) in rows {
+        for (label, total, count, mean, p95) in rows {
             out.push_str(&format!(
                 "{label:<28} total {total:>9.3}s  n={count:<7} mean \
-                 {:>9.3}ms\n",
-                mean * 1e3
+                 {:>9.3}ms  p95 {:>9.3}ms\n",
+                mean * 1e3,
+                p95 * 1e3
             ));
         }
         out
@@ -125,5 +183,38 @@ mod tests {
         let v = t.time("f", || 41 + 1);
         assert_eq!(v, 42);
         assert_eq!(t.count("f"), 1);
+    }
+
+    #[test]
+    fn percentiles_over_retained_samples() {
+        let mut t = Timings::new();
+        for ms in 1..=100u64 {
+            t.record("x", Duration::from_millis(ms));
+        }
+        // Linear-interpolated over 1..=100 ms: p50 = 50.5ms exactly.
+        assert!((t.p50_seconds("x") - 0.0505).abs() < 1e-9);
+        assert!(t.p95_seconds("x") > t.p50_seconds("x"));
+        assert!(t.p99_seconds("x") > t.p95_seconds("x"));
+        assert!(t.p99_seconds("x") <= 0.100 + 1e-9);
+        // Absent labels report zero, matching mean_seconds's contract.
+        assert_eq!(t.p50_seconds("missing"), 0.0);
+        assert!(t.quantiles("missing").is_none());
+    }
+
+    #[test]
+    fn quantiles_fn_matches_timings_accessors() {
+        let xs = [0.004, 0.001, 0.003, 0.002];
+        let q = quantiles(&xs).unwrap();
+        let mut t = Timings::new();
+        for &x in &xs {
+            t.record("x", Duration::from_secs_f64(x));
+        }
+        assert_eq!(t.quantiles("x").unwrap(), q);
+        assert!((q.p50 - 0.0025).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles_empty_is_none() {
+        assert!(quantiles(&[]).is_none());
     }
 }

@@ -1,0 +1,397 @@
+//! The metric-block registry: presentation layer over [`Snapshot`].
+//!
+//! Mirrors `packing::registry()` — every dashboard panel is a
+//! [`MetricBlock`] unit struct registered as exactly one line in
+//! [`registry`], resolved by string key through [`lookup`]/[`by_name`].
+//! Each block owns a *format template*: a `&'static str` with
+//! `{metric.name}` placeholders substituted from a snapshot (the
+//! i3status-rust block/format-template shape, re-grown here without the
+//! dependency). `bload top` renders every registered block per refresh;
+//! adding a panel means one unit struct plus one registry line.
+//!
+//! Template placeholder grammar:
+//!
+//! - `{<counter name>}` → the counter value, as an integer.
+//! - `{<gauge name>}` → the gauge value (`%.2f`, integers unpadded).
+//! - `{<histogram name>.<stat>}` with `<stat>` one of `count`, `mean`,
+//!   `min`, `max`, `p50`, `p95`, `p99` → the summary stat. Histogram
+//!   names ending in `_s` are seconds and render as `12.345ms`/`1.23s`;
+//!   other histograms (ratios like `train.step_skew`) render raw.
+//! - Anything unresolvable renders as `-` (the metric simply has not
+//!   been recorded yet — normal early in a run).
+
+use crate::error::{Error, Result};
+use crate::telemetry::Snapshot;
+
+/// One dashboard panel, registered in [`registry`].
+///
+/// Implementations are stateless unit structs; all run state lives in
+/// the [`Snapshot`] passed to [`render`](MetricBlock::render), so a
+/// single `&'static` instance serves every caller.
+pub trait MetricBlock: Sync {
+    /// Canonical registry key (`bload top` panel name).
+    fn name(&self) -> &'static str;
+
+    /// Accepted spellings besides [`name`](MetricBlock::name)
+    /// (matched case-insensitively).
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// One-line description (shown by `bload top --list`).
+    fn describe(&self) -> &'static str;
+
+    /// Format template rendered against a snapshot (grammar above).
+    fn template(&self) -> &'static str;
+
+    /// Render this block from a frozen snapshot.
+    fn render(&self, snap: &Snapshot) -> String {
+        render_template(self.template(), snap)
+    }
+}
+
+/// Streaming-ingest panel: queue pressure and flush behaviour.
+#[derive(Debug)]
+pub struct Ingest;
+
+impl MetricBlock for Ingest {
+    fn name(&self) -> &'static str {
+        "ingest"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["stream"]
+    }
+
+    fn describe(&self) -> &'static str {
+        "ingest service: queue depth, flush causes, block throughput"
+    }
+
+    fn template(&self) -> &'static str {
+        "arrivals {ingest.arrivals}  queue {ingest.queue_depth}  \
+         blocks {ingest.blocks} ({ingest.blocks_per_s}/s)  \
+         flush full/lat/eos {ingest.flush_pool_full}/\
+         {ingest.flush_latency}/{ingest.flush_eos}  \
+         dropped {ingest.dropped_blocks}"
+    }
+}
+
+/// Prefetch-loader panel: worker throughput and cache behaviour.
+#[derive(Debug)]
+pub struct Loader;
+
+impl MetricBlock for Loader {
+    fn name(&self) -> &'static str {
+        "loader"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["prefetch"]
+    }
+
+    fn describe(&self) -> &'static str {
+        "prefetch workers: batches, VideoCache hit/miss, materialize \
+         latency"
+    }
+
+    fn template(&self) -> &'static str {
+        "batches {loader.batches}  workers {loader.workers_active}  \
+         cache h/m {loader.cache_hits}/{loader.cache_misses}  \
+         materialize p50 {loader.materialize_s.p50} \
+         p95 {loader.materialize_s.p95} p99 {loader.materialize_s.p99}"
+    }
+}
+
+/// Shard-store panel: disk reads, CRC scans and pool contention.
+#[derive(Debug)]
+pub struct Shardstore;
+
+impl MetricBlock for Shardstore {
+    fn name(&self) -> &'static str {
+        "shardstore"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["store", "pool"]
+    }
+
+    fn describe(&self) -> &'static str {
+        "shard pool: reads, cache hit/miss, CRC scan time, lock wait"
+    }
+
+    fn template(&self) -> &'static str {
+        "reads {shardstore.reads} (p95 {shardstore.read_s.p95})  \
+         cache h/m {shardstore.cache_hits}/{shardstore.cache_misses}  \
+         lock p95 {shardstore.lock_wait_s.p95}  \
+         scans {shardstore.scans} (mean {shardstore.scan_s.mean})"
+    }
+}
+
+/// Training panel: step cadence, padding overhead, rank skew.
+#[derive(Debug)]
+pub struct Train;
+
+impl MetricBlock for Train {
+    fn name(&self) -> &'static str {
+        "train"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["trainer", "ddp"]
+    }
+
+    fn describe(&self) -> &'static str {
+        "trainer: per-rank step time, padding ratio, straggler skew"
+    }
+
+    fn template(&self) -> &'static str {
+        "steps {train.steps}  padding {train.padding_pct}%  \
+         skew p95 {train.step_skew.p95}  \
+         rank0 step p50 {train.rank0.step_s.p50} \
+         p95 {train.rank0.step_s.p95}  \
+         allreduce p95 {train.allreduce_s.p95}"
+    }
+}
+
+/// Every registered metric block, in dashboard render order.
+pub fn registry() -> &'static [&'static dyn MetricBlock] {
+    static REGISTRY: [&'static dyn MetricBlock; 4] =
+        [&Ingest, &Loader, &Shardstore, &Train];
+    &REGISTRY
+}
+
+/// Case-insensitive lookup by key or alias.
+pub fn lookup(name: &str) -> Option<&'static dyn MetricBlock> {
+    let k = name.trim().to_ascii_lowercase();
+    registry()
+        .iter()
+        .copied()
+        .find(|b| b.name() == k || b.aliases().iter().any(|&a| a == k))
+}
+
+/// [`lookup`] that errors with the list of known keys.
+pub fn by_name(name: &str) -> Result<&'static dyn MetricBlock> {
+    lookup(name).ok_or_else(|| {
+        let known: Vec<&str> = registry().iter().map(|b| b.name()).collect();
+        Error::Config(format!(
+            "unknown metric block '{name}' (known: {})",
+            known.join("|")
+        ))
+    })
+}
+
+/// Substitute `{key}` placeholders in `template` from `snap` (grammar
+/// in the module docs); unresolvable keys render as `-`.
+pub fn render_template(template: &str, snap: &Snapshot) -> String {
+    let mut out = String::with_capacity(template.len());
+    let mut rest = template;
+    while let Some(i) = rest.find('{') {
+        out.push_str(&rest[..i]);
+        let after = &rest[i + 1..];
+        match after.find('}') {
+            Some(j) => {
+                let key = &after[..j];
+                match resolve(key, snap) {
+                    Some(v) => out.push_str(&v),
+                    None => out.push('-'),
+                }
+                rest = &after[j + 1..];
+            }
+            None => {
+                // Unmatched brace: emit literally.
+                out.push_str(&rest[i..]);
+                return out;
+            }
+        }
+    }
+    out.push_str(rest);
+    out
+}
+
+fn resolve(key: &str, snap: &Snapshot) -> Option<String> {
+    if let Some(v) = snap.counters.get(key) {
+        return Some(v.to_string());
+    }
+    if let Some(v) = snap.gauges.get(key) {
+        return Some(fmt_gauge(*v));
+    }
+    let (base, stat) = key.rsplit_once('.')?;
+    let h = snap.histograms.get(base)?;
+    let secs = base.ends_with("_s");
+    Some(match stat {
+        "count" => h.count.to_string(),
+        "mean" => fmt_stat(h.mean_s, secs),
+        "min" => fmt_stat(h.min_s, secs),
+        "max" => fmt_stat(h.max_s, secs),
+        "p50" => fmt_stat(h.p50_s, secs),
+        "p95" => fmt_stat(h.p95_s, secs),
+        "p99" => fmt_stat(h.p99_s, secs),
+        _ => return None,
+    })
+}
+
+fn fmt_gauge(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+fn fmt_stat(v: f64, seconds: bool) -> String {
+    if !seconds {
+        format!("{v:.3}")
+    } else if v >= 1.0 {
+        format!("{v:.2}s")
+    } else {
+        format!("{:.3}ms", v * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{names, HistSummary};
+
+    #[test]
+    fn registry_keys_unique_and_lookup_resolves_aliases() {
+        // Every spelling lookup() accepts — key or alias — must resolve
+        // to exactly one block; a cross-entry collision would silently
+        // shadow whichever block registers later.
+        let mut claimed: std::collections::HashMap<String, &str> =
+            Default::default();
+        for b in registry() {
+            let mut mine: Vec<String> = vec![b.name().to_string()];
+            mine.extend(b.aliases().iter().map(|a| a.to_string()));
+            mine.sort_unstable();
+            mine.dedup();
+            for spelling in mine {
+                if let Some(other) =
+                    claimed.insert(spelling.clone(), b.name())
+                {
+                    panic!(
+                        "spelling '{spelling}' claimed by both {other} \
+                         and {}",
+                        b.name()
+                    );
+                }
+            }
+        }
+        for (alias, key) in [
+            ("STREAM", "ingest"),
+            ("prefetch", "loader"),
+            ("pool", "shardstore"),
+            ("ddp", "train"),
+        ] {
+            assert_eq!(lookup(alias).unwrap().name(), key, "{alias}");
+        }
+        assert!(lookup("nope").is_none());
+        let err = by_name("nope").unwrap_err().to_string();
+        assert!(err.contains("ingest"), "{err}");
+    }
+
+    fn hist(v: f64) -> HistSummary {
+        HistSummary {
+            count: 3,
+            mean_s: v,
+            min_s: v,
+            max_s: v,
+            p50_s: v,
+            p95_s: v,
+            p99_s: v,
+        }
+    }
+
+    /// A snapshot covering every canonical metric name the shipped
+    /// templates reference — so a template typo fails here, not as a
+    /// silent `-` on the dashboard.
+    fn full_snapshot() -> Snapshot {
+        let mut s = Snapshot::default();
+        for c in [
+            names::INGEST_ARRIVALS,
+            names::INGEST_BLOCKS,
+            names::INGEST_FLUSH_POOL_FULL,
+            names::INGEST_FLUSH_LATENCY,
+            names::INGEST_FLUSH_EOS,
+            names::INGEST_DROPPED_BLOCKS,
+            names::INGEST_DROPPED_FRAMES,
+            names::LOADER_BATCHES,
+            names::LOADER_CACHE_HITS,
+            names::LOADER_CACHE_MISSES,
+            names::SHARD_READS,
+            names::SHARD_CACHE_HITS,
+            names::SHARD_CACHE_MISSES,
+            names::SHARD_SCANS,
+            names::TRAIN_STEPS,
+            names::TRAIN_REAL_FRAMES,
+            names::TRAIN_SLOTS,
+        ] {
+            s.counters.insert(c.to_string(), 7);
+        }
+        for g in [
+            names::INGEST_QUEUE_DEPTH,
+            names::INGEST_BLOCKS_PER_S,
+            names::LOADER_WORKERS_ACTIVE,
+            names::TRAIN_PADDING_PCT,
+        ] {
+            s.gauges.insert(g.to_string(), 2.0);
+        }
+        for h in [
+            names::LOADER_MATERIALIZE_S.to_string(),
+            names::SHARD_READ_S.to_string(),
+            names::SHARD_LOCK_WAIT_S.to_string(),
+            names::SHARD_SCAN_S.to_string(),
+            names::TRAIN_STEP_SKEW.to_string(),
+            names::TRAIN_ALLREDUCE_S.to_string(),
+            names::train_rank_step(0),
+        ] {
+            s.histograms.insert(h, hist(0.004));
+        }
+        s
+    }
+
+    #[test]
+    fn every_block_renders_fully_from_canonical_names() {
+        let snap = full_snapshot();
+        for b in registry() {
+            let r = b.render(&snap);
+            assert!(!r.is_empty(), "{}", b.name());
+            assert!(
+                !r.contains('{') && !r.contains('-'),
+                "block '{}' left unresolved placeholders: {r}",
+                b.name()
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_placeholders_render_dash() {
+        let snap = Snapshot::default();
+        assert_eq!(render_template("x {nope} y", &snap), "x - y");
+        assert_eq!(render_template("unmatched {brace", &snap),
+                   "unmatched {brace");
+    }
+
+    #[test]
+    fn histogram_stats_format_by_unit() {
+        let mut snap = Snapshot::default();
+        snap.histograms.insert("a.lat_s".into(), hist(0.0042));
+        snap.histograms.insert("a.ratio".into(), hist(1.25));
+        assert_eq!(render_template("{a.lat_s.p95}", &snap), "4.200ms");
+        assert_eq!(render_template("{a.lat_s.count}", &snap), "3");
+        assert_eq!(render_template("{a.ratio.p50}", &snap), "1.250");
+        // Slow path: ≥ 1s renders in seconds.
+        snap.histograms.insert("b.lat_s".into(), hist(2.5));
+        assert_eq!(render_template("{b.lat_s.mean}", &snap), "2.50s");
+    }
+
+    #[test]
+    fn counters_and_gauges_resolve_plain() {
+        let mut snap = Snapshot::default();
+        snap.counters.insert("c.n".into(), 42);
+        snap.gauges.insert("g.depth".into(), 3.0);
+        snap.gauges.insert("g.rate".into(), 1.5);
+        assert_eq!(render_template("{c.n} {g.depth} {g.rate}", &snap),
+                   "42 3 1.50");
+    }
+}

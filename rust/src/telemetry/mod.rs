@@ -1,0 +1,750 @@
+//! Telemetry core: a process-wide, lock-light registry of named
+//! counters, gauges and latency histograms, plus a stable JSON snapshot
+//! (`format: 1`, written through [`jsonio`](crate::jsonio)).
+//!
+//! Layer 1 (this module) is the instrumentation surface the hot paths
+//! write into: `ingest::service` (queue depth, flush causes, blocks/s),
+//! `loader::prefetch` (per-worker batches, `VideoCache` hit/miss,
+//! batch-materialize latency), `dataset::shardstore` (per-shard reads,
+//! CRC scan time, pool lock wait) and `train::trainer` (per-rank step
+//! time, padding ratio, straggler skew). Layer 2 is [`blocks`]: a
+//! registry of renderable metric blocks in the same open-registry idiom
+//! as `packing::registry()`, driving `bload top`.
+//!
+//! Design rules:
+//!
+//! - **Lock-light hot path.** Counters and gauges are single atomics;
+//!   the registry mutex is only touched when a handle is first resolved.
+//!   Instrumented loops resolve their `Arc` handles once, outside the
+//!   loop. Histograms take one short `Mutex` per recorded sample.
+//! - **Get-or-create by name.** `counter("x")` twice returns the *same*
+//!   handle; registering a name under two different metric kinds is a
+//!   programming error and panics.
+//! - **Stable snapshot.** [`snapshot`] freezes the whole registry into a
+//!   [`Snapshot`] whose JSON form is deterministic (`BTreeMap` key
+//!   order) and diffable in CI. Counters serialize as integers and are
+//!   exact below 2^53 (the `jsonio` f64 ceiling).
+//!
+//! Metric *names* live in [`names`] so producers, blocks and tests
+//! share one vocabulary. The snapshot schema is documented on
+//! [`Snapshot::to_value`] and in the README "Observability" section.
+
+pub mod blocks;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use crate::error::{Error, Result};
+use crate::jsonio::Value;
+use crate::metrics::timer::quantiles;
+
+/// Canonical metric names. Producers and consumers (blocks, tests, CI
+/// snapshot assertions) reference these constants so spellings cannot
+/// drift.
+pub mod names {
+    /// Counter: video arrivals accepted by the ingest queue.
+    pub const INGEST_ARRIVALS: &str = "ingest.arrivals";
+    /// Gauge: arrivals enqueued but not yet consumed by the packer.
+    pub const INGEST_QUEUE_DEPTH: &str = "ingest.queue_depth";
+    /// Counter: packed blocks dispatched to rank outputs.
+    pub const INGEST_BLOCKS: &str = "ingest.blocks";
+    /// Gauge: blocks/s over the pack loop's lifetime.
+    pub const INGEST_BLOCKS_PER_S: &str = "ingest.blocks_per_s";
+    /// Counter: pool flushes forced by a full window.
+    pub const INGEST_FLUSH_POOL_FULL: &str = "ingest.flush_pool_full";
+    /// Counter: pool flushes forced by the latency deadline.
+    pub const INGEST_FLUSH_LATENCY: &str = "ingest.flush_latency";
+    /// Counter: pool flushes at end-of-stream.
+    pub const INGEST_FLUSH_EOS: &str = "ingest.flush_eos";
+    /// Counter: blocks dropped from the final partial round.
+    pub const INGEST_DROPPED_BLOCKS: &str = "ingest.dropped_blocks";
+    /// Counter: frames dropped from the final partial round.
+    pub const INGEST_DROPPED_FRAMES: &str = "ingest.dropped_frames";
+
+    /// Counter: batches materialized across all prefetch workers.
+    pub const LOADER_BATCHES: &str = "loader.batches";
+    /// Gauge: prefetch workers currently running.
+    pub const LOADER_WORKERS_ACTIVE: &str = "loader.workers_active";
+    /// Counter: `VideoCache` hits across workers.
+    pub const LOADER_CACHE_HITS: &str = "loader.cache_hits";
+    /// Counter: `VideoCache` misses across workers.
+    pub const LOADER_CACHE_MISSES: &str = "loader.cache_misses";
+    /// Histogram: batch-materialize latency (seconds).
+    pub const LOADER_MATERIALIZE_S: &str = "loader.materialize_s";
+    /// Counter name for one prefetch worker's batches.
+    pub fn loader_worker_batches(worker: usize) -> String {
+        format!("loader.worker{worker}.batches")
+    }
+
+    /// Counter: videos read from shard files (cache misses that hit
+    /// disk).
+    pub const SHARD_READS: &str = "shardstore.reads";
+    /// Histogram: single-video shard read latency (seconds).
+    pub const SHARD_READ_S: &str = "shardstore.read_s";
+    /// Counter: `ShardPool` cache hits.
+    pub const SHARD_CACHE_HITS: &str = "shardstore.cache_hits";
+    /// Counter: `ShardPool` cache misses.
+    pub const SHARD_CACHE_MISSES: &str = "shardstore.cache_misses";
+    /// Histogram: wait to acquire a shard file lock (seconds).
+    pub const SHARD_LOCK_WAIT_S: &str = "shardstore.lock_wait_s";
+    /// Counter: full-shard CRC verification scans.
+    pub const SHARD_SCANS: &str = "shardstore.scans";
+    /// Histogram: per-shard CRC verification scan time (seconds).
+    pub const SHARD_SCAN_S: &str = "shardstore.scan_s";
+    /// Counter name for reads served by one shard file.
+    pub fn shard_reads(shard: usize) -> String {
+        format!("shardstore.shard{shard}.reads")
+    }
+
+    /// Counter: optimizer steps taken (all ranks advance together).
+    pub const TRAIN_STEPS: &str = "train.steps";
+    /// Counter: real source frames consumed.
+    pub const TRAIN_REAL_FRAMES: &str = "train.real_frames";
+    /// Counter: block slots consumed (incl. padding).
+    pub const TRAIN_SLOTS: &str = "train.slots";
+    /// Gauge: padding overhead percent, `100·(1 − real/slots)`.
+    pub const TRAIN_PADDING_PCT: &str = "train.padding_pct";
+    /// Histogram: per-step straggler skew, `max_rank / mean_rank` of
+    /// compute time (unitless, ≥ 1).
+    pub const TRAIN_STEP_SKEW: &str = "train.step_skew";
+    /// Histogram: gradient all-reduce latency per step (seconds).
+    pub const TRAIN_ALLREDUCE_S: &str = "train.allreduce_s";
+    /// Histogram name for one rank's per-step compute time.
+    pub fn train_rank_step(rank: usize) -> String {
+        format!("train.rank{rank}.step_s")
+    }
+}
+
+/// Monotonic event counter (u64, atomic).
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    fn reset(&self) {
+        self.value.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Instantaneous f64 value (queue depth, rates, ratios). Stored as
+/// bit-cast `AtomicU64`; `add` uses a CAS loop, `set`/`get` are single
+/// atomic ops.
+#[derive(Debug)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge {
+            bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    pub fn add(&self, d: f64) {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + d).to_bits();
+            match self.bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn sub(&self, d: f64) {
+        self.add(-d);
+    }
+
+    fn reset(&self) {
+        self.set(0.0);
+    }
+}
+
+/// Retained samples capped at this many entries; past the cap new
+/// samples overwrite deterministically chosen slots (decimation), while
+/// `count`/`sum` stay exact.
+const HISTOGRAM_CAP: usize = 8192;
+
+#[derive(Debug, Default)]
+struct HistogramInner {
+    samples: Vec<f64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+/// Latency histogram: retains raw samples (up to [`HISTOGRAM_CAP`]) and
+/// summarizes through the same [`quantiles`] path as
+/// [`Timings`](crate::metrics::Timings).
+#[derive(Debug, Default)]
+pub struct Histogram {
+    inner: Mutex<HistogramInner>,
+}
+
+impl Histogram {
+    /// Record one sample (seconds for `*_s` metrics; unitless metrics
+    /// like skew ratios record the raw value).
+    pub fn record(&self, v: f64) {
+        let mut h = lock(&self.inner);
+        if h.count == 0 {
+            h.min = v;
+            h.max = v;
+        } else {
+            h.min = h.min.min(v);
+            h.max = h.max.max(v);
+        }
+        h.count += 1;
+        h.sum += v;
+        if h.samples.len() < HISTOGRAM_CAP {
+            h.samples.push(v);
+        } else {
+            // Deterministic slot choice (Knuth multiplicative hash of
+            // the running count) — no RNG on the hot path.
+            let slot =
+                (h.count.wrapping_mul(2654435761)) as usize % HISTOGRAM_CAP;
+            h.samples[slot] = v;
+        }
+    }
+
+    /// Time a closure and record its wall-clock seconds.
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = std::time::Instant::now();
+        let out = f();
+        self.record(t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Summary over recorded samples; `None` if nothing was recorded.
+    pub fn summary(&self) -> Option<HistSummary> {
+        let h = lock(&self.inner);
+        let q = quantiles(&h.samples)?;
+        Some(HistSummary {
+            count: h.count,
+            mean_s: h.sum / h.count as f64,
+            min_s: h.min,
+            max_s: h.max,
+            p50_s: q.p50,
+            p95_s: q.p95,
+            p99_s: q.p99,
+        })
+    }
+
+    fn reset(&self) {
+        let mut h = lock(&self.inner);
+        *h = HistogramInner::default();
+    }
+}
+
+/// Frozen summary of one histogram.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(|| Registry {
+        metrics: Mutex::new(BTreeMap::new()),
+    })
+}
+
+/// Poison-tolerant lock: telemetry must keep working after an unrelated
+/// panic (same policy as `dataset::shardstore`).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn get_or_insert(
+    name: &str,
+    make: impl FnOnce() -> Metric,
+    want: &'static str,
+) -> Metric {
+    let mut map = lock(&registry().metrics);
+    let entry = map.entry(name.to_string()).or_insert_with(make);
+    let found = entry.kind();
+    let out = match entry {
+        Metric::Counter(c) => Metric::Counter(Arc::clone(c)),
+        Metric::Gauge(g) => Metric::Gauge(Arc::clone(g)),
+        Metric::Histogram(h) => Metric::Histogram(Arc::clone(h)),
+    };
+    drop(map);
+    assert!(
+        found == want,
+        "telemetry metric '{name}' already registered as a {found}, \
+         requested as a {want}"
+    );
+    out
+}
+
+/// Get-or-create the counter named `name`. Hot loops should resolve the
+/// handle once and reuse it.
+pub fn counter(name: &str) -> Arc<Counter> {
+    match get_or_insert(
+        name,
+        || Metric::Counter(Arc::new(Counter::default())),
+        "counter",
+    ) {
+        Metric::Counter(c) => c,
+        _ => unreachable!(),
+    }
+}
+
+/// Get-or-create the gauge named `name`.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    match get_or_insert(
+        name,
+        || Metric::Gauge(Arc::new(Gauge::default())),
+        "gauge",
+    ) {
+        Metric::Gauge(g) => g,
+        _ => unreachable!(),
+    }
+}
+
+/// Get-or-create the latency histogram named `name`.
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    match get_or_insert(
+        name,
+        || Metric::Histogram(Arc::new(Histogram::default())),
+        "histogram",
+    ) {
+        Metric::Histogram(h) => h,
+        _ => unreachable!(),
+    }
+}
+
+/// Zero every counter/gauge and clear every histogram. Existing handles
+/// stay valid (the metrics are reset in place, not removed) — used by
+/// `bload top` so a snapshot covers only its own pipeline, and by
+/// tests.
+pub fn reset() {
+    let map = lock(&registry().metrics);
+    for m in map.values() {
+        match m {
+            Metric::Counter(c) => c.reset(),
+            Metric::Gauge(g) => g.reset(),
+            Metric::Histogram(h) => h.reset(),
+        }
+    }
+}
+
+/// Point-in-time copy of the whole registry. Histograms that never
+/// recorded a sample are omitted; counters and gauges appear as soon as
+/// they are registered.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, HistSummary>,
+}
+
+/// Freeze the current registry state into a [`Snapshot`].
+pub fn snapshot() -> Snapshot {
+    let map = lock(&registry().metrics);
+    let mut snap = Snapshot::default();
+    for (name, m) in map.iter() {
+        match m {
+            Metric::Counter(c) => {
+                snap.counters.insert(name.clone(), c.get());
+            }
+            Metric::Gauge(g) => {
+                snap.gauges.insert(name.clone(), g.get());
+            }
+            Metric::Histogram(h) => {
+                if let Some(s) = h.summary() {
+                    snap.histograms.insert(name.clone(), s);
+                }
+            }
+        }
+    }
+    snap
+}
+
+impl Snapshot {
+    /// Snapshot JSON schema version.
+    pub const FORMAT: u64 = 1;
+
+    /// Counter value by name (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Gauge value by name (0.0 when absent).
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.get(name).copied().unwrap_or(0.0)
+    }
+
+    /// Serialize to the stable format-1 document:
+    ///
+    /// ```json
+    /// {
+    ///   "format": 1,
+    ///   "counters":   { "<name>": <u64>, ... },
+    ///   "gauges":     { "<name>": <f64>, ... },
+    ///   "histograms": { "<name>": { "count": <u64>, "mean_s": <f64>,
+    ///                               "min_s": <f64>, "max_s": <f64>,
+    ///                               "p50_s": <f64>, "p95_s": <f64>,
+    ///                               "p99_s": <f64> }, ... }
+    /// }
+    /// ```
+    ///
+    /// Key order is deterministic (sorted), so snapshots diff cleanly.
+    pub fn to_value(&self) -> Value {
+        let counters = Value::Object(
+            self.counters
+                .iter()
+                .map(|(k, v)| (k.clone(), Value::int(*v as i64)))
+                .collect(),
+        );
+        let gauges = Value::Object(
+            self.gauges
+                .iter()
+                .map(|(k, v)| (k.clone(), Value::num(*v)))
+                .collect(),
+        );
+        let histograms = Value::Object(
+            self.histograms
+                .iter()
+                .map(|(k, s)| {
+                    (
+                        k.clone(),
+                        Value::object(vec![
+                            ("count", Value::int(s.count as i64)),
+                            ("mean_s", Value::num(s.mean_s)),
+                            ("min_s", Value::num(s.min_s)),
+                            ("max_s", Value::num(s.max_s)),
+                            ("p50_s", Value::num(s.p50_s)),
+                            ("p95_s", Value::num(s.p95_s)),
+                            ("p99_s", Value::num(s.p99_s)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Value::object(vec![
+            ("format", Value::int(Self::FORMAT as i64)),
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", histograms),
+        ])
+    }
+
+    /// Parse a format-1 document produced by [`Snapshot::to_value`].
+    pub fn from_value(v: &Value) -> Result<Snapshot> {
+        let fmt = v
+            .get("format")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| bad("missing 'format'"))?;
+        if fmt as u64 != Self::FORMAT {
+            return Err(bad(&format!("unsupported format {fmt}")));
+        }
+        let section = |key: &str| -> Result<&BTreeMap<String, Value>> {
+            v.get(key)
+                .and_then(Value::as_object)
+                .ok_or_else(|| bad(&format!("missing object '{key}'")))
+        };
+        let mut snap = Snapshot::default();
+        for (k, c) in section("counters")? {
+            let n = c
+                .as_f64()
+                .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+                .ok_or_else(|| bad(&format!("counter '{k}' not a u64")))?;
+            snap.counters.insert(k.clone(), n as u64);
+        }
+        for (k, g) in section("gauges")? {
+            let n = g
+                .as_f64()
+                .ok_or_else(|| bad(&format!("gauge '{k}' not a number")))?;
+            snap.gauges.insert(k.clone(), n);
+        }
+        for (k, h) in section("histograms")? {
+            let f = |field: &str| -> Result<f64> {
+                h.get(field).and_then(Value::as_f64).ok_or_else(|| {
+                    bad(&format!("histogram '{k}' missing '{field}'"))
+                })
+            };
+            let count = h
+                .get("count")
+                .and_then(Value::as_usize)
+                .ok_or_else(|| bad(&format!("histogram '{k}' count")))?;
+            snap.histograms.insert(
+                k.clone(),
+                HistSummary {
+                    count: count as u64,
+                    mean_s: f("mean_s")?,
+                    min_s: f("min_s")?,
+                    max_s: f("max_s")?,
+                    p50_s: f("p50_s")?,
+                    p95_s: f("p95_s")?,
+                    p99_s: f("p99_s")?,
+                },
+            );
+        }
+        Ok(snap)
+    }
+}
+
+fn bad(msg: &str) -> Error {
+    Error::Bench(format!("telemetry snapshot: {msg}"))
+}
+
+/// Add `n` to the counter named `$name` (cold-path convenience; hot
+/// loops should hold an `Arc` from [`counter`](crate::telemetry::counter)).
+#[macro_export]
+macro_rules! counter_add {
+    ($name:expr, $n:expr) => {
+        $crate::telemetry::counter($name).add($n)
+    };
+}
+
+/// Increment the counter named `$name` by one.
+#[macro_export]
+macro_rules! counter_inc {
+    ($name:expr) => {
+        $crate::telemetry::counter($name).inc()
+    };
+}
+
+/// Set the gauge named `$name` to `$v`.
+#[macro_export]
+macro_rules! gauge_set {
+    ($name:expr, $v:expr) => {
+        $crate::telemetry::gauge($name).set($v)
+    };
+}
+
+/// Record `$secs` into the histogram named `$name`.
+#[macro_export]
+macro_rules! histogram_record {
+    ($name:expr, $secs:expr) => {
+        $crate::telemetry::histogram($name).record($secs)
+    };
+}
+
+/// Serializes tests that assert exact global-registry state (or call
+/// the global [`reset`]) — the registry is process-wide and `cargo
+/// test` threads would otherwise race each other. Shared by this
+/// module's tests and by telemetry-asserting tests elsewhere in the
+/// crate (`harness::observe`, bench-report embedding).
+#[cfg(test)]
+pub(crate) fn test_guard() -> MutexGuard<'static, ()> {
+    static GUARD: OnceLock<Mutex<()>> = OnceLock::new();
+    lock(GUARD.get_or_init(|| Mutex::new(())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_are_shared_by_name() {
+        let a = counter("test.telemetry.shared");
+        let b = counter("test.telemetry.shared");
+        assert!(Arc::ptr_eq(&a, &b));
+        let g1 = gauge("test.telemetry.shared_gauge");
+        let g2 = gauge("test.telemetry.shared_gauge");
+        assert!(Arc::ptr_eq(&g1, &g2));
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered as a counter")]
+    fn cross_kind_registration_panics() {
+        counter("test.telemetry.kind_clash");
+        gauge("test.telemetry.kind_clash");
+    }
+
+    #[test]
+    fn concurrent_increments_are_exact() {
+        let _g = test_guard();
+        let name = "test.telemetry.concurrent";
+        let c = counter(name);
+        c.reset();
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let c = counter(name);
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn gauge_add_is_atomic_under_contention() {
+        let _g = test_guard();
+        let name = "test.telemetry.gauge_contended";
+        let g = gauge(name);
+        g.set(0.0);
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let g = gauge(name);
+                std::thread::spawn(move || {
+                    for _ in 0..1_000 {
+                        g.add(1.0);
+                        g.sub(1.0);
+                        g.add(1.0);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert!((g.get() - 4_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_summary_matches_timings_path() {
+        use std::time::Duration;
+        let h = histogram("test.telemetry.hist_match");
+        let mut t = crate::metrics::Timings::new();
+        for ms in 1..=100u64 {
+            let s = ms as f64 / 1e3;
+            h.record(s);
+            t.record("x", Duration::from_secs_f64(s));
+        }
+        let s = h.summary().unwrap();
+        assert_eq!(s.count, 100);
+        // Same percentile path as Timings — identical answers.
+        assert_eq!(s.p50_s, t.p50_seconds("x"));
+        assert_eq!(s.p95_s, t.p95_seconds("x"));
+        assert_eq!(s.p99_s, t.p99_seconds("x"));
+        assert!((s.mean_s - 0.0505).abs() < 1e-9);
+        assert_eq!(s.min_s, 0.001);
+        assert_eq!(s.max_s, 0.100);
+    }
+
+    #[test]
+    fn histogram_cap_decimates_but_keeps_exact_count() {
+        let h = Histogram::default();
+        for i in 0..(HISTOGRAM_CAP as u64 + 500) {
+            h.record(i as f64);
+        }
+        let s = h.summary().unwrap();
+        assert_eq!(s.count, HISTOGRAM_CAP as u64 + 500);
+        assert_eq!(s.min_s, 0.0);
+        assert_eq!(s.max_s, (HISTOGRAM_CAP as u64 + 499) as f64);
+        assert_eq!(lock(&h.inner).samples.len(), HISTOGRAM_CAP);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_jsonio() {
+        let _g = test_guard();
+        counter("test.telemetry.snap_counter").add(42);
+        gauge("test.telemetry.snap_gauge").set(2.5);
+        let h = histogram("test.telemetry.snap_hist");
+        h.record(0.001);
+        h.record(0.003);
+        let snap = snapshot();
+        assert_eq!(snap.counter("test.telemetry.snap_counter") % 42, 0);
+        let text = crate::jsonio::to_string_pretty(&snap.to_value());
+        let parsed = crate::jsonio::parse(&text).unwrap();
+        let back = Snapshot::from_value(&parsed).unwrap();
+        assert_eq!(snap, back);
+    }
+
+    #[test]
+    fn from_value_rejects_bad_documents() {
+        assert!(Snapshot::from_value(&Value::Null).is_err());
+        let wrong_fmt = Value::object(vec![
+            ("format", Value::int(99)),
+            ("counters", Value::object(vec![])),
+            ("gauges", Value::object(vec![])),
+            ("histograms", Value::object(vec![])),
+        ]);
+        assert!(Snapshot::from_value(&wrong_fmt).is_err());
+        let missing = Value::object(vec![("format", Value::int(1))]);
+        assert!(Snapshot::from_value(&missing).is_err());
+    }
+
+    #[test]
+    fn reset_zeroes_in_place() {
+        let _g = test_guard();
+        let c = counter("test.telemetry.reset_counter");
+        let h = histogram("test.telemetry.reset_hist");
+        c.add(7);
+        h.record(1.0);
+        reset();
+        assert_eq!(c.get(), 0);
+        assert!(h.summary().is_none());
+        // The handle survives a reset and keeps counting.
+        c.inc();
+        assert_eq!(c.get(), 1);
+    }
+
+    #[test]
+    fn macros_compile_and_record() {
+        let _g = test_guard();
+        crate::counter_inc!("test.telemetry.macro_counter");
+        crate::counter_add!("test.telemetry.macro_counter", 2);
+        crate::gauge_set!("test.telemetry.macro_gauge", 1.5);
+        crate::histogram_record!("test.telemetry.macro_hist", 0.25);
+        let snap = snapshot();
+        assert!(snap.counter("test.telemetry.macro_counter") >= 3);
+        assert!(snap.gauge("test.telemetry.macro_gauge") >= 1.5);
+        assert!(snap.histograms.contains_key("test.telemetry.macro_hist"));
+    }
+}

@@ -24,6 +24,7 @@ use crate::metrics::Timings;
 use crate::model::StateManager;
 use crate::packing::{Block, PackedDataset};
 use crate::runtime::Engine;
+use crate::telemetry::{self, names};
 use crate::train::LrSchedule;
 
 /// Per-epoch training statistics.
@@ -146,10 +147,20 @@ impl Trainer {
         let mut real_frames = 0usize;
         let mut slots = 0usize;
         let mut grads: Vec<Vec<f32>> = Vec::with_capacity(ranks);
+        // Telemetry handles resolved once per epoch (atomic-only loop).
+        let t_steps = telemetry::counter(names::TRAIN_STEPS);
+        let t_real = telemetry::counter(names::TRAIN_REAL_FRAMES);
+        let t_slots = telemetry::counter(names::TRAIN_SLOTS);
+        let t_skew = telemetry::histogram(names::TRAIN_STEP_SKEW);
+        let t_allreduce = telemetry::histogram(names::TRAIN_ALLREDUCE_S);
+        let t_rank_step: Vec<_> = (0..ranks)
+            .map(|r| telemetry::histogram(&names::train_rank_step(r)))
+            .collect();
 
         for step in 0..steps {
             grads.clear();
             let mut step_max_compute = 0.0f64;
+            let mut step_sum_compute = 0.0f64;
             let mut step_loss = 0.0f64;
             // Upload parameters once per step; every rank executes against
             // the same literal (DDP keeps replicas identical — §Perf L3).
@@ -177,7 +188,9 @@ impl Trainer {
                 self.timings
                     .record("compute.grad_step",
                             std::time::Duration::from_secs_f64(dt));
+                t_rank_step[rank].record(dt);
                 step_max_compute = step_max_compute.max(dt);
+                step_sum_compute += dt;
                 self.states[rank].absorb(&out.state_out, &blocks);
                 step_loss += out.loss as f64;
                 real_frames += batch_data.real_frames;
@@ -185,11 +198,21 @@ impl Trainer {
                 grads.push(out.grads);
             }
             parallel_s += step_max_compute;
+            t_steps.inc();
+            if step_sum_compute > 0.0 {
+                // Straggler skew: slowest rank vs the step's mean rank
+                // compute (1.0 = perfectly balanced).
+                t_skew.record(
+                    step_max_compute * ranks as f64 / step_sum_compute,
+                );
+            }
 
             // Gradient synchronization (all ranks' grads -> mean).
+            let allreduce_t0 = std::time::Instant::now();
             self.timings.time("comm.allreduce", || {
                 self.sync.sync(&mut grads)
             });
+            t_allreduce.record(allreduce_t0.elapsed().as_secs_f64());
 
             let lr = self.lr.at(self.global_step) as f32;
             let momentum = self.train_cfg.momentum as f32;
@@ -230,6 +253,12 @@ impl Trainer {
         // this abandons the epoch mid-stream, which the loader's Drop
         // handles without leaking threads.
         drop(loaders);
+        t_real.add(real_frames as u64);
+        t_slots.add(slots as u64);
+        if slots > 0 {
+            telemetry::gauge(names::TRAIN_PADDING_PCT)
+                .set(100.0 * (1.0 - real_frames as f64 / slots as f64));
+        }
         let stats = EpochStats {
             epoch,
             steps,

@@ -319,6 +319,53 @@ fn bench_compare_gates_on_injected_regression() {
 }
 
 #[test]
+fn top_snapshot_writes_format1_json_with_live_metrics() {
+    let out = std::env::temp_dir().join(format!(
+        "bload_cli_top_{}.json",
+        std::process::id()
+    ));
+    let out_s = out.to_str().unwrap().to_string();
+    assert_eq!(
+        run(&argv(&[
+            "top", "--snapshot", "--out", &out_s, "--scale", "0.01",
+            "--seed", "3",
+        ]))
+        .unwrap(),
+        0
+    );
+    let text = std::fs::read_to_string(&out).unwrap();
+    let v = bload::jsonio::parse(&text).unwrap();
+    assert_eq!(v.get("format").and_then(|f| f.as_usize()), Some(1));
+    let snap = bload::telemetry::Snapshot::from_value(&v).unwrap();
+    // One live metric per instrumented subsystem — the documented
+    // snapshot keys (see telemetry::names and the README table).
+    assert!(snap.counter("ingest.arrivals") > 0, "ingest queue idle");
+    assert!(snap.counter("ingest.blocks") > 0, "no blocks packed");
+    assert!(
+        snap.counter("loader.cache_hits")
+            + snap.counter("loader.cache_misses")
+            > 0,
+        "loader cache untouched"
+    );
+    assert!(snap.counter("shardstore.reads") > 0, "no shard reads");
+    assert!(
+        snap.histograms.contains_key("train.rank0.step_s"),
+        "no per-rank step timings"
+    );
+    std::fs::remove_file(&out).ok();
+}
+
+#[test]
+fn top_list_and_flag_errors() {
+    assert_eq!(run(&argv(&["top", "--list"])).unwrap(), 0);
+    assert!(run(&argv(&["top", "--bogus", "1"])).is_err());
+    // --out without --snapshot is a hard error, not silently ignored.
+    assert!(run(&argv(&["top", "--out", "/tmp/x.json"])).is_err());
+    assert!(run(&argv(&["top", "--snapshot", "--ranks", "0"])).is_err());
+    assert!(run(&argv(&["top", "--scale", "abc"])).is_err());
+}
+
+#[test]
 fn train_rejects_missing_config() {
     assert!(run(&argv(&["train", "--config", "/nope/missing.toml"]))
         .is_err());
