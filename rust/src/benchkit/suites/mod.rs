@@ -22,6 +22,7 @@
 pub mod ddp;
 pub mod loader;
 pub mod packing;
+pub mod remote_replay;
 pub mod runtime;
 pub mod shard_replay;
 pub mod table1;
@@ -63,11 +64,12 @@ pub trait Suite: Sync {
 /// All registered suites, hot-path suites first.
 /// Adding a suite = its module + one line here (+ a thin bench binary).
 pub fn registry() -> &'static [&'static dyn Suite] {
-    static REGISTRY: [&'static dyn Suite; 10] = [
+    static REGISTRY: [&'static dyn Suite; 11] = [
         &packing::Packing,
         &packing::OnlinePacking,
         &loader::Loader,
         &shard_replay::ShardReplay,
+        &remote_replay::RemoteReplay,
         &ddp::Allreduce,
         &ddp::Fig2Deadlock,
         &table1::Table1Pipeline,
@@ -177,7 +179,7 @@ mod tests {
                 "lookup is case-insensitive"
             );
         }
-        assert_eq!(registry().len(), 10, "one suite per bench binary");
+        assert_eq!(registry().len(), 11, "one suite per bench binary");
         let e = by_name("nope").unwrap_err().to_string();
         assert!(e.contains("packing"), "error lists known suites: {e}");
     }

@@ -1,0 +1,120 @@
+//! Remote-serving suite: a loopback `bload serve` daemon measured from
+//! the client side — handshake cost, raw record streaming over one
+//! connection, and full remote epoch replay at several concurrent
+//! client counts (the N-trainers-one-server deployment shape).
+//!
+//! One server fronts the shard set for the whole suite; every benchmark
+//! closure opens its own connection(s), so per-iteration numbers include
+//! connect + handshake the way a fresh trainer would pay them.
+
+use std::sync::Arc;
+
+use crate::benchkit::{BenchResult, Bencher};
+use crate::config::ExperimentConfig;
+use crate::dataset::shardstore::{ShardPool, ShardSetWriter};
+use crate::dataset::synthetic::generate;
+use crate::error::Result;
+use crate::loader::DataLoaderBuilder;
+use crate::net::{remote_manifest, ClientConfig, RemoteClient, Server};
+use crate::packing::by_name;
+
+use super::{Suite, SuiteOptions};
+
+/// See the module docs.
+#[derive(Debug)]
+pub struct RemoteReplay;
+
+impl Suite for RemoteReplay {
+    fn name(&self) -> &'static str {
+        "remote_replay"
+    }
+
+    fn describe(&self) -> &'static str {
+        "loopback serve daemon: handshake, record fetch, remote epochs"
+    }
+
+    fn run(&self, bench: &Bencher, opts: &SuiteOptions)
+           -> Result<Vec<BenchResult>> {
+        let (scale, shards) = if opts.smoke { (0.005, 2) } else { (0.02, 4) };
+        let client_counts: &[usize] =
+            if opts.smoke { &[1, 2] } else { &[1, 2, 4] };
+
+        let cfg = ExperimentConfig::default_config();
+        let dcfg = cfg.dataset.scaled(scale);
+        let ds = generate(&dcfg, 0);
+        let split = &ds.train;
+        let videos = split.videos.len() as f64;
+
+        let scratch = std::env::temp_dir().join(format!(
+            "bload_bench_remote_replay_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&scratch).ok();
+        std::fs::create_dir_all(&scratch)
+            .map_err(|e| crate::error::Error::io(scratch.display(), e))?;
+        let shard_dir = scratch.join("set");
+        ShardSetWriter::new(&shard_dir, 0, shards)?.write(split)?;
+
+        let mut scfg = cfg.serve.clone();
+        scfg.addr = "127.0.0.1:0".into();
+        let pool = Arc::new(ShardPool::open(&shard_dir)?);
+        let server = Server::start(pool, &scfg)?;
+        let addr = server.addr().to_string();
+        let ccfg = ClientConfig::default();
+        let packer = by_name("bload")?;
+
+        let mut out = Vec::new();
+        out.push(bench.run("remote_replay/manifest", 1.0, "handshakes",
+                           || {
+            remote_manifest(&addr, &ccfg).unwrap().videos.len()
+        }));
+
+        let ids: Vec<u32> = split.videos.iter().map(|v| v.id).collect();
+        out.push(bench.run("remote_replay/get_video", videos, "videos",
+                           || {
+            let mut client = RemoteClient::connect(&addr, &ccfg).unwrap();
+            let mut n = 0usize;
+            for &id in &ids {
+                n += client.get_video(id).unwrap().len();
+            }
+            n
+        }));
+
+        for &clients in client_counts {
+            let name = format!("remote_replay/epoch/clients{clients}");
+            out.push(bench.run(&name, videos * clients as f64, "videos",
+                               || {
+                std::thread::scope(|s| {
+                    let mut handles = Vec::with_capacity(clients);
+                    for c in 0..clients {
+                        let addr = addr.clone();
+                        let dcfg = dcfg.clone();
+                        let pcfg = cfg.packing.clone();
+                        handles.push(s.spawn(move || {
+                            let mut loader = DataLoaderBuilder::new()
+                                .batch(2)
+                                .workers(2)
+                                .depth(2)
+                                .seed(c as u64)
+                                .remote(&addr, &dcfg, packer, &pcfg, 0)
+                                .unwrap();
+                            let mut n = 0usize;
+                            while let Some(b) = loader.next() {
+                                n += b.unwrap().real_frames;
+                            }
+                            n
+                        }));
+                    }
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().unwrap())
+                        .sum::<usize>()
+                })
+            }));
+        }
+
+        server.shutdown()?;
+        std::fs::remove_dir_all(&scratch).ok();
+        Ok(out)
+    }
+}

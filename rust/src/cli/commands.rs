@@ -260,15 +260,20 @@ pub fn train(args: &mut Args) -> Result<i32> {
     Ok(0)
 }
 
-/// `bload replay --store PATH|DIR [--strategy S] [--batch N]
-///               [--epoch N] [--seed N] [--verify [--scale F]]`
+/// `bload replay --store PATH|DIR [--remote HOST:PORT] [--config FILE]
+///               [--strategy S] [--batch N] [--epoch N] [--seed N]
+///               [--verify [--scale F]]`
 ///
 /// Replay a persisted dataset as a first-class training input. A file
 /// path streams back through a CRC-verified
 /// [`crate::loader::StoreSource`]; a **directory** is treated as a
 /// sharded store ([`crate::dataset::shardstore`] layout) and replays
 /// through a [`crate::loader::ShardSource`] — every shard CRC-verified
-/// in parallel, content served by the concurrent shard pool. Either way
+/// in parallel, content served by the concurrent shard pool. With
+/// `--remote HOST:PORT` the records come over TCP from a `bload serve`
+/// daemon instead of local disk ([`crate::net::RemoteSource`], every
+/// record CRC-checked on receipt) — `loader.remote` in a `--config`
+/// file spells the same thing. Either way
 /// the split packs with the chosen strategy and one epoch of device
 /// batches materializes through the standard builder pipeline.
 /// `--verify` additionally regenerates the equivalent split in memory
@@ -277,6 +282,8 @@ pub fn train(args: &mut Args) -> Result<i32> {
 /// in-memory run.
 pub fn replay(args: &mut Args) -> Result<i32> {
     let store = args.flag_str("store", "agsynth.blds");
+    let remote = args.flag_str("remote", "");
+    let config = args.flag_str("config", "");
     let strat = strategy_flag(args)?;
     let batch = args.flag_usize("batch", 2)?;
     let epoch = args.flag_u64("epoch", 0)?;
@@ -284,7 +291,18 @@ pub fn replay(args: &mut Args) -> Result<i32> {
     let verify = args.flag_bool("verify");
     let scale = args.flag_f64("scale", 0.01)?;
     args.finish()?;
-    let cfg = ExperimentConfig::default_config();
+    let cfg = if config.is_empty() {
+        ExperimentConfig::default_config()
+    } else {
+        crate::config::load(&config)?
+    };
+    // The flag wins; `loader.remote` in the config file is the
+    // deployment-shaped spelling of the same thing.
+    let remote = if remote.is_empty() {
+        cfg.loader.remote.clone()
+    } else {
+        remote
+    };
     let dcfg = cfg.dataset.scaled(scale);
     let path = std::path::Path::new(&store);
     let sharded = path.is_dir();
@@ -292,18 +310,29 @@ pub fn replay(args: &mut Args) -> Result<i32> {
         .batch(batch)
         .seed(seed);
     let t0 = std::time::Instant::now();
-    let mut loader = if sharded {
+    let mut loader = if !remote.is_empty() {
+        builder.remote(&remote, &dcfg, strat, &cfg.packing, epoch)?
+    } else if sharded {
         builder.shards(path, &dcfg, strat, &cfg.packing, epoch)?
     } else {
         builder.store(path, &dcfg, strat, &cfg.packing, epoch)?
     };
     let steps = loader.steps().unwrap_or(0);
+    let input = if remote.is_empty() {
+        store.clone()
+    } else {
+        format!("{remote} (remote)")
+    };
 
     let mut mem_loader = if verify {
         // The store records its generation seed; the equivalent
         // in-memory run regenerates the split from it and packs with the
-        // same strategy and seed.
-        let store_seed = if sharded {
+        // same strategy and seed. A served store reports its seed in the
+        // HELLO manifest.
+        let store_seed = if !remote.is_empty() {
+            crate::net::remote_manifest(
+                &remote, &crate::net::ClientConfig::default())?.seed
+        } else if sharded {
             ShardSetManifest::load(path)?.seed
         } else {
             StoreReader::open(path)?.seed()
@@ -358,7 +387,7 @@ pub fn replay(args: &mut Args) -> Result<i32> {
     }
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "replayed {store}: {delivered}/{steps} steps | {} frames / {} \
+        "replayed {input}: {delivered}/{steps} steps | {} frames / {} \
          slots in {dt:.2}s ({})",
         commas(frames as u64),
         commas(slots as u64),
@@ -781,6 +810,60 @@ fn render_top_frame(snap: &telemetry::Snapshot,
 fn flush_stdout() {
     use std::io::Write;
     std::io::stdout().flush().ok();
+}
+
+/// `bload serve --dir DIR [--addr HOST:PORT] [--addr-file PATH]
+///              [--config FILE]`
+///
+/// The shard-serving data plane: front a sharded store with a
+/// multi-client TCP daemon ([`crate::net::Server`]) so N trainers can
+/// stream the same shard set from one machine. `--addr` overrides the
+/// config `[serve]` address (`host:0` picks an ephemeral port);
+/// `--addr-file PATH` writes the *bound* address to a file once the
+/// listener is up, so scripts (and the CI round-trip test) can wait on
+/// it instead of racing the bind. Runs until a client sends SHUTDOWN or
+/// the process is killed.
+pub fn serve(args: &mut Args) -> Result<i32> {
+    let dir = args.flag_str("dir", "");
+    let addr = args.flag_str("addr", "");
+    let addr_file = args.flag_str("addr-file", "");
+    let config = args.flag_str("config", "");
+    args.finish()?;
+    if dir.is_empty() {
+        return Err(Error::Config(
+            "serve: --dir DIR (a sharded store to serve) is required"
+                .into(),
+        ));
+    }
+    let cfg = if config.is_empty() {
+        ExperimentConfig::default_config()
+    } else {
+        crate::config::load(&config)?
+    };
+    let mut scfg = cfg.serve.clone();
+    if !addr.is_empty() {
+        scfg.addr = addr;
+    }
+    let pool = Arc::new(ShardPool::open(std::path::Path::new(&dir))?);
+    let manifest = pool.manifest();
+    let videos = manifest.total_videos();
+    let shards = manifest.shards.len();
+    let server = crate::net::Server::start(pool, &scfg)?;
+    let bound = server.addr();
+    println!(
+        "serving {dir} ({} videos across {shards} shard(s)) on {bound} \
+         (max {} connections, window {})",
+        commas(videos as u64),
+        scfg.max_connections,
+        scfg.max_in_flight
+    );
+    if !addr_file.is_empty() {
+        std::fs::write(&addr_file, bound.to_string())
+            .map_err(|e| Error::io(&addr_file, e))?;
+    }
+    server.wait()?;
+    println!("serve: shut down cleanly");
+    Ok(0)
 }
 
 /// `bload ablation [--epochs N] [--videos N]`

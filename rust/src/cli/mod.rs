@@ -14,8 +14,10 @@
 //!   table1         reproduce Table I (add --full for measured runs)
 //!   deadlock-demo  reproduce Fig 2 and show BLoad completing
 //!   ingest         streaming mode: online packing service vs offline
-//!   replay         replay a persisted store (file or shard dir)
+//!   replay         replay a persisted store (file, shard dir, or
+//!                  --remote a serve daemon)
 //!   shards         inspect a sharded store / run the shard scenario
+//!   serve          serve a sharded store over TCP to remote loaders
 //!   train          end-to-end training run from a config file
 //!   ablation       reset-table / state-carry ablations (Fig 6)
 //!   bench          unified benchmark runner (suites, JSON reports,
@@ -56,6 +58,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "ingest" => commands::ingest(&mut args),
         "replay" => commands::replay(&mut args),
         "shards" => commands::shards_cmd(&mut args),
+        "serve" => commands::serve(&mut args),
         "train" => commands::train(&mut args),
         "ablation" => commands::ablation(&mut args),
         "bench" => commands::bench(&mut args),
@@ -92,10 +95,12 @@ streaming support)
     ingest         streaming mode (--window N --max-latency N --queue N \
 --ranks N --producers N)
     replay         replay a persisted store through the loader (--store \
-PATH or shard DIR --strategy S; --verify checks byte-identity vs \
-in-memory)
+PATH or shard DIR --strategy S; --remote HOST:PORT streams from a serve \
+daemon; --verify checks byte-identity vs in-memory)
     shards         inspect a sharded store (--dir DIR: per-shard table, \
 CRC verification) or --bench the shard scenario (--shards N --readers N)
+    serve          serve a sharded store over TCP (--dir DIR \
+[--addr HOST:PORT] [--addr-file PATH] [--config FILE])
     train          full training run (--config FILE)
     ablation       reset-table / state-carry ablations (--epochs N)
     bench          run benchmark suites in-process (--list; --suite a,b; \
@@ -124,6 +129,18 @@ SHARDED STORES:
     runs for any shard count. `bload shards --dir DIR` prints and
     verifies the manifest; `bload shards --bench` measures parallel
     write and multi-reader replay against the single-file baseline.
+
+SERVING:
+    `bload serve --dir DIR` fronts a sharded store with a multi-client
+    TCP daemon: clients handshake (HELLO carries the manifest — seed,
+    geometry, per-video lengths), then stream CRC32-tagged records with
+    GET_BLOCK pipelining bounded by the server's in-flight window.
+    `bload replay --remote HOST:PORT` (and `loader.remote` in configs)
+    consumes it through the standard loader pipeline — batches
+    byte-identical to a local replay of the same shard set, so N
+    trainers on other machines can share one serving host. `[serve]`
+    config keys: addr, read_timeout/write_timeout (durations like
+    '250ms'/'5s'), max_in_flight, max_connections.
 
 BENCHMARKS:
     `bload bench` runs the registered benchmark suites (the same code

@@ -9,8 +9,9 @@ mod schema;
 
 pub use reader::Reader;
 pub use schema::{
-    DatasetConfig, DdpConfig, EvalConfig, ExperimentConfig, LoaderConfig,
-    PackingConfig, RuntimeConfig, StrategyName, TrainConfig,
+    parse_duration, DatasetConfig, DdpConfig, EvalConfig, ExperimentConfig,
+    LoaderConfig, PackingConfig, RuntimeConfig, ServeConfig, StrategyName,
+    TrainConfig,
 };
 
 use crate::configfmt::parse_doc;

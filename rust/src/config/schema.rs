@@ -4,6 +4,37 @@ use super::reader::Reader;
 use crate::configfmt::Doc;
 use crate::error::{Error, Result};
 use crate::packing::Packer;
+use std::time::Duration;
+
+/// Parse a human-readable duration literal: `"250ms"`, `"5s"`, `"1.5m"`.
+///
+/// The suffix is mandatory — a bare number is ambiguous (the `[serve]`
+/// timeouts were milliseconds in one draft and seconds in another, so the
+/// config format refuses to guess). Fractional values are fine
+/// (`"0.5s"` == `"500ms"`).
+pub fn parse_duration(s: &str) -> Result<Duration> {
+    let bad = || {
+        Error::Config(format!(
+            "invalid duration '{s}' (expected <number><ms|s|m>, e.g. \
+             '250ms', '5s', '1.5m')"
+        ))
+    };
+    let t = s.trim();
+    let (num, scale) = if let Some(v) = t.strip_suffix("ms") {
+        (v, 1e-3)
+    } else if let Some(v) = t.strip_suffix('s') {
+        (v, 1.0)
+    } else if let Some(v) = t.strip_suffix('m') {
+        (v, 60.0)
+    } else {
+        return Err(bad());
+    };
+    let v: f64 = num.trim().parse().map_err(|_| bad())?;
+    if !v.is_finite() || v < 0.0 {
+        return Err(bad());
+    }
+    Ok(Duration::from_secs_f64(v * scale))
+}
 
 /// Which packing strategy — a thin config-compatibility shim over the
 /// [`crate::packing::registry`].
@@ -268,6 +299,10 @@ pub struct LoaderConfig {
     /// Per-worker LRU capacity of materialized videos — chunked
     /// strategies hit one video from several blocks.
     pub video_cache: usize,
+    /// `host:port` of a `bload serve` daemon to load from instead of a
+    /// local shard directory ("" = local). Adopted by `bload replay
+    /// --remote` and [`crate::loader::DataLoaderBuilder::remote`].
+    pub remote: String,
 }
 
 impl LoaderConfig {
@@ -279,6 +314,7 @@ impl LoaderConfig {
             shuffle: r.bool("shuffle", true)?,
             video_cache: r.usize("video_cache",
                                  crate::loader::DEFAULT_VIDEO_CACHE)?,
+            remote: r.string("remote", "")?,
         };
         r.finish()?;
         if cfg.prefetch_depth == 0 || cfg.workers == 0
@@ -291,6 +327,66 @@ impl LoaderConfig {
             ));
         }
         Ok(cfg)
+    }
+}
+
+/// `bload serve` daemon parameters (the shard-serving data plane,
+/// [`crate::net`]).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Listen address (`host:port`; port 0 picks an ephemeral port).
+    pub addr: String,
+    /// Per-connection socket read timeout. Idle connections survive —
+    /// the handler just re-checks the shutdown flag — but a client that
+    /// stalls mid-frame is cut off after this long.
+    pub read_timeout: Duration,
+    /// Per-connection socket write timeout (slow-reader bound).
+    pub write_timeout: Duration,
+    /// Largest record batch one `GET_BLOCK` request may ask for — the
+    /// per-connection in-flight window. Backpressure: the server answers
+    /// strictly in order, so a client can never have more than this many
+    /// records buffered server-side.
+    pub max_in_flight: usize,
+    /// Concurrent connection cap; connections over the cap are refused
+    /// with an error frame rather than left hanging in the accept queue.
+    pub max_connections: usize,
+}
+
+impl ServeConfig {
+    fn from_doc(doc: &Doc) -> Result<ServeConfig> {
+        let mut r = Reader::new(doc, "serve");
+        let duration = |key: &str, raw: String| {
+            parse_duration(&raw).map_err(|e| {
+                Error::Config(format!("serve.{key}: {e}"))
+            })
+        };
+        let read_raw = r.string("read_timeout", "5s")?;
+        let write_raw = r.string("write_timeout", "5s")?;
+        let cfg = ServeConfig {
+            addr: r.string("addr", "127.0.0.1:7440")?,
+            read_timeout: duration("read_timeout", read_raw)?,
+            write_timeout: duration("write_timeout", write_raw)?,
+            max_in_flight: r.usize("max_in_flight", 32)?,
+            max_connections: r.usize("max_connections", 64)?,
+        };
+        r.finish()?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.max_in_flight == 0 || self.max_connections == 0 {
+            return Err(Error::Config(
+                "serve.max_in_flight and serve.max_connections must be >= 1"
+                    .into(),
+            ));
+        }
+        if self.read_timeout.is_zero() || self.write_timeout.is_zero() {
+            return Err(Error::Config(
+                "serve timeouts must be > 0 (use e.g. '5s')".into(),
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -386,6 +482,7 @@ pub struct ExperimentConfig {
     pub packing: PackingConfig,
     pub ddp: DdpConfig,
     pub loader: LoaderConfig,
+    pub serve: ServeConfig,
     pub train: TrainConfig,
     pub eval: EvalConfig,
     pub runtime: RuntimeConfig,
@@ -393,8 +490,9 @@ pub struct ExperimentConfig {
 
 impl ExperimentConfig {
     pub fn from_doc(doc: &Doc) -> Result<ExperimentConfig> {
-        const KNOWN: [&str; 7] = [
-            "dataset", "packing", "ddp", "loader", "train", "eval", "runtime",
+        const KNOWN: [&str; 8] = [
+            "dataset", "packing", "ddp", "loader", "serve", "train", "eval",
+            "runtime",
         ];
         for section in doc.sections() {
             if !KNOWN.contains(&section) {
@@ -419,6 +517,7 @@ impl ExperimentConfig {
             packing: PackingConfig::from_doc(doc)?,
             ddp: DdpConfig::from_doc(doc)?,
             loader: LoaderConfig::from_doc(doc)?,
+            serve: ServeConfig::from_doc(doc)?,
             train: TrainConfig::from_doc(doc)?,
             eval: EvalConfig::from_doc(doc)?,
             runtime: RuntimeConfig::from_doc(doc)?,
@@ -455,6 +554,58 @@ mod tests {
         assert_eq!(cfg.loader.video_cache, 8);
         assert!(crate::config::from_str(
             "<t>", "[loader]\nvideo_cache = 0\n").is_err());
+    }
+
+    #[test]
+    fn durations_parse_with_mandatory_units() {
+        assert_eq!(parse_duration("250ms").unwrap(),
+                   Duration::from_millis(250));
+        assert_eq!(parse_duration("5s").unwrap(), Duration::from_secs(5));
+        assert_eq!(parse_duration("0.5s").unwrap(),
+                   Duration::from_millis(500));
+        assert_eq!(parse_duration("1.5m").unwrap(), Duration::from_secs(90));
+        assert_eq!(parse_duration(" 10 ms ").unwrap(),
+                   Duration::from_millis(10));
+        for bad in ["", "5", "5x", "-1s", "nan s", "infs", "s"] {
+            assert!(parse_duration(bad).is_err(), "'{bad}' should fail");
+        }
+    }
+
+    #[test]
+    fn serve_section_parses_timeouts_and_validates() {
+        let cfg = ExperimentConfig::default_config().serve;
+        assert_eq!(cfg.addr, "127.0.0.1:7440");
+        assert_eq!(cfg.read_timeout, Duration::from_secs(5));
+        assert_eq!(cfg.write_timeout, Duration::from_secs(5));
+        assert_eq!(cfg.max_in_flight, 32);
+        assert_eq!(cfg.max_connections, 64);
+
+        let cfg = crate::config::from_str(
+            "<t>",
+            "[serve]\naddr = 0.0.0.0:9000\nread_timeout = 250ms\n\
+             max_in_flight = 4\n",
+        )
+        .unwrap()
+        .serve;
+        assert_eq!(cfg.addr, "0.0.0.0:9000");
+        assert_eq!(cfg.read_timeout, Duration::from_millis(250));
+        assert_eq!(cfg.max_in_flight, 4);
+
+        let err = crate::config::from_str(
+            "<t>", "[serve]\nread_timeout = 5\n");
+        assert!(err.is_err(), "unit-less duration must be rejected");
+        assert!(crate::config::from_str(
+            "<t>", "[serve]\nmax_in_flight = 0\n").is_err());
+        assert!(crate::config::from_str(
+            "<t>", "[serve]\nwrite_timeout = 0s\n").is_err());
+    }
+
+    #[test]
+    fn loader_remote_key_defaults_empty() {
+        assert_eq!(ExperimentConfig::default_config().loader.remote, "");
+        let cfg = crate::config::from_str(
+            "<t>", "[loader]\nremote = 127.0.0.1:7440\n").unwrap();
+        assert_eq!(cfg.loader.remote, "127.0.0.1:7440");
     }
 
     #[test]

@@ -73,7 +73,7 @@ pub struct AgSynth {
 }
 
 /// Materialized frames of one video.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct VideoData {
     pub id: u32,
     /// `[T, O, F]` row-major object features.

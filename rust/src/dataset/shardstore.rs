@@ -64,7 +64,7 @@ use std::sync::{Arc, Mutex};
 use crate::error::{Error, Result};
 use crate::jsonio::{self, Value};
 use crate::telemetry::{self, names};
-use crate::util::crc32::Hasher;
+use crate::util::crc32::{crc32, Hasher};
 
 use super::store::{check_video, encode_header, encode_record,
                    StoreReader, StoreWriter, MAGIC};
@@ -781,11 +781,34 @@ impl ShardPool {
         Ok(video)
     }
 
-    /// Seek + read one record under its shard's lock. The shard body was
-    /// CRC-verified at open; this re-checks the record header against
-    /// the index so a file swapped after open fails loudly instead of
-    /// decoding garbage.
-    fn read_video(&self, id: u32, loc: VideoLoc) -> Result<VideoData> {
+    /// Raw encoded record bytes of one video — the 8-byte `id`/`len`
+    /// header plus the f32-LE payload, exactly as stored on disk —
+    /// together with their CRC-32. This is the serving-side read path
+    /// behind [`crate::net::Server`]: the shard body was footer- and
+    /// manifest-CRC-verified at open, and the per-record CRC computed
+    /// here (under the shard lock, from the just-read bytes) lets a
+    /// network client re-verify the server→client hop end-to-end.
+    /// Bypasses the decoded-video cache: each record is shipped, not
+    /// decoded, and the serving access pattern is one pass per client.
+    pub fn record(&self, id: u32) -> Result<(Vec<u8>, u32)> {
+        let loc = *self.index.get(&id).ok_or_else(|| {
+            Error::Dataset(format!(
+                "video {id} is not in the shard set"
+            ))
+        })?;
+        let buf = self.read_record_bytes(id, loc)?;
+        let crc = crc32(&buf);
+        Ok((buf, crc))
+    }
+
+    /// Seek + read one record's raw bytes under its shard's lock. The
+    /// shard body was CRC-verified at open; this re-checks the record
+    /// header against the index so a file swapped after open fails
+    /// loudly instead of decoding garbage. IO failures carry the shard
+    /// path, byte offset and read size so a server-side disk fault is
+    /// diagnosable from the client's error string alone.
+    fn read_record_bytes(&self, id: u32, loc: VideoLoc)
+                         -> Result<Vec<u8>> {
         let (o, f, c) = self.geometry();
         let len = loc.len as usize;
         let n_feats = len * o * f;
@@ -799,7 +822,17 @@ impl ShardPool {
             self.t_lock_wait.record(lock_t0.elapsed().as_secs_f64());
             file.seek(SeekFrom::Start(loc.offset))
                 .and_then(|_| file.read_exact(&mut buf))
-                .map_err(|e| Error::io(label, e))?;
+                .map_err(|e| {
+                    Error::io(
+                        format!(
+                            "{label}: video {id} record at byte offset \
+                             {} ({} bytes)",
+                            loc.offset,
+                            buf.len()
+                        ),
+                        e,
+                    )
+                })?;
         }
         self.t_read_s.record(read_t0.elapsed().as_secs_f64());
         self.t_reads.inc();
@@ -814,6 +847,16 @@ impl ShardPool {
                 loc.offset, loc.len
             )));
         }
+        Ok(buf)
+    }
+
+    /// Decode one record read by [`read_record_bytes`]
+    /// (`ShardPool::read_record_bytes`) into a [`VideoData`].
+    fn read_video(&self, id: u32, loc: VideoLoc) -> Result<VideoData> {
+        let (o, f, c) = self.geometry();
+        let len = loc.len as usize;
+        let n_feats = len * o * f;
+        let buf = self.read_record_bytes(id, loc)?;
         let decode = |bytes: &[u8]| -> Vec<f32> {
             bytes
                 .chunks_exact(4)

@@ -68,6 +68,12 @@ pub enum Error {
     /// Benchmark subsystem failures (malformed reports, unknown suites).
     Bench(String),
 
+    /// Shard-serving data plane failures (protocol violations, CRC
+    /// mismatches on served records, refused connections). Transport
+    /// errors keep their [`Error::Io`] shape so clients can tell a
+    /// retryable socket failure from a fatal protocol one.
+    Net(String),
+
     /// Underlying XLA/PJRT error.
     Xla(String),
 
@@ -116,6 +122,7 @@ impl fmt::Display for Error {
             ),
             Error::Train(m) => write!(f, "train error: {m}"),
             Error::Bench(m) => write!(f, "bench error: {m}"),
+            Error::Net(m) => write!(f, "net error: {m}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Io { path, source } => {
                 write!(f, "io error on {path}: {source}")

@@ -2,7 +2,7 @@
 //! run that exercises every instrumented subsystem so the dashboard
 //! (and `--snapshot`) has live numbers for each metric block.
 //!
-//! Three legs, all scaled-down Action-Genome geometry:
+//! Four legs, all scaled-down Action-Genome geometry:
 //!
 //! 1. **Streaming ingest + loader** — [`super::streaming`] end-to-end:
 //!    producers → bounded queue → online packer → rank-0 streaming
@@ -13,7 +13,12 @@
 //!    then replays a shard-backed epoch (pool open = `shardstore.scans`
 //!    / `scan_s`; every video decode = `shardstore.reads`, `read_s`,
 //!    `lock_wait_s`, cache hits/misses, per-shard read counters).
-//! 3. **Mock training loop** — per-rank planned loaders consumed in the
+//! 3. **Loopback serving** — starts a [`crate::net::Server`] on an
+//!    ephemeral loopback port over the leg-2 shard set and drains a
+//!    [`RemoteSource`](crate::net::RemoteSource)-backed loader through
+//!    it (populates `net.*`: connections, requests, bytes served,
+//!    request latency).
+//! 4. **Mock training loop** — per-rank planned loaders consumed in the
 //!    trainer's rank-sequential order, with batch materialization
 //!    standing in for `grad_step` compute and a real
 //!    [`GradSynchronizer`] reduce over synthetic gradients. Records the
@@ -21,7 +26,7 @@
 //!    metrics [`crate::train::Trainer`] emits, without needing built
 //!    PJRT artifacts.
 //!
-//! Returns the [`telemetry::Snapshot`] taken after all three legs;
+//! Returns the [`telemetry::Snapshot`] taken after all four legs;
 //! `bload top --snapshot` serializes it, and the live dashboard renders
 //! [`crate::telemetry::blocks::registry`] against periodic snapshots
 //! while the legs run.
@@ -30,7 +35,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::ExperimentConfig;
-use crate::dataset::shardstore::ShardSetWriter;
+use crate::dataset::shardstore::{ShardPool, ShardSetWriter};
 use crate::dataset::synthetic::generate;
 use crate::ddp::collective;
 use crate::ddp::GradSynchronizer;
@@ -63,7 +68,7 @@ impl Default for ObserveOptions {
     }
 }
 
-/// Run all three legs and return the resulting telemetry snapshot.
+/// Run all four legs and return the resulting telemetry snapshot.
 ///
 /// Does **not** reset the registry first — callers that want a clean
 /// snapshot (the `bload top` command does) call [`telemetry::reset`]
@@ -125,7 +130,27 @@ fn shard_and_train_legs(opts: &ObserveOptions,
     }
     replay.shutdown();
 
-    // Leg 3: the trainer's rank-sequential epoch loop over per-rank
+    // Leg 3: serve the same shard set over a loopback TCP server and
+    // drain a remote-backed loader through it — the `net.*` metrics on
+    // both sides of the wire.
+    let mut serve_cfg = cfg.serve.clone();
+    serve_cfg.addr = "127.0.0.1:0".into();
+    let pool = Arc::new(ShardPool::open(&shard_dir)?);
+    let server = crate::net::Server::start(pool, &serve_cfg)?;
+    let addr = server.addr().to_string();
+    let mut remote = DataLoaderBuilder::new()
+        .batch(2)
+        .workers(2)
+        .depth(2)
+        .seed(opts.seed)
+        .remote(&addr, &dcfg, packer, &cfg.packing, 0)?;
+    while let Some(b) = remote.next() {
+        b?;
+    }
+    remote.shutdown();
+    server.shutdown()?;
+
+    // Leg 4: the trainer's rank-sequential epoch loop over per-rank
     // planned loaders, minus the PJRT engine — batch materialization
     // stands in for grad_step compute, and the gradient reduce is the
     // real GradSynchronizer over small synthetic per-rank gradients.
@@ -236,6 +261,9 @@ mod tests {
         );
         assert!(snap.counter(names::SHARD_READS) > 0);
         assert!(snap.counter(names::SHARD_SCANS) > 0);
+        assert!(snap.counter(names::NET_CONNECTIONS) > 0);
+        assert!(snap.counter(names::NET_REQUESTS) > 0);
+        assert!(snap.counter(names::NET_BYTES_SERVED) > 0);
         assert!(snap.counter(names::TRAIN_STEPS) > 0);
         assert!(snap
             .histograms

@@ -30,6 +30,7 @@ pub mod loader;
 pub mod logging;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod packing;
 pub mod runtime;
 pub mod telemetry;

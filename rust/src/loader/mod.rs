@@ -10,7 +10,8 @@
 //!  PlannedSource  PackedDataset + EpochPlan ─┐  .workers .depth .batch
 //!  StreamSource   ingest Receiver<Block>    ─┼► .shuffle .shard .seed
 //!  StoreSource    persisted .blds file      ─┤  .video_cache
-//!  ShardSource    sharded store + ShardPool ─┘
+//!  ShardSource    sharded store + ShardPool ─┤
+//!  RemoteSource   bload serve daemon (net)  ─┘
 //!                                                    │ spawn
 //!                                                    ▼
 //!            DataLoader::next() ──► DeviceBatch (step order)
@@ -26,7 +27,10 @@
 //!   store ([`crate::dataset::shardstore`]) whose content is served by
 //!   the concurrent, shared-cache
 //!   [`ShardPool`](crate::dataset::shardstore::ShardPool) (the
-//!   [`VideoProvider`] hook on [`BlockSource`]). Custom sources
+//!   [`VideoProvider`] hook on [`BlockSource`]).
+//!   [`RemoteSource`](crate::net::RemoteSource) replays a shard set
+//!   served over TCP by a `bload serve` daemon (same hook, content
+//!   CRC-verified end-to-end). Custom sources
 //!   implement [`BlockSource`] and plug in via
 //!   [`DataLoaderBuilder::source`].
 //! * **The builder** ([`prefetch`]) owns shuffle/shard/batch/workers/

@@ -46,6 +46,7 @@ pub const DEFAULT_VIDEO_CACHE: usize = 64;
 /// builder.stream(split, rx, block_len)    live ingest blocks
 /// builder.store(path, dcfg, packer, pcfg, epoch)   persisted shard
 /// builder.shards(dir, dcfg, packer, pcfg, epoch)   sharded store dir
+/// builder.remote(addr, dcfg, packer, pcfg, epoch)  served shard set
 /// builder.source(Arc<dyn BlockSource>)    anything else
 /// ```
 ///
@@ -217,6 +218,23 @@ impl DataLoaderBuilder {
         let source = ShardSource::open(dir, dcfg, packer, pcfg,
                                        self.seed,
                                        |packed| self.plan(packed, epoch))?;
+        self.spawn(Arc::new(source))
+    }
+
+    /// Replay a shard set served by a `bload serve` daemon at `addr`
+    /// (`HOST:PORT`): the split rebuilds from the served manifest
+    /// (seed + video metas), is packed and scheduled locally, and
+    /// record content streams over the wire CRC-verified through
+    /// [`RemoteSource`](crate::net::RemoteSource) — batches come out
+    /// byte-identical to a local [`shards`](Self::shards) loader over
+    /// the same directory with the same knobs.
+    pub fn remote(&self, addr: &str, dcfg: &DatasetConfig,
+                  packer: &dyn Packer, pcfg: &PackingConfig, epoch: u64)
+                  -> Result<DataLoader> {
+        self.validate()?;
+        let source = crate::net::RemoteSource::connect(
+            addr, dcfg, packer, pcfg, self.seed,
+            |packed| self.plan(packed, epoch))?;
         self.spawn(Arc::new(source))
     }
 

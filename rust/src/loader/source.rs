@@ -6,7 +6,7 @@
 //! [`WorkUnit`]s — `(step, blocks)` pairs — to however many worker
 //! threads the engine spawns; the engine turns each unit into a
 //! [`DeviceBatch`](super::DeviceBatch) and re-orders delivery to step
-//! order. Four sources ship:
+//! order. Five sources ship (four here, one in [`crate::net`]):
 //!
 //! * [`PlannedSource`] — the offline path: a finished
 //!   [`PackedDataset`] scheduled by an [`EpochPlan`] (deterministic
@@ -28,8 +28,13 @@
 //!   [`ShardPool`](crate::dataset::shardstore::ShardPool) — a shared
 //!   cache serving every worker of every loader on the pool.
 //!
-//! New sources (remote shards, async fetchers, multi-epoch pipelines)
-//! implement the trait and plug into
+//! * [`RemoteSource`](crate::net::RemoteSource) — a shard set served
+//!   over TCP by a `bload serve` daemon: the split rebuilds from the
+//!   served manifest seed (byte-identical batches to the local shard
+//!   replay), and content streams over the wire CRC-verified.
+//!
+//! New sources (async fetchers, multi-epoch pipelines) implement the
+//! trait and plug into
 //! [`DataLoaderBuilder::source`](super::DataLoaderBuilder::source)
 //! without touching the engine.
 

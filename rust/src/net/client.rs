@@ -1,0 +1,263 @@
+//! Client side of the shard-serving protocol: a blocking
+//! [`RemoteClient`] over one TCP connection, plus record decoding.
+//!
+//! Every reply's record bytes carry a server-computed CRC-32 which the
+//! client recomputes before accepting them — the shard bytes were
+//! footer- and manifest-CRC-verified when the server opened the pool,
+//! and this per-record check closes the server→client hop, so the
+//! whole path disk→wire→decode is verified end-to-end. A mismatch
+//! bumps `net.crc_failures` and surfaces as a fatal [`Error::Net`]
+//! (retrying a corrupting link would hide the fault).
+//!
+//! Transport failures (connect, read, write, timeouts) keep the
+//! [`Error::Io`] shape; [`RemoteProvider`](super::RemoteProvider)
+//! treats exactly those as transient and retries with backoff.
+
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::dataset::{VideoData, VideoMeta};
+use crate::error::{Error, Result};
+use crate::telemetry::{self, names};
+use crate::util::crc32::crc32;
+
+use super::protocol::{self, BodyReader, OP_GET_BLOCK, OP_GET_VIDEO,
+                      OP_HELLO, OP_SHUTDOWN, OP_STATS, PROTO_VERSION,
+                      STATUS_ERR, STATUS_OK};
+use super::server::ServerStats;
+
+/// Client-side knobs: connect/IO deadlines and the retry policy the
+/// loader-facing [`RemoteProvider`](super::RemoteProvider) applies to
+/// transient transport errors.
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    /// Deadline for establishing the TCP connection.
+    pub connect_timeout: Duration,
+    /// Per-read / per-write socket deadline once connected.
+    pub io_timeout: Duration,
+    /// Extra attempts after the first failure (0 = fail fast).
+    pub retries: usize,
+    /// Sleep before the first retry; doubles per subsequent retry.
+    pub backoff: Duration,
+}
+
+impl Default for ClientConfig {
+    fn default() -> ClientConfig {
+        ClientConfig {
+            connect_timeout: Duration::from_secs(2),
+            io_timeout: Duration::from_secs(5),
+            retries: 3,
+            backoff: Duration::from_millis(50),
+        }
+    }
+}
+
+/// The served manifest, as exchanged by HELLO: everything needed to
+/// rebuild the exact split a local
+/// [`ShardSource`](crate::loader::ShardSource) over the same directory
+/// would build.
+#[derive(Debug, Clone)]
+pub struct RemoteManifest {
+    /// Generator seed recorded by the shard-set manifest.
+    pub seed: u64,
+    /// `(objects, feat_dim, classes)`.
+    pub geometry: (usize, usize, usize),
+    /// Every stored video's metadata in global (write) order.
+    pub videos: Vec<VideoMeta>,
+}
+
+/// One blocking connection to a `bload serve` daemon. Requests are
+/// strictly request/reply; use [`get_block`](RemoteClient::get_block)
+/// to amortize round trips over a batch of records.
+pub struct RemoteClient {
+    stream: TcpStream,
+    peer: String,
+}
+
+impl RemoteClient {
+    /// Connect with `cfg`'s deadlines. `addr` is `HOST:PORT`.
+    pub fn connect(addr: &str, cfg: &ClientConfig) -> Result<RemoteClient> {
+        let targets: Vec<SocketAddr> = addr
+            .to_socket_addrs()
+            .map_err(|e| Error::io(addr, e))?
+            .collect();
+        let target = targets.first().ok_or_else(|| {
+            Error::Net(format!("{addr}: no socket addresses resolved"))
+        })?;
+        let stream = TcpStream::connect_timeout(target, cfg.connect_timeout)
+            .map_err(|e| Error::io(addr, e))?;
+        let _ = stream.set_nodelay(true);
+        stream
+            .set_read_timeout(Some(cfg.io_timeout))
+            .and_then(|_| stream.set_write_timeout(Some(cfg.io_timeout)))
+            .map_err(|e| Error::io(addr, e))?;
+        Ok(RemoteClient {
+            stream,
+            peer: addr.to_string(),
+        })
+    }
+
+    /// Version handshake; returns the served [`RemoteManifest`].
+    pub fn hello(&mut self) -> Result<RemoteManifest> {
+        let mut req = Vec::with_capacity(4);
+        protocol::put_u32(&mut req, PROTO_VERSION);
+        let body = self.request(OP_HELLO, &req)?;
+        let mut r = BodyReader::new(&body, "HELLO reply");
+        let seed = r.u64()?;
+        let (o, f, c) = (r.u32()?, r.u32()?, r.u32()?);
+        let n = r.u32()? as usize;
+        let mut videos = Vec::with_capacity(n);
+        for _ in 0..n {
+            videos.push(VideoMeta {
+                id: r.u32()?,
+                len: r.u32()?,
+            });
+        }
+        r.finish()?;
+        Ok(RemoteManifest {
+            seed,
+            geometry: (o as usize, f as usize, c as usize),
+            videos,
+        })
+    }
+
+    /// Fetch one video's raw record bytes, CRC-verified.
+    pub fn get_video(&mut self, id: u32) -> Result<Vec<u8>> {
+        let mut req = Vec::with_capacity(4);
+        protocol::put_u32(&mut req, id);
+        let body = self.request(OP_GET_VIDEO, &req)?;
+        let mut r = BodyReader::new(&body, "GET_VIDEO reply");
+        let crc = r.u32()?;
+        let bytes = r.rest();
+        self.check_crc(id, crc, bytes)?;
+        Ok(bytes.to_vec())
+    }
+
+    /// Fetch a batch of records in one round trip, each CRC-verified.
+    /// The batch size is bounded by the server's in-flight window
+    /// (`serve.max_in_flight`); an oversized ask is refused, not
+    /// truncated.
+    pub fn get_block(&mut self, ids: &[u32]) -> Result<Vec<Vec<u8>>> {
+        let mut req = Vec::with_capacity(4 + 4 * ids.len());
+        protocol::put_u32(&mut req, ids.len() as u32);
+        for &id in ids {
+            protocol::put_u32(&mut req, id);
+        }
+        let body = self.request(OP_GET_BLOCK, &req)?;
+        let mut r = BodyReader::new(&body, "GET_BLOCK reply");
+        let mut out = Vec::with_capacity(ids.len());
+        for &id in ids {
+            let len = r.u32()? as usize;
+            let crc = r.u32()?;
+            let bytes = r.bytes(len)?;
+            self.check_crc(id, crc, bytes)?;
+            out.push(bytes.to_vec());
+        }
+        r.finish()?;
+        Ok(out)
+    }
+
+    /// The server's lifetime counters.
+    pub fn stats(&mut self) -> Result<ServerStats> {
+        let body = self.request(OP_STATS, &[])?;
+        let mut r = BodyReader::new(&body, "STATS reply");
+        let stats = ServerStats {
+            connections: r.u64()?,
+            requests: r.u64()?,
+            bytes_served: r.u64()?,
+        };
+        r.finish()?;
+        Ok(stats)
+    }
+
+    /// Ask the server to drain every connection and stop.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        self.request(OP_SHUTDOWN, &[])?;
+        Ok(())
+    }
+
+    fn request(&mut self, op: u8, body: &[u8]) -> Result<Vec<u8>> {
+        protocol::write_frame(&mut self.stream, op, body, &self.peer)?;
+        let (status, reply) =
+            protocol::read_frame(&mut self.stream, &self.peer)?;
+        match status {
+            STATUS_OK => Ok(reply),
+            STATUS_ERR => Err(Error::Net(format!(
+                "{}: server refused: {}",
+                self.peer,
+                String::from_utf8_lossy(&reply)
+            ))),
+            other => Err(Error::Net(format!(
+                "{}: reply carries unknown status 0x{other:02x}",
+                self.peer
+            ))),
+        }
+    }
+
+    fn check_crc(&self, id: u32, want: u32, bytes: &[u8]) -> Result<()> {
+        let got = crc32(bytes);
+        if got != want {
+            telemetry::counter(names::NET_CRC_FAILURES).inc();
+            return Err(Error::Net(format!(
+                "{}: video {id} crc mismatch: served 0x{want:08x}, \
+                 recomputed 0x{got:08x}",
+                self.peer
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// One-shot manifest fetch (connect + HELLO + drop) — `bload replay
+/// --remote --verify` uses this to learn the served generator seed.
+pub fn remote_manifest(addr: &str, cfg: &ClientConfig)
+                       -> Result<RemoteManifest> {
+    RemoteClient::connect(addr, cfg)?.hello()
+}
+
+/// Decode one served record (8-byte `id`/`len` header + f32-LE payload,
+/// the exact on-disk `.blds` record layout) into a [`VideoData`],
+/// re-checking the header against the manifest meta the caller asked
+/// for — the same swapped-file paranoia
+/// [`ShardPool`](crate::dataset::shardstore::ShardPool) applies
+/// locally.
+pub fn decode_record(bytes: &[u8], meta: VideoMeta,
+                     geometry: (usize, usize, usize), peer: &str)
+                     -> Result<VideoData> {
+    let (o, f, c) = geometry;
+    let len = meta.len as usize;
+    let n_feats = len * o * f;
+    let n_labels = len * o * c;
+    let want = 8 + 4 * (n_feats + n_labels);
+    if bytes.len() != want {
+        return Err(Error::Net(format!(
+            "{peer}: video {} record is {} byte(s), geometry \
+             ({o},{f},{c}) × len {len} implies {want}",
+            meta.id,
+            bytes.len()
+        )));
+    }
+    let rid = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    let rlen = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if rid != meta.id || rlen != meta.len {
+        return Err(Error::Net(format!(
+            "{peer}: served record holds video {rid}/len {rlen}, \
+             manifest expects {}/{}",
+            meta.id, meta.len
+        )));
+    }
+    let decode = |b: &[u8]| -> Vec<f32> {
+        b.chunks_exact(4)
+            .map(|x| f32::from_le_bytes(x.try_into().unwrap()))
+            .collect()
+    };
+    Ok(VideoData {
+        id: meta.id,
+        feats: decode(&bytes[8..8 + 4 * n_feats]),
+        labels: decode(&bytes[8 + 4 * n_feats..]),
+        len,
+        objects: o,
+        feat_dim: f,
+        classes: c,
+    })
+}

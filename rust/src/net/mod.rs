@@ -1,0 +1,354 @@
+//! The shard-serving data plane: a TCP daemon serving a
+//! [`ShardPool`](crate::dataset::shardstore::ShardPool) to many remote
+//! trainers, and the loader-side client that consumes it.
+//!
+//! BLoad's packing targets distributed data-parallel training; this
+//! subsystem decouples the storage tier from the trainer ranks so N
+//! machines can replay one shard set:
+//!
+//! ```text
+//!   trainer 0   DataLoaderBuilder::remote(addr) ──┐
+//!   trainer 1   DataLoaderBuilder::remote(addr) ──┼──► bload serve DIR
+//!   trainer N   DataLoaderBuilder::remote(addr) ──┘    (one ShardPool,
+//!                                                       shared cache)
+//! ```
+//!
+//! The split is rebuilt *client-side* from the served manifest (seed +
+//! video metas), packed and scheduled locally — identical math to a
+//! local [`ShardSource`](crate::loader::ShardSource) — so a remote
+//! epoch is byte-identical to a local shard replay; only record
+//! *content* crosses the wire, CRC-verified end-to-end.
+//!
+//! Wire format ([`protocol`]): length-prefixed frames, little-endian,
+//! body capped at [`protocol::MAX_FRAME`].
+//!
+//! | opcode | request body | OK reply body |
+//! |---|---|---|
+//! | `HELLO` (0x01) | version `u32` | seed `u64`, geometry `3×u32`, count `u32`, then per video `id u32, len u32` |
+//! | `GET_VIDEO` (0x02) | id `u32` | crc `u32`, raw record bytes |
+//! | `GET_BLOCK` (0x03) | count `u32`, ids `count×u32` | per record: len `u32`, crc `u32`, bytes |
+//! | `STATS` (0x04) | empty | connections, requests, bytes_served (`3×u64`) |
+//! | `SHUTDOWN` (0x05) | empty | empty (server then drains and stops) |
+//!
+//! Any reply may instead carry status `0x7F` with a UTF-8 error
+//! message. `GET_BLOCK` batches are bounded by the server's
+//! `serve.max_in_flight` window — the per-connection backpressure knob;
+//! handlers answer strictly in order, so a pipelining client can have
+//! at most its window outstanding.
+//!
+//! Configured by the `[serve]` section ([`ServeConfig`]
+//! (crate::config::ServeConfig)) and surfaced as the `serve` metric
+//! block (`net.*` telemetry names) in `bload top`.
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+pub mod source;
+
+pub use client::{decode_record, remote_manifest, ClientConfig,
+                 RemoteClient, RemoteManifest};
+pub use server::{Server, ServerStats};
+pub use source::{RemoteProvider, RemoteSource};
+
+#[cfg(test)]
+mod tests {
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::path::PathBuf;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use crate::config::{DatasetConfig, ExperimentConfig, ServeConfig};
+    use crate::dataset::shardstore::{ShardPool, ShardSetWriter};
+    use crate::dataset::synthetic::generate;
+    use crate::error::Error;
+
+    use super::protocol::{self, OP_GET_VIDEO, OP_HELLO, PROTO_VERSION,
+                          STATUS_ERR, STATUS_OK};
+    use super::*;
+
+    /// Loopback-test config: short deadlines so a hung peer fails the
+    /// test in well under a second instead of wedging it.
+    fn test_serve_cfg() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            read_timeout: Duration::from_millis(500),
+            write_timeout: Duration::from_millis(500),
+            max_in_flight: 8,
+            max_connections: 16,
+        }
+    }
+
+    fn test_client_cfg() -> ClientConfig {
+        ClientConfig {
+            connect_timeout: Duration::from_millis(500),
+            io_timeout: Duration::from_millis(500),
+            retries: 1,
+            backoff: Duration::from_millis(10),
+        }
+    }
+
+    fn shard_fixture(tag: &str)
+                     -> (PathBuf, Arc<ShardPool>, DatasetConfig) {
+        let cfg = ExperimentConfig::default_config();
+        let dcfg = cfg.dataset.scaled(0.004);
+        let ds = generate(&dcfg, 7);
+        let dir = std::env::temp_dir().join(format!(
+            "bload_net_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        ShardSetWriter::new(&dir, 7, 2)
+            .unwrap()
+            .write(&ds.train)
+            .unwrap();
+        let pool = Arc::new(ShardPool::open(&dir).unwrap());
+        (dir, pool, dcfg)
+    }
+
+    #[test]
+    fn serves_manifest_and_crc_verified_records() {
+        let (dir, pool, _dcfg) = shard_fixture("roundtrip");
+        let server =
+            Server::start(Arc::clone(&pool), &test_serve_cfg()).unwrap();
+        let addr = server.addr().to_string();
+
+        let mut c = RemoteClient::connect(&addr, &test_client_cfg())
+            .unwrap();
+        let manifest = c.hello().unwrap();
+        assert_eq!(manifest.seed, pool.seed());
+        assert_eq!(manifest.geometry, pool.geometry());
+        assert_eq!(manifest.videos, pool.videos());
+
+        // Single fetch, batched fetch, and local read all agree.
+        let metas: Vec<_> = pool.videos().iter().take(4).copied()
+            .collect();
+        let ids: Vec<u32> = metas.iter().map(|m| m.id).collect();
+        let batch = c.get_block(&ids).unwrap();
+        for (meta, served) in metas.iter().zip(&batch) {
+            let single = c.get_video(meta.id).unwrap();
+            assert_eq!(&single, served);
+            let (local, _crc) = pool.record(meta.id).unwrap();
+            assert_eq!(&local, served);
+            let video = decode_record(served, *meta, pool.geometry(),
+                                      &addr)
+                .unwrap();
+            assert_eq!(video, *pool.get(meta.id).unwrap());
+        }
+
+        // An id the pool doesn't hold is an ERR reply, and the
+        // connection keeps working afterwards.
+        let missing = c.get_video(u32::MAX).unwrap_err().to_string();
+        assert!(missing.contains("server refused"), "{missing}");
+        assert!(c.get_video(ids[0]).is_ok());
+
+        // GET_BLOCK past the in-flight window is refused, not served.
+        let big: Vec<u32> = vec![ids[0]; 9];
+        let err = c.get_block(&big).unwrap_err().to_string();
+        assert!(err.contains("in-flight window"), "{err}");
+
+        let stats = c.stats().unwrap();
+        assert!(stats.connections >= 1);
+        assert!(stats.requests >= 6);
+        assert!(stats.bytes_served > 0);
+        drop(c);
+        server.shutdown().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_frames_do_not_kill_the_server() {
+        let (dir, pool, _dcfg) = shard_fixture("malformed");
+        let server = Server::start(pool, &test_serve_cfg()).unwrap();
+        let addr = server.addr();
+
+        // 1. A length prefix past the cap: the server must close this
+        //    connection (EOF on our side), not allocate or hang.
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&u32::MAX.to_le_bytes());
+        wire.push(OP_HELLO);
+        s.write_all(&wire).unwrap();
+        let mut sink = Vec::new();
+        let n = s.read_to_end(&mut sink).unwrap();
+        assert_eq!(n, 0, "server closed without replying");
+
+        // 2. A frame truncated mid-body: declared 100 bytes, sent 10,
+        //    then closed. The server times out the read and closes.
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&100u32.to_le_bytes());
+        wire.push(OP_GET_VIDEO);
+        wire.extend_from_slice(&[0u8; 10]);
+        s.write_all(&wire).unwrap();
+        let mut sink = Vec::new();
+        let n = s.read_to_end(&mut sink).unwrap();
+        assert_eq!(n, 0, "server closed the truncated connection");
+
+        // 3. An unknown opcode on intact framing: a clean ERR reply,
+        //    and the *same* connection still serves a valid HELLO.
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        protocol::write_frame(&mut s, 0x77, b"", "test").unwrap();
+        let (status, body) = protocol::read_frame(&mut s, "test")
+            .unwrap();
+        assert_eq!(status, STATUS_ERR);
+        assert!(String::from_utf8_lossy(&body).contains("opcode"));
+        let mut req = Vec::new();
+        protocol::put_u32(&mut req, PROTO_VERSION);
+        protocol::write_frame(&mut s, OP_HELLO, &req, "test").unwrap();
+        let (status, _) = protocol::read_frame(&mut s, "test").unwrap();
+        assert_eq!(status, STATUS_OK);
+        drop(s);
+
+        // 4. After all that abuse, a fresh well-behaved client is
+        //    served normally.
+        let mut c = RemoteClient::connect(&addr.to_string(),
+                                          &test_client_cfg())
+            .unwrap();
+        assert!(c.hello().is_ok());
+        drop(c);
+        server.shutdown().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn client_rejects_corrupt_crc_and_truncated_replies() {
+        // A hand-rolled misbehaving "server" on a raw listener.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let fake = std::thread::spawn(move || {
+            // Connection 1: reply with a corrupted CRC.
+            let (mut s, _) = listener.accept().unwrap();
+            let (op, _body) = protocol::read_frame(&mut s, "fake")
+                .unwrap();
+            assert_eq!(op, OP_GET_VIDEO);
+            let mut reply = Vec::new();
+            protocol::put_u32(&mut reply, 0xDEAD_BEEF); // wrong crc
+            reply.extend_from_slice(&[7u8; 16]);
+            protocol::write_frame(&mut s, STATUS_OK, &reply, "fake")
+                .unwrap();
+            // Connection 2: a reply truncated mid-body, then close.
+            let (mut s, _) = listener.accept().unwrap();
+            let _ = protocol::read_frame(&mut s, "fake").unwrap();
+            let mut head = Vec::new();
+            head.extend_from_slice(&100u32.to_le_bytes());
+            head.push(STATUS_OK);
+            head.extend_from_slice(&[0u8; 3]);
+            s.write_all(&head).unwrap();
+        });
+
+        let ccfg = test_client_cfg();
+        let mut c = RemoteClient::connect(&addr, &ccfg).unwrap();
+        let err = c.get_video(3).unwrap_err();
+        assert!(matches!(err, Error::Net(_)), "{err}");
+        assert!(err.to_string().contains("crc mismatch"), "{err}");
+
+        let mut c = RemoteClient::connect(&addr, &ccfg).unwrap();
+        let err = c.get_video(3).unwrap_err();
+        assert!(matches!(err, Error::Io { .. }),
+                "truncated reply must error (not hang): {err}");
+        fake.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_opcode_drains_and_stops_the_server() {
+        let (dir, pool, _dcfg) = shard_fixture("shutdown");
+        let server = Server::start(pool, &test_serve_cfg()).unwrap();
+        let addr = server.addr().to_string();
+        let mut c = RemoteClient::connect(&addr, &test_client_cfg())
+            .unwrap();
+        c.shutdown_server().unwrap();
+        drop(c);
+        // The SHUTDOWN reply is written before the server stops, and
+        // wait() returns once every connection is drained.
+        server.wait().unwrap();
+        let gone = RemoteClient::connect(&addr, &test_client_cfg())
+            .and_then(|mut c| c.hello());
+        assert!(gone.is_err(), "stopped server must not answer");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn over_capacity_connections_are_refused_with_an_error() {
+        let (dir, pool, _dcfg) = shard_fixture("capacity");
+        let mut scfg = test_serve_cfg();
+        scfg.max_connections = 1;
+        let server = Server::start(pool, &scfg).unwrap();
+        let addr = server.addr().to_string();
+        let ccfg = test_client_cfg();
+        let mut first = RemoteClient::connect(&addr, &ccfg).unwrap();
+        assert!(first.hello().is_ok());
+        let err = RemoteClient::connect(&addr, &ccfg)
+            .and_then(|mut c| c.hello())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("capacity"), "{err}");
+        drop(first);
+        server.shutdown().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn remote_source_replays_byte_identically_to_the_pool() {
+        use crate::loader::{BlockSource, EpochPlan};
+        use crate::packing::by_name;
+        let (dir, pool, dcfg) = shard_fixture("source");
+        let cfg = ExperimentConfig::default_config();
+        let server =
+            Server::start(Arc::clone(&pool), &test_serve_cfg()).unwrap();
+        let addr = server.addr().to_string();
+
+        let plan_of = |packed: &crate::packing::PackedDataset| {
+            EpochPlan::new(packed, 1, 0, 2, true, 7, 0)
+        };
+        let src = RemoteSource::connect(&addr, &dcfg,
+                                        by_name("bload").unwrap(),
+                                        &cfg.packing, 7, plan_of)
+            .unwrap();
+        assert_eq!(src.store_seed(), pool.seed());
+        assert_eq!(src.split().videos, pool.videos());
+        // Same split + same pack seed => identical blocks to a local
+        // pack over the pool's videos.
+        let local_split = Arc::new(crate::dataset::Split {
+            videos: pool.videos().to_vec(),
+            spec: crate::dataset::synthetic::GeneratorSpec::new(
+                &dcfg,
+                pool.seed(),
+            ),
+        });
+        let local = crate::packing::pack(by_name("bload").unwrap(),
+                                         &local_split, &cfg.packing, 7)
+            .unwrap();
+        assert_eq!(src.packed().blocks, local.blocks);
+        // The provider serves content identical to the pool's.
+        let provider = src.video_provider().unwrap();
+        for meta in pool.videos().iter().take(3) {
+            let remote = provider.fetch(src.split(), *meta).unwrap();
+            assert_eq!(*remote, *pool.get(meta.id).unwrap());
+        }
+        drop(src);
+        server.shutdown().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mismatched_protocol_version_is_refused() {
+        let (dir, pool, _dcfg) = shard_fixture("version");
+        let server = Server::start(pool, &test_serve_cfg()).unwrap();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let mut req = Vec::new();
+        protocol::put_u32(&mut req, PROTO_VERSION + 9);
+        protocol::write_frame(&mut s, OP_HELLO, &req, "test").unwrap();
+        let (status, body) = protocol::read_frame(&mut s, "test")
+            .unwrap();
+        assert_eq!(status, STATUS_ERR);
+        assert!(String::from_utf8_lossy(&body).contains("version"));
+        drop(s);
+        server.shutdown().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,238 @@
+//! Wire format of the shard-serving data plane: length-prefixed binary
+//! frames over TCP.
+//!
+//! Every message — request or reply — is one frame:
+//!
+//! ```text
+//! ┌────────────────┬──────────┬───────────────────┐
+//! │ body_len (u32) │ tag (u8) │ body (body_len B) │
+//! └────────────────┴──────────┴───────────────────┘
+//! ```
+//!
+//! All integers are little-endian, matching the `.blds` store format.
+//! On a request the tag is an opcode ([`OP_HELLO`]..[`OP_SHUTDOWN`]);
+//! on a reply it is a status byte ([`STATUS_OK`] with an
+//! opcode-specific body, or [`STATUS_ERR`] with a UTF-8 error message).
+//! Bodies are capped at [`MAX_FRAME`] bytes: a length prefix past the
+//! cap means the framing can no longer be trusted (a corrupt or
+//! malicious peer), so the reader errors out and the connection is
+//! closed rather than resynchronized.
+//!
+//! Frame IO errors keep the crate's [`Error::Io`] shape (with the peer
+//! as the "path") so clients can tell retryable socket failures from
+//! fatal protocol violations, which surface as [`Error::Net`].
+
+use std::io::{Read, Write};
+
+use crate::error::{Error, Result};
+
+/// Protocol revision spoken by this build; HELLO carries the client's
+/// version and the server refuses a mismatch.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Maximum frame body, requests and replies alike. Generous for any
+/// realistic record (a 64-frame Action-Genome video is ~1.5 MiB) while
+/// rejecting garbage length prefixes before allocating.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Request: version handshake + manifest (seed, geometry, video metas).
+pub const OP_HELLO: u8 = 0x01;
+/// Request: one video's raw record bytes + CRC-32.
+pub const OP_GET_VIDEO: u8 = 0x02;
+/// Request: a batch of records in one round trip (bounded by the
+/// server's in-flight window).
+pub const OP_GET_BLOCK: u8 = 0x03;
+/// Request: lifetime serving counters.
+pub const OP_STATS: u8 = 0x04;
+/// Request: drain every connection and stop the server.
+pub const OP_SHUTDOWN: u8 = 0x05;
+
+/// Reply tag: success, body is opcode-specific.
+pub const STATUS_OK: u8 = 0x00;
+/// Reply tag: failure, body is a UTF-8 error message.
+pub const STATUS_ERR: u8 = 0x7F;
+
+/// Append a little-endian u32.
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a little-endian u64.
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Write one frame and flush. `peer` labels IO errors.
+pub fn write_frame(w: &mut impl Write, tag: u8, body: &[u8],
+                   peer: &str) -> Result<()> {
+    if body.len() > MAX_FRAME {
+        return Err(Error::Net(format!(
+            "{peer}: refusing to send a {} byte frame body (cap {})",
+            body.len(),
+            MAX_FRAME
+        )));
+    }
+    let mut head = [0u8; 5];
+    head[..4].copy_from_slice(&(body.len() as u32).to_le_bytes());
+    head[4] = tag;
+    w.write_all(&head)
+        .and_then(|_| w.write_all(body))
+        .and_then(|_| w.flush())
+        .map_err(|e| Error::io(peer, e))
+}
+
+/// Read one frame: `(tag, body)`. A body length past [`MAX_FRAME`] is a
+/// fatal [`Error::Net`] (the stream is no longer frame-aligned); socket
+/// failures and truncation surface as [`Error::Io`].
+pub fn read_frame(r: &mut impl Read, peer: &str) -> Result<(u8, Vec<u8>)> {
+    let mut head = [0u8; 5];
+    r.read_exact(&mut head).map_err(|e| Error::io(peer, e))?;
+    let len = u32::from_le_bytes(head[..4].try_into().unwrap()) as usize;
+    let tag = head[4];
+    if len > MAX_FRAME {
+        return Err(Error::Net(format!(
+            "{peer}: frame declares a {len} byte body (cap {}) — \
+             closing, the stream is not frame-aligned",
+            MAX_FRAME
+        )));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(|e| Error::io(peer, e))?;
+    Ok((tag, body))
+}
+
+/// Cursor over one frame body. Every read is bounds-checked; a short
+/// body is a protocol error naming the message being parsed, never a
+/// panic.
+pub struct BodyReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    what: &'static str,
+}
+
+impl<'a> BodyReader<'a> {
+    pub fn new(buf: &'a [u8], what: &'static str) -> BodyReader<'a> {
+        BodyReader { buf, pos: 0, what }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|e| *e <= self.buf.len());
+        match end {
+            Some(end) => {
+                let out = &self.buf[self.pos..end];
+                self.pos = end;
+                Ok(out)
+            }
+            None => Err(Error::Net(format!(
+                "{} body truncated: wanted {n} byte(s) at offset {}, \
+                 body is {} byte(s)",
+                self.what,
+                self.pos,
+                self.buf.len()
+            ))),
+        }
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
+    /// Everything not yet consumed (may be empty).
+    pub fn rest(&mut self) -> &'a [u8] {
+        let out = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        out
+    }
+
+    /// Reject trailing garbage — a well-formed body is consumed exactly.
+    pub fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(Error::Net(format!(
+                "{} body has {} trailing byte(s)",
+                self.what,
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_round_trip() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, OP_GET_VIDEO, &7u32.to_le_bytes(), "mem")
+            .unwrap();
+        write_frame(&mut wire, STATUS_OK, b"", "mem").unwrap();
+        let mut r: &[u8] = &wire;
+        let (tag, body) = read_frame(&mut r, "mem").unwrap();
+        assert_eq!(tag, OP_GET_VIDEO);
+        assert_eq!(body, 7u32.to_le_bytes());
+        let (tag, body) = read_frame(&mut r, "mem").unwrap();
+        assert_eq!(tag, STATUS_OK);
+        assert!(body.is_empty());
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_a_net_error() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        wire.push(OP_HELLO);
+        let err = read_frame(&mut &wire[..], "mem").unwrap_err();
+        assert!(matches!(err, Error::Net(_)), "{err}");
+        assert!(err.to_string().contains("frame-aligned"), "{err}");
+    }
+
+    #[test]
+    fn truncated_body_is_an_io_error() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&100u32.to_le_bytes());
+        wire.push(OP_GET_VIDEO);
+        wire.extend_from_slice(&[0u8; 10]); // 90 bytes short
+        let err = read_frame(&mut &wire[..], "mem").unwrap_err();
+        assert!(matches!(err, Error::Io { .. }), "{err}");
+    }
+
+    #[test]
+    fn body_reader_checks_bounds_and_trailing_bytes() {
+        let mut body = Vec::new();
+        put_u64(&mut body, 42);
+        put_u32(&mut body, 7);
+        let mut r = BodyReader::new(&body, "TEST");
+        assert_eq!(r.u64().unwrap(), 42);
+        assert_eq!(r.u32().unwrap(), 7);
+        assert!(r.u32().unwrap_err().to_string().contains("truncated"));
+
+        let mut r = BodyReader::new(&body, "TEST");
+        assert_eq!(r.u64().unwrap(), 42);
+        let err = r.finish().unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
+
+        let mut r = BodyReader::new(&body, "TEST");
+        r.u64().unwrap();
+        assert_eq!(r.rest(), 7u32.to_le_bytes());
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn refuses_to_send_past_the_cap() {
+        let body = vec![0u8; MAX_FRAME + 1];
+        let mut sink = Vec::new();
+        let err = write_frame(&mut sink, STATUS_OK, &body, "mem")
+            .unwrap_err();
+        assert!(matches!(err, Error::Net(_)), "{err}");
+        assert!(sink.is_empty(), "nothing written on refusal");
+    }
+}

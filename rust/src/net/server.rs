@@ -1,0 +1,352 @@
+//! The `bload serve` daemon: a multi-client TCP server fronting a
+//! [`ShardPool`].
+//!
+//! One acceptor thread plus one handler thread per connection, all on
+//! `std::net` blocking IO (the crate builds fully offline — no tokio).
+//! Each handler processes requests strictly in order: read one frame,
+//! dispatch, write the reply, repeat. Backpressure is therefore
+//! *client-driven*: a client may pipeline up to its in-flight window of
+//! requests before draining replies, and the server's bounded socket
+//! writes (plus the [`ServeConfig::max_in_flight`] cap on `GET_BLOCK`
+//! batch size) keep per-connection memory bounded on both sides.
+//!
+//! Lifecycle:
+//!
+//! * [`Server::start`] binds (port `0` picks an ephemeral port —
+//!   [`Server::addr`] reports the real one) and returns immediately.
+//! * Connections past [`ServeConfig::max_connections`] are refused with
+//!   an `ERR` frame, never silently dropped.
+//! * A `SHUTDOWN` frame — or [`Server::shutdown`] — flips the shared
+//!   flag and wakes the acceptor; handlers finish the reply in flight,
+//!   refuse further requests, and the acceptor joins every handler
+//!   before exiting (graceful drain). Idle connections leave within
+//!   [`ServeConfig::read_timeout`].
+//! * Malformed framing (oversized length prefix, frame truncated
+//!   mid-body) closes that one connection; the server keeps serving
+//!   everyone else. An unknown opcode on an intact frame is answered
+//!   with `ERR` and the connection stays usable.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::ServeConfig;
+use crate::dataset::shardstore::ShardPool;
+use crate::error::{Error, Result};
+use crate::telemetry::{self, names};
+
+use super::protocol::{self, BodyReader, OP_GET_BLOCK, OP_GET_VIDEO,
+                      OP_HELLO, OP_SHUTDOWN, OP_STATS, PROTO_VERSION,
+                      STATUS_ERR, STATUS_OK};
+
+/// Lifetime serving counters, as returned by the `STATS` opcode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerStats {
+    /// Connections accepted (not counting capacity refusals).
+    pub connections: u64,
+    /// Requests answered, every opcode, OK and ERR alike.
+    pub requests: u64,
+    /// Reply body bytes written for OK replies.
+    pub bytes_served: u64,
+}
+
+/// State shared by the acceptor and every connection handler.
+struct Shared {
+    pool: Arc<ShardPool>,
+    cfg: ServeConfig,
+    addr: SocketAddr,
+    shutdown: AtomicBool,
+    connections: AtomicU64,
+    requests: AtomicU64,
+    bytes_served: AtomicU64,
+    t_connections: Arc<telemetry::Counter>,
+    t_active: Arc<telemetry::Gauge>,
+    t_requests: Arc<telemetry::Counter>,
+    t_bytes: Arc<telemetry::Counter>,
+    t_request_s: Arc<telemetry::Histogram>,
+}
+
+/// A running serve daemon. Dropping it shuts down and drains.
+pub struct Server {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `cfg.addr` and start serving `pool`. Returns as soon as the
+    /// listener is live; callers block explicitly with [`wait`]
+    /// (`Server::wait`) or stop with [`shutdown`](Server::shutdown).
+    pub fn start(pool: Arc<ShardPool>, cfg: &ServeConfig)
+                 -> Result<Server> {
+        let listener = TcpListener::bind(cfg.addr.as_str())
+            .map_err(|e| Error::io(&cfg.addr, e))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::io(&cfg.addr, e))?;
+        let shared = Arc::new(Shared {
+            pool,
+            cfg: cfg.clone(),
+            addr,
+            shutdown: AtomicBool::new(false),
+            connections: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            bytes_served: AtomicU64::new(0),
+            t_connections: telemetry::counter(names::NET_CONNECTIONS),
+            t_active: telemetry::gauge(names::NET_CONNECTIONS_ACTIVE),
+            t_requests: telemetry::counter(names::NET_REQUESTS),
+            t_bytes: telemetry::counter(names::NET_BYTES_SERVED),
+            t_request_s: telemetry::histogram(names::NET_REQUEST_S),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let acceptor = std::thread::spawn(move || {
+            accept_loop(&listener, &accept_shared);
+        });
+        Ok(Server {
+            addr,
+            shared,
+            acceptor: Some(acceptor),
+        })
+    }
+
+    /// The bound address (the real port, even when `cfg.addr` asked
+    /// for port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Lifetime counters so far.
+    pub fn stats(&self) -> ServerStats {
+        ServerStats {
+            connections: self.shared.connections.load(Ordering::Relaxed),
+            requests: self.shared.requests.load(Ordering::Relaxed),
+            bytes_served: self.shared.bytes_served.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Block until the server stops — i.e. until some client sends
+    /// `SHUTDOWN` — and every connection has drained.
+    pub fn wait(mut self) -> Result<()> {
+        self.join()
+    }
+
+    /// Stop the server from this process: flip the flag, wake the
+    /// acceptor, drain every connection, join.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.shared.shutdown.store(true, Ordering::Release);
+        let _ = TcpStream::connect(self.addr); // unblock accept()
+        self.join()
+    }
+
+    fn join(&mut self) -> Result<()> {
+        if let Some(h) = self.acceptor.take() {
+            h.join().map_err(|_| {
+                Error::Net("serve acceptor thread panicked".into())
+            })?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Server {
+    /// A dropped server must not leak its acceptor or handlers: same
+    /// path as [`Server::shutdown`], errors ignored.
+    fn drop(&mut self) {
+        if self.acceptor.is_some() {
+            self.shared.shutdown.store(true, Ordering::Release);
+            let _ = TcpStream::connect(self.addr);
+            let _ = self.join();
+        }
+    }
+}
+
+fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        let (stream, peer) = match listener.accept() {
+            Ok(x) => x,
+            Err(_) => {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break;
+                }
+                // Transient accept failure (e.g. fd pressure); don't
+                // spin the core while the condition clears.
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if shared.shutdown.load(Ordering::Acquire) {
+            // The wake connection (or a client racing shutdown).
+            break;
+        }
+        handlers.retain(|h| !h.is_finished());
+        if handlers.len() >= shared.cfg.max_connections {
+            refuse(stream, shared);
+            continue;
+        }
+        shared.connections.fetch_add(1, Ordering::Relaxed);
+        shared.t_connections.inc();
+        let shared = Arc::clone(shared);
+        handlers.push(std::thread::spawn(move || {
+            shared.t_active.add(1.0);
+            serve_conn(&shared, stream, peer.to_string());
+            shared.t_active.sub(1.0);
+        }));
+    }
+    // Graceful drain: every handler sees the shutdown flag before its
+    // next read (or leaves on read timeout) and is joined here, so
+    // `wait`/`shutdown` return only once in-flight replies are written.
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+/// Over-capacity connections get an explicit ERR frame so the client
+/// reports "server at capacity", not a mystery EOF.
+fn refuse(mut stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_read_timeout(Some(shared.cfg.read_timeout));
+    let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+    // Absorb the client's first request so the ERR frame is a proper
+    // reply — closing with the request unread would RST the connection
+    // under the client and could discard the refusal en route.
+    let _ = protocol::read_frame(&mut stream, "refused peer");
+    let msg = format!(
+        "server at capacity ({} connection(s))",
+        shared.cfg.max_connections
+    );
+    let _ = protocol::write_frame(&mut stream, STATUS_ERR,
+                                  msg.as_bytes(), "refused peer");
+}
+
+fn serve_conn(shared: &Shared, mut stream: TcpStream, peer: String) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(shared.cfg.read_timeout));
+    let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        // EOF, idle timeout, or untrustworthy framing all end this one
+        // connection; the listener keeps serving everyone else.
+        let (op, body) = match protocol::read_frame(&mut stream, &peer) {
+            Ok(f) => f,
+            Err(_) => return,
+        };
+        let t0 = Instant::now();
+        let reply = dispatch(shared, op, &body);
+        let ok = reply.is_ok();
+        let wrote = match &reply {
+            Ok(b) => protocol::write_frame(&mut stream, STATUS_OK, b,
+                                           &peer)
+                .map(|_| b.len()),
+            Err(e) => protocol::write_frame(&mut stream, STATUS_ERR,
+                                            e.to_string().as_bytes(),
+                                            &peer)
+                .map(|_| 0),
+        };
+        shared.requests.fetch_add(1, Ordering::Relaxed);
+        shared.t_requests.inc();
+        shared.t_request_s.record(t0.elapsed().as_secs_f64());
+        match wrote {
+            Ok(n) => {
+                shared.bytes_served.fetch_add(n as u64, Ordering::Relaxed);
+                shared.t_bytes.add(n as u64);
+            }
+            Err(_) => return,
+        }
+        if op == OP_SHUTDOWN && ok {
+            shared.shutdown.store(true, Ordering::Release);
+            let _ = TcpStream::connect(shared.addr); // unblock accept()
+            return;
+        }
+    }
+}
+
+fn dispatch(shared: &Shared, op: u8, body: &[u8]) -> Result<Vec<u8>> {
+    match op {
+        OP_HELLO => {
+            let mut r = BodyReader::new(body, "HELLO");
+            let version = r.u32()?;
+            r.finish()?;
+            if version != PROTO_VERSION {
+                return Err(Error::Net(format!(
+                    "client speaks protocol version {version}, server \
+                     speaks {PROTO_VERSION}"
+                )));
+            }
+            Ok(hello_body(&shared.pool))
+        }
+        OP_GET_VIDEO => {
+            let mut r = BodyReader::new(body, "GET_VIDEO");
+            let id = r.u32()?;
+            r.finish()?;
+            let (bytes, crc) = shared.pool.record(id)?;
+            let mut out = Vec::with_capacity(4 + bytes.len());
+            protocol::put_u32(&mut out, crc);
+            out.extend_from_slice(&bytes);
+            Ok(out)
+        }
+        OP_GET_BLOCK => {
+            let mut r = BodyReader::new(body, "GET_BLOCK");
+            let count = r.u32()? as usize;
+            if count == 0 || count > shared.cfg.max_in_flight {
+                return Err(Error::Net(format!(
+                    "GET_BLOCK asks for {count} video(s); this server's \
+                     in-flight window is 1..={}",
+                    shared.cfg.max_in_flight
+                )));
+            }
+            let mut ids = Vec::with_capacity(count);
+            for _ in 0..count {
+                ids.push(r.u32()?);
+            }
+            r.finish()?;
+            let mut out = Vec::new();
+            for id in ids {
+                let (bytes, crc) = shared.pool.record(id)?;
+                protocol::put_u32(&mut out, bytes.len() as u32);
+                protocol::put_u32(&mut out, crc);
+                out.extend_from_slice(&bytes);
+            }
+            Ok(out)
+        }
+        OP_STATS => {
+            BodyReader::new(body, "STATS").finish()?;
+            let mut out = Vec::with_capacity(24);
+            protocol::put_u64(&mut out,
+                              shared.connections.load(Ordering::Relaxed));
+            protocol::put_u64(&mut out,
+                              shared.requests.load(Ordering::Relaxed));
+            protocol::put_u64(&mut out,
+                              shared.bytes_served.load(Ordering::Relaxed));
+            Ok(out)
+        }
+        OP_SHUTDOWN => {
+            BodyReader::new(body, "SHUTDOWN").finish()?;
+            Ok(Vec::new())
+        }
+        other => Err(Error::Net(format!("unknown opcode 0x{other:02x}"))),
+    }
+}
+
+/// HELLO reply: everything a client needs to rebuild the exact
+/// [`Split`](crate::dataset::Split) a local [`ShardSource`]
+/// (`crate::loader::ShardSource`) would — the generator seed, the
+/// geometry, and every video meta in global (write) order.
+fn hello_body(pool: &ShardPool) -> Vec<u8> {
+    let videos = pool.videos();
+    let mut b = Vec::with_capacity(24 + 8 * videos.len());
+    protocol::put_u64(&mut b, pool.seed());
+    let (o, f, c) = pool.geometry();
+    protocol::put_u32(&mut b, o as u32);
+    protocol::put_u32(&mut b, f as u32);
+    protocol::put_u32(&mut b, c as u32);
+    protocol::put_u32(&mut b, videos.len() as u32);
+    for v in videos {
+        protocol::put_u32(&mut b, v.id);
+        protocol::put_u32(&mut b, v.len);
+    }
+    b
+}

@@ -1,0 +1,208 @@
+//! [`RemoteSource`]: the network-served [`BlockSource`] — a `bload
+//! serve` daemon consumed through the ordinary loader engine.
+//!
+//! Connecting performs the HELLO handshake, checks the served geometry
+//! against the dataset config, rebuilds the split from the served
+//! manifest (seed + video metas in global write order), packs and
+//! schedules it locally — so the plan, and therefore every batch, is
+//! byte-identical to a local [`ShardSource`](crate::loader::ShardSource)
+//! over the same shard directory with the same builder knobs. Only the
+//! *content* comes over the wire: a [`RemoteProvider`] plugs into the
+//! engine's [`VideoProvider`] hook, fetching each video's record bytes
+//! (CRC-verified) and decoding them exactly like the local pool would.
+//!
+//! The provider holds one connection behind a mutex — loader workers
+//! serialize on the wire, which is the right shape for a single TCP
+//! stream (replies are in-order anyway) and keeps the server's
+//! per-client cost at one handler thread. Transient transport errors
+//! (connect refused, reset, timeout — anything [`Error::Io`]) are
+//! retried with doubling backoff and a fresh connection, bumping
+//! `net.retries`; protocol violations and CRC mismatches are fatal.
+//! No client-side record cache: bload packing places every video
+//! exactly once per epoch, so cached bytes would never be re-hit.
+
+use std::sync::{Arc, Mutex};
+
+use crate::config::{DatasetConfig, PackingConfig};
+use crate::dataset::synthetic::GeneratorSpec;
+use crate::dataset::{Split, VideoData, VideoMeta};
+use crate::error::{Error, Result};
+use crate::loader::{BlockSource, EpochPlan, PlannedSource, VideoProvider,
+                    WorkUnit};
+use crate::packing::{pack, PackedDataset, Packer};
+use crate::telemetry::{self, names};
+
+use super::client::{decode_record, ClientConfig, RemoteClient};
+
+/// Block source over a `bload serve` daemon.
+pub struct RemoteSource {
+    inner: PlannedSource,
+    provider: Arc<RemoteProvider>,
+    manifest_seed: u64,
+}
+
+impl RemoteSource {
+    /// Connect with default [`ClientConfig`] deadlines/retries.
+    pub fn connect<F>(addr: &str, dcfg: &DatasetConfig,
+                      packer: &dyn Packer, pcfg: &PackingConfig,
+                      pack_seed: u64, plan_of: F) -> Result<RemoteSource>
+    where
+        F: FnOnce(&PackedDataset) -> EpochPlan,
+    {
+        RemoteSource::connect_with(addr, &ClientConfig::default(), dcfg,
+                                   packer, pcfg, pack_seed, plan_of)
+    }
+
+    /// Connect to `addr` and schedule the served dataset with `plan_of`
+    /// (the caller — normally
+    /// [`DataLoaderBuilder`](crate::loader::DataLoaderBuilder) —
+    /// supplies rank sharding, shuffling and batching). `dcfg` must
+    /// describe the generator family the served shards were written
+    /// from; its geometry is checked against the manifest. `pack_seed`
+    /// drives the packing strategy's draw, matching the offline
+    /// `pack(...)` call.
+    pub fn connect_with<F>(addr: &str, ccfg: &ClientConfig,
+                           dcfg: &DatasetConfig, packer: &dyn Packer,
+                           pcfg: &PackingConfig, pack_seed: u64,
+                           plan_of: F) -> Result<RemoteSource>
+    where
+        F: FnOnce(&PackedDataset) -> EpochPlan,
+    {
+        let mut client = RemoteClient::connect(addr, ccfg)?;
+        let manifest = client.hello()?;
+        if manifest.geometry != (dcfg.objects, dcfg.feat_dim, dcfg.classes)
+        {
+            return Err(Error::Dataset(format!(
+                "{addr}: served shard set geometry {:?} != dataset \
+                 config ({}, {}, {})",
+                manifest.geometry, dcfg.objects, dcfg.feat_dim,
+                dcfg.classes
+            )));
+        }
+        let split = Arc::new(Split {
+            videos: manifest.videos,
+            spec: GeneratorSpec::new(dcfg, manifest.seed),
+        });
+        let packed = Arc::new(pack(packer, &split, pcfg, pack_seed)?);
+        let plan = plan_of(&packed);
+        let provider = Arc::new(RemoteProvider {
+            addr: addr.to_string(),
+            cfg: ccfg.clone(),
+            geometry: manifest.geometry,
+            // The handshake connection is reused for content fetches.
+            conn: Mutex::new(Some(client)),
+        });
+        Ok(RemoteSource {
+            inner: PlannedSource::new(split, packed, plan),
+            provider,
+            manifest_seed: manifest.seed,
+        })
+    }
+
+    /// The generator seed the server's manifest records.
+    pub fn store_seed(&self) -> u64 {
+        self.manifest_seed
+    }
+
+    /// The content provider fetching record bytes over the wire.
+    pub fn provider(&self) -> &Arc<RemoteProvider> {
+        &self.provider
+    }
+
+    /// The packed dataset rebuilt from the served manifest.
+    pub fn packed(&self) -> &Arc<PackedDataset> {
+        self.inner.packed()
+    }
+}
+
+impl BlockSource for RemoteSource {
+    fn split(&self) -> &Arc<Split> {
+        self.inner.split()
+    }
+
+    fn block_len(&self) -> usize {
+        self.inner.block_len()
+    }
+
+    fn next_unit(&self) -> Option<WorkUnit> {
+        self.inner.next_unit()
+    }
+
+    fn claimed(&self) -> usize {
+        self.inner.claimed()
+    }
+
+    fn steps(&self) -> Option<usize> {
+        self.inner.steps()
+    }
+
+    fn video_provider(&self) -> Option<Arc<dyn VideoProvider>> {
+        Some(Arc::clone(&self.provider) as Arc<dyn VideoProvider>)
+    }
+}
+
+/// [`VideoProvider`] fetching record bytes from a serve daemon over one
+/// shared connection, with retry-with-backoff on transient transport
+/// errors (stale connections are dropped and re-dialed).
+pub struct RemoteProvider {
+    addr: String,
+    cfg: ClientConfig,
+    geometry: (usize, usize, usize),
+    conn: Mutex<Option<RemoteClient>>,
+}
+
+impl RemoteProvider {
+    fn fetch_record(&self, id: u32) -> Result<Vec<u8>> {
+        let t_retries = telemetry::counter(names::NET_RETRIES);
+        let mut delay = self.cfg.backoff;
+        let mut last: Option<Error> = None;
+        for attempt in 0..=self.cfg.retries {
+            if attempt > 0 {
+                t_retries.inc();
+                std::thread::sleep(delay);
+                delay = delay.saturating_mul(2);
+            }
+            let mut conn = lock(&self.conn);
+            if conn.is_none() {
+                match RemoteClient::connect(&self.addr, &self.cfg) {
+                    Ok(c) => *conn = Some(c),
+                    Err(e) => {
+                        last = Some(e);
+                        continue;
+                    }
+                }
+            }
+            match conn.as_mut().expect("connected above").get_video(id) {
+                Ok(bytes) => return Ok(bytes),
+                Err(e) => {
+                    // The stream may be mid-frame — never reuse it.
+                    *conn = None;
+                    if !matches!(e, Error::Io { .. }) {
+                        return Err(e); // protocol/CRC faults are fatal
+                    }
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last.expect("at least one attempt ran"))
+    }
+}
+
+impl VideoProvider for RemoteProvider {
+    /// Serve the stored record over the wire; `split` is only consulted
+    /// by the synthetic fallback paths, never here.
+    fn fetch(&self, _split: &Split, meta: VideoMeta)
+             -> Result<Arc<VideoData>> {
+        let bytes = self.fetch_record(meta.id)?;
+        let video = decode_record(&bytes, meta, self.geometry,
+                                  &self.addr)?;
+        Ok(Arc::new(video))
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    // A worker that panicked mid-fetch left no partial state worth
+    // protecting (the connection is dropped on any error); later
+    // workers keep fetching.
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}

@@ -153,10 +153,36 @@ impl MetricBlock for Train {
     }
 }
 
+/// Serving panel: `bload serve` daemon traffic and client health.
+#[derive(Debug)]
+pub struct Serve;
+
+impl MetricBlock for Serve {
+    fn name(&self) -> &'static str {
+        "serve"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["net", "server"]
+    }
+
+    fn describe(&self) -> &'static str {
+        "serve daemon: connections, request latency, bytes served, \
+         client CRC failures and retries"
+    }
+
+    fn template(&self) -> &'static str {
+        "conns {net.connections} (active {net.connections_active})  \
+         requests {net.requests}  bytes {net.bytes_served}  \
+         req p50 {net.request_s.p50} p95 {net.request_s.p95}  \
+         crc fail {net.crc_failures}  retries {net.retries}"
+    }
+}
+
 /// Every registered metric block, in dashboard render order.
 pub fn registry() -> &'static [&'static dyn MetricBlock] {
-    static REGISTRY: [&'static dyn MetricBlock; 4] =
-        [&Ingest, &Loader, &Shardstore, &Train];
+    static REGISTRY: [&'static dyn MetricBlock; 5] =
+        [&Ingest, &Loader, &Shardstore, &Serve, &Train];
     &REGISTRY
 }
 
@@ -281,6 +307,7 @@ mod tests {
             ("STREAM", "ingest"),
             ("prefetch", "loader"),
             ("pool", "shardstore"),
+            ("net", "serve"),
             ("ddp", "train"),
         ] {
             assert_eq!(lookup(alias).unwrap().name(), key, "{alias}");
@@ -322,6 +349,11 @@ mod tests {
             names::SHARD_CACHE_HITS,
             names::SHARD_CACHE_MISSES,
             names::SHARD_SCANS,
+            names::NET_CONNECTIONS,
+            names::NET_REQUESTS,
+            names::NET_BYTES_SERVED,
+            names::NET_CRC_FAILURES,
+            names::NET_RETRIES,
             names::TRAIN_STEPS,
             names::TRAIN_REAL_FRAMES,
             names::TRAIN_SLOTS,
@@ -332,6 +364,7 @@ mod tests {
             names::INGEST_QUEUE_DEPTH,
             names::INGEST_BLOCKS_PER_S,
             names::LOADER_WORKERS_ACTIVE,
+            names::NET_CONNECTIONS_ACTIVE,
             names::TRAIN_PADDING_PCT,
         ] {
             s.gauges.insert(g.to_string(), 2.0);
@@ -341,6 +374,7 @@ mod tests {
             names::SHARD_READ_S.to_string(),
             names::SHARD_LOCK_WAIT_S.to_string(),
             names::SHARD_SCAN_S.to_string(),
+            names::NET_REQUEST_S.to_string(),
             names::TRAIN_STEP_SKEW.to_string(),
             names::TRAIN_ALLREDUCE_S.to_string(),
             names::train_rank_step(0),

@@ -114,6 +114,22 @@ pub mod names {
     pub fn train_rank_step(rank: usize) -> String {
         format!("train.rank{rank}.step_s")
     }
+
+    /// Counter: connections accepted by the serve daemon.
+    pub const NET_CONNECTIONS: &str = "net.connections";
+    /// Gauge: connections currently being served.
+    pub const NET_CONNECTIONS_ACTIVE: &str = "net.connections_active";
+    /// Counter: requests served across all connections (every opcode).
+    pub const NET_REQUESTS: &str = "net.requests";
+    /// Counter: response body bytes written back to clients.
+    pub const NET_BYTES_SERVED: &str = "net.bytes_served";
+    /// Histogram: per-request service latency, read-to-reply (seconds).
+    pub const NET_REQUEST_S: &str = "net.request_s";
+    /// Counter: client-side CRC re-verification failures on served
+    /// records.
+    pub const NET_CRC_FAILURES: &str = "net.crc_failures";
+    /// Counter: client retries after transient connect/read errors.
+    pub const NET_RETRIES: &str = "net.retries";
 }
 
 /// Monotonic event counter (u64, atomic).

@@ -146,6 +146,77 @@ fn pack_shards_writes_set_inspects_and_replays_with_verify() {
 }
 
 #[test]
+fn serve_replay_remote_round_trips_with_verify() {
+    let pid = std::process::id();
+    let dir = std::env::temp_dir().join(format!("bload_cli_serve_{pid}"));
+    std::fs::remove_dir_all(&dir).ok();
+    let dir_s = dir.to_str().unwrap().to_string();
+    assert_eq!(
+        run(&argv(&[
+            "pack", "--strategy", "bload", "--scale", "0.01", "--seed",
+            "5", "--shards", "2", "--out", &dir_s,
+        ]))
+        .unwrap(),
+        0
+    );
+
+    // The daemon blocks in `server.wait()`, so it runs on its own
+    // thread; `--addr-file` publishes the ephemeral bound address once
+    // the listener is up (no bind race, no fixed port).
+    let addr_file =
+        std::env::temp_dir().join(format!("bload_cli_serve_{pid}.addr"));
+    std::fs::remove_file(&addr_file).ok();
+    let addr_file_s = addr_file.to_str().unwrap().to_string();
+    let serve_dir = dir_s.clone();
+    let serve_addr_file = addr_file_s.clone();
+    let daemon = std::thread::spawn(move || {
+        run(&argv(&[
+            "serve", "--dir", &serve_dir, "--addr", "127.0.0.1:0",
+            "--addr-file", &serve_addr_file,
+        ]))
+    });
+    let deadline = std::time::Instant::now()
+        + std::time::Duration::from_secs(10);
+    let addr = loop {
+        match std::fs::read_to_string(&addr_file) {
+            Ok(a) if !a.trim().is_empty() => break a.trim().to_string(),
+            _ if std::time::Instant::now() > deadline => {
+                panic!("serve daemon never published its address")
+            }
+            _ => std::thread::sleep(std::time::Duration::from_millis(10)),
+        }
+    };
+
+    // Remote replay must be byte-identical to the in-memory run — the
+    // same gate the local shard replay passes.
+    assert_eq!(
+        run(&argv(&[
+            "replay", "--remote", &addr, "--scale", "0.01", "--seed",
+            "5", "--verify",
+        ]))
+        .unwrap(),
+        0
+    );
+
+    // SHUTDOWN drains the daemon; the serve command exits 0.
+    bload::net::RemoteClient::connect(
+        &addr, &bload::net::ClientConfig::default())
+    .unwrap()
+    .shutdown_server()
+    .unwrap();
+    assert_eq!(daemon.join().unwrap().unwrap(), 0);
+    std::fs::remove_file(&addr_file).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_rejects_missing_dir_and_bad_flags() {
+    assert!(run(&argv(&["serve"])).is_err(), "--dir is required");
+    assert!(run(&argv(&["serve", "--dir", "/nope/missing"])).is_err());
+    assert!(run(&argv(&["serve", "--bogus", "1"])).is_err());
+}
+
+#[test]
 fn pack_rejects_out_without_shards() {
     assert!(run(&argv(&["pack", "--scale", "0.01", "--out", "/tmp/x"]))
         .is_err());
@@ -348,6 +419,7 @@ fn top_snapshot_writes_format1_json_with_live_metrics() {
         "loader cache untouched"
     );
     assert!(snap.counter("shardstore.reads") > 0, "no shard reads");
+    assert!(snap.counter("net.requests") > 0, "no served requests");
     assert!(
         snap.histograms.contains_key("train.rank0.step_s"),
         "no per-rank step timings"

@@ -328,6 +328,104 @@ fn shard_replay_is_byte_identical_for_any_shard_count() {
 }
 
 #[test]
+fn remote_replay_is_byte_identical_for_concurrent_clients() {
+    // The net acceptance bar, extending
+    // `shard_replay_is_byte_identical_for_any_shard_count` across the
+    // wire: the same shard set fronted by a loopback `bload serve`
+    // daemon delivers — to several *concurrent* client connections, each
+    // with different worker/depth settings — the exact batch sequence of
+    // the in-memory offline epoch.
+    use bload::dataset::shardstore::{ShardPool, ShardSetWriter};
+    use bload::net::Server;
+
+    let cfg = ExperimentConfig::default_config();
+    let dcfg = cfg.dataset.scaled(0.01);
+    let gen_seed = 13u64;
+    let ds = generate(&dcfg, gen_seed);
+
+    let packed = Arc::new(
+        pack(by_name("bload").unwrap(), &ds.train, &cfg.packing, 13)
+            .unwrap(),
+    );
+    let split = Arc::new(ds.train);
+    let mut memory = DataLoaderBuilder::new()
+        .batch(2)
+        .workers(3)
+        .depth(2)
+        .seed(13)
+        .shard(2, 1)
+        .planned(Arc::clone(&split), Arc::clone(&packed), 2)
+        .unwrap();
+    let mut reference = Vec::new();
+    while let Some(b) = memory.next() {
+        reference.push(b.unwrap());
+    }
+    assert!(!reference.is_empty(), "epoch has steps");
+
+    let dir = std::env::temp_dir().join(format!(
+        "bload_remote_replay_e2e_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    ShardSetWriter::new(&dir, gen_seed, 2)
+        .unwrap()
+        .write(&split)
+        .unwrap();
+    let mut scfg = cfg.serve.clone();
+    scfg.addr = "127.0.0.1:0".into();
+    let pool = Arc::new(ShardPool::open(&dir).unwrap());
+    let server = Server::start(pool, &scfg).unwrap();
+    let addr = server.addr().to_string();
+
+    // Three clients share the daemon concurrently; worker count and
+    // prefetch depth must not change delivered bytes.
+    std::thread::scope(|s| {
+        for &(workers, depth) in &[(1usize, 1usize), (3, 2), (2, 4)] {
+            let addr = addr.clone();
+            let dcfg = dcfg.clone();
+            let pcfg = cfg.packing.clone();
+            let reference = &reference;
+            s.spawn(move || {
+                let tag = format!("workers {workers} depth {depth}");
+                let mut loader = DataLoaderBuilder::new()
+                    .batch(2)
+                    .workers(workers)
+                    .depth(depth)
+                    .seed(13)
+                    .shard(2, 1)
+                    .remote(&addr, &dcfg, by_name("bload").unwrap(),
+                            &pcfg, 2)
+                    .unwrap();
+                assert_eq!(loader.steps(), Some(reference.len()), "{tag}");
+                for (step, want) in reference.iter().enumerate() {
+                    let got = loader
+                        .next()
+                        .unwrap_or_else(|| {
+                            panic!("{tag}: ended at step {step}")
+                        })
+                        .unwrap();
+                    assert_eq!(got.block_ids, want.block_ids,
+                               "{tag}, step {step}");
+                    assert_eq!(got.feats, want.feats, "{tag}, step {step}");
+                    assert_eq!(got.labels, want.labels,
+                               "{tag}, step {step}");
+                    assert_eq!(got.frame_mask, want.frame_mask,
+                               "{tag}, step {step}");
+                    assert_eq!(got.seg_ids, want.seg_ids,
+                               "{tag}, step {step}");
+                }
+                assert!(loader.next().is_none(), "{tag}");
+            });
+        }
+    });
+
+    let stats = server.stats();
+    assert!(stats.connections >= 3, "three clients connected");
+    server.shutdown().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn sampling_chunks_cover_prefixes_only() {
     // Each video's delivered frames are exactly frames [0, k*t_block).
     let dcfg = bload::harness::scaled_dataset(80, 10, 0.6);
