@@ -1,0 +1,398 @@
+//! Verdict evaluators for `bload assault` testcases.
+//!
+//! The registry follows [`crate::packing::registry`]'s open-registry
+//! idiom: every evaluator is a stateless unit struct registered in
+//! [`registry`], resolved by key or alias through [`lookup`] /
+//! [`by_name`] (the config layer validates `evaluator = "..."` keys
+//! against this registry at parse time). An evaluator turns one
+//! testcase's aggregate [`Observation`] into a pass/fail [`Verdict`] —
+//! the relentless-style judgement step that makes a load run a *test*
+//! rather than just a measurement:
+//!
+//! | key             | passes when |
+//! |-----------------|-------------|
+//! | `byte-identity` | every request succeeded and returned bytes identical to the locally generated reference |
+//! | `latency-slo`   | the per-request p99 latency is within `slo` (at exactly the bound still passes) |
+//! | `padding-budget`| the destination's packed plan pads no more than `max_padding_pct` percent of its slots |
+
+use crate::config::AssaultSetting;
+use crate::error::{Error, Result};
+use crate::util::stats::{percentile_sorted, Summary};
+
+/// Latency summary over one testcase's successful requests, computed
+/// from the raw per-request samples (the same stats
+/// [`crate::telemetry::Histogram::summary`] exposes, but per-testcase
+/// rather than process-wide).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencyStats {
+    pub count: u64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+}
+
+impl LatencyStats {
+    /// Summarize `samples` (seconds); an empty slice yields all zeros.
+    pub fn of(samples: &[f64]) -> LatencyStats {
+        let s = match Summary::of(samples) {
+            Some(s) => s,
+            None => return LatencyStats::default(),
+        };
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencyStats {
+            count: samples.len() as u64,
+            mean_s: s.mean,
+            min_s: sorted[0],
+            max_s: sorted[sorted.len() - 1],
+            p50_s: percentile_sorted(&sorted, 50.0),
+            p95_s: percentile_sorted(&sorted, 95.0),
+            p99_s: percentile_sorted(&sorted, 99.0),
+        }
+    }
+}
+
+/// Everything one testcase's replay clients observed, aggregated.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Observation {
+    /// Requests attempted (successes + failures + refusals).
+    pub requests: u64,
+    /// Transport / protocol / CRC failures.
+    pub failures: u64,
+    /// Requests the server explicitly refused (capacity shedding).
+    pub refused: u64,
+    /// Successful replies whose bytes differed from the reference.
+    pub mismatches: u64,
+    /// Payload bytes received across all successful requests.
+    pub bytes: u64,
+    /// Real frames in the destination's packed plan.
+    pub plan_real_frames: u64,
+    /// Total slots in the destination's packed plan.
+    pub plan_slot_frames: u64,
+    /// Latency over successful requests only.
+    pub latency: LatencyStats,
+}
+
+impl Observation {
+    /// Requests that completed successfully.
+    pub fn ok(&self) -> u64 {
+        self.requests
+            .saturating_sub(self.failures)
+            .saturating_sub(self.refused)
+    }
+
+    /// Padding percentage of the destination's packed plan
+    /// (`100 × (1 − real/slots)`; 0 when the plan is empty).
+    pub fn padding_pct(&self) -> f64 {
+        if self.plan_slot_frames == 0 {
+            return 0.0;
+        }
+        100.0
+            * (1.0
+                - self.plan_real_frames as f64
+                    / self.plan_slot_frames as f64)
+    }
+}
+
+/// One evaluator's judgement of a testcase.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Verdict {
+    pub pass: bool,
+    /// Human-readable grounds (shown in the per-case report line).
+    pub detail: String,
+}
+
+impl Verdict {
+    fn pass(detail: String) -> Verdict {
+        Verdict { pass: true, detail }
+    }
+
+    fn fail(detail: String) -> Verdict {
+        Verdict { pass: false, detail }
+    }
+}
+
+/// One registered verdict evaluator (stateless unit struct).
+pub trait Evaluator: Sync {
+    /// Canonical registry key (the config `evaluator = "..."` value).
+    fn name(&self) -> &'static str;
+
+    /// Accepted spellings besides [`name`](Evaluator::name)
+    /// (matched case-insensitively).
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// One-line description (`bload assault --list-evaluators`).
+    fn describe(&self) -> &'static str;
+
+    /// Judge one testcase's aggregate observation.
+    fn evaluate(&self, setting: &AssaultSetting, obs: &Observation)
+                -> Verdict;
+}
+
+/// Replayed bytes must match the locally generated reference exactly.
+#[derive(Debug)]
+pub struct ByteIdentity;
+
+impl Evaluator for ByteIdentity {
+    fn name(&self) -> &'static str {
+        "byte-identity"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["identity", "bytes"]
+    }
+
+    fn describe(&self) -> &'static str {
+        "every request succeeds and returns bytes identical to the \
+         locally generated reference record"
+    }
+
+    fn evaluate(&self, _setting: &AssaultSetting, obs: &Observation)
+                -> Verdict {
+        let counts = format!(
+            "{} ok / {} failed / {} refused / {} mismatched of {} \
+             request(s)",
+            obs.ok(),
+            obs.failures,
+            obs.refused,
+            obs.mismatches,
+            obs.requests
+        );
+        if obs.requests == 0 || obs.ok() == 0 {
+            return Verdict::fail(format!("no successful requests ({counts})"));
+        }
+        if obs.failures > 0 || obs.refused > 0 || obs.mismatches > 0 {
+            return Verdict::fail(counts);
+        }
+        Verdict::pass(format!("all {} request(s) byte-identical",
+                              obs.requests))
+    }
+}
+
+/// p99 request latency must be within the configured SLO.
+#[derive(Debug)]
+pub struct LatencySlo;
+
+impl Evaluator for LatencySlo {
+    fn name(&self) -> &'static str {
+        "latency-slo"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["slo", "latency"]
+    }
+
+    fn describe(&self) -> &'static str {
+        "p99 request latency within the testcase's `slo` bound"
+    }
+
+    fn evaluate(&self, setting: &AssaultSetting, obs: &Observation)
+                -> Verdict {
+        let bound = setting.slo.as_secs_f64();
+        let p99 = obs.latency.p99_s;
+        let detail = format!(
+            "p99 {:.3}ms vs slo {:.3}ms over {} sample(s)",
+            p99 * 1e3,
+            bound * 1e3,
+            obs.latency.count
+        );
+        if obs.latency.count == 0 {
+            return Verdict::fail("no successful requests to time".into());
+        }
+        // Exactly at the bound is within the SLO; only an excess breaches.
+        if p99 > bound {
+            return Verdict::fail(detail);
+        }
+        Verdict::pass(detail)
+    }
+}
+
+/// The destination's packed plan must pad within the configured budget.
+#[derive(Debug)]
+pub struct PaddingBudget;
+
+impl Evaluator for PaddingBudget {
+    fn name(&self) -> &'static str {
+        "padding-budget"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["padding"]
+    }
+
+    fn describe(&self) -> &'static str {
+        "packed plan pads no more than `max_padding_pct` percent of \
+         its slots"
+    }
+
+    fn evaluate(&self, setting: &AssaultSetting, obs: &Observation)
+                -> Verdict {
+        if obs.plan_slot_frames == 0 {
+            return Verdict::fail(
+                "destination produced an empty packed plan".into(),
+            );
+        }
+        let pct = obs.padding_pct();
+        let detail = format!(
+            "padding {pct:.1}% vs budget {:.1}% ({} real frames in {} \
+             slots)",
+            setting.max_padding_pct,
+            obs.plan_real_frames,
+            obs.plan_slot_frames
+        );
+        if pct > setting.max_padding_pct {
+            return Verdict::fail(detail);
+        }
+        Verdict::pass(detail)
+    }
+}
+
+/// Every registered evaluator, in `--list-evaluators` order.
+pub fn registry() -> &'static [&'static dyn Evaluator] {
+    static REGISTRY: [&'static dyn Evaluator; 3] =
+        [&ByteIdentity, &LatencySlo, &PaddingBudget];
+    &REGISTRY
+}
+
+/// Case-insensitive lookup by key or alias.
+pub fn lookup(name: &str) -> Option<&'static dyn Evaluator> {
+    let k = name.trim().to_ascii_lowercase();
+    registry()
+        .iter()
+        .copied()
+        .find(|e| e.name() == k || e.aliases().iter().any(|&a| a == k))
+}
+
+/// [`lookup`] that errors with the list of known keys.
+pub fn by_name(name: &str) -> Result<&'static dyn Evaluator> {
+    lookup(name).ok_or_else(|| {
+        let known: Vec<&str> =
+            registry().iter().map(|e| e.name()).collect();
+        Error::Config(format!(
+            "unknown evaluator '{name}' (known: {})",
+            known.join("|")
+        ))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn registry_keys_unique_and_lookup_resolves_aliases() {
+        let mut claimed: std::collections::HashMap<String, &str> =
+            Default::default();
+        for e in registry() {
+            let mut mine: Vec<String> = vec![e.name().to_string()];
+            mine.extend(e.aliases().iter().map(|a| a.to_string()));
+            for spelling in mine {
+                if let Some(other) =
+                    claimed.insert(spelling.clone(), e.name())
+                {
+                    panic!(
+                        "spelling '{spelling}' claimed by both {other} \
+                         and {}",
+                        e.name()
+                    );
+                }
+            }
+            assert!(!e.describe().is_empty());
+        }
+        assert_eq!(lookup("SLO").unwrap().name(), "latency-slo");
+        assert_eq!(lookup("identity").unwrap().name(), "byte-identity");
+        assert_eq!(lookup("padding").unwrap().name(), "padding-budget");
+        let err = by_name("nope").unwrap_err().to_string();
+        assert!(err.contains("latency-slo"), "{err}");
+    }
+
+    fn obs_ok(requests: u64) -> Observation {
+        Observation {
+            requests,
+            bytes: requests * 100,
+            plan_real_frames: 80,
+            plan_slot_frames: 100,
+            latency: LatencyStats::of(&vec![0.001; requests as usize]),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn byte_identity_fails_on_any_mismatch() {
+        let setting = AssaultSetting::default();
+        assert!(ByteIdentity.evaluate(&setting, &obs_ok(8)).pass);
+
+        let mut obs = obs_ok(8);
+        obs.mismatches = 1;
+        let v = ByteIdentity.evaluate(&setting, &obs);
+        assert!(!v.pass);
+        assert!(v.detail.contains("1 mismatched"), "{}", v.detail);
+
+        // Transport failures and refusals also break identity.
+        let mut obs = obs_ok(8);
+        obs.failures = 2;
+        assert!(!ByteIdentity.evaluate(&setting, &obs).pass);
+        let mut obs = obs_ok(8);
+        obs.refused = 1;
+        assert!(!ByteIdentity.evaluate(&setting, &obs).pass);
+
+        // Zero traffic can never demonstrate identity.
+        assert!(!ByteIdentity
+            .evaluate(&setting, &Observation::default())
+            .pass);
+    }
+
+    #[test]
+    fn latency_slo_passes_at_exactly_the_bound() {
+        let setting = AssaultSetting {
+            slo: Duration::from_millis(5),
+            ..AssaultSetting::default()
+        };
+        let mut obs = obs_ok(4);
+
+        // p99 exactly at the bound: within the SLO.
+        obs.latency.p99_s = 0.005;
+        assert!(LatencySlo.evaluate(&setting, &obs).pass);
+
+        // One nanosecond over: breach.
+        obs.latency.p99_s = 0.005 + 1e-9;
+        let v = LatencySlo.evaluate(&setting, &obs);
+        assert!(!v.pass);
+        assert!(v.detail.contains("p99"), "{}", v.detail);
+
+        // No timed requests at all cannot satisfy an SLO.
+        obs.latency = LatencyStats::default();
+        assert!(!LatencySlo.evaluate(&setting, &obs).pass);
+    }
+
+    #[test]
+    fn padding_budget_fails_on_overflow() {
+        let setting = AssaultSetting {
+            max_padding_pct: 25.0,
+            ..AssaultSetting::default()
+        };
+
+        // 20% padding within a 25% budget.
+        let mut obs = obs_ok(4);
+        obs.plan_real_frames = 80;
+        obs.plan_slot_frames = 100;
+        assert!((obs.padding_pct() - 20.0).abs() < 1e-9);
+        assert!(PaddingBudget.evaluate(&setting, &obs).pass);
+
+        // 30% padding overflows it.
+        obs.plan_real_frames = 70;
+        let v = PaddingBudget.evaluate(&setting, &obs);
+        assert!(!v.pass);
+        assert!(v.detail.contains("30.0%"), "{}", v.detail);
+
+        // An empty plan is a failure, not a vacuous pass.
+        obs.plan_slot_frames = 0;
+        assert!(!PaddingBudget.evaluate(&setting, &obs).pass);
+    }
+}

@@ -1,0 +1,48 @@
+//! `bload assault` — declarative scenario + load-test subsystem.
+//!
+//! A config-file-driven load tester over the repo's own data plane,
+//! borrowing relentless's worker/testcase/coalescing shape: a top-level
+//! `[assault]` worker config (scenario name, shared `destinations`
+//! list, an `[assault.setting]` coalescing default) plus repeated
+//! `[[assault.testcase]]` blocks — each naming a destination (a `bload
+//! serve` address, a local shard directory, or the in-memory planned
+//! source), a request budget (`concurrency` replay clients × `repeat`
+//! requests each), a per-request `timeout`, and an *evaluator* that
+//! turns the aggregate observation into a pass/fail verdict. The
+//! schema lives in [`crate::config`] (`AssaultConfig` et al.); the
+//! evaluator registry in [`evaluator`]; the engine in [`worker`].
+//!
+//! ```text
+//! [assault]
+//! name = scenario
+//! destinations = ["127.0.0.1:7440", "/data/agshards"]
+//!
+//! [assault.setting]          # worker default, coalesced per testcase
+//! repeat = 64
+//! concurrency = 256
+//! timeout = 2s
+//!
+//! [[assault.testcase]]
+//! name = replay-identity
+//! destination = @0           # serve daemon
+//! evaluator = byte-identity
+//!
+//! [[assault.testcase]]
+//! name = tail-latency
+//! destination = @0
+//! evaluator = latency-slo
+//! slo = 50ms
+//! ```
+//!
+//! Every request is timed into the process-wide `assault.*` telemetry
+//! block (rendered by `bload top`), each testcase reports p50/p95/p99
+//! request latency plus its verdict, and the whole run packages itself
+//! as a benchkit [`Report`](crate::benchkit::Report) (suite `assault`)
+//! so `bload bench --compare` and the CI bench gate cover load
+//! behavior alongside throughput.
+
+pub mod evaluator;
+pub mod worker;
+
+pub use evaluator::{Evaluator, LatencyStats, Observation, Verdict};
+pub use worker::{run, AssaultOutcome, CaseOutcome};

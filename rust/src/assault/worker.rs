@@ -1,0 +1,539 @@
+//! The assault engine: a pool of replay clients per testcase, run
+//! concurrently, each request timed into [`crate::telemetry`] and the
+//! per-testcase aggregate judged by the configured
+//! [`Evaluator`](super::evaluator::Evaluator).
+//!
+//! Execution shape (relentless's worker/testcase model, threaded):
+//! every `[[assault.testcase]]` runs on its own scoped thread, and each
+//! spawns `concurrency` replay clients. A `serve://` client is admitted
+//! once through [`connect_handshake`] — backing off while the server
+//! sheds load — and then *reuses* that connection for its whole request
+//! budget, so pool pressure costs one dial per client, not one per
+//! request. `shards://` clients hammer a shared
+//! [`ShardPool`](crate::dataset::shardstore::ShardPool) (raw record
+//! reads, the disk-side equivalent), and `planned` clients materialize
+//! videos straight from the generator (no I/O — the latency floor).
+//!
+//! Requests walk the destination's manifest round-robin with a
+//! per-client stride, so `concurrency × repeat` requests cover the
+//! record space evenly regardless of pool size. The scenario's
+//! `[dataset]` section must describe the generator family behind the
+//! destination: its geometry is checked against the served/stored
+//! manifest, and `byte-identity` testcases regenerate every record
+//! locally from the manifest seed as the comparison reference.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::benchkit::{BenchResult, Bencher, Report, RunMeta};
+use crate::config::{AssaultDestination, AssaultTestcase,
+                    ExperimentConfig};
+use crate::dataset::shardstore::ShardPool;
+use crate::dataset::store::encode_record;
+use crate::dataset::synthetic::{generate, GeneratorSpec};
+use crate::dataset::{Split, VideoMeta};
+use crate::error::{Error, Result};
+use crate::net::{connect_handshake, ClientConfig, RemoteClient};
+use crate::packing::pack;
+use crate::telemetry::{self, names};
+
+use super::evaluator::{self, LatencyStats, Observation, Verdict};
+
+/// One testcase's full result: what the clients observed plus the
+/// evaluator's judgement.
+#[derive(Debug, Clone)]
+pub struct CaseOutcome {
+    pub name: String,
+    /// Destination literal (display form).
+    pub destination: String,
+    /// Canonical evaluator key.
+    pub evaluator: &'static str,
+    pub concurrency: usize,
+    pub observation: Observation,
+    pub verdict: Verdict,
+    /// Wall-clock of the whole testcase (admission + requests).
+    pub wall_s: f64,
+}
+
+impl CaseOutcome {
+    /// One report line: traffic counts, tail latency, verdict.
+    pub fn line(&self) -> String {
+        let o = &self.observation;
+        format!(
+            "case {:<18} {:<24} clients {:<4} req {} ok {} refused {} \
+             fail {}  p50 {:.3}ms p95 {:.3}ms p99 {:.3}ms  {} {}: {}",
+            self.name,
+            self.destination,
+            self.concurrency,
+            o.requests,
+            o.ok(),
+            o.refused,
+            o.failures,
+            o.latency.p50_s * 1e3,
+            o.latency.p95_s * 1e3,
+            o.latency.p99_s * 1e3,
+            self.evaluator,
+            if self.verdict.pass { "PASS" } else { "FAIL" },
+            self.verdict.detail
+        )
+    }
+}
+
+/// One scenario run: every testcase's outcome, in config order.
+#[derive(Debug, Clone)]
+pub struct AssaultOutcome {
+    /// Scenario name (`[assault].name`).
+    pub scenario: String,
+    pub cases: Vec<CaseOutcome>,
+    pub wall_s: f64,
+}
+
+impl AssaultOutcome {
+    /// Did every testcase's evaluator pass?
+    pub fn passed(&self) -> bool {
+        self.cases.iter().all(|c| c.verdict.pass)
+    }
+
+    /// Number of failed testcases.
+    pub fn failed(&self) -> usize {
+        self.cases.iter().filter(|c| !c.verdict.pass).count()
+    }
+
+    /// The full human-readable scenario report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for c in &self.cases {
+            out.push_str(&c.line());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "scenario '{}': {}/{} testcase(s) passed in {:.2}s\n",
+            self.scenario,
+            self.cases.len() - self.failed(),
+            self.cases.len(),
+            self.wall_s
+        ));
+        out
+    }
+
+    /// Package the run as a benchkit [`Report`] (suite `assault`, one
+    /// entry per testcase, per-request latency stats) so `bload bench
+    /// --compare` and the CI bench gate cover load behavior. p99 lives
+    /// in the embedded telemetry snapshot (`assault.request_s`) — the
+    /// report row format carries mean/p50/p95/min.
+    pub fn to_report(&self) -> Report {
+        let bench = Bencher {
+            warmup: 0,
+            iters: 1,
+        };
+        let mut report =
+            Report::new(RunMeta::capture("assault", &bench, false));
+        let results = self
+            .cases
+            .iter()
+            .map(|c| {
+                let o = &c.observation;
+                let per_req_bytes = if o.ok() > 0 {
+                    o.bytes as f64 / o.ok() as f64
+                } else {
+                    0.0
+                };
+                BenchResult {
+                    name: format!("assault/{}/request", c.name),
+                    iters: o.latency.count.max(1) as usize,
+                    mean_s: o.latency.mean_s,
+                    p50_s: o.latency.p50_s,
+                    p95_s: o.latency.p95_s,
+                    min_s: o.latency.min_s,
+                    throughput: (per_req_bytes > 0.0)
+                        .then(|| (per_req_bytes, "bytes".to_string())),
+                }
+            })
+            .collect();
+        report.push_suite("assault", results);
+        report.telemetry = Some(telemetry::snapshot().to_value());
+        report
+    }
+}
+
+/// Run the scenario in `cfg.assault`: every testcase concurrently, each
+/// with its own replay-client pool, judged by its evaluator.
+pub fn run(cfg: &ExperimentConfig) -> Result<AssaultOutcome> {
+    let acfg = &cfg.assault;
+    if acfg.testcases.is_empty() {
+        return Err(Error::Config(
+            "assault: scenario has no [[assault.testcase]] blocks".into(),
+        ));
+    }
+    let t0 = Instant::now();
+    let results: Vec<Result<CaseOutcome>> = std::thread::scope(|s| {
+        let handles: Vec<_> = acfg
+            .testcases
+            .iter()
+            .map(|case| s.spawn(move || run_case(cfg, case)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join().unwrap_or_else(|_| {
+                    Err(Error::Runtime(
+                        "assault: testcase thread panicked".into(),
+                    ))
+                })
+            })
+            .collect()
+    });
+    let cases = results.into_iter().collect::<Result<Vec<_>>>()?;
+    Ok(AssaultOutcome {
+        scenario: acfg.name.clone(),
+        cases,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// What one replay client tallied (merged into the [`Observation`]).
+#[derive(Debug, Default)]
+struct ClientTally {
+    latencies: Vec<f64>,
+    requests: u64,
+    failures: u64,
+    refused: u64,
+    mismatches: u64,
+    bytes: u64,
+}
+
+/// The resolved request path of one testcase; shared by reference
+/// across its client threads (all entry points take `&self`).
+enum Target {
+    Serve { addr: String, ccfg: ClientConfig },
+    Shards(ShardPool),
+    Planned(GeneratorSpec),
+}
+
+fn run_case(cfg: &ExperimentConfig,
+            case: &AssaultTestcase) -> Result<CaseOutcome> {
+    let t0 = Instant::now();
+    let setting = &case.setting;
+    let evaluator = evaluator::by_name(&setting.evaluator)?;
+    let label = |m: &str| {
+        Error::Config(format!("assault testcase '{}': {m}", case.name))
+    };
+    let ccfg = ClientConfig {
+        connect_timeout: setting.timeout,
+        io_timeout: setting.timeout,
+        ..ClientConfig::default()
+    };
+
+    // Resolve the destination to (manifest seed, metas, geometry) plus
+    // the request path the clients will hammer.
+    let (seed, videos, geometry, target) = match &case.destination {
+        AssaultDestination::Serve(addr) => {
+            let (probe, manifest) = connect_handshake(addr, &ccfg)?;
+            drop(probe);
+            (manifest.seed, manifest.videos, manifest.geometry,
+             Target::Serve {
+                 addr: addr.clone(),
+                 ccfg: ccfg.clone(),
+             })
+        }
+        AssaultDestination::Shards(dir) => {
+            let pool = ShardPool::open(dir)?;
+            (pool.seed(), pool.videos().to_vec(), pool.geometry(),
+             Target::Shards(pool))
+        }
+        AssaultDestination::Planned => {
+            let split = generate(&cfg.dataset, cfg.seed).train;
+            let geometry = (cfg.dataset.objects, cfg.dataset.feat_dim,
+                            cfg.dataset.classes);
+            (cfg.seed, split.videos, geometry,
+             Target::Planned(split.spec))
+        }
+    };
+    if videos.is_empty() {
+        return Err(label("destination serves no videos"));
+    }
+    let want = (cfg.dataset.objects, cfg.dataset.feat_dim,
+                cfg.dataset.classes);
+    if geometry != want {
+        return Err(label(&format!(
+            "destination geometry {geometry:?} != scenario [dataset] \
+             geometry {want:?} (the scenario's dataset section must \
+             describe the served generator family)"
+        )));
+    }
+
+    // The local reference plan: same split a byte-identical consumer
+    // would rebuild. Padding stats come from packing it with the
+    // scenario's strategy; byte-identity testcases additionally
+    // regenerate every record as the comparison reference.
+    let spec = GeneratorSpec::new(&cfg.dataset, seed);
+    let split = Split {
+        videos: videos.clone(),
+        spec: spec.clone(),
+    };
+    let packed = pack(cfg.packing.strategy.packer(), &split,
+                      &cfg.packing, cfg.seed)?;
+    let reference: Option<HashMap<u32, Vec<u8>>> =
+        (evaluator.name() == "byte-identity"
+            && !matches!(case.destination, AssaultDestination::Planned))
+            .then(|| {
+                videos
+                    .iter()
+                    .map(|&m| (m.id, encode_record(&spec.materialize(m))))
+                    .collect()
+            });
+
+    // The replay-client pool.
+    let concurrency = setting.concurrency;
+    let repeat = setting.repeat;
+    let tallies: Vec<ClientTally> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..concurrency)
+            .map(|client| {
+                let target = &target;
+                let videos = &videos;
+                let reference = &reference;
+                s.spawn(move || {
+                    run_client(client, concurrency, repeat, target,
+                               videos, reference)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| {
+                // A panicked client is `repeat` failed requests, not a
+                // lost testcase.
+                ClientTally {
+                    requests: repeat as u64,
+                    failures: repeat as u64,
+                    ..Default::default()
+                }
+            }))
+            .collect()
+    });
+
+    // Aggregate + record the process-wide metric block.
+    let mut obs = Observation {
+        plan_real_frames: packed.stats.frames_kept as u64,
+        plan_slot_frames: packed.stats.total_slots as u64,
+        ..Default::default()
+    };
+    let mut latencies = Vec::new();
+    for t in tallies {
+        obs.requests += t.requests;
+        obs.failures += t.failures;
+        obs.refused += t.refused;
+        obs.mismatches += t.mismatches;
+        obs.bytes += t.bytes;
+        latencies.extend(t.latencies);
+    }
+    obs.latency = LatencyStats::of(&latencies);
+    telemetry::counter(names::ASSAULT_REQUESTS).add(obs.requests);
+    telemetry::counter(names::ASSAULT_FAILURES).add(obs.failures);
+    telemetry::counter(names::ASSAULT_REFUSED).add(obs.refused);
+    telemetry::counter(names::ASSAULT_BYTES).add(obs.bytes);
+    telemetry::counter(names::ASSAULT_CASES).inc();
+
+    let verdict = evaluator.evaluate(setting, &obs);
+    if !verdict.pass {
+        telemetry::counter(names::ASSAULT_CASES_FAILED).inc();
+    }
+    Ok(CaseOutcome {
+        name: case.name.clone(),
+        destination: case.destination.to_string(),
+        evaluator: evaluator.name(),
+        concurrency,
+        observation: obs,
+        verdict,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// One replay client: `repeat` requests against the target, striding
+/// the manifest so the pool covers it evenly.
+fn run_client(client: usize, concurrency: usize, repeat: usize,
+              target: &Target, videos: &[VideoMeta],
+              reference: &Option<HashMap<u32, Vec<u8>>>) -> ClientTally {
+    let t_clients = telemetry::gauge(names::ASSAULT_CLIENTS);
+    let t_request_s = telemetry::histogram(names::ASSAULT_REQUEST_S);
+    t_clients.add(1.0);
+    let mut tally = ClientTally::default();
+
+    // serve:// clients are admitted once and reuse the connection.
+    let mut conn: Option<RemoteClient> = None;
+    if let Target::Serve { addr, ccfg } = target {
+        let t0 = Instant::now();
+        match connect_handshake(addr, ccfg) {
+            Ok((c, _manifest)) => {
+                telemetry::histogram(names::ASSAULT_CONNECT_S)
+                    .record(t0.elapsed().as_secs_f64());
+                conn = Some(c);
+            }
+            Err(e) => {
+                // The whole request budget is lost; classify it by the
+                // terminal error so over-capacity shows as refused.
+                tally.requests = repeat as u64;
+                if matches!(e, Error::Refused(_)) {
+                    tally.refused = repeat as u64;
+                } else {
+                    tally.failures = repeat as u64;
+                }
+                t_clients.add(-1.0);
+                return tally;
+            }
+        }
+    }
+
+    for r in 0..repeat {
+        let meta = videos[(client + r * concurrency) % videos.len()];
+        tally.requests += 1;
+        let t0 = Instant::now();
+        let fetched: Result<Vec<u8>> = match target {
+            Target::Serve { addr, ccfg } => {
+                let res = conn
+                    .as_mut()
+                    .expect("admitted above")
+                    .get_video(meta.id);
+                match res {
+                    Ok(bytes) => Ok(bytes),
+                    Err(e) => {
+                        // The stream may be mid-frame — re-admit before
+                        // the next request rather than reusing it.
+                        match connect_handshake(addr, ccfg) {
+                            Ok((fresh, _)) => conn = Some(fresh),
+                            Err(_) => {
+                                // Count the rest of the budget as the
+                                // original fault and stop.
+                                let rest = (repeat - r - 1) as u64;
+                                tally.requests += rest;
+                                if matches!(e, Error::Refused(_)) {
+                                    tally.refused += rest + 1;
+                                } else {
+                                    tally.failures += rest + 1;
+                                }
+                                break;
+                            }
+                        }
+                        Err(e)
+                    }
+                }
+            }
+            Target::Shards(pool) => {
+                pool.record(meta.id).map(|(bytes, _crc)| bytes)
+            }
+            Target::Planned(spec) => {
+                Ok(encode_record(&spec.materialize(meta)))
+            }
+        };
+        match fetched {
+            Ok(bytes) => {
+                let dt = t0.elapsed().as_secs_f64();
+                tally.latencies.push(dt);
+                t_request_s.record(dt);
+                tally.bytes += bytes.len() as u64;
+                if let Some(refs) = reference {
+                    if refs.get(&meta.id) != Some(&bytes) {
+                        tally.mismatches += 1;
+                    }
+                }
+            }
+            Err(Error::Refused(_)) => tally.refused += 1,
+            Err(_) => tally.failures += 1,
+        }
+    }
+    t_clients.add(-1.0);
+    tally
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AssaultSetting;
+
+    fn planned_cfg(cases: Vec<AssaultTestcase>) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default_config();
+        cfg.dataset = cfg.dataset.scaled(0.004);
+        cfg.assault.name = "unit".into();
+        cfg.assault.testcases = cases;
+        cfg
+    }
+
+    fn planned_case(name: &str, setting: AssaultSetting)
+                    -> AssaultTestcase {
+        AssaultTestcase {
+            name: name.into(),
+            destination: AssaultDestination::Planned,
+            setting,
+        }
+    }
+
+    #[test]
+    fn empty_scenario_is_an_error() {
+        let err = run(&planned_cfg(Vec::new())).unwrap_err().to_string();
+        assert!(err.contains("no [[assault.testcase]]"), "{err}");
+    }
+
+    #[test]
+    fn planned_scenario_runs_and_reports() {
+        let _g = telemetry::test_guard();
+        telemetry::reset();
+        let slo = AssaultSetting {
+            evaluator: "latency-slo".into(),
+            slo: std::time::Duration::from_secs(120),
+            repeat: 3,
+            concurrency: 2,
+            ..AssaultSetting::default()
+        };
+        // One nanosecond: unachievable, so this case must FAIL and the
+        // scenario must report it without erroring out.
+        let tight = AssaultSetting {
+            slo: std::time::Duration::from_nanos(1),
+            ..slo.clone()
+        };
+        let outcome = run(&planned_cfg(vec![
+            planned_case("floor", slo),
+            planned_case("breach", tight),
+        ]))
+        .unwrap();
+        assert_eq!(outcome.cases.len(), 2);
+        assert!(outcome.cases[0].verdict.pass,
+                "{}", outcome.cases[0].verdict.detail);
+        assert!(!outcome.cases[1].verdict.pass);
+        assert!(!outcome.passed());
+        assert_eq!(outcome.failed(), 1);
+        assert_eq!(outcome.cases[0].observation.requests, 6);
+        assert!(outcome.cases[0].observation.latency.count > 0);
+
+        // Telemetry recorded both cases' traffic.
+        let snap = telemetry::snapshot();
+        assert_eq!(snap.counter(names::ASSAULT_CASES), 2);
+        assert_eq!(snap.counter(names::ASSAULT_CASES_FAILED), 1);
+        assert_eq!(snap.counter(names::ASSAULT_REQUESTS), 12);
+
+        // And the report round-trips through benchkit.
+        let report = outcome.to_report();
+        assert!(report.get("assault/floor/request").is_some());
+        assert!(report.telemetry.is_some());
+        let text = outcome.render();
+        assert!(text.contains("FAIL"), "{text}");
+        assert!(text.contains("1/2") || text.contains("passed"),
+                "{text}");
+    }
+
+    #[test]
+    fn planned_byte_identity_passes() {
+        let _g = telemetry::test_guard();
+        telemetry::reset();
+        let s = AssaultSetting {
+            repeat: 2,
+            concurrency: 2,
+            ..AssaultSetting::default()
+        };
+        let outcome =
+            run(&planned_cfg(vec![planned_case("ident", s)])).unwrap();
+        assert!(outcome.passed(), "{}", outcome.render());
+        assert_eq!(outcome.cases[0].evaluator, "byte-identity");
+        assert!(outcome.cases[0].observation.bytes > 0);
+    }
+}

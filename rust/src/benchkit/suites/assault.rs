@@ -1,0 +1,131 @@
+//! Assault suite: the scenario load-tester measured as a benchmark —
+//! one single-testcase scenario per destination kind (planned source,
+//! local shard set, loopback serve daemon), each run end-to-end through
+//! [`crate::assault::run`] with its evaluator verdict asserted.
+//!
+//! Putting the load-tester itself under the bench gate means a
+//! regression in replay-client throughput or admission cost shows up in
+//! `bload bench --compare` like any other data-plane slowdown.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::benchkit::{BenchResult, Bencher};
+use crate::config::{AssaultConfig, AssaultDestination, AssaultSetting,
+                    AssaultTestcase, ExperimentConfig};
+use crate::dataset::shardstore::{ShardPool, ShardSetWriter};
+use crate::dataset::synthetic::generate;
+use crate::error::Result;
+use crate::net::Server;
+
+use super::{Suite, SuiteOptions};
+
+/// See the module docs.
+#[derive(Debug)]
+pub struct Assault;
+
+/// One-testcase scenario over `base`'s dataset/packing sections.
+fn scenario(base: &ExperimentConfig, name: &str,
+            destination: AssaultDestination,
+            setting: AssaultSetting) -> ExperimentConfig {
+    let mut cfg = base.clone();
+    cfg.assault = AssaultConfig {
+        name: format!("bench-{name}"),
+        destinations: Vec::new(),
+        setting: setting.clone(),
+        testcases: vec![AssaultTestcase {
+            name: name.to_string(),
+            destination,
+            setting,
+        }],
+    };
+    cfg
+}
+
+impl Suite for Assault {
+    fn name(&self) -> &'static str {
+        "assault"
+    }
+
+    fn describe(&self) -> &'static str {
+        "scenario load-tester: planned/shards/serve replay pools with verdicts"
+    }
+
+    fn run(&self, bench: &Bencher, opts: &SuiteOptions)
+           -> Result<Vec<BenchResult>> {
+        let (scale, concurrency, repeat) =
+            if opts.smoke { (0.004, 2, 4) } else { (0.02, 8, 16) };
+        let requests = (concurrency * repeat) as f64;
+
+        let mut base = ExperimentConfig::default_config();
+        base.dataset = base.dataset.scaled(scale);
+        let split = generate(&base.dataset, base.seed).train;
+
+        let scratch = std::env::temp_dir().join(format!(
+            "bload_bench_assault_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&scratch).ok();
+        std::fs::create_dir_all(&scratch)
+            .map_err(|e| crate::error::Error::io(scratch.display(), e))?;
+        let shard_dir = scratch.join("set");
+        ShardSetWriter::new(&shard_dir, base.seed, 2)?.write(&split)?;
+
+        let mut scfg = base.serve.clone();
+        scfg.addr = "127.0.0.1:0".into();
+        // Replay clients hold their connection for the whole budget;
+        // keep the cap comfortably above the pool.
+        scfg.max_connections = concurrency * 2 + 8;
+        let pool = Arc::new(ShardPool::open(&shard_dir)?);
+        let server = Server::start(pool, &scfg)?;
+        let addr = server.addr().to_string();
+
+        let setting = AssaultSetting {
+            repeat,
+            concurrency,
+            timeout: Duration::from_secs(10),
+            ..AssaultSetting::default()
+        };
+
+        let planned = scenario(
+            &base,
+            "planned",
+            AssaultDestination::Planned,
+            AssaultSetting {
+                evaluator: "latency-slo".into(),
+                slo: Duration::from_secs(120),
+                ..setting.clone()
+            },
+        );
+        let shards = scenario(
+            &base,
+            "shards",
+            AssaultDestination::Shards(shard_dir),
+            AssaultSetting {
+                evaluator: "padding-budget".into(),
+                ..setting.clone()
+            },
+        );
+        let serve = scenario(
+            &base,
+            "serve",
+            AssaultDestination::Serve(addr),
+            setting,
+        );
+
+        let mut out = Vec::new();
+        for (name, cfg) in [("assault/planned", &planned),
+                            ("assault/shards", &shards),
+                            ("assault/serve", &serve)] {
+            out.push(bench.run(name, requests, "requests", || {
+                let outcome = crate::assault::run(cfg).unwrap();
+                assert!(outcome.passed(), "{}", outcome.render());
+                outcome.cases[0].observation.requests
+            }));
+        }
+
+        server.shutdown()?;
+        std::fs::remove_dir_all(&scratch).ok();
+        Ok(out)
+    }
+}

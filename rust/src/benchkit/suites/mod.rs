@@ -19,6 +19,7 @@
 //! artifacts ([`Suite::skip_reason`]) skip themselves cleanly instead
 //! of failing the run.
 
+pub mod assault;
 pub mod ddp;
 pub mod loader;
 pub mod packing;
@@ -64,12 +65,13 @@ pub trait Suite: Sync {
 /// All registered suites, hot-path suites first.
 /// Adding a suite = its module + one line here (+ a thin bench binary).
 pub fn registry() -> &'static [&'static dyn Suite] {
-    static REGISTRY: [&'static dyn Suite; 11] = [
+    static REGISTRY: [&'static dyn Suite; 12] = [
         &packing::Packing,
         &packing::OnlinePacking,
         &loader::Loader,
         &shard_replay::ShardReplay,
         &remote_replay::RemoteReplay,
+        &assault::Assault,
         &ddp::Allreduce,
         &ddp::Fig2Deadlock,
         &table1::Table1Pipeline,
@@ -179,7 +181,7 @@ mod tests {
                 "lookup is case-insensitive"
             );
         }
-        assert_eq!(registry().len(), 11, "one suite per bench binary");
+        assert_eq!(registry().len(), 12, "one suite per bench binary");
         let e = by_name("nope").unwrap_err().to_string();
         assert!(e.contains("packing"), "error lists known suites: {e}");
     }

@@ -661,8 +661,64 @@ pub fn bench(args: &mut Args) -> Result<i32> {
     Ok(0)
 }
 
+/// `bload assault --config FILE [--json PATH] | --list-evaluators`
+///
+/// The declarative load-tester ([`crate::assault`]): load a scenario
+/// config (`[assault]` worker + `[[assault.testcase]]` blocks), run
+/// every testcase's replay-client pool concurrently, print per-testcase
+/// request tail latency + evaluator verdicts, and exit nonzero when any
+/// testcase fails — so a scenario file *is* a CI gate.
+///
+/// * `--json PATH` also saves the run as a benchkit [`Report`] (suite
+///   `assault`, telemetry embedded) for `bload bench --compare`.
+/// * `--list-evaluators` prints the evaluator registry and exits.
+pub fn assault(args: &mut Args) -> Result<i32> {
+    let list = args.flag_bool("list-evaluators");
+    let config = args.flag_str("config", "");
+    let json = args.flag_str("json", "");
+    args.finish()?;
+
+    if list {
+        let mut t = TextTable::new(&["evaluator", "aliases",
+                                     "description"]);
+        for &e in crate::assault::evaluator::registry() {
+            t.row(&[
+                e.name().to_string(),
+                e.aliases().join(","),
+                e.describe().to_string(),
+            ]);
+        }
+        println!("{}", t.render());
+        println!(
+            "{} evaluators registered; each [[assault.testcase]] names \
+             one via its `evaluator` key.",
+            crate::assault::evaluator::registry().len()
+        );
+        return Ok(0);
+    }
+    if config.is_empty() {
+        return Err(Error::Config(
+            "assault: --config FILE (a scenario with [assault] and \
+             [[assault.testcase]] blocks) is required"
+                .into(),
+        ));
+    }
+    let cfg = crate::config::load(&config)?;
+    // Fresh counters so the printed verdicts and the embedded telemetry
+    // describe exactly this scenario run.
+    telemetry::reset();
+    let outcome = crate::assault::run(&cfg)?;
+    print!("{}", outcome.render());
+    if !json.is_empty() {
+        outcome.to_report().save(&json)?;
+        println!("wrote {json}");
+    }
+    Ok(if outcome.passed() { 0 } else { 1 })
+}
+
 /// `bload top [--snapshot [--out PATH]] [--list] [--scale F] [--seed N]
-///            [--ranks N] [--shards N] [--refresh-ms N]`
+///            [--ranks N] [--shards N] [--refresh-ms N]
+///            [--remote HOST:PORT [--polls N]]`
 ///
 /// Live telemetry dashboard over [`crate::telemetry`]. Drives the
 /// observability scenario ([`crate::harness::observe`]: streaming
@@ -675,10 +731,17 @@ pub fn bench(args: &mut Args) -> Result<i32> {
 ///   [`telemetry::Snapshot`] as stable format-1 JSON (stdout, or
 ///   `--out PATH`) for CI artifacts and diffing.
 /// * `--list` prints the metric-block registry and exits.
+/// * `--remote HOST:PORT` skips the local pipeline entirely and polls a
+///   running `bload serve` daemon's STATS opcode instead, rendering the
+///   `serve` metric block per poll (`--snapshot` emits one poll as
+///   format-1 JSON; `--polls N` bounds the live loop, 0 = until
+///   interrupted).
 pub fn top(args: &mut Args) -> Result<i32> {
     let list = args.flag_bool("list");
     let snapshot_mode = args.flag_bool("snapshot");
     let out = args.flag_str("out", "");
+    let remote = args.flag_str("remote", "");
+    let polls = args.flag_u64("polls", 0)?;
     let defaults = observe::ObserveOptions::default();
     let opts = observe::ObserveOptions {
         scale: args.flag_f64("scale", defaults.scale)?,
@@ -688,6 +751,12 @@ pub fn top(args: &mut Args) -> Result<i32> {
     };
     let refresh_ms = args.flag_u64("refresh-ms", 250)?;
     args.finish()?;
+    if polls != 0 && remote.is_empty() {
+        return Err(Error::Config(
+            "--polls needs --remote (bounds the remote polling loop)"
+                .into(),
+        ));
+    }
 
     if list {
         let mut t = TextTable::new(&["block", "aliases", "description"]);
@@ -711,6 +780,10 @@ pub fn top(args: &mut Args) -> Result<i32> {
             "--out needs --snapshot (where to write the JSON snapshot)"
                 .into(),
         ));
+    }
+    if !remote.is_empty() {
+        return top_remote(&remote, snapshot_mode, &out, refresh_ms,
+                          polls);
     }
 
     // A fresh registry so the emitted numbers describe exactly this run.
@@ -810,6 +883,74 @@ fn render_top_frame(snap: &telemetry::Snapshot,
 fn flush_stdout() {
     use std::io::Write;
     std::io::stdout().flush().ok();
+}
+
+/// `bload top --remote HOST:PORT`: observe a running `bload serve`
+/// daemon from the outside. Each poll issues the wire protocol's STATS
+/// opcode and maps the reply onto the canonical `net.*` counter names,
+/// so the standard `serve` metric block renders it (metrics the reply
+/// does not carry — active connections, request latency — show as `-`,
+/// per the block grammar).
+fn top_remote(addr: &str, snapshot_mode: bool, out: &str,
+              refresh_ms: u64, polls: u64) -> Result<i32> {
+    let ccfg = crate::net::ClientConfig::default();
+    let mut client = crate::net::RemoteClient::connect(addr, &ccfg)?;
+
+    if snapshot_mode {
+        let snap = remote_stats_snapshot(&mut client)?;
+        let text = crate::jsonio::to_string_pretty(&snap.to_value());
+        if out.is_empty() {
+            println!("{text}");
+        } else {
+            std::fs::write(out, &text).map_err(|e| Error::io(out, e))?;
+            println!("wrote remote telemetry snapshot ({addr}) to {out}");
+        }
+        return Ok(0);
+    }
+
+    let block = telemetry::blocks::by_name("serve")?;
+    let mut n = 0u64;
+    loop {
+        let snap = remote_stats_snapshot(&mut client)?;
+        let live = polls == 0;
+        if live {
+            print!("\x1b[2J\x1b[H");
+        }
+        println!(
+            "bload top — remote {addr}{}",
+            if live { "  (ctrl-c to quit)" } else { "" }
+        );
+        println!("  {:<10} {}", block.name(), block.render(&snap));
+        flush_stdout();
+        n += 1;
+        if polls != 0 && n >= polls {
+            return Ok(0);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(
+            refresh_ms.max(20),
+        ));
+    }
+}
+
+/// One STATS poll as a [`telemetry::Snapshot`] under the canonical
+/// `net.*` names — the server's own counters, not this process's.
+fn remote_stats_snapshot(client: &mut crate::net::RemoteClient)
+                         -> Result<telemetry::Snapshot> {
+    let stats = client.stats()?;
+    let mut snap = telemetry::Snapshot::default();
+    snap.counters.insert(
+        telemetry::names::NET_CONNECTIONS.to_string(),
+        stats.connections,
+    );
+    snap.counters.insert(
+        telemetry::names::NET_REQUESTS.to_string(),
+        stats.requests,
+    );
+    snap.counters.insert(
+        telemetry::names::NET_BYTES_SERVED.to_string(),
+        stats.bytes_served,
+    );
+    Ok(snap)
 }
 
 /// `bload serve --dir DIR [--addr HOST:PORT] [--addr-file PATH]

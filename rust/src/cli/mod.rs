@@ -23,6 +23,9 @@
 //!   bench          unified benchmark runner (suites, JSON reports,
 //!                  baseline comparison)
 //!   top            live telemetry dashboard / JSON metric snapshots
+//!                  (--remote polls a serve daemon's STATS)
+//!   assault        declarative scenario load-tester with evaluator
+//!                  verdicts (exits nonzero on failure)
 //! ```
 
 pub mod args;
@@ -63,6 +66,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "ablation" => commands::ablation(&mut args),
         "bench" => commands::bench(&mut args),
         "top" => commands::top(&mut args),
+        "assault" => commands::assault(&mut args),
         other => {
             eprintln!("unknown command '{other}'\n{}", help());
             Ok(2)
@@ -108,7 +112,11 @@ CRC verification) or --bench the shard scenario (--shards N --readers N)
 exits nonzero on regressions beyond --threshold/--p50-threshold)
     top            live telemetry dashboard over the instrumented \
 pipeline (--refresh-ms N); --snapshot [--out PATH] emits format-1 JSON; \
---list shows the metric-block registry
+--list shows the metric-block registry; --remote HOST:PORT polls a \
+running serve daemon's STATS instead (--polls N bounds the loop)
+    assault        scenario load-tester (--config FILE runs every \
+[[assault.testcase]], prints p50/p95/p99 + verdicts, exits nonzero on \
+any failure; --json PATH saves a benchkit report; --list-evaluators)
 
 STREAMING MODE:
     `bload ingest` runs the online packing service: sequences arrive from
@@ -161,6 +169,19 @@ OBSERVABILITY:
     --snapshot` runs the same pipeline headless and emits the metric
     registry as stable format-1 JSON for CI artifacts; `bload bench`
     embeds the same snapshot under the report's `telemetry` key.
+
+LOAD TESTING:
+    `bload assault --config FILE` runs a declarative load-test scenario:
+    an `[assault]` worker section (scenario name, shared destinations,
+    an `[assault.setting]` coalescing default) plus repeated
+    `[[assault.testcase]]` blocks, each pointing a pool of concurrent
+    replay clients at a destination — a `bload serve` address, a local
+    shard directory, or `planned` (the in-memory generator) — and
+    judging the aggregate observation with an evaluator
+    (byte-identity | latency-slo | padding-budget). Per-testcase
+    p50/p95/p99 request latency and PASS/FAIL verdicts print as they
+    land; the exit code gates CI; `--json` saves a benchkit report the
+    `bload bench --compare` baseline machinery understands.
 
 COMMON FLAGS:
     --seed N           PRNG seed (default 0)

@@ -9,7 +9,8 @@ mod schema;
 
 pub use reader::Reader;
 pub use schema::{
-    parse_duration, DatasetConfig, DdpConfig, EvalConfig, ExperimentConfig,
+    parse_duration, AssaultConfig, AssaultDestination, AssaultSetting,
+    AssaultTestcase, DatasetConfig, DdpConfig, EvalConfig, ExperimentConfig,
     LoaderConfig, PackingConfig, RuntimeConfig, ServeConfig, StrategyName,
     TrainConfig,
 };

@@ -96,6 +96,33 @@ impl<'a> Reader<'a> {
         }
     }
 
+    /// Homogeneous string arrays (`dests = ["a", "b"]`).
+    pub fn strings(&mut self, key: &'static str,
+                   default: &[&str]) -> Result<Vec<String>> {
+        match self.value(key) {
+            None => Ok(default.iter().map(|s| s.to_string()).collect()),
+            Some(v) => {
+                let arr = v.as_array().ok_or_else(|| {
+                    self.err(key, format!(
+                        "key '{key}' expects an array of strings, got {}",
+                        v.type_name()
+                    ))
+                })?;
+                arr.iter()
+                    .map(|e| {
+                        e.as_str().map(str::to_string).ok_or_else(|| {
+                            self.err(key, format!(
+                                "key '{key}' expects an array of strings, \
+                                 got a {} element",
+                                e.type_name()
+                            ))
+                        })
+                    })
+                    .collect()
+            }
+        }
+    }
+
     /// After reading every expected key, reject unknown ones (with a
     /// nearest-known-key suggestion).
     pub fn finish(self) -> Result<()> {
@@ -155,6 +182,18 @@ mod tests {
         assert_eq!(r.string("z", "").unwrap(), "hi");
         assert_eq!(r.usize("missing", 7).unwrap(), 7);
         assert!(r.bool("flag", true).unwrap());
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn string_arrays_with_defaults_and_type_errors() {
+        let doc = parse_doc(
+            "t", "[s]\na = [\"x\", \"y\"]\nb = [1, 2]\n").unwrap();
+        let mut r = Reader::new(&doc, "s");
+        assert_eq!(r.strings("a", &[]).unwrap(), vec!["x", "y"]);
+        assert_eq!(r.strings("missing", &["d"]).unwrap(), vec!["d"]);
+        let err = r.strings("b", &[]).unwrap_err().to_string();
+        assert!(err.contains("'b'"), "{err}");
         r.finish().unwrap();
     }
 

@@ -474,6 +474,267 @@ impl RuntimeConfig {
     }
 }
 
+/// Per-testcase execution knobs for `bload assault`, with coalescing
+/// defaults (relentless's `Setting` design): the built-in defaults are
+/// overridden by `[assault.setting]`, which is in turn overridden by
+/// keys set directly inside a `[[assault.testcase]]` block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AssaultSetting {
+    /// Requests issued per replay client.
+    pub repeat: usize,
+    /// Concurrent replay clients for the testcase.
+    pub concurrency: usize,
+    /// Per-request timeout (socket timeouts on serve destinations).
+    pub timeout: Duration,
+    /// Verdict evaluator key (see `bload assault --list-evaluators`).
+    pub evaluator: String,
+    /// Latency bound for the `latency-slo` evaluator.
+    pub slo: Duration,
+    /// Padding ceiling (percent) for the `padding-budget` evaluator.
+    pub max_padding_pct: f64,
+}
+
+impl Default for AssaultSetting {
+    fn default() -> AssaultSetting {
+        AssaultSetting {
+            repeat: 8,
+            concurrency: 4,
+            timeout: Duration::from_secs(2),
+            evaluator: "byte-identity".to_string(),
+            slo: Duration::from_millis(100),
+            max_padding_pct: 60.0,
+        }
+    }
+}
+
+impl AssaultSetting {
+    /// Read setting keys from `r`'s section, falling back to `base` for
+    /// absent keys — this one function *is* the coalescing rule.
+    fn read(r: &mut Reader, label: &str,
+            base: &AssaultSetting) -> Result<AssaultSetting> {
+        let dur = |key: &str, raw: &str| {
+            parse_duration(raw)
+                .map_err(|e| Error::Config(format!("{label}.{key}: {e}")))
+        };
+        // Durations inherit via an empty-string sentinel (a real
+        // duration literal is never empty).
+        let timeout_raw = r.string("timeout", "")?;
+        let slo_raw = r.string("slo", "")?;
+        let cfg = AssaultSetting {
+            repeat: r.usize("repeat", base.repeat)?,
+            concurrency: r.usize("concurrency", base.concurrency)?,
+            timeout: if timeout_raw.is_empty() {
+                base.timeout
+            } else {
+                dur("timeout", &timeout_raw)?
+            },
+            evaluator: r.string("evaluator", &base.evaluator)?,
+            slo: if slo_raw.is_empty() {
+                base.slo
+            } else {
+                dur("slo", &slo_raw)?
+            },
+            max_padding_pct: r.f64("max_padding_pct",
+                                   base.max_padding_pct)?,
+        };
+        cfg.validate(label)?;
+        Ok(cfg)
+    }
+
+    fn validate(&self, label: &str) -> Result<()> {
+        if self.repeat == 0 || self.concurrency == 0 {
+            return Err(Error::Config(format!(
+                "{label}: repeat and concurrency must be >= 1"
+            )));
+        }
+        if self.timeout.is_zero() || self.slo.is_zero() {
+            return Err(Error::Config(format!(
+                "{label}: timeout and slo must be > 0"
+            )));
+        }
+        if !(0.0..=100.0).contains(&self.max_padding_pct) {
+            return Err(Error::Config(format!(
+                "{label}: max_padding_pct must be in [0, 100]"
+            )));
+        }
+        // by_name's error already lists every registered evaluator.
+        crate::assault::evaluator::by_name(&self.evaluator)?;
+        Ok(())
+    }
+}
+
+/// Where a testcase sends its replay traffic.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AssaultDestination {
+    /// A `bload serve` daemon at `host:port`.
+    Serve(String),
+    /// A local `.blds` shard-set directory, opened as a
+    /// [`crate::dataset::shardstore::ShardPool`].
+    Shards(std::path::PathBuf),
+    /// The in-memory planned source (no I/O — the latency floor).
+    Planned,
+}
+
+impl AssaultDestination {
+    /// Parse a destination literal: `planned`, `serve://host:port`,
+    /// `shards://dir`, a bare `host:port` (serve), a bare path
+    /// (shards), or `@N` referencing `[assault]`'s `destinations`
+    /// array.
+    pub fn parse(raw: &str,
+                 destinations: &[String]) -> Result<AssaultDestination> {
+        let raw = raw.trim();
+        if let Some(idx) = raw.strip_prefix('@') {
+            let i: usize = idx.parse().map_err(|_| {
+                Error::Config(format!(
+                    "destination reference '@{idx}' is not an index"
+                ))
+            })?;
+            let lit = destinations.get(i).ok_or_else(|| {
+                Error::Config(format!(
+                    "destination '@{i}' out of range ({} destination(s) \
+                     declared in [assault])",
+                    destinations.len()
+                ))
+            })?;
+            if lit.starts_with('@') {
+                return Err(Error::Config(format!(
+                    "destination '@{i}' points at another reference \
+                     ('{lit}')"
+                )));
+            }
+            return AssaultDestination::parse(lit, &[]);
+        }
+        if raw.is_empty() {
+            return Err(Error::Config(
+                "empty assault destination".into(),
+            ));
+        }
+        if raw == "planned" {
+            return Ok(AssaultDestination::Planned);
+        }
+        if let Some(rest) = raw.strip_prefix("serve://") {
+            return Ok(AssaultDestination::Serve(rest.to_string()));
+        }
+        if let Some(rest) = raw.strip_prefix("shards://") {
+            return Ok(AssaultDestination::Shards(rest.into()));
+        }
+        if raw.contains(':') && !raw.contains('/') {
+            Ok(AssaultDestination::Serve(raw.to_string()))
+        } else {
+            Ok(AssaultDestination::Shards(raw.into()))
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            AssaultDestination::Serve(_) => "serve",
+            AssaultDestination::Shards(_) => "shards",
+            AssaultDestination::Planned => "planned",
+        }
+    }
+}
+
+impl std::fmt::Display for AssaultDestination {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AssaultDestination::Serve(a) => write!(f, "serve://{a}"),
+            AssaultDestination::Shards(p) => {
+                write!(f, "shards://{}", p.display())
+            }
+            AssaultDestination::Planned => f.write_str("planned"),
+        }
+    }
+}
+
+/// One `[[assault.testcase]]` block: a destination plus its coalesced
+/// execution setting.
+#[derive(Debug, Clone)]
+pub struct AssaultTestcase {
+    pub name: String,
+    pub destination: AssaultDestination,
+    pub setting: AssaultSetting,
+}
+
+/// The `[assault]` worker config: scenario name, shared destination
+/// list, the coalescing default setting, and the testcases
+/// (relentless's `Config`/`WorkerConfig` shape).
+#[derive(Debug, Clone)]
+pub struct AssaultConfig {
+    pub name: String,
+    /// Shared destination literals testcases may reference as `@N`.
+    pub destinations: Vec<String>,
+    /// Worker-level default setting (`[assault.setting]`).
+    pub setting: AssaultSetting,
+    pub testcases: Vec<AssaultTestcase>,
+}
+
+impl Default for AssaultConfig {
+    fn default() -> AssaultConfig {
+        AssaultConfig {
+            name: "assault".to_string(),
+            destinations: Vec::new(),
+            setting: AssaultSetting::default(),
+            testcases: Vec::new(),
+        }
+    }
+}
+
+impl AssaultConfig {
+    fn from_doc(doc: &Doc) -> Result<AssaultConfig> {
+        let mut r = Reader::new(doc, "assault");
+        let name = r.string("name", "assault")?;
+        let destinations = r.strings("destinations", &[])?;
+        r.finish()?;
+
+        let mut rs = Reader::new(doc, "assault.setting");
+        let setting = AssaultSetting::read(
+            &mut rs, "assault.setting", &AssaultSetting::default())?;
+        rs.finish()?;
+
+        let sections = doc.array_sections("assault.testcase");
+        let mut testcases = Vec::with_capacity(sections.len());
+        for (idx, section) in sections.iter().enumerate() {
+            let label = format!("assault.testcase[{idx}]");
+            let mut rt = Reader::new(doc, section);
+            let case_name =
+                rt.string("name", &format!("case{idx}"))?;
+            let default_dest = if destinations.is_empty() {
+                "planned"
+            } else {
+                "@0"
+            };
+            let dest_raw = rt.string("destination", default_dest)?;
+            let tsetting =
+                AssaultSetting::read(&mut rt, &label, &setting)?;
+            rt.finish()?;
+            let destination =
+                AssaultDestination::parse(&dest_raw, &destinations)
+                    .map_err(|e| {
+                        Error::Config(format!("{label}: {e}"))
+                    })?;
+            if testcases
+                .iter()
+                .any(|t: &AssaultTestcase| t.name == case_name)
+            {
+                return Err(Error::Config(format!(
+                    "{label}: duplicate testcase name '{case_name}'"
+                )));
+            }
+            testcases.push(AssaultTestcase {
+                name: case_name,
+                destination,
+                setting: tsetting,
+            });
+        }
+        Ok(AssaultConfig {
+            name,
+            destinations,
+            setting,
+            testcases,
+        })
+    }
+}
+
 /// Root experiment configuration.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -486,15 +747,27 @@ pub struct ExperimentConfig {
     pub train: TrainConfig,
     pub eval: EvalConfig,
     pub runtime: RuntimeConfig,
+    pub assault: AssaultConfig,
 }
 
 impl ExperimentConfig {
     pub fn from_doc(doc: &Doc) -> Result<ExperimentConfig> {
-        const KNOWN: [&str; 8] = [
+        const KNOWN: [&str; 10] = [
             "dataset", "packing", "ddp", "loader", "serve", "train", "eval",
-            "runtime",
+            "runtime", "assault", "assault.setting",
         ];
         for section in doc.sections() {
+            // `[[name]]` elements are stored as `name#idx`; only the
+            // assault testcase list is an array of tables.
+            if let Some(base) = Doc::array_base(section) {
+                if base != "assault.testcase" {
+                    return Err(Error::Config(format!(
+                        "section '[{base}]' cannot be an array of \
+                         tables (only [[assault.testcase]] repeats)"
+                    )));
+                }
+                continue;
+            }
             if !KNOWN.contains(&section) {
                 let near = KNOWN
                     .iter()
@@ -521,6 +794,7 @@ impl ExperimentConfig {
             train: TrainConfig::from_doc(doc)?,
             eval: EvalConfig::from_doc(doc)?,
             runtime: RuntimeConfig::from_doc(doc)?,
+            assault: AssaultConfig::from_doc(doc)?,
         })
     }
 
@@ -606,6 +880,134 @@ mod tests {
         let cfg = crate::config::from_str(
             "<t>", "[loader]\nremote = 127.0.0.1:7440\n").unwrap();
         assert_eq!(cfg.loader.remote, "127.0.0.1:7440");
+    }
+
+    #[test]
+    fn assault_defaults_to_empty_scenario() {
+        let a = ExperimentConfig::default_config().assault;
+        assert_eq!(a.name, "assault");
+        assert!(a.destinations.is_empty());
+        assert!(a.testcases.is_empty());
+        assert_eq!(a.setting, AssaultSetting::default());
+        assert_eq!(a.setting.evaluator, "byte-identity");
+    }
+
+    #[test]
+    fn assault_testcase_setting_overrides_worker_default() {
+        let a = crate::config::from_str(
+            "<t>",
+            "[assault]\n\
+             name = \"smoke\"\n\
+             destinations = [\"127.0.0.1:7440\", \"planned\"]\n\
+             [assault.setting]\n\
+             repeat = 16\n\
+             timeout = 500ms\n\
+             evaluator = \"latency-slo\"\n\
+             slo = 40ms\n\
+             [[assault.testcase]]\n\
+             name = \"remote\"\n\
+             [[assault.testcase]]\n\
+             name = \"local\"\n\
+             destination = \"@1\"\n\
+             repeat = 2\n\
+             evaluator = \"padding-budget\"\n\
+             max_padding_pct = 25.5\n",
+        )
+        .unwrap()
+        .assault;
+        assert_eq!(a.name, "smoke");
+        assert_eq!(a.testcases.len(), 2);
+        // First case: everything coalesces down from [assault.setting].
+        let c0 = &a.testcases[0];
+        assert_eq!(c0.name, "remote");
+        assert_eq!(c0.destination,
+                   AssaultDestination::Serve("127.0.0.1:7440".into()));
+        assert_eq!(c0.setting.repeat, 16);
+        assert_eq!(c0.setting.timeout, Duration::from_millis(500));
+        assert_eq!(c0.setting.evaluator, "latency-slo");
+        assert_eq!(c0.setting.slo, Duration::from_millis(40));
+        // Built-in default survives where neither layer set a key.
+        assert_eq!(c0.setting.concurrency,
+                   AssaultSetting::default().concurrency);
+        // Second case: testcase keys override the worker default,
+        // untouched keys still inherit it.
+        let c1 = &a.testcases[1];
+        assert_eq!(c1.destination, AssaultDestination::Planned);
+        assert_eq!(c1.setting.repeat, 2);
+        assert_eq!(c1.setting.evaluator, "padding-budget");
+        assert!((c1.setting.max_padding_pct - 25.5).abs() < 1e-12);
+        assert_eq!(c1.setting.timeout, Duration::from_millis(500));
+        assert_eq!(c1.setting.slo, Duration::from_millis(40));
+    }
+
+    #[test]
+    fn assault_rejects_unknown_keys_and_bad_values() {
+        // Unknown key in a testcase block (with suggestion machinery).
+        let e = crate::config::from_str(
+            "<t>",
+            "[[assault.testcase]]\nrepeet = 3\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("unknown key"), "{e}");
+        assert!(e.contains("repeat"), "no suggestion in: {e}");
+        // Unknown key in [assault.setting] too.
+        assert!(crate::config::from_str(
+            "<t>", "[assault.setting]\nconcurency = 2\n").is_err());
+        // Unknown evaluator lists the registry.
+        let e = crate::config::from_str(
+            "<t>",
+            "[[assault.testcase]]\nevaluator = \"nope\"\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("latency-slo"), "{e}");
+        // Validation: zero repeat, unit-less duration, bad reference.
+        assert!(crate::config::from_str(
+            "<t>", "[assault.setting]\nrepeat = 0\n").is_err());
+        assert!(crate::config::from_str(
+            "<t>", "[assault.setting]\ntimeout = 5\n").is_err());
+        let e = crate::config::from_str(
+            "<t>",
+            "[[assault.testcase]]\ndestination = \"@3\"\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("out of range"), "{e}");
+        // Duplicate testcase names are ambiguous in reports.
+        assert!(crate::config::from_str(
+            "<t>",
+            "[[assault.testcase]]\nname = \"a\"\n\
+             [[assault.testcase]]\nname = \"a\"\n",
+        )
+        .is_err());
+        // Only the testcase list may repeat.
+        let e = crate::config::from_str(
+            "<t>", "[[dataset]]\ntrain_videos = 1\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("array of tables"), "{e}");
+    }
+
+    #[test]
+    fn assault_destination_literals_parse() {
+        let d = |s: &str| AssaultDestination::parse(s, &[]).unwrap();
+        assert_eq!(d("planned"), AssaultDestination::Planned);
+        assert_eq!(d("serve://h:1"),
+                   AssaultDestination::Serve("h:1".into()));
+        assert_eq!(d("10.0.0.1:7440"),
+                   AssaultDestination::Serve("10.0.0.1:7440".into()));
+        assert_eq!(d("shards:///tmp/set"),
+                   AssaultDestination::Shards("/tmp/set".into()));
+        assert_eq!(d("data/set"),
+                   AssaultDestination::Shards("data/set".into()));
+        assert_eq!(d("planned").to_string(), "planned");
+        assert_eq!(d("serve://h:1").kind(), "serve");
+        assert!(AssaultDestination::parse("", &[]).is_err());
+        assert!(AssaultDestination::parse("@x", &[]).is_err());
+        // A reference chain is rejected rather than followed.
+        assert!(AssaultDestination::parse(
+            "@0", &["@1".into(), "planned".into()]).is_err());
     }
 
     #[test]

@@ -7,6 +7,8 @@ use crate::error::{Error, Result};
 pub enum Line {
     /// `[section]` or `[a.b]`
     Section(String),
+    /// `[[section]]` — opens the next element of an array of tables.
+    ArraySection(String),
     /// `key = <raw value text>`
     KeyValue { key: String, raw: String },
 }
@@ -22,27 +24,24 @@ pub fn lex(file: &str, src: &str) -> Result<Vec<(usize, Line)>> {
         if trimmed.is_empty() {
             continue;
         }
-        if let Some(rest) = trimmed.strip_prefix('[') {
+        if let Some(rest) = trimmed.strip_prefix("[[") {
+            let name = rest.strip_suffix("]]").ok_or_else(|| Error::Parse {
+                file: file.into(),
+                line: lineno,
+                col: trimmed.len(),
+                msg: "unterminated array-of-tables header".into(),
+            })?;
+            let name = check_section_name(file, lineno, name.trim())?;
+            out.push((lineno, Line::ArraySection(name)));
+        } else if let Some(rest) = trimmed.strip_prefix('[') {
             let name = rest.strip_suffix(']').ok_or_else(|| Error::Parse {
                 file: file.into(),
                 line: lineno,
                 col: trimmed.len(),
                 msg: "unterminated section header".into(),
             })?;
-            let name = name.trim();
-            if name.is_empty()
-                || !name
-                    .chars()
-                    .all(|c| c.is_ascii_alphanumeric() || "._-".contains(c))
-            {
-                return Err(Error::Parse {
-                    file: file.into(),
-                    line: lineno,
-                    col: 1,
-                    msg: format!("invalid section name '{name}'"),
-                });
-            }
-            out.push((lineno, Line::Section(name.to_string())));
+            let name = check_section_name(file, lineno, name.trim())?;
+            out.push((lineno, Line::Section(name)));
         } else if let Some(eq) = find_unquoted(trimmed, '=') {
             let key = trimmed[..eq].trim();
             let raw = trimmed[eq + 1..].trim();
@@ -84,6 +83,24 @@ pub fn lex(file: &str, src: &str) -> Result<Vec<(usize, Line)>> {
         }
     }
     Ok(out)
+}
+
+/// Validate a section name (shared by `[s]` and `[[s]]` headers).
+fn check_section_name(file: &str, lineno: usize, name: &str)
+                      -> Result<String> {
+    if name.is_empty()
+        || !name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || "._-".contains(c))
+    {
+        return Err(Error::Parse {
+            file: file.into(),
+            line: lineno,
+            col: 1,
+            msg: format!("invalid section name '{name}'"),
+        });
+    }
+    Ok(name.to_string())
 }
 
 /// Remove a `#` comment unless it is inside a double-quoted string.
@@ -143,6 +160,14 @@ mod tests {
     fn rejects_bad_section() {
         assert!(lex("t", "[bad name]\n").is_err());
         assert!(lex("t", "[unterminated\n").is_err());
+    }
+
+    #[test]
+    fn lexes_array_sections() {
+        let lines = lex("t", "[[job.case]]\nk = 1\n").unwrap();
+        assert_eq!(lines[0].1, Line::ArraySection("job.case".into()));
+        assert!(lex("t", "[[bad name]]\n").is_err());
+        assert!(lex("t", "[[unterminated]\n").is_err());
     }
 
     #[test]

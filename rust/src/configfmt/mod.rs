@@ -6,15 +6,25 @@
 //! # comment
 //! [section]            # tables, one level of nesting via [a.b]
 //! key = "string"
+//! addr = 0.0.0.0:9000  # bare single tokens are strings too
 //! count = 42           # integers
 //! ratio = 0.75         # floats (also 1e-3)
 //! flag = true          # booleans
 //! dims = [1, 2, 3]     # homogeneous arrays of the above scalars
+//!
+//! [[section.case]]     # arrays of tables (repeated blocks, in order)
+//! id = 1
 //! ```
 //!
+//! `[[name]]` elements are stored under internal table names
+//! `name#0`, `name#1`, … (enumerate them with [`Doc::array_sections`];
+//! `#` starts a comment, so the suffix cannot collide with a real
+//! header). A name may not be used both as `[name]` and `[[name]]`.
+//!
 //! Deliberately *not* supported (rejected with a clear error): multi-line
-//! strings, inline tables, arrays-of-tables, datetimes. The typed layer in
-//! [`crate::config`] consumes the [`Doc`] produced here.
+//! strings, inline tables, datetimes, bare strings containing
+//! whitespace. The typed layer in [`crate::config`] consumes the
+//! [`Doc`] produced here.
 
 mod lexer;
 mod parser;

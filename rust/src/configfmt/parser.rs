@@ -52,6 +52,23 @@ impl Doc {
     pub fn has_section(&self, section: &str) -> bool {
         self.tables.contains_key(section)
     }
+
+    /// Internal table names of the `[[name]]` array elements, in file
+    /// order. Array tables are stored under `name#0`, `name#1`, … —
+    /// `#` starts a comment in the lexer, so the suffix can never
+    /// collide with a plain `[section]` header.
+    pub fn array_sections(&self, name: &str) -> Vec<String> {
+        (0..)
+            .map(|i| format!("{name}#{i}"))
+            .take_while(|k| self.tables.contains_key(k))
+            .collect()
+    }
+
+    /// Is `section` an internal array-of-tables element name
+    /// (`name#idx`)? Returns the base name if so.
+    pub fn array_base(section: &str) -> Option<&str> {
+        section.split_once('#').map(|(base, _)| base)
+    }
 }
 
 /// Parse a config document from source text.
@@ -62,11 +79,45 @@ pub fn parse_doc(file: &str, src: &str) -> Result<Doc> {
     };
     let mut current = String::new();
     doc.tables.entry(current.clone()).or_default();
+    // Next element index per `[[name]]` array, plus which plain-table
+    // names exist, so a name can't be used both ways.
+    let mut array_counts: BTreeMap<String, usize> = BTreeMap::new();
+    let mut plain: std::collections::BTreeSet<String> =
+        std::collections::BTreeSet::new();
 
     for (lineno, line) in lex(file, src)? {
         match line {
             Line::Section(name) => {
+                if array_counts.contains_key(&name) {
+                    return Err(Error::Parse {
+                        file: file.into(),
+                        line: lineno,
+                        col: 1,
+                        msg: format!(
+                            "section '[{name}]' conflicts with array of \
+                             tables '[[{name}]]'"
+                        ),
+                    });
+                }
+                plain.insert(name.clone());
                 current = name;
+                doc.tables.entry(current.clone()).or_default();
+            }
+            Line::ArraySection(name) => {
+                if plain.contains(&name) {
+                    return Err(Error::Parse {
+                        file: file.into(),
+                        line: lineno,
+                        col: 1,
+                        msg: format!(
+                            "array of tables '[[{name}]]' conflicts with \
+                             section '[{name}]'"
+                        ),
+                    });
+                }
+                let idx = array_counts.entry(name.clone()).or_insert(0);
+                current = format!("{name}#{idx}");
+                *idx += 1;
                 doc.tables.entry(current.clone()).or_default();
             }
             Line::KeyValue { key, raw } => {
@@ -138,6 +189,14 @@ fn parse_value(file: &str, line: usize, raw: &str) -> Result<CValue> {
     }
     if let Ok(f) = raw.parse::<f64>() {
         return Ok(CValue::Float(f));
+    }
+    // Bare-string fallback: a single unquoted token (`0.0.0.0:9000`,
+    // `250ms`) is a string. Anything with whitespace or quote
+    // characters still errors — those are overwhelmingly typos.
+    if !raw.is_empty()
+        && !raw.chars().any(|c| c.is_whitespace() || c == '"')
+    {
+        return Ok(CValue::Str(raw.to_string()));
     }
     Err(perr(format!("cannot parse value '{raw}'")))
 }
@@ -223,5 +282,57 @@ mod tests {
         // > i64::MAX, no float syntax — still representable as f64.
         let v = parse_value("t", 1, "99999999999999999999").unwrap();
         assert!(matches!(v, CValue::Float(_)));
+    }
+
+    #[test]
+    fn bare_tokens_parse_as_strings() {
+        assert_eq!(
+            parse_value("t", 1, "0.0.0.0:9000").unwrap(),
+            CValue::Str("0.0.0.0:9000".into())
+        );
+        assert_eq!(
+            parse_value("t", 1, "250ms").unwrap(),
+            CValue::Str("250ms".into())
+        );
+        // Whitespace or stray quotes still error.
+        assert!(parse_value("t", 1, "two words").is_err());
+        assert!(parse_value("t", 1, "\"unterminated").is_err());
+    }
+
+    #[test]
+    fn array_of_tables_assembles_indexed_sections() {
+        let doc = parse_doc(
+            "t",
+            "[job]\nname = \"x\"\n\
+             [[job.case]]\nid = 1\n\
+             [[job.case]]\nid = 2\n",
+        )
+        .unwrap();
+        let cases = doc.array_sections("job.case");
+        assert_eq!(cases, vec!["job.case#0", "job.case#1"]);
+        assert_eq!(doc.get(&cases[0], "id"), Some(&CValue::Int(1)));
+        assert_eq!(doc.get(&cases[1], "id"), Some(&CValue::Int(2)));
+        assert_eq!(Doc::array_base("job.case#1"), Some("job.case"));
+        assert_eq!(Doc::array_base("job.case"), None);
+        assert!(doc.array_sections("job.other").is_empty());
+    }
+
+    #[test]
+    fn plain_and_array_table_names_cannot_mix() {
+        let e = parse_doc("t", "[[c]]\nk = 1\n[c]\nk = 1\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("conflicts"), "{e}");
+        let e = parse_doc("t", "[c]\nk = 1\n[[c]]\nk = 1\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("conflicts"), "{e}");
+    }
+
+    #[test]
+    fn duplicate_keys_within_one_array_element_rejected() {
+        assert!(parse_doc("t", "[[c]]\nk = 1\nk = 2\n").is_err());
+        // Same key in *different* elements is fine.
+        assert!(parse_doc("t", "[[c]]\nk = 1\n[[c]]\nk = 1\n").is_ok());
     }
 }

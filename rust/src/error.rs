@@ -69,10 +69,16 @@ pub enum Error {
     Bench(String),
 
     /// Shard-serving data plane failures (protocol violations, CRC
-    /// mismatches on served records, refused connections). Transport
-    /// errors keep their [`Error::Io`] shape so clients can tell a
-    /// retryable socket failure from a fatal protocol one.
+    /// mismatches on served records). Transport errors keep their
+    /// [`Error::Io`] shape so clients can tell a retryable socket
+    /// failure from a fatal protocol one.
     Net(String),
+
+    /// The server explicitly refused the request (e.g. the connection
+    /// cap was hit), carrying the server's own message. Retryable —
+    /// unlike [`Error::Net`], the refusal is a load condition, not a
+    /// protocol fault, so clients back off and try again.
+    Refused(String),
 
     /// Underlying XLA/PJRT error.
     Xla(String),
@@ -123,6 +129,7 @@ impl fmt::Display for Error {
             Error::Train(m) => write!(f, "train error: {m}"),
             Error::Bench(m) => write!(f, "bench error: {m}"),
             Error::Net(m) => write!(f, "net error: {m}"),
+            Error::Refused(m) => write!(f, "refused: {m}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Io { path, source } => {
                 write!(f, "io error on {path}: {source}")
@@ -202,5 +209,12 @@ mod tests {
     fn ingest_error_prefixed() {
         let e = Error::Ingest("queue closed".into());
         assert_eq!(e.to_string(), "ingest error: queue closed");
+    }
+
+    #[test]
+    fn refused_keeps_the_server_message() {
+        let e = Error::Refused("peer: server at capacity (4)".into());
+        assert_eq!(e.to_string(),
+                   "refused: peer: server at capacity (4)");
     }
 }

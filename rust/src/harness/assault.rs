@@ -1,0 +1,213 @@
+//! Loopback assault scenario: the self-contained load-test run behind
+//! the `assault` bench suite and the CI smoke step.
+//!
+//! Builds everything a scenario config would name, in a scratch
+//! directory: a generated split persisted as a shard set, a loopback
+//! [`crate::net::Server`] fronting it, and a programmatic
+//! [`AssaultConfig`] with one testcase per destination kind —
+//!
+//! 1. `serve://127.0.0.1:<port>` under `byte-identity`: a pool of
+//!    replay clients admitted through
+//!    [`connect_handshake`](crate::net::connect_handshake) (one
+//!    long-lived connection each), every reply compared against the
+//!    locally regenerated reference record;
+//! 2. `shards://<scratch>/set` under `padding-budget`: concurrent raw
+//!    record reads from the shared [`ShardPool`], judged on the packed
+//!    plan's padding ratio;
+//! 3. `planned` under `latency-slo`: generator-direct materialization,
+//!    the no-I/O latency floor.
+//!
+//! The server's connection cap is sized *above* the replay pool —
+//! every client holds its connection for its whole request budget, so
+//! an undersized cap would make admission livelock on refusals rather
+//! than exercise the pool.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::assault::AssaultOutcome;
+use crate::config::{AssaultConfig, AssaultDestination, AssaultSetting,
+                    AssaultTestcase, ExperimentConfig};
+use crate::dataset::shardstore::{ShardPool, ShardSetWriter};
+use crate::dataset::synthetic::generate;
+use crate::error::{Error, Result};
+
+/// Scenario knobs (defaults are CI-smoke sized).
+#[derive(Debug, Clone)]
+pub struct AssaultScenarioOptions {
+    /// Dataset scale factor over Action-Genome geometry.
+    pub scale: f64,
+    pub seed: u64,
+    /// Shard files backing the serve + shards destinations.
+    pub shards: usize,
+    /// Replay clients for the serve testcase (the pool under test).
+    pub clients: usize,
+    /// Requests per replay client.
+    pub repeat: usize,
+}
+
+impl Default for AssaultScenarioOptions {
+    fn default() -> Self {
+        AssaultScenarioOptions {
+            scale: 0.004,
+            seed: 0,
+            shards: 2,
+            clients: 16,
+            repeat: 4,
+        }
+    }
+}
+
+/// Run the three-destination loopback scenario and return its outcome.
+pub fn run(opts: &AssaultScenarioOptions) -> Result<AssaultOutcome> {
+    if opts.clients == 0 || opts.repeat == 0 || opts.shards == 0 {
+        return Err(Error::Config(
+            "assault scenario: clients, repeat and shards must be >= 1"
+                .into(),
+        ));
+    }
+    let scratch = std::env::temp_dir().join(format!(
+        "bload_assault_{}_{}",
+        std::process::id(),
+        opts.seed
+    ));
+    std::fs::remove_dir_all(&scratch).ok();
+    std::fs::create_dir_all(&scratch)
+        .map_err(|e| Error::io(scratch.display(), e))?;
+    let result = run_in(opts, &scratch);
+    std::fs::remove_dir_all(&scratch).ok();
+    result
+}
+
+fn run_in(opts: &AssaultScenarioOptions,
+          scratch: &std::path::Path) -> Result<AssaultOutcome> {
+    let mut cfg = ExperimentConfig::default_config();
+    cfg.seed = opts.seed;
+    cfg.dataset = cfg.dataset.scaled(opts.scale);
+    let split = generate(&cfg.dataset, opts.seed).train;
+
+    let shard_dir = scratch.join("set");
+    ShardSetWriter::new(&shard_dir, opts.seed, opts.shards)?
+        .write(&split)?;
+
+    let mut scfg = cfg.serve.clone();
+    scfg.addr = "127.0.0.1:0".into();
+    // Every replay client holds one admitted connection for its whole
+    // budget; cap above the pool (plus probe slack) or admission would
+    // livelock on capacity refusals instead of load-testing the pool.
+    scfg.max_connections = opts.clients * 2 + 8;
+    // Generous deadlines: hundreds of clients contending on one
+    // loopback acceptor make per-request scheduling gaps normal.
+    scfg.read_timeout = Duration::from_secs(30);
+    scfg.write_timeout = Duration::from_secs(30);
+    let pool = Arc::new(ShardPool::open(&shard_dir)?);
+    let server = crate::net::Server::start(pool, &scfg)?;
+    let addr = server.addr().to_string();
+
+    let setting = AssaultSetting {
+        repeat: opts.repeat,
+        concurrency: opts.clients,
+        timeout: Duration::from_secs(30),
+        ..AssaultSetting::default()
+    };
+    cfg.assault = AssaultConfig {
+        name: "loopback".into(),
+        destinations: vec![addr.clone()],
+        setting: setting.clone(),
+        testcases: vec![
+            AssaultTestcase {
+                name: "serve-identity".into(),
+                destination: AssaultDestination::Serve(addr),
+                setting: setting.clone(),
+            },
+            AssaultTestcase {
+                name: "shards-padding".into(),
+                destination: AssaultDestination::Shards(shard_dir),
+                setting: AssaultSetting {
+                    evaluator: "padding-budget".into(),
+                    concurrency: opts.clients.min(8),
+                    ..setting.clone()
+                },
+            },
+            AssaultTestcase {
+                name: "planned-floor".into(),
+                destination: AssaultDestination::Planned,
+                setting: AssaultSetting {
+                    evaluator: "latency-slo".into(),
+                    slo: Duration::from_secs(120),
+                    concurrency: opts.clients.min(8),
+                    ..setting
+                },
+            },
+        ],
+    };
+
+    let outcome = crate::assault::run(&cfg);
+    server.shutdown()?;
+    outcome
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{self, names};
+
+    #[test]
+    fn loopback_scenario_passes_all_three_destinations() {
+        let _g = telemetry::test_guard();
+        telemetry::reset();
+        let outcome = run(&AssaultScenarioOptions {
+            clients: 8,
+            repeat: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(outcome.passed(), "{}", outcome.render());
+        assert_eq!(outcome.cases.len(), 3);
+        let serve = &outcome.cases[0];
+        assert_eq!(serve.evaluator, "byte-identity");
+        assert_eq!(serve.observation.requests, 16);
+        assert_eq!(serve.observation.mismatches, 0);
+        let snap = telemetry::snapshot();
+        assert_eq!(snap.counter(names::ASSAULT_CASES), 3);
+        assert_eq!(snap.counter(names::ASSAULT_CASES_FAILED), 0);
+        assert!(snap.histograms.contains_key(names::ASSAULT_REQUEST_S));
+        assert!(snap.histograms.contains_key(names::ASSAULT_CONNECT_S));
+    }
+
+    /// The acceptance-bar pool size: 256 concurrent replay clients
+    /// against one loopback daemon, every reply byte-verified.
+    #[test]
+    fn serve_pool_sustains_256_concurrent_clients() {
+        let _g = telemetry::test_guard();
+        telemetry::reset();
+        let outcome = run(&AssaultScenarioOptions {
+            clients: 256,
+            repeat: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(outcome.passed(), "{}", outcome.render());
+        let serve = &outcome.cases[0];
+        assert_eq!(serve.concurrency, 256);
+        assert_eq!(serve.observation.requests, 256);
+        assert_eq!(serve.observation.ok(), 256);
+        // 256 admissions really happened (one handshake per client,
+        // plus the probe).
+        let snap = telemetry::snapshot();
+        let connects = snap
+            .histograms
+            .get(names::ASSAULT_CONNECT_S)
+            .expect("admission histogram recorded");
+        assert!(connects.count >= 256, "{} admissions", connects.count);
+    }
+
+    #[test]
+    fn rejects_zero_knobs() {
+        assert!(run(&AssaultScenarioOptions {
+            clients: 0,
+            ..Default::default()
+        })
+        .is_err());
+    }
+}

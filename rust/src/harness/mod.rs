@@ -2,6 +2,7 @@
 //! the paper (DESIGN.md §4 maps ids → modules → commands).
 
 pub mod ablation;
+pub mod assault;
 pub mod deadlock;
 pub mod epoch_full;
 pub mod observe;

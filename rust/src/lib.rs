@@ -15,6 +15,7 @@
 //! See `DESIGN.md` for the full system inventory and the experiment index,
 //! and `EXPERIMENTS.md` for reproduced paper numbers.
 
+pub mod assault;
 pub mod benchkit;
 pub mod cli;
 pub mod config;

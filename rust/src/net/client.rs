@@ -23,7 +23,7 @@ use crate::util::crc32::crc32;
 
 use super::protocol::{self, BodyReader, OP_GET_BLOCK, OP_GET_VIDEO,
                       OP_HELLO, OP_SHUTDOWN, OP_STATS, PROTO_VERSION,
-                      STATUS_ERR, STATUS_OK};
+                      STATUS_ERR, STATUS_OK, STATUS_REFUSED};
 use super::server::ServerStats;
 
 /// Client-side knobs: connect/IO deadlines and the retry policy the
@@ -187,6 +187,14 @@ impl RemoteClient {
                 self.peer,
                 String::from_utf8_lossy(&reply)
             ))),
+            // Load shedding is not a protocol fault: surface the
+            // server's own message in the retryable variant so pools
+            // of replay clients back off instead of erroring out.
+            STATUS_REFUSED => Err(Error::Refused(format!(
+                "{}: {}",
+                self.peer,
+                String::from_utf8_lossy(&reply)
+            ))),
             other => Err(Error::Net(format!(
                 "{}: reply carries unknown status 0x{other:02x}",
                 self.peer
@@ -206,6 +214,41 @@ impl RemoteClient {
         }
         Ok(())
     }
+}
+
+/// Connect and complete the HELLO handshake, retrying transient
+/// transport faults *and* capacity refusals ([`Error::Refused`]) with
+/// doubling backoff. This is the admission path for pools of
+/// long-lived replay clients (`bload assault`): each client dials
+/// once — backing off while the server sheds load — and then reuses
+/// the admitted connection for every subsequent request, instead of
+/// paying a dial + handshake per request under pool pressure.
+pub fn connect_handshake(addr: &str, cfg: &ClientConfig)
+                         -> Result<(RemoteClient, RemoteManifest)> {
+    let mut delay = cfg.backoff;
+    let mut last: Option<Error> = None;
+    for attempt in 0..=cfg.retries {
+        if attempt > 0 {
+            telemetry::counter(names::NET_RETRIES).inc();
+            std::thread::sleep(delay);
+            delay = delay.saturating_mul(2);
+        }
+        let mut client = match RemoteClient::connect(addr, cfg) {
+            Ok(c) => c,
+            Err(e) => {
+                last = Some(e);
+                continue;
+            }
+        };
+        match client.hello() {
+            Ok(manifest) => return Ok((client, manifest)),
+            Err(e @ (Error::Io { .. } | Error::Refused(_))) => {
+                last = Some(e);
+            }
+            Err(e) => return Err(e), // protocol faults are fatal
+        }
+    }
+    Err(last.expect("at least one attempt ran"))
 }
 
 /// One-shot manifest fetch (connect + HELLO + drop) — `bload replay

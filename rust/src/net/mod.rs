@@ -30,8 +30,9 @@
 //! | `STATS` (0x04) | empty | connections, requests, bytes_served (`3×u64`) |
 //! | `SHUTDOWN` (0x05) | empty | empty (server then drains and stops) |
 //!
-//! Any reply may instead carry status `0x7F` with a UTF-8 error
-//! message. `GET_BLOCK` batches are bounded by the server's
+//! Any reply may instead carry status `0x7F` (error) or `0x7E`
+//! (capacity refusal — retryable, [`crate::error::Error::Refused`])
+//! with a UTF-8 message. `GET_BLOCK` batches are bounded by the server's
 //! `serve.max_in_flight` window — the per-connection backpressure knob;
 //! handlers answer strictly in order, so a pipelining client can have
 //! at most its window outstanding.
@@ -45,8 +46,8 @@ pub mod protocol;
 pub mod server;
 pub mod source;
 
-pub use client::{decode_record, remote_manifest, ClientConfig,
-                 RemoteClient, RemoteManifest};
+pub use client::{connect_handshake, decode_record, remote_manifest,
+                 ClientConfig, RemoteClient, RemoteManifest};
 pub use server::{Server, ServerStats};
 pub use source::{RemoteProvider, RemoteSource};
 
@@ -283,10 +284,21 @@ mod tests {
         assert!(first.hello().is_ok());
         let err = RemoteClient::connect(&addr, &ccfg)
             .and_then(|mut c| c.hello())
-            .unwrap_err()
-            .to_string();
-        assert!(err.contains("capacity"), "{err}");
+            .unwrap_err();
+        // The distinct retryable variant, carrying the server's own
+        // load-shedding message — not a transport or protocol error.
+        assert!(matches!(err, Error::Refused(_)), "{err}");
+        assert!(err.to_string().contains("capacity"), "{err}");
+        // connect_handshake keeps retrying refusals; once the admitted
+        // client leaves, a waiting client gets in.
         drop(first);
+        let mut retry_cfg = ccfg.clone();
+        retry_cfg.retries = 10;
+        let (mut c, manifest) =
+            connect_handshake(&addr, &retry_cfg).unwrap();
+        assert!(!manifest.videos.is_empty());
+        assert!(c.stats().is_ok());
+        drop(c);
         server.shutdown().unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }

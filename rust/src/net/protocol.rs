@@ -51,6 +51,10 @@ pub const OP_SHUTDOWN: u8 = 0x05;
 pub const STATUS_OK: u8 = 0x00;
 /// Reply tag: failure, body is a UTF-8 error message.
 pub const STATUS_ERR: u8 = 0x7F;
+/// Reply tag: explicit load-shedding refusal (connection cap), body is
+/// a UTF-8 message. Distinct from [`STATUS_ERR`] so clients can treat
+/// it as retryable ([`Error::Refused`]) instead of a protocol fault.
+pub const STATUS_REFUSED: u8 = 0x7E;
 
 /// Append a little-endian u32.
 pub fn put_u32(buf: &mut Vec<u8>, v: u32) {

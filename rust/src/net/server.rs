@@ -39,7 +39,7 @@ use crate::telemetry::{self, names};
 
 use super::protocol::{self, BodyReader, OP_GET_BLOCK, OP_GET_VIDEO,
                       OP_HELLO, OP_SHUTDOWN, OP_STATS, PROTO_VERSION,
-                      STATUS_ERR, STATUS_OK};
+                      STATUS_ERR, STATUS_OK, STATUS_REFUSED};
 
 /// Lifetime serving counters, as returned by the `STATS` opcode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -203,20 +203,22 @@ fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
     }
 }
 
-/// Over-capacity connections get an explicit ERR frame so the client
-/// reports "server at capacity", not a mystery EOF.
+/// Over-capacity connections get an explicit REFUSED frame so the
+/// client reports a retryable "server at capacity"
+/// ([`Error::Refused`]), not a mystery EOF or a fatal protocol error.
 fn refuse(mut stream: TcpStream, shared: &Shared) {
     let _ = stream.set_read_timeout(Some(shared.cfg.read_timeout));
     let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
-    // Absorb the client's first request so the ERR frame is a proper
-    // reply — closing with the request unread would RST the connection
-    // under the client and could discard the refusal en route.
+    // Absorb the client's first request so the REFUSED frame is a
+    // proper reply — closing with the request unread would RST the
+    // connection under the client and could discard the refusal en
+    // route.
     let _ = protocol::read_frame(&mut stream, "refused peer");
     let msg = format!(
         "server at capacity ({} connection(s))",
         shared.cfg.max_connections
     );
-    let _ = protocol::write_frame(&mut stream, STATUS_ERR,
+    let _ = protocol::write_frame(&mut stream, STATUS_REFUSED,
                                   msg.as_bytes(), "refused peer");
 }
 

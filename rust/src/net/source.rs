@@ -177,8 +177,11 @@ impl RemoteProvider {
                 Err(e) => {
                     // The stream may be mid-frame — never reuse it.
                     *conn = None;
-                    if !matches!(e, Error::Io { .. }) {
-                        return Err(e); // protocol/CRC faults are fatal
+                    // Transport faults and capacity refusals are
+                    // transient; protocol/CRC faults are fatal.
+                    if !matches!(e,
+                                 Error::Io { .. } | Error::Refused(_)) {
+                        return Err(e);
                     }
                     last = Some(e);
                 }

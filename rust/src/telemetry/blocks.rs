@@ -179,10 +179,38 @@ impl MetricBlock for Serve {
     }
 }
 
+/// Load-test panel: `bload assault` replay-client pool health.
+#[derive(Debug)]
+pub struct Assault;
+
+impl MetricBlock for Assault {
+    fn name(&self) -> &'static str {
+        "assault"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["loadtest", "replaypool"]
+    }
+
+    fn describe(&self) -> &'static str {
+        "assault runner: replay clients, request tail latency, \
+         refusals, testcase verdicts"
+    }
+
+    fn template(&self) -> &'static str {
+        "clients {assault.clients}  requests {assault.requests}  \
+         bytes {assault.bytes}  fail/refused \
+         {assault.failures}/{assault.refused}  \
+         req p50 {assault.request_s.p50} p95 {assault.request_s.p95} \
+         p99 {assault.request_s.p99}  \
+         cases {assault.testcases} (failed {assault.testcases_failed})"
+    }
+}
+
 /// Every registered metric block, in dashboard render order.
 pub fn registry() -> &'static [&'static dyn MetricBlock] {
-    static REGISTRY: [&'static dyn MetricBlock; 5] =
-        [&Ingest, &Loader, &Shardstore, &Serve, &Train];
+    static REGISTRY: [&'static dyn MetricBlock; 6] =
+        [&Ingest, &Loader, &Shardstore, &Serve, &Train, &Assault];
     &REGISTRY
 }
 
@@ -309,6 +337,7 @@ mod tests {
             ("pool", "shardstore"),
             ("net", "serve"),
             ("ddp", "train"),
+            ("loadtest", "assault"),
         ] {
             assert_eq!(lookup(alias).unwrap().name(), key, "{alias}");
         }
@@ -357,6 +386,12 @@ mod tests {
             names::TRAIN_STEPS,
             names::TRAIN_REAL_FRAMES,
             names::TRAIN_SLOTS,
+            names::ASSAULT_REQUESTS,
+            names::ASSAULT_FAILURES,
+            names::ASSAULT_REFUSED,
+            names::ASSAULT_CASES,
+            names::ASSAULT_CASES_FAILED,
+            names::ASSAULT_BYTES,
         ] {
             s.counters.insert(c.to_string(), 7);
         }
@@ -366,6 +401,7 @@ mod tests {
             names::LOADER_WORKERS_ACTIVE,
             names::NET_CONNECTIONS_ACTIVE,
             names::TRAIN_PADDING_PCT,
+            names::ASSAULT_CLIENTS,
         ] {
             s.gauges.insert(g.to_string(), 2.0);
         }
@@ -378,6 +414,8 @@ mod tests {
             names::TRAIN_STEP_SKEW.to_string(),
             names::TRAIN_ALLREDUCE_S.to_string(),
             names::train_rank_step(0),
+            names::ASSAULT_REQUEST_S.to_string(),
+            names::ASSAULT_CONNECT_S.to_string(),
         ] {
             s.histograms.insert(h, hist(0.004));
         }

@@ -130,6 +130,25 @@ pub mod names {
     pub const NET_CRC_FAILURES: &str = "net.crc_failures";
     /// Counter: client retries after transient connect/read errors.
     pub const NET_RETRIES: &str = "net.retries";
+
+    /// Counter: replay requests completed by assault clients.
+    pub const ASSAULT_REQUESTS: &str = "assault.requests";
+    /// Counter: requests that failed (transport or protocol error).
+    pub const ASSAULT_FAILURES: &str = "assault.failures";
+    /// Counter: requests the server explicitly refused (capacity).
+    pub const ASSAULT_REFUSED: &str = "assault.refused";
+    /// Counter: testcases executed.
+    pub const ASSAULT_CASES: &str = "assault.testcases";
+    /// Counter: testcases whose evaluator verdict was FAIL.
+    pub const ASSAULT_CASES_FAILED: &str = "assault.testcases_failed";
+    /// Counter: payload bytes fetched by replay clients.
+    pub const ASSAULT_BYTES: &str = "assault.bytes";
+    /// Gauge: replay clients currently running.
+    pub const ASSAULT_CLIENTS: &str = "assault.clients";
+    /// Histogram: per-request replay latency (seconds), all testcases.
+    pub const ASSAULT_REQUEST_S: &str = "assault.request_s";
+    /// Histogram: per-client admission (connect + handshake) latency.
+    pub const ASSAULT_CONNECT_S: &str = "assault.connect_s";
 }
 
 /// Monotonic event counter (u64, atomic).

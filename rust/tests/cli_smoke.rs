@@ -7,6 +7,15 @@ fn argv(s: &[&str]) -> Vec<String> {
     s.iter().map(|x| x.to_string()).collect()
 }
 
+/// Serializes tests whose commands call `telemetry::reset()` (`top`,
+/// `assault`) — a reset landing mid-run in a parallel test would zero
+/// the counters that test later asserts on.
+static TELEMETRY_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn telemetry_lock() -> std::sync::MutexGuard<'static, ()> {
+    TELEMETRY_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
 #[test]
 fn no_command_prints_help_and_exits_2() {
     assert_eq!(run(&argv(&[])).unwrap(), 2);
@@ -391,6 +400,7 @@ fn bench_compare_gates_on_injected_regression() {
 
 #[test]
 fn top_snapshot_writes_format1_json_with_live_metrics() {
+    let _g = telemetry_lock();
     let out = std::env::temp_dir().join(format!(
         "bload_cli_top_{}.json",
         std::process::id()
@@ -429,12 +439,167 @@ fn top_snapshot_writes_format1_json_with_live_metrics() {
 
 #[test]
 fn top_list_and_flag_errors() {
+    let _g = telemetry_lock();
     assert_eq!(run(&argv(&["top", "--list"])).unwrap(), 0);
     assert!(run(&argv(&["top", "--bogus", "1"])).is_err());
     // --out without --snapshot is a hard error, not silently ignored.
     assert!(run(&argv(&["top", "--out", "/tmp/x.json"])).is_err());
     assert!(run(&argv(&["top", "--snapshot", "--ranks", "0"])).is_err());
     assert!(run(&argv(&["top", "--scale", "abc"])).is_err());
+    // --polls only makes sense for the remote polling loop.
+    assert!(run(&argv(&["top", "--polls", "2"])).is_err());
+}
+
+#[test]
+fn assault_list_evaluators_and_flag_errors() {
+    assert_eq!(run(&argv(&["assault", "--list-evaluators"])).unwrap(), 0);
+    assert!(run(&argv(&["assault"])).is_err(), "--config is required");
+    assert!(run(&argv(&["assault", "--bogus", "1"])).is_err());
+    assert!(run(&argv(&["assault", "--config", "/nope/missing.toml"]))
+        .is_err());
+}
+
+/// The full scenario path: pack a shard set, serve it on a loopback
+/// port, run a three-testcase scenario file against it (serve
+/// byte-identity, serve latency-SLO, shards padding-budget), then
+/// flip one SLO to an impossible bound and watch the exit code go
+/// nonzero. Also exercises `top --remote` against the same daemon.
+#[test]
+fn assault_scenario_round_trips_against_loopback_serve() {
+    let _g = telemetry_lock();
+    let pid = std::process::id();
+    let dir = std::env::temp_dir().join(format!("bload_cli_assault_{pid}"));
+    std::fs::remove_dir_all(&dir).ok();
+    let dir_s = dir.to_str().unwrap().to_string();
+    assert_eq!(
+        run(&argv(&[
+            "pack", "--strategy", "bload", "--scale", "0.004", "--shards",
+            "2", "--out", &dir_s,
+        ]))
+        .unwrap(),
+        0
+    );
+
+    let addr_file =
+        std::env::temp_dir().join(format!("bload_cli_assault_{pid}.addr"));
+    std::fs::remove_file(&addr_file).ok();
+    let addr_file_s = addr_file.to_str().unwrap().to_string();
+    let serve_dir = dir_s.clone();
+    let serve_addr_file = addr_file_s.clone();
+    let daemon = std::thread::spawn(move || {
+        run(&argv(&[
+            "serve", "--dir", &serve_dir, "--addr", "127.0.0.1:0",
+            "--addr-file", &serve_addr_file,
+        ]))
+    });
+    let deadline = std::time::Instant::now()
+        + std::time::Duration::from_secs(10);
+    let addr = loop {
+        match std::fs::read_to_string(&addr_file) {
+            Ok(a) if !a.trim().is_empty() => break a.trim().to_string(),
+            _ if std::time::Instant::now() > deadline => {
+                panic!("serve daemon never published its address")
+            }
+            _ => std::thread::sleep(std::time::Duration::from_millis(10)),
+        }
+    };
+
+    // `bload top --remote --snapshot`: one STATS poll, format-1 JSON.
+    let top_out = std::env::temp_dir()
+        .join(format!("bload_cli_assault_top_{pid}.json"));
+    let top_out_s = top_out.to_str().unwrap().to_string();
+    assert_eq!(
+        run(&argv(&[
+            "top", "--remote", &addr, "--snapshot", "--out", &top_out_s,
+        ]))
+        .unwrap(),
+        0
+    );
+    let v = bload::jsonio::parse(
+        &std::fs::read_to_string(&top_out).unwrap()).unwrap();
+    let snap = bload::telemetry::Snapshot::from_value(&v).unwrap();
+    assert!(snap.counter("net.connections") >= 1,
+            "the STATS poll itself was accepted");
+    // A bounded live polling loop also completes.
+    assert_eq!(
+        run(&argv(&[
+            "top", "--remote", &addr, "--polls", "2", "--refresh-ms",
+            "30",
+        ]))
+        .unwrap(),
+        0
+    );
+
+    // No [dataset] section: byte-identity only needs the generator
+    // *family* (geometry + seed from the manifest), and the defaults
+    // match what `pack` served.
+    let scenario = |slo: &str| {
+        format!(
+            "[assault]\n\
+             name = cli-smoke\n\
+             destinations = [\"{addr}\", \"{dir_s}\"]\n\
+             [assault.setting]\n\
+             repeat = 2\n\
+             concurrency = 4\n\
+             timeout = 10s\n\
+             [[assault.testcase]]\n\
+             name = replay-identity\n\
+             destination = @0\n\
+             evaluator = byte-identity\n\
+             [[assault.testcase]]\n\
+             name = tail-latency\n\
+             destination = @0\n\
+             evaluator = latency-slo\n\
+             slo = {slo}\n\
+             [[assault.testcase]]\n\
+             name = padding\n\
+             destination = @1\n\
+             evaluator = padding-budget\n"
+        )
+    };
+
+    let cfg_path = std::env::temp_dir()
+        .join(format!("bload_cli_assault_{pid}.toml"));
+    let cfg_s = cfg_path.to_str().unwrap().to_string();
+    let json_path = std::env::temp_dir()
+        .join(format!("bload_cli_assault_{pid}.json"));
+    let json_s = json_path.to_str().unwrap().to_string();
+
+    // Generous SLO: every evaluator passes, exit 0, report saved.
+    std::fs::write(&cfg_path, scenario("60s")).unwrap();
+    assert_eq!(
+        run(&argv(&[
+            "assault", "--config", &cfg_s, "--json", &json_s,
+        ]))
+        .unwrap(),
+        0
+    );
+    let report = bload::benchkit::Report::load(&json_path).unwrap();
+    assert_eq!(report.entries.len(), 3);
+    assert!(report.entries.iter().all(|e| e.suite == "assault"));
+    assert!(report
+        .get("assault/replay-identity/request")
+        .is_some());
+
+    // A 1ns SLO on a real TCP round-trip cannot pass: exit code 1
+    // (a failed verdict, not a hard error).
+    std::fs::write(&cfg_path, scenario("0.000001ms")).unwrap();
+    assert_eq!(
+        run(&argv(&["assault", "--config", &cfg_s])).unwrap(),
+        1
+    );
+
+    bload::net::RemoteClient::connect(
+        &addr, &bload::net::ClientConfig::default())
+    .unwrap()
+    .shutdown_server()
+    .unwrap();
+    assert_eq!(daemon.join().unwrap().unwrap(), 0);
+    std::fs::remove_file(&addr_file).ok();
+    std::fs::remove_file(&cfg_path).ok();
+    std::fs::remove_file(&json_path).ok();
+    std::fs::remove_file(&top_out).ok();
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

@@ -1,0 +1,65 @@
+#!/usr/bin/env bash
+# Loopback assault smoke — the load-tester's own end-to-end gate, run
+# by scripts/check.sh and CI's bench-smoke job:
+#
+#   1. pack a small shard set into a scratch directory,
+#   2. serve it on an ephemeral loopback port (--addr-file handshake,
+#      no bind race),
+#   3. poll the daemon once from the outside (`bload top --remote
+#      --snapshot` -> TOP_remote.json),
+#   4. run a three-testcase scenario against it — byte-identity replay,
+#      tail-latency SLO, padding budget — and gate on the exit code
+#      (any evaluator failure is nonzero). The benchkit report lands in
+#      ASSAULT_smoke.json for the artifact upload / baseline tooling.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=(cargo run --release --quiet --)
+WORK=$(mktemp -d)
+SERVE_PID=""
+trap 'kill "${SERVE_PID:-0}" 2>/dev/null || true; rm -rf "$WORK"' EXIT
+
+"${BIN[@]}" pack --scale 0.004 --shards 2 --out "$WORK/agshards"
+"${BIN[@]}" serve --dir "$WORK/agshards" --addr 127.0.0.1:0 \
+  --addr-file "$WORK/addr.txt" &
+SERVE_PID=$!
+for _ in $(seq 1 100); do
+  [ -s "$WORK/addr.txt" ] && break
+  sleep 0.1
+done
+[ -s "$WORK/addr.txt" ] || {
+  echo "assault_smoke: serve daemon never wrote its address" >&2
+  exit 1
+}
+ADDR=$(cat "$WORK/addr.txt")
+
+cat > "$WORK/assault.toml" <<EOF
+[assault]
+name = ci-smoke
+destinations = ["$ADDR", "$WORK/agshards"]
+
+[assault.setting]
+repeat = 4
+concurrency = 8
+timeout = 10s
+
+[[assault.testcase]]
+name = replay-identity
+destination = @0
+evaluator = byte-identity
+
+[[assault.testcase]]
+name = tail-latency
+destination = @0
+evaluator = latency-slo
+slo = 5s
+
+[[assault.testcase]]
+name = padding-budget
+destination = @1
+evaluator = padding-budget
+EOF
+
+"${BIN[@]}" top --remote "$ADDR" --snapshot --out TOP_remote.json
+"${BIN[@]}" assault --config "$WORK/assault.toml" \
+  --json ASSAULT_smoke.json

@@ -10,9 +10,11 @@
 # `bench-smoke` job performs — every registered suite at smoke geometry,
 # report written to BENCH_smoke.json (compare against a recorded
 # baseline with `bload bench --compare benches/baseline.json --report
-# BENCH_smoke.json`). Runtime tests/suites that need AOT artifacts skip
-# themselves when artifacts/manifest.json is absent, so the gate is
-# self-contained.
+# BENCH_smoke.json`), and finally the loopback assault smoke
+# (scripts/assault_smoke.sh: shard set -> serve daemon -> three-testcase
+# load scenario, gated on evaluator verdicts). Runtime tests/suites that
+# need AOT artifacts skip themselves when artifacts/manifest.json is
+# absent, so the gate is self-contained.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -21,4 +23,5 @@ cargo fmt --check \
   && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps \
   && cargo build --benches --examples \
   && cargo test -q \
-  && cargo run --release -- bench --smoke --json BENCH_smoke.json
+  && cargo run --release -- bench --smoke --json BENCH_smoke.json \
+  && scripts/assault_smoke.sh
