@@ -1,0 +1,8 @@
+//! Thin wrapper over the `fleet_replay` suite in
+//! `bload::benchkit::suites` (the measurement code lives library-side so
+//! `bload bench` can run it in-process). `BLOAD_BENCH_FAST=1` selects
+//! smoke iterations and smoke geometry.
+
+fn main() {
+    bload::benchkit::suites::run_bench_main("fleet_replay");
+}

@@ -13,6 +13,9 @@
 //! [`ShardPool`](crate::dataset::shardstore::ShardPool) (raw record
 //! reads, the disk-side equivalent), and `planned` clients materialize
 //! videos straight from the generator (no I/O — the latency floor).
+//! `fleet://` clients share one [`crate::net::FleetProvider`] — the
+//! striped, pooled, failover-capable path — so the testcase exercises
+//! exactly the data plane a fleet-backed trainer would use.
 //!
 //! Requests walk the destination's manifest round-robin with a
 //! per-client stride, so `concurrency × repeat` requests cover the
@@ -209,6 +212,9 @@ enum Target {
     Serve { addr: String, ccfg: ClientConfig },
     Shards(ShardPool),
     Planned(GeneratorSpec),
+    /// A striped fleet of serve daemons; the provider already carries
+    /// its pools, shard map and failover group.
+    Fleet(Arc<crate::net::FleetProvider>),
 }
 
 fn run_case(cfg: &ExperimentConfig,
@@ -248,6 +254,24 @@ fn run_case(cfg: &ExperimentConfig,
                             cfg.dataset.classes);
             (cfg.seed, split.videos, geometry,
              Target::Planned(split.spec))
+        }
+        AssaultDestination::Fleet(hosts) => {
+            // An empty literal (`fleet://`) defers to the scenario's
+            // `[fleet]` section, which also supplies replicas/knobs.
+            let mut fcfg = cfg.fleet.clone();
+            if !hosts.is_empty() {
+                fcfg.hosts = hosts.clone();
+            }
+            if fcfg.hosts.is_empty() {
+                return Err(label(
+                    "fleet:// destination names no hosts and the \
+                     scenario's [fleet] section has none either",
+                ));
+            }
+            let (provider, manifest) =
+                crate::net::FleetProvider::connect(&fcfg, &ccfg)?;
+            (manifest.seed, manifest.videos, manifest.geometry,
+             Target::Fleet(Arc::new(provider)))
         }
     };
     if videos.is_empty() {
@@ -425,6 +449,9 @@ fn run_client(client: usize, concurrency: usize, repeat: usize,
             Target::Planned(spec) => {
                 Ok(encode_record(&spec.materialize(meta)))
             }
+            // The provider owns connection pooling, retries and
+            // failover; every client shares it.
+            Target::Fleet(provider) => provider.fetch_record(meta.id),
         };
         match fetched {
             Ok(bytes) => {

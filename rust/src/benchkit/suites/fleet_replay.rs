@@ -1,0 +1,134 @@
+//! Fleet-serving suite: one shard set striped across loopback `bload
+//! serve` daemons, measured from the client side — full fleet epoch
+//! replay at one and two hosts (is striping paying for itself?) plus a
+//! failover epoch where one primary is dead from the start and its
+//! whole stripe is served by the replica (the steady-state cost of
+//! running degraded).
+//!
+//! The daemons front the shard set for the whole suite; every benchmark
+//! closure builds its own [`FleetSource`]-backed loader, so
+//! per-iteration numbers include the fleet handshake + consistency
+//! check the way a fresh trainer would pay them.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::benchkit::{BenchResult, Bencher};
+use crate::config::{ExperimentConfig, FleetConfig};
+use crate::dataset::shardstore::{ShardPool, ShardSetWriter};
+use crate::dataset::synthetic::generate;
+use crate::error::Result;
+use crate::loader::DataLoaderBuilder;
+use crate::net::{ClientConfig, Server};
+use crate::packing::by_name;
+
+use super::{Suite, SuiteOptions};
+
+/// See the module docs.
+#[derive(Debug)]
+pub struct FleetReplay;
+
+impl Suite for FleetReplay {
+    fn name(&self) -> &'static str {
+        "fleet_replay"
+    }
+
+    fn describe(&self) -> &'static str {
+        "striped fleet of serve daemons: 1/2-host epochs, failover epoch"
+    }
+
+    fn run(&self, bench: &Bencher, opts: &SuiteOptions)
+           -> Result<Vec<BenchResult>> {
+        let (scale, shards) = if opts.smoke { (0.005, 2) } else { (0.02, 4) };
+
+        let cfg = ExperimentConfig::default_config();
+        let dcfg = cfg.dataset.scaled(scale);
+        let ds = generate(&dcfg, 0);
+        let split = &ds.train;
+        let videos = split.videos.len() as f64;
+
+        let scratch = std::env::temp_dir().join(format!(
+            "bload_bench_fleet_replay_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&scratch).ok();
+        std::fs::create_dir_all(&scratch)
+            .map_err(|e| crate::error::Error::io(scratch.display(), e))?;
+        let shard_dir = scratch.join("set");
+        ShardSetWriter::new(&shard_dir, 0, shards)?.write(split)?;
+
+        let mut scfg = cfg.serve.clone();
+        scfg.addr = "127.0.0.1:0".into();
+        let pool = Arc::new(ShardPool::open(&shard_dir)?);
+        let s1 = Server::start(Arc::clone(&pool), &scfg)?;
+        let s2 = Server::start(Arc::clone(&pool), &scfg)?;
+        let replica = Server::start(Arc::clone(&pool), &scfg)?;
+        let packer = by_name("bload")?;
+
+        let epoch = |hosts: &[String]| {
+            let mut loader = DataLoaderBuilder::new()
+                .batch(2)
+                .workers(2)
+                .depth(2)
+                .seed(0)
+                .fleet(hosts, &dcfg, packer, &cfg.packing, 0)
+                .unwrap();
+            let mut n = 0usize;
+            while let Some(b) = loader.next() {
+                n += b.unwrap().real_frames;
+            }
+            n
+        };
+
+        let mut out = Vec::new();
+        let one = vec![s1.addr().to_string()];
+        out.push(bench.run("fleet_replay/epoch/hosts1", videos, "videos",
+                           || epoch(&one)));
+
+        let two = vec![s1.addr().to_string(), s2.addr().to_string()];
+        out.push(bench.run("fleet_replay/epoch/hosts2", videos, "videos",
+                           || epoch(&two)));
+
+        // A dead primary from step zero: bind an ephemeral port, then
+        // drop the listener so its stripe always needs the replica.
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0")
+                .map_err(|e| crate::error::Error::io("127.0.0.1:0", e))?;
+            l.local_addr()
+                .map_err(|e| crate::error::Error::io("127.0.0.1:0", e))?
+                .to_string()
+        };
+        let mut fcfg = FleetConfig::with_hosts(vec![
+            s1.addr().to_string(),
+            dead,
+        ]);
+        fcfg.replicas = vec![replica.addr().to_string()];
+        let ccfg = ClientConfig {
+            connect_timeout: Duration::from_millis(500),
+            io_timeout: Duration::from_secs(5),
+            retries: 1,
+            backoff: Duration::from_millis(5),
+        };
+        out.push(bench.run("fleet_replay/failover_epoch", videos,
+                           "videos", || {
+            let mut loader = DataLoaderBuilder::new()
+                .batch(2)
+                .workers(2)
+                .depth(2)
+                .seed(0)
+                .fleet_with(&fcfg, &ccfg, &dcfg, packer, &cfg.packing, 0)
+                .unwrap();
+            let mut n = 0usize;
+            while let Some(b) = loader.next() {
+                n += b.unwrap().real_frames;
+            }
+            n
+        }));
+
+        s1.shutdown()?;
+        s2.shutdown()?;
+        replica.shutdown()?;
+        std::fs::remove_dir_all(&scratch).ok();
+        Ok(out)
+    }
+}

@@ -21,6 +21,7 @@
 
 pub mod assault;
 pub mod ddp;
+pub mod fleet_replay;
 pub mod loader;
 pub mod packing;
 pub mod remote_replay;
@@ -65,12 +66,13 @@ pub trait Suite: Sync {
 /// All registered suites, hot-path suites first.
 /// Adding a suite = its module + one line here (+ a thin bench binary).
 pub fn registry() -> &'static [&'static dyn Suite] {
-    static REGISTRY: [&'static dyn Suite; 12] = [
+    static REGISTRY: [&'static dyn Suite; 13] = [
         &packing::Packing,
         &packing::OnlinePacking,
         &loader::Loader,
         &shard_replay::ShardReplay,
         &remote_replay::RemoteReplay,
+        &fleet_replay::FleetReplay,
         &assault::Assault,
         &ddp::Allreduce,
         &ddp::Fig2Deadlock,
@@ -181,7 +183,7 @@ mod tests {
                 "lookup is case-insensitive"
             );
         }
-        assert_eq!(registry().len(), 12, "one suite per bench binary");
+        assert_eq!(registry().len(), 13, "one suite per bench binary");
         let e = by_name("nope").unwrap_err().to_string();
         assert!(e.contains("packing"), "error lists known suites: {e}");
     }

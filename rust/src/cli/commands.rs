@@ -260,7 +260,8 @@ pub fn train(args: &mut Args) -> Result<i32> {
     Ok(0)
 }
 
-/// `bload replay --store PATH|DIR [--remote HOST:PORT] [--config FILE]
+/// `bload replay --store PATH|DIR [--remote HOST:PORT]
+///               [--fleet HOST:PORT,HOST:PORT] [--config FILE]
 ///               [--strategy S] [--batch N] [--epoch N] [--seed N]
 ///               [--verify [--scale F]]`
 ///
@@ -273,7 +274,11 @@ pub fn train(args: &mut Args) -> Result<i32> {
 /// `--remote HOST:PORT` the records come over TCP from a `bload serve`
 /// daemon instead of local disk ([`crate::net::RemoteSource`], every
 /// record CRC-checked on receipt) — `loader.remote` in a `--config`
-/// file spells the same thing. Either way
+/// file spells the same thing. With `--fleet HOST:PORT,HOST:PORT` the
+/// epoch stripes across a fleet of daemons all serving the same shard
+/// set ([`crate::net::FleetSource`]: client-side shard map, pooled
+/// connections, replica failover) — a `[fleet]` section in `--config`
+/// spells the same thing and adds replicas/pool knobs. Either way
 /// the split packs with the chosen strategy and one epoch of device
 /// batches materializes through the standard builder pipeline.
 /// `--verify` additionally regenerates the equivalent split in memory
@@ -283,6 +288,7 @@ pub fn train(args: &mut Args) -> Result<i32> {
 pub fn replay(args: &mut Args) -> Result<i32> {
     let store = args.flag_str("store", "agsynth.blds");
     let remote = args.flag_str("remote", "");
+    let fleet = args.flag_str("fleet", "");
     let config = args.flag_str("config", "");
     let strat = strategy_flag(args)?;
     let batch = args.flag_usize("batch", 2)?;
@@ -291,18 +297,37 @@ pub fn replay(args: &mut Args) -> Result<i32> {
     let verify = args.flag_bool("verify");
     let scale = args.flag_f64("scale", 0.01)?;
     args.finish()?;
+    if !fleet.is_empty() && !remote.is_empty() {
+        return Err(Error::Config(
+            "--fleet and --remote are mutually exclusive (a fleet of \
+             one host is spelled --fleet HOST:PORT)"
+                .into(),
+        ));
+    }
     let cfg = if config.is_empty() {
         ExperimentConfig::default_config()
     } else {
         crate::config::load(&config)?
     };
-    // The flag wins; `loader.remote` in the config file is the
-    // deployment-shaped spelling of the same thing.
+    // Flags win; `loader.remote` / `[fleet] hosts` in the config file
+    // are the deployment-shaped spellings of the same thing. When the
+    // config carries both, `loader.remote` wins (narrower ask).
+    let mut fcfg = cfg.fleet.clone();
+    if !fleet.is_empty() {
+        fcfg.hosts = crate::net::parse_hosts(&fleet);
+        if fcfg.hosts.is_empty() {
+            return Err(Error::Config(
+                "--fleet needs at least one HOST:PORT".into(),
+            ));
+        }
+    }
     let remote = if remote.is_empty() {
         cfg.loader.remote.clone()
     } else {
         remote
     };
+    let use_fleet = !fleet.is_empty()
+        || (remote.is_empty() && !fcfg.hosts.is_empty());
     let dcfg = cfg.dataset.scaled(scale);
     let path = std::path::Path::new(&store);
     let sharded = path.is_dir();
@@ -310,7 +335,10 @@ pub fn replay(args: &mut Args) -> Result<i32> {
         .batch(batch)
         .seed(seed);
     let t0 = std::time::Instant::now();
-    let mut loader = if !remote.is_empty() {
+    let mut loader = if use_fleet {
+        builder.fleet_with(&fcfg, &crate::net::ClientConfig::default(),
+                           &dcfg, strat, &cfg.packing, epoch)?
+    } else if !remote.is_empty() {
         builder.remote(&remote, &dcfg, strat, &cfg.packing, epoch)?
     } else if sharded {
         builder.shards(path, &dcfg, strat, &cfg.packing, epoch)?
@@ -318,7 +346,10 @@ pub fn replay(args: &mut Args) -> Result<i32> {
         builder.store(path, &dcfg, strat, &cfg.packing, epoch)?
     };
     let steps = loader.steps().unwrap_or(0);
-    let input = if remote.is_empty() {
+    let input = if use_fleet {
+        format!("fleet://{} ({} host(s))", fcfg.hosts.join(","),
+                fcfg.hosts.len())
+    } else if remote.is_empty() {
         store.clone()
     } else {
         format!("{remote} (remote)")
@@ -328,8 +359,12 @@ pub fn replay(args: &mut Args) -> Result<i32> {
         // The store records its generation seed; the equivalent
         // in-memory run regenerates the split from it and packs with the
         // same strategy and seed. A served store reports its seed in the
-        // HELLO manifest.
-        let store_seed = if !remote.is_empty() {
+        // HELLO manifest (any reachable fleet host — connect already
+        // proved they agree).
+        let store_seed = if use_fleet {
+            crate::net::fleet_manifest(
+                &fcfg.hosts, &crate::net::ClientConfig::default())?.seed
+        } else if !remote.is_empty() {
             crate::net::remote_manifest(
                 &remote, &crate::net::ClientConfig::default())?.seed
         } else if sharded {
@@ -718,7 +753,8 @@ pub fn assault(args: &mut Args) -> Result<i32> {
 
 /// `bload top [--snapshot [--out PATH]] [--list] [--scale F] [--seed N]
 ///            [--ranks N] [--shards N] [--refresh-ms N]
-///            [--remote HOST:PORT [--polls N]]`
+///            [--remote HOST:PORT [--polls N]]
+///            [--fleet HOST:PORT,HOST:PORT [--polls N]]`
 ///
 /// Live telemetry dashboard over [`crate::telemetry`]. Drives the
 /// observability scenario ([`crate::harness::observe`]: streaming
@@ -736,11 +772,17 @@ pub fn assault(args: &mut Args) -> Result<i32> {
 ///   `serve` metric block per poll (`--snapshot` emits one poll as
 ///   format-1 JSON; `--polls N` bounds the live loop, 0 = until
 ///   interrupted).
+/// * `--fleet HOST:PORT,HOST:PORT` polls *every* listed daemon's STATS
+///   per refresh and renders one per-host table plus a fleet total row
+///   (a host that fails to answer shows as `down`, not an error —
+///   that's the thing the table is for). `--snapshot` emits one poll
+///   under the canonical `fleet.*` / per-host names.
 pub fn top(args: &mut Args) -> Result<i32> {
     let list = args.flag_bool("list");
     let snapshot_mode = args.flag_bool("snapshot");
     let out = args.flag_str("out", "");
     let remote = args.flag_str("remote", "");
+    let fleet = args.flag_str("fleet", "");
     let polls = args.flag_u64("polls", 0)?;
     let defaults = observe::ObserveOptions::default();
     let opts = observe::ObserveOptions {
@@ -751,9 +793,16 @@ pub fn top(args: &mut Args) -> Result<i32> {
     };
     let refresh_ms = args.flag_u64("refresh-ms", 250)?;
     args.finish()?;
-    if polls != 0 && remote.is_empty() {
+    if !remote.is_empty() && !fleet.is_empty() {
         return Err(Error::Config(
-            "--polls needs --remote (bounds the remote polling loop)"
+            "--remote and --fleet are mutually exclusive (a fleet of \
+             one host is spelled --fleet HOST:PORT)"
+                .into(),
+        ));
+    }
+    if polls != 0 && remote.is_empty() && fleet.is_empty() {
+        return Err(Error::Config(
+            "--polls needs --remote or --fleet (bounds the polling loop)"
                 .into(),
         ));
     }
@@ -784,6 +833,9 @@ pub fn top(args: &mut Args) -> Result<i32> {
     if !remote.is_empty() {
         return top_remote(&remote, snapshot_mode, &out, refresh_ms,
                           polls);
+    }
+    if !fleet.is_empty() {
+        return top_fleet(&fleet, snapshot_mode, &out, refresh_ms, polls);
     }
 
     // A fresh registry so the emitted numbers describe exactly this run.
@@ -953,6 +1005,127 @@ fn remote_stats_snapshot(client: &mut crate::net::RemoteClient)
     Ok(snap)
 }
 
+/// `bload top --fleet HOST:PORT,HOST:PORT`: one STATS poll against
+/// every listed daemon per refresh, rendered as a per-host table with a
+/// fleet total row. A host that fails to answer is shown as `down`
+/// rather than failing the poll — surfacing that is exactly what the
+/// command is for.
+fn top_fleet(hosts_raw: &str, snapshot_mode: bool, out: &str,
+             refresh_ms: u64, polls: u64) -> Result<i32> {
+    let hosts = crate::net::parse_hosts(hosts_raw);
+    if hosts.is_empty() {
+        return Err(Error::Config(
+            "--fleet needs at least one HOST:PORT".into(),
+        ));
+    }
+    let ccfg = crate::net::ClientConfig::default();
+
+    if snapshot_mode {
+        let snap = fleet_stats_snapshot(&hosts, &ccfg);
+        let text = crate::jsonio::to_string_pretty(&snap.to_value());
+        if out.is_empty() {
+            println!("{text}");
+        } else {
+            std::fs::write(out, &text).map_err(|e| Error::io(out, e))?;
+            println!(
+                "wrote fleet telemetry snapshot ({} host(s)) to {out}",
+                hosts.len()
+            );
+        }
+        return Ok(0);
+    }
+
+    let mut n = 0u64;
+    loop {
+        let polled = crate::net::fleet_stats(&hosts, &ccfg);
+        let live = polls == 0;
+        if live {
+            print!("\x1b[2J\x1b[H");
+        }
+        println!(
+            "bload top — fleet of {}{}",
+            hosts.len(),
+            if live { "  (ctrl-c to quit)" } else { "" }
+        );
+        let mut t = TextTable::new(&[
+            "host", "status", "connections", "requests", "bytes",
+        ]);
+        let (mut up, mut conns, mut reqs, mut bytes) = (0u64, 0, 0, 0);
+        for (host, stats) in &polled {
+            match stats {
+                Ok(s) => {
+                    up += 1;
+                    conns += s.connections;
+                    reqs += s.requests;
+                    bytes += s.bytes_served;
+                    t.row(&[
+                        host.clone(),
+                        "up".to_string(),
+                        commas(s.connections),
+                        commas(s.requests),
+                        commas(s.bytes_served),
+                    ]);
+                }
+                Err(_) => t.row(&[
+                    host.clone(),
+                    "down".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                ]),
+            }
+        }
+        t.row(&[
+            format!("total ({up}/{} up)", polled.len()),
+            String::new(),
+            commas(conns),
+            commas(reqs),
+            commas(bytes),
+        ]);
+        print!("{}", t.render());
+        flush_stdout();
+        n += 1;
+        if polls != 0 && n >= polls {
+            return Ok(0);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(
+            refresh_ms.max(20),
+        ));
+    }
+}
+
+/// One fleet-wide STATS poll as a [`telemetry::Snapshot`]: per-host
+/// counters under the canonical `fleet.host{i}.*` names (indexed in
+/// `--fleet` list order), totals under `fleet.*`, and up/down gauges —
+/// the servers' own counters, not this process's.
+fn fleet_stats_snapshot(hosts: &[String],
+                        ccfg: &crate::net::ClientConfig)
+                        -> telemetry::Snapshot {
+    use crate::telemetry::names;
+    let mut snap = telemetry::Snapshot::default();
+    let polled = crate::net::fleet_stats(hosts, ccfg);
+    let (mut down, mut reqs, mut bytes) = (0u64, 0, 0);
+    for (i, (_host, stats)) in polled.iter().enumerate() {
+        match stats {
+            Ok(s) => {
+                reqs += s.requests;
+                bytes += s.bytes_served;
+                snap.counters.insert(
+                    names::fleet_host_requests(i), s.requests);
+                snap.counters.insert(
+                    names::fleet_host_bytes(i), s.bytes_served);
+            }
+            Err(_) => down += 1,
+        }
+    }
+    snap.counters.insert(names::FLEET_REQUESTS.to_string(), reqs);
+    snap.counters.insert(names::FLEET_BYTES.to_string(), bytes);
+    snap.gauges.insert(names::FLEET_HOSTS.to_string(),
+                       polled.len() as f64);
+    snap.gauges.insert(names::FLEET_HOSTS_DOWN.to_string(), down as f64);
+    snap
+}
+
 /// `bload serve --dir DIR [--addr HOST:PORT] [--addr-file PATH]
 ///              [--config FILE]`
 ///
@@ -960,7 +1133,8 @@ fn remote_stats_snapshot(client: &mut crate::net::RemoteClient)
 /// multi-client TCP daemon ([`crate::net::Server`]) so N trainers can
 /// stream the same shard set from one machine. `--addr` overrides the
 /// config `[serve]` address (`host:0` picks an ephemeral port);
-/// `--addr-file PATH` writes the *bound* address to a file once the
+/// `--addr-file PATH` atomically writes the *bound* address to a file
+/// (tmp + rename, so pollers never read a partial address) once the
 /// listener is up, so scripts (and the CI round-trip test) can wait on
 /// it instead of racing the bind. Runs until a client sends SHUTDOWN or
 /// the process is killed.
@@ -999,7 +1173,13 @@ pub fn serve(args: &mut Args) -> Result<i32> {
         scfg.max_in_flight
     );
     if !addr_file.is_empty() {
-        std::fs::write(&addr_file, bound.to_string())
+        // Write-then-rename so a polling reader can never observe a
+        // half-written address: the file either does not exist yet or
+        // holds the complete bound `host:port`.
+        let tmp = format!("{addr_file}.tmp.{}", std::process::id());
+        std::fs::write(&tmp, bound.to_string())
+            .map_err(|e| Error::io(&tmp, e))?;
+        std::fs::rename(&tmp, &addr_file)
             .map_err(|e| Error::io(&addr_file, e))?;
     }
     server.wait()?;

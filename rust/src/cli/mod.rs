@@ -14,8 +14,9 @@
 //!   table1         reproduce Table I (add --full for measured runs)
 //!   deadlock-demo  reproduce Fig 2 and show BLoad completing
 //!   ingest         streaming mode: online packing service vs offline
-//!   replay         replay a persisted store (file, shard dir, or
-//!                  --remote a serve daemon)
+//!   replay         replay a persisted store (file, shard dir,
+//!                  --remote a serve daemon, or --fleet a striped
+//!                  fleet of daemons)
 //!   shards         inspect a sharded store / run the shard scenario
 //!   serve          serve a sharded store over TCP to remote loaders
 //!   train          end-to-end training run from a config file
@@ -23,7 +24,8 @@
 //!   bench          unified benchmark runner (suites, JSON reports,
 //!                  baseline comparison)
 //!   top            live telemetry dashboard / JSON metric snapshots
-//!                  (--remote polls a serve daemon's STATS)
+//!                  (--remote polls a serve daemon's STATS; --fleet
+//!                  summarizes a whole fleet)
 //!   assault        declarative scenario load-tester with evaluator
 //!                  verdicts (exits nonzero on failure)
 //! ```
@@ -100,7 +102,8 @@ streaming support)
 --ranks N --producers N)
     replay         replay a persisted store through the loader (--store \
 PATH or shard DIR --strategy S; --remote HOST:PORT streams from a serve \
-daemon; --verify checks byte-identity vs in-memory)
+daemon; --fleet H:P,H:P stripes across a fleet of daemons; --verify \
+checks byte-identity vs in-memory)
     shards         inspect a sharded store (--dir DIR: per-shard table, \
 CRC verification) or --bench the shard scenario (--shards N --readers N)
     serve          serve a sharded store over TCP (--dir DIR \
@@ -113,7 +116,8 @@ exits nonzero on regressions beyond --threshold/--p50-threshold)
     top            live telemetry dashboard over the instrumented \
 pipeline (--refresh-ms N); --snapshot [--out PATH] emits format-1 JSON; \
 --list shows the metric-block registry; --remote HOST:PORT polls a \
-running serve daemon's STATS instead (--polls N bounds the loop)
+running serve daemon's STATS instead; --fleet H:P,H:P polls every \
+listed daemon into one per-host table (--polls N bounds the loop)
     assault        scenario load-tester (--config FILE runs every \
 [[assault.testcase]], prints p50/p95/p99 + verdicts, exits nonzero on \
 any failure; --json PATH saves a benchkit report; --list-evaluators)
@@ -149,6 +153,14 @@ SERVING:
     trainers on other machines can share one serving host. `[serve]`
     config keys: addr, read_timeout/write_timeout (durations like
     '250ms'/'5s'), max_in_flight, max_connections.
+    `bload replay --fleet HOST:PORT,HOST:PORT` (and a `[fleet]` config
+    section) stripes the epoch across N daemons all serving the same
+    shard set: a deterministic client-side shard map assigns each video
+    a host, per-host connection pools replace the single shared
+    connection, and replica failover keeps the epoch byte-identical
+    when a host dies mid-run. `[fleet]` config keys: hosts, replicas,
+    pool_size, health_interval. `bload top --fleet` summarizes every
+    daemon's STATS in one table.
 
 BENCHMARKS:
     `bload bench` runs the registered benchmark suites (the same code

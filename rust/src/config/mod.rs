@@ -11,8 +11,8 @@ pub use reader::Reader;
 pub use schema::{
     parse_duration, AssaultConfig, AssaultDestination, AssaultSetting,
     AssaultTestcase, DatasetConfig, DdpConfig, EvalConfig, ExperimentConfig,
-    LoaderConfig, PackingConfig, RuntimeConfig, ServeConfig, StrategyName,
-    TrainConfig,
+    FleetConfig, LoaderConfig, PackingConfig, RuntimeConfig, ServeConfig,
+    StrategyName, TrainConfig,
 };
 
 use crate::configfmt::parse_doc;

@@ -390,6 +390,89 @@ impl ServeConfig {
     }
 }
 
+/// Client-side fleet parameters (`[fleet]`, [`crate::net::fleet`]):
+/// which serve daemons an epoch stripes over, the shared replica
+/// failover group, the per-host connection-pool bound, and how long a
+/// failing host stays marked down before a fetch probes it again.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    /// Primary `host:port` daemons the shard map stripes videos over
+    /// (empty = no fleet configured).
+    pub hosts: Vec<String>,
+    /// Failover group: daemons serving the same shard set that pick up
+    /// any primary's stripe when it is down or shedding load.
+    pub replicas: Vec<String>,
+    /// Concurrent connections the client keeps per host (bounded pool;
+    /// loader workers past the cap wait, then back off).
+    pub pool_size: usize,
+    /// How long a host marked down stays skipped before the next fetch
+    /// re-probes it (lazy health check — there is no background prober).
+    pub health_interval: Duration,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            hosts: Vec::new(),
+            replicas: Vec::new(),
+            pool_size: 2,
+            health_interval: Duration::from_secs(2),
+        }
+    }
+}
+
+impl FleetConfig {
+    /// A fleet over `hosts` with default knobs and no replicas — the
+    /// shape `--fleet HOST:PORT,HOST:PORT` flags build.
+    pub fn with_hosts(hosts: Vec<String>) -> FleetConfig {
+        FleetConfig {
+            hosts,
+            ..FleetConfig::default()
+        }
+    }
+
+    fn from_doc(doc: &Doc) -> Result<FleetConfig> {
+        let mut r = Reader::new(doc, "fleet");
+        let health_raw = r.string("health_interval", "2s")?;
+        let cfg = FleetConfig {
+            hosts: r.strings("hosts", &[])?,
+            replicas: r.strings("replicas", &[])?,
+            pool_size: r.usize("pool_size", 2)?,
+            health_interval: parse_duration(&health_raw).map_err(|e| {
+                Error::Config(format!("fleet.health_interval: {e}"))
+            })?,
+        };
+        r.finish()?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Structural checks; public because
+    /// [`FleetProvider::connect`](crate::net::FleetProvider::connect)
+    /// re-validates configs built in code, not just parsed ones.
+    pub fn validate(&self) -> Result<()> {
+        if self.pool_size == 0 {
+            return Err(Error::Config("fleet.pool_size must be >= 1".into()));
+        }
+        if self.health_interval.is_zero() {
+            return Err(Error::Config(
+                "fleet.health_interval must be > 0 (use e.g. '2s')".into(),
+            ));
+        }
+        if self
+            .hosts
+            .iter()
+            .chain(self.replicas.iter())
+            .any(|h| h.trim().is_empty())
+        {
+            return Err(Error::Config(
+                "fleet.hosts/replicas must not contain empty entries".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Training loop parameters.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -573,11 +656,16 @@ pub enum AssaultDestination {
     Shards(std::path::PathBuf),
     /// The in-memory planned source (no I/O — the latency floor).
     Planned,
+    /// A fleet of serve daemons striped by the client-side shard map
+    /// ([`crate::net::fleet`]). An empty host list means "use the
+    /// `[fleet]` section's hosts/replicas".
+    Fleet(Vec<String>),
 }
 
 impl AssaultDestination {
     /// Parse a destination literal: `planned`, `serve://host:port`,
-    /// `shards://dir`, a bare `host:port` (serve), a bare path
+    /// `shards://dir`, `fleet://host:port,host:port` (empty host list =
+    /// use `[fleet].hosts`), a bare `host:port` (serve), a bare path
     /// (shards), or `@N` referencing `[assault]`'s `destinations`
     /// array.
     pub fn parse(raw: &str,
@@ -618,6 +706,15 @@ impl AssaultDestination {
         if let Some(rest) = raw.strip_prefix("shards://") {
             return Ok(AssaultDestination::Shards(rest.into()));
         }
+        if let Some(rest) = raw.strip_prefix("fleet://") {
+            let hosts = rest
+                .split(',')
+                .map(str::trim)
+                .filter(|h| !h.is_empty())
+                .map(str::to_string)
+                .collect();
+            return Ok(AssaultDestination::Fleet(hosts));
+        }
         if raw.contains(':') && !raw.contains('/') {
             Ok(AssaultDestination::Serve(raw.to_string()))
         } else {
@@ -630,6 +727,7 @@ impl AssaultDestination {
             AssaultDestination::Serve(_) => "serve",
             AssaultDestination::Shards(_) => "shards",
             AssaultDestination::Planned => "planned",
+            AssaultDestination::Fleet(_) => "fleet",
         }
     }
 }
@@ -642,6 +740,9 @@ impl std::fmt::Display for AssaultDestination {
                 write!(f, "shards://{}", p.display())
             }
             AssaultDestination::Planned => f.write_str("planned"),
+            AssaultDestination::Fleet(hs) => {
+                write!(f, "fleet://{}", hs.join(","))
+            }
         }
     }
 }
@@ -744,6 +845,7 @@ pub struct ExperimentConfig {
     pub ddp: DdpConfig,
     pub loader: LoaderConfig,
     pub serve: ServeConfig,
+    pub fleet: FleetConfig,
     pub train: TrainConfig,
     pub eval: EvalConfig,
     pub runtime: RuntimeConfig,
@@ -752,9 +854,9 @@ pub struct ExperimentConfig {
 
 impl ExperimentConfig {
     pub fn from_doc(doc: &Doc) -> Result<ExperimentConfig> {
-        const KNOWN: [&str; 10] = [
-            "dataset", "packing", "ddp", "loader", "serve", "train", "eval",
-            "runtime", "assault", "assault.setting",
+        const KNOWN: [&str; 11] = [
+            "dataset", "packing", "ddp", "loader", "serve", "fleet", "train",
+            "eval", "runtime", "assault", "assault.setting",
         ];
         for section in doc.sections() {
             // `[[name]]` elements are stored as `name#idx`; only the
@@ -791,6 +893,7 @@ impl ExperimentConfig {
             ddp: DdpConfig::from_doc(doc)?,
             loader: LoaderConfig::from_doc(doc)?,
             serve: ServeConfig::from_doc(doc)?,
+            fleet: FleetConfig::from_doc(doc)?,
             train: TrainConfig::from_doc(doc)?,
             eval: EvalConfig::from_doc(doc)?,
             runtime: RuntimeConfig::from_doc(doc)?,
@@ -872,6 +975,55 @@ mod tests {
             "<t>", "[serve]\nmax_in_flight = 0\n").is_err());
         assert!(crate::config::from_str(
             "<t>", "[serve]\nwrite_timeout = 0s\n").is_err());
+    }
+
+    #[test]
+    fn fleet_section_parses_and_validates() {
+        let cfg = ExperimentConfig::default_config().fleet;
+        assert!(cfg.hosts.is_empty());
+        assert!(cfg.replicas.is_empty());
+        assert_eq!(cfg.pool_size, 2);
+        assert_eq!(cfg.health_interval, Duration::from_secs(2));
+
+        let cfg = crate::config::from_str(
+            "<t>",
+            "[fleet]\n\
+             hosts = [\"10.0.0.1:7440\", \"10.0.0.2:7440\"]\n\
+             replicas = [\"10.0.0.9:7440\"]\n\
+             pool_size = 4\n\
+             health_interval = 500ms\n",
+        )
+        .unwrap()
+        .fleet;
+        assert_eq!(cfg.hosts,
+                   vec!["10.0.0.1:7440".to_string(),
+                        "10.0.0.2:7440".to_string()]);
+        assert_eq!(cfg.replicas, vec!["10.0.0.9:7440".to_string()]);
+        assert_eq!(cfg.pool_size, 4);
+        assert_eq!(cfg.health_interval, Duration::from_millis(500));
+
+        assert!(crate::config::from_str(
+            "<t>", "[fleet]\npool_size = 0\n").is_err());
+        assert!(crate::config::from_str(
+            "<t>", "[fleet]\nhealth_interval = 0s\n").is_err());
+        assert!(crate::config::from_str(
+            "<t>", "[fleet]\nhealth_interval = 5\n").is_err(),
+            "unit-less duration must be rejected");
+        assert!(crate::config::from_str(
+            "<t>", "[fleet]\nhosts = [\"a:1\", \"\"]\n").is_err(),
+            "empty host entries must be rejected");
+        assert!(crate::config::from_str(
+            "<t>", "[fleet]\npool_depth = 2\n").is_err(),
+            "unknown [fleet] keys must be rejected");
+    }
+
+    #[test]
+    fn with_hosts_keeps_default_knobs() {
+        let cfg = FleetConfig::with_hosts(vec!["h:1".into()]);
+        assert_eq!(cfg.hosts, vec!["h:1".to_string()]);
+        assert!(cfg.replicas.is_empty());
+        assert_eq!(cfg.pool_size, FleetConfig::default().pool_size);
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]
@@ -1001,8 +1153,15 @@ mod tests {
                    AssaultDestination::Shards("/tmp/set".into()));
         assert_eq!(d("data/set"),
                    AssaultDestination::Shards("data/set".into()));
+        assert_eq!(d("fleet://h:1, h:2"),
+                   AssaultDestination::Fleet(
+                       vec!["h:1".into(), "h:2".into()]));
+        assert_eq!(d("fleet://"), AssaultDestination::Fleet(vec![]),
+                   "empty host list defers to [fleet].hosts");
         assert_eq!(d("planned").to_string(), "planned");
+        assert_eq!(d("fleet://h:1,h:2").to_string(), "fleet://h:1,h:2");
         assert_eq!(d("serve://h:1").kind(), "serve");
+        assert_eq!(d("fleet://").kind(), "fleet");
         assert!(AssaultDestination::parse("", &[]).is_err());
         assert!(AssaultDestination::parse("@x", &[]).is_err());
         // A reference chain is rejected rather than followed.

@@ -17,7 +17,10 @@
 //!    ephemeral loopback port over the leg-2 shard set and drains a
 //!    [`RemoteSource`](crate::net::RemoteSource)-backed loader through
 //!    it (populates `net.*`: connections, requests, bytes served,
-//!    request latency).
+//!    request latency), then starts a *second* daemon over the same
+//!    pool and drains a [`FleetSource`](crate::net::FleetSource)-backed
+//!    loader striped across both (populates `fleet.*`: hosts up,
+//!    per-host requests/bytes, pool wait, request tail latency).
 //! 4. **Mock training loop** — per-rank planned loaders consumed in the
 //!    trainer's rank-sequential order, with batch materialization
 //!    standing in for `grad_step` compute and a real
@@ -136,7 +139,7 @@ fn shard_and_train_legs(opts: &ObserveOptions,
     let mut serve_cfg = cfg.serve.clone();
     serve_cfg.addr = "127.0.0.1:0".into();
     let pool = Arc::new(ShardPool::open(&shard_dir)?);
-    let server = crate::net::Server::start(pool, &serve_cfg)?;
+    let server = crate::net::Server::start(Arc::clone(&pool), &serve_cfg)?;
     let addr = server.addr().to_string();
     let mut remote = DataLoaderBuilder::new()
         .batch(2)
@@ -148,6 +151,23 @@ fn shard_and_train_legs(opts: &ObserveOptions,
         b?;
     }
     remote.shutdown();
+
+    // Leg 3b: a second daemon over the same pool, and one epoch striped
+    // across both through the fleet shard map — the `fleet.*` metrics
+    // (hosts up, per-host requests, pool wait, request tail latency).
+    let server2 = crate::net::Server::start(Arc::clone(&pool), &serve_cfg)?;
+    let hosts = [addr.clone(), server2.addr().to_string()];
+    let mut fleet = DataLoaderBuilder::new()
+        .batch(2)
+        .workers(2)
+        .depth(2)
+        .seed(opts.seed)
+        .fleet(&hosts, &dcfg, packer, &cfg.packing, 0)?;
+    while let Some(b) = fleet.next() {
+        b?;
+    }
+    fleet.shutdown();
+    server2.shutdown()?;
     server.shutdown()?;
 
     // Leg 4: the trainer's rank-sequential epoch loop over per-rank
@@ -264,6 +284,8 @@ mod tests {
         assert!(snap.counter(names::NET_CONNECTIONS) > 0);
         assert!(snap.counter(names::NET_REQUESTS) > 0);
         assert!(snap.counter(names::NET_BYTES_SERVED) > 0);
+        assert!(snap.counter(names::FLEET_REQUESTS) > 0);
+        assert!(snap.counter(names::FLEET_BYTES) > 0);
         assert!(snap.counter(names::TRAIN_STEPS) > 0);
         assert!(snap
             .histograms

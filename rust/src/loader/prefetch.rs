@@ -238,6 +238,38 @@ impl DataLoaderBuilder {
         self.spawn(Arc::new(source))
     }
 
+    /// Replay one shard set striped across a fleet of `bload serve`
+    /// daemons (every host serves the same set): the split rebuilds
+    /// from the fleet's consistency-checked manifest, is packed and
+    /// scheduled locally, and each video's content streams from the
+    /// host the client-side shard map assigns it — with pooled
+    /// connections and replica failover, so batches stay
+    /// byte-identical to a single-daemon [`remote`](Self::remote)
+    /// loader even when a host dies mid-epoch. Default fleet/client
+    /// knobs; use [`fleet_with`](Self::fleet_with) to tune them.
+    pub fn fleet(&self, hosts: &[String], dcfg: &DatasetConfig,
+                 packer: &dyn Packer, pcfg: &PackingConfig, epoch: u64)
+                 -> Result<DataLoader> {
+        self.fleet_with(
+            &crate::config::FleetConfig::with_hosts(hosts.to_vec()),
+            &crate::net::ClientConfig::default(), dcfg, packer, pcfg,
+            epoch)
+    }
+
+    /// [`fleet`](Self::fleet) with explicit fleet (replicas, pool
+    /// size, health interval) and client (deadlines, retries) knobs.
+    pub fn fleet_with(&self, fcfg: &crate::config::FleetConfig,
+                      ccfg: &crate::net::ClientConfig,
+                      dcfg: &DatasetConfig, packer: &dyn Packer,
+                      pcfg: &PackingConfig, epoch: u64)
+                      -> Result<DataLoader> {
+        self.validate()?;
+        let source = crate::net::FleetSource::connect_with(
+            fcfg, ccfg, dcfg, packer, pcfg, self.seed,
+            |packed| self.plan(packed, epoch))?;
+        self.spawn(Arc::new(source))
+    }
+
     /// Any custom [`BlockSource`]. This is the open extension point:
     /// planned/stream/store above all route through it.
     pub fn source(&self, source: Arc<dyn BlockSource>)

@@ -1,0 +1,114 @@
+//! Jittered doubling backoff shared by every retry loop in the data
+//! plane ([`RemoteProvider`](super::RemoteProvider) fetches,
+//! [`connect_handshake`](super::connect_handshake) admission, fleet
+//! failover).
+//!
+//! N clients that lose the same host at the same moment must not retry
+//! in lockstep — a recovering daemon eats a synchronized stampede
+//! exactly when it is weakest. Each retry therefore sleeps a uniformly
+//! jittered slice of the doubling window ("equal jitter": between half
+//! the nominal delay and the full delay), drawn from the deterministic
+//! [`Rng`] so a given seed replays the exact same delay sequence —
+//! tests stay bit-stable while distinct seeds decorrelate.
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// One retry loop's delay schedule: the nominal delay starts at `base`
+/// and doubles per draw; each [`next_delay`](Backoff::next_delay)
+/// jitters uniformly within `[nominal/2, nominal]`.
+#[derive(Debug)]
+pub struct Backoff {
+    nominal: Duration,
+    rng: Rng,
+}
+
+impl Backoff {
+    /// `base` is the first nominal delay; `seed` fixes the jitter
+    /// stream (see [`seed_for`] for deriving one from a host + token).
+    pub fn new(base: Duration, seed: u64) -> Backoff {
+        Backoff {
+            nominal: base,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// The next sleep: jittered from the current nominal delay, which
+    /// then doubles (saturating).
+    pub fn next_delay(&mut self) -> Duration {
+        let nominal = self.nominal;
+        self.nominal = nominal.saturating_mul(2);
+        let nanos = nominal.as_nanos().min(u64::MAX as u128) as u64;
+        if nanos < 2 {
+            return nominal;
+        }
+        let half = nanos / 2;
+        Duration::from_nanos(half + self.rng.below(half + 1))
+    }
+}
+
+/// Deterministic seed for a retry loop: FNV-1a over `tag` (normally
+/// the host address) mixed with `salt` (normally the record id), so
+/// two clients hammering one host for different records spread out
+/// while any single `(host, record)` schedule is reproducible.
+pub fn seed_for(tag: &str, salt: u64) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in tag.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_replays_the_same_schedule() {
+        let base = Duration::from_millis(50);
+        let mut a = Backoff::new(base, 9);
+        let mut b = Backoff::new(base, 9);
+        let da: Vec<_> = (0..6).map(|_| a.next_delay()).collect();
+        let db: Vec<_> = (0..6).map(|_| b.next_delay()).collect();
+        assert_eq!(da, db);
+    }
+
+    #[test]
+    fn distinct_seeds_decorrelate() {
+        let base = Duration::from_millis(50);
+        let mut a = Backoff::new(base, 1);
+        let mut b = Backoff::new(base, 2);
+        let da: Vec<_> = (0..6).map(|_| a.next_delay()).collect();
+        let db: Vec<_> = (0..6).map(|_| b.next_delay()).collect();
+        assert_ne!(da, db);
+    }
+
+    #[test]
+    fn delays_stay_within_the_doubling_window() {
+        let base = Duration::from_millis(40);
+        let mut b = Backoff::new(base, 3);
+        let mut nominal = base;
+        for _ in 0..8 {
+            let d = b.next_delay();
+            assert!(d >= nominal / 2, "{d:?} below half of {nominal:?}");
+            assert!(d <= nominal, "{d:?} above {nominal:?}");
+            nominal = nominal.saturating_mul(2);
+        }
+    }
+
+    #[test]
+    fn zero_base_never_sleeps() {
+        let mut b = Backoff::new(Duration::ZERO, 5);
+        assert_eq!(b.next_delay(), Duration::ZERO);
+        assert_eq!(b.next_delay(), Duration::ZERO);
+    }
+
+    #[test]
+    fn seed_for_separates_hosts_and_salts() {
+        assert_eq!(seed_for("h1:7440", 3), seed_for("h1:7440", 3));
+        assert_ne!(seed_for("h1:7440", 3), seed_for("h2:7440", 3));
+        assert_ne!(seed_for("h1:7440", 3), seed_for("h1:7440", 4));
+    }
+}

@@ -21,6 +21,7 @@ use crate::error::{Error, Result};
 use crate::telemetry::{self, names};
 use crate::util::crc32::crc32;
 
+use super::backoff::{seed_for, Backoff};
 use super::protocol::{self, BodyReader, OP_GET_BLOCK, OP_GET_VIDEO,
                       OP_HELLO, OP_SHUTDOWN, OP_STATS, PROTO_VERSION,
                       STATUS_ERR, STATUS_OK, STATUS_REFUSED};
@@ -37,7 +38,9 @@ pub struct ClientConfig {
     pub io_timeout: Duration,
     /// Extra attempts after the first failure (0 = fail fast).
     pub retries: usize,
-    /// Sleep before the first retry; doubles per subsequent retry.
+    /// Nominal sleep before the first retry; doubles per subsequent
+    /// retry, with deterministic per-seed jitter
+    /// ([`Backoff`](super::backoff::Backoff)).
     pub backoff: Duration,
 }
 
@@ -218,20 +221,20 @@ impl RemoteClient {
 
 /// Connect and complete the HELLO handshake, retrying transient
 /// transport faults *and* capacity refusals ([`Error::Refused`]) with
-/// doubling backoff. This is the admission path for pools of
-/// long-lived replay clients (`bload assault`): each client dials
-/// once — backing off while the server sheds load — and then reuses
-/// the admitted connection for every subsequent request, instead of
-/// paying a dial + handshake per request under pool pressure.
+/// jittered doubling backoff ([`Backoff`]). This is the admission path
+/// for pools of long-lived replay clients (`bload assault`): each
+/// client dials once — backing off while the server sheds load — and
+/// then reuses the admitted connection for every subsequent request,
+/// instead of paying a dial + handshake per request under pool
+/// pressure.
 pub fn connect_handshake(addr: &str, cfg: &ClientConfig)
                          -> Result<(RemoteClient, RemoteManifest)> {
-    let mut delay = cfg.backoff;
+    let mut backoff = Backoff::new(cfg.backoff, seed_for(addr, 0));
     let mut last: Option<Error> = None;
     for attempt in 0..=cfg.retries {
         if attempt > 0 {
             telemetry::counter(names::NET_RETRIES).inc();
-            std::thread::sleep(delay);
-            delay = delay.saturating_mul(2);
+            std::thread::sleep(backoff.next_delay());
         }
         let mut client = match RemoteClient::connect(addr, cfg) {
             Ok(c) => c,

@@ -1,0 +1,790 @@
+//! Fleet data plane: stripe one epoch across N `bload serve` daemons
+//! while keeping the byte-identity guarantee.
+//!
+//! [`RemoteSource`](super::RemoteSource) funnels every fetch through a
+//! single daemon; this module turns that one host into a servable
+//! cluster:
+//!
+//! ```text
+//!              FleetMap (id → host, deterministic)
+//!   loader ──► FleetProvider ──► host A pool ──► bload serve A
+//!                    │     └───► host B pool ──► bload serve B
+//!                    └ failover ► replica pool ► bload serve R
+//! ```
+//!
+//! - [`FleetMap`] assigns every manifest video id to a primary host
+//!   with a pure hash over the *canonical* (sorted, deduped) host
+//!   list, so the assignment is manifest-driven, deterministic, and
+//!   stable under the order hosts were listed in.
+//! - Each host gets a bounded connection pool ([`pool_size`]
+//!   (crate::config::FleetConfig::pool_size) connections, checkout
+//!   waits recorded in `fleet.pool_wait_s`) instead of
+//!   `RemoteProvider`'s single mutexed connection, so loader workers
+//!   fan out instead of serializing on one stream.
+//! - Replicas form a shared failover group: a dead or refusing
+//!   primary is retried with jittered doubling backoff
+//!   ([`Backoff`](super::backoff::Backoff)), then marked down for the
+//!   configured health-check interval and its fetches routed to the
+//!   replicas — mid-epoch, without duplicating or dropping a frame,
+//!   because the plan is computed client-side and any host serves
+//!   CRC-identical record bytes.
+//!
+//! Connecting handshakes **every** host (primaries and replicas) and
+//! requires all reachable manifests to be identical (seed, geometry,
+//! video set) — a fleet striping over inconsistent shard sets would
+//! silently break byte-identity, so it is refused up front. The split
+//! is then rebuilt client-side exactly as the single-host path does:
+//! only record content crosses the wire, CRC-verified.
+//!
+//! Configured by the `[fleet]` section
+//! ([`FleetConfig`](crate::config::FleetConfig)), surfaced as
+//! `DataLoaderBuilder::fleet`, `bload replay --fleet`, `bload top
+//! --fleet`, the `fleet://` assault destination, and the `fleet`
+//! metric block (`fleet.*` telemetry names).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::config::{DatasetConfig, FleetConfig, PackingConfig};
+use crate::dataset::synthetic::GeneratorSpec;
+use crate::dataset::{Split, VideoData, VideoMeta};
+use crate::error::{Error, Result};
+use crate::loader::{BlockSource, EpochPlan, PlannedSource, VideoProvider,
+                    WorkUnit};
+use crate::packing::{pack, PackedDataset, Packer};
+use crate::telemetry::{self, names, Counter};
+
+use super::backoff::{seed_for, Backoff};
+use super::client::{connect_handshake, decode_record, remote_manifest,
+                    ClientConfig, RemoteClient, RemoteManifest};
+use super::server::ServerStats;
+
+/// Deterministic video-id → host assignment over the canonical host
+/// list. Built from the served manifest; the same manifest and host
+/// *set* produce the same map regardless of host ordering.
+#[derive(Debug, Clone)]
+pub struct FleetMap {
+    hosts: Vec<String>,
+    assign: HashMap<u32, usize>,
+}
+
+impl FleetMap {
+    /// Build the map for `videos` over `hosts` (canonicalized: sorted,
+    /// trimmed; duplicates are a config error, not a silent merge).
+    pub fn new(hosts: &[String], videos: &[VideoMeta])
+               -> Result<FleetMap> {
+        let hosts = canonical_hosts(hosts)?;
+        let n = hosts.len() as u64;
+        let assign = videos
+            .iter()
+            .map(|m| (m.id, (mix(m.id) % n) as usize))
+            .collect();
+        Ok(FleetMap { hosts, assign })
+    }
+
+    /// Hosts in canonical order — indices from
+    /// [`host_index`](FleetMap::host_index) point into this slice.
+    pub fn hosts(&self) -> &[String] {
+        &self.hosts
+    }
+
+    /// Canonical index of the primary serving `id` (hash fallback for
+    /// ids outside the manifest, so probes of unknown ids still route
+    /// deterministically).
+    pub fn host_index(&self, id: u32) -> usize {
+        self.assign.get(&id).copied().unwrap_or_else(|| {
+            (mix(id) % self.hosts.len() as u64) as usize
+        })
+    }
+
+    /// The primary host address serving `id`.
+    pub fn host_of(&self, id: u32) -> &str {
+        &self.hosts[self.host_index(id)]
+    }
+
+    /// How many manifest videos the map assigns to host `host`.
+    pub fn assigned(&self, host: usize) -> usize {
+        self.assign.values().filter(|&&h| h == host).count()
+    }
+}
+
+/// SplitMix64 finalizer — a pure, seedless mixer so the assignment is
+/// a function of the id alone (no per-run salt to keep consistent
+/// across trainer processes).
+fn mix(id: u32) -> u64 {
+    let mut z = (id as u64).wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Canonicalize a host list: trim, drop empties, sort; duplicates are
+/// rejected (a doubled host would skew the stripe silently).
+pub fn canonical_hosts(hosts: &[String]) -> Result<Vec<String>> {
+    let mut out: Vec<String> = hosts
+        .iter()
+        .map(|h| h.trim().to_string())
+        .filter(|h| !h.is_empty())
+        .collect();
+    if out.is_empty() {
+        return Err(Error::Config("fleet: no hosts given".into()));
+    }
+    out.sort();
+    for w in out.windows(2) {
+        if w[0] == w[1] {
+            return Err(Error::Config(format!(
+                "fleet: duplicate host '{}'",
+                w[0]
+            )));
+        }
+    }
+    Ok(out)
+}
+
+/// Split a `HOST:PORT,HOST:PORT` flag value into hosts (`bload replay
+/// --fleet`, `bload top --fleet`, `fleet://` destinations).
+pub fn parse_hosts(raw: &str) -> Vec<String> {
+    raw.split(',')
+        .map(str::trim)
+        .filter(|h| !h.is_empty())
+        .map(str::to_string)
+        .collect()
+}
+
+struct PoolState {
+    idle: Vec<RemoteClient>,
+    outstanding: usize,
+}
+
+/// Bounded per-host connection pool: at most `cap` live connections;
+/// checkouts past the cap wait on a condvar (recorded in
+/// `fleet.pool_wait_s`) and give up with a retryable
+/// [`Error::Refused`] after the configured deadlines.
+struct HostPool {
+    addr: String,
+    cfg: ClientConfig,
+    cap: usize,
+    state: Mutex<PoolState>,
+    freed: Condvar,
+}
+
+impl HostPool {
+    fn new(addr: String, cfg: ClientConfig, cap: usize) -> HostPool {
+        HostPool {
+            addr,
+            cfg,
+            cap,
+            state: Mutex::new(PoolState {
+                idle: Vec::new(),
+                outstanding: 0,
+            }),
+            freed: Condvar::new(),
+        }
+    }
+
+    /// Park an already-established connection (the connect handshake's)
+    /// in the pool instead of discarding it.
+    fn seed(&self, conn: RemoteClient) {
+        let mut st = lock(&self.state);
+        if st.idle.len() + st.outstanding < self.cap {
+            st.idle.push(conn);
+        }
+    }
+
+    /// Run `f` over a pooled connection: reuse an idle one, dial if
+    /// under the cap, otherwise wait for a checkout to end. On any
+    /// error the stream may be mid-frame, so it is dropped, never
+    /// returned to the pool.
+    fn with_conn<T>(&self,
+                    f: impl FnOnce(&mut RemoteClient) -> Result<T>)
+                    -> Result<T> {
+        let t0 = Instant::now();
+        let deadline = t0 + self.cfg.connect_timeout + self.cfg.io_timeout;
+        let mut st = lock(&self.state);
+        let held = loop {
+            if let Some(c) = st.idle.pop() {
+                st.outstanding += 1;
+                break Some(c);
+            }
+            if st.idle.len() + st.outstanding < self.cap {
+                st.outstanding += 1;
+                break None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                drop(st);
+                return Err(Error::Refused(format!(
+                    "{}: connection pool exhausted ({} checked out)",
+                    self.addr, self.cap
+                )));
+            }
+            let (g, _timed_out) = self
+                .freed
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
+            st = g;
+        };
+        drop(st);
+        telemetry::histogram(names::FLEET_POOL_WAIT_S)
+            .record(t0.elapsed().as_secs_f64());
+        let mut conn = match held {
+            Some(c) => c,
+            None => match RemoteClient::connect(&self.addr, &self.cfg) {
+                Ok(c) => c,
+                Err(e) => {
+                    self.put_back(None);
+                    return Err(e);
+                }
+            },
+        };
+        let out = f(&mut conn);
+        self.put_back(if out.is_ok() { Some(conn) } else { None });
+        out
+    }
+
+    fn put_back(&self, conn: Option<RemoteClient>) {
+        let mut st = lock(&self.state);
+        st.outstanding = st.outstanding.saturating_sub(1);
+        if let Some(c) = conn {
+            if st.idle.len() + st.outstanding < self.cap {
+                st.idle.push(c);
+            }
+        }
+        drop(st);
+        self.freed.notify_one();
+    }
+}
+
+/// One fleet host: its pool, its health marker, and its per-host
+/// telemetry handles.
+struct HostEntry {
+    addr: String,
+    pool: HostPool,
+    down_until: Mutex<Option<Instant>>,
+    t_requests: Arc<Counter>,
+    t_bytes: Arc<Counter>,
+    t_failovers: Arc<Counter>,
+}
+
+impl HostEntry {
+    fn new(addr: &str, ccfg: &ClientConfig, cap: usize, index: usize)
+           -> HostEntry {
+        HostEntry {
+            addr: addr.to_string(),
+            pool: HostPool::new(addr.to_string(), ccfg.clone(), cap),
+            down_until: Mutex::new(None),
+            t_requests: telemetry::counter(
+                &names::fleet_host_requests(index),
+            ),
+            t_bytes: telemetry::counter(&names::fleet_host_bytes(index)),
+            t_failovers: telemetry::counter(
+                &names::fleet_host_failovers(index),
+            ),
+        }
+    }
+
+    /// Lazy health check: a down marker expires on its own once the
+    /// health-check interval passes — the next fetch probes the host
+    /// again instead of needing a background prober thread.
+    fn is_down(&self) -> bool {
+        let mut until = lock(&self.down_until);
+        match *until {
+            Some(t) if Instant::now() < t => true,
+            Some(_) => {
+                *until = None;
+                false
+            }
+            None => false,
+        }
+    }
+
+    fn mark_down(&self, hold: Duration) {
+        *lock(&self.down_until) = Some(Instant::now() + hold);
+    }
+
+    /// Clear the down marker; returns whether the host *was* down (so
+    /// the caller can refresh the down gauge only on transitions).
+    fn mark_up(&self) -> bool {
+        lock(&self.down_until).take().is_some()
+    }
+}
+
+/// [`VideoProvider`] routing fetches through the [`FleetMap`] with
+/// per-host pools, health tracking and replica failover.
+pub struct FleetProvider {
+    map: FleetMap,
+    /// Parallel to `map.hosts()`.
+    primaries: Vec<HostEntry>,
+    /// Shared failover group, canonical order.
+    replicas: Vec<HostEntry>,
+    retries: usize,
+    backoff: Duration,
+    health_interval: Duration,
+    geometry: (usize, usize, usize),
+}
+
+impl FleetProvider {
+    /// Handshake every host in `fcfg` (primaries *and* replicas),
+    /// require all reachable manifests to be identical, and build the
+    /// map + pools. An unreachable primary is tolerated — marked down,
+    /// to be served by the replicas — only when replicas exist; an
+    /// unreachable replica is always tolerated. At least one host must
+    /// answer.
+    pub fn connect(fcfg: &FleetConfig, ccfg: &ClientConfig)
+                   -> Result<(FleetProvider, RemoteManifest)> {
+        fcfg.validate()?;
+        let primaries = canonical_hosts(&fcfg.hosts)?;
+        let replicas = if fcfg.replicas.is_empty() {
+            Vec::new()
+        } else {
+            canonical_hosts(&fcfg.replicas)?
+        };
+        let mut first: Option<(String, RemoteManifest)> = None;
+        let mut entries: Vec<HostEntry> = Vec::new();
+        let mut reachable: Vec<bool> = Vec::new();
+        let mut first_err: Option<Error> = None;
+        for (i, addr) in
+            primaries.iter().chain(replicas.iter()).enumerate()
+        {
+            let entry =
+                HostEntry::new(addr, ccfg, fcfg.pool_size, i);
+            match connect_handshake(addr, ccfg) {
+                Ok((conn, m)) => {
+                    check_consistent(&mut first, addr, &m)?;
+                    entry.pool.seed(conn);
+                    reachable.push(true);
+                }
+                Err(e) if transient(&e) => {
+                    entry.mark_down(fcfg.health_interval);
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                    reachable.push(false);
+                }
+                Err(e) => return Err(e),
+            }
+            entries.push(entry);
+        }
+        let Some((_, manifest)) = first else {
+            return Err(first_err.unwrap_or_else(|| {
+                Error::Net("fleet: no host reachable".into())
+            }));
+        };
+        for (i, ok) in reachable.iter().enumerate().take(primaries.len())
+        {
+            if !ok && replicas.is_empty() {
+                return Err(Error::Net(format!(
+                    "fleet: primary {} is unreachable and no replicas \
+                     are configured — its stripe could never be served",
+                    primaries[i]
+                )));
+            }
+        }
+        let map = FleetMap::new(&primaries, &manifest.videos)?;
+        telemetry::gauge(names::FLEET_HOSTS)
+            .set((primaries.len() + replicas.len()) as f64);
+        let replica_entries = entries.split_off(primaries.len());
+        let provider = FleetProvider {
+            map,
+            primaries: entries,
+            replicas: replica_entries,
+            retries: ccfg.retries,
+            backoff: ccfg.backoff,
+            health_interval: fcfg.health_interval,
+            geometry: manifest.geometry,
+        };
+        provider.refresh_down_gauge();
+        Ok((provider, manifest))
+    }
+
+    /// The shard map this provider routes through.
+    pub fn map(&self) -> &FleetMap {
+        &self.map
+    }
+
+    /// `(objects, feat_dim, classes)` from the served manifest.
+    pub fn geometry(&self) -> (usize, usize, usize) {
+        self.geometry
+    }
+
+    /// Fetch one video's raw record bytes through the map, failing
+    /// over to replicas as needed. CRC-verified by the client layer.
+    pub fn fetch_record(&self, id: u32) -> Result<Vec<u8>> {
+        let t0 = Instant::now();
+        let bytes = self.fetch_with_failover(id)?;
+        telemetry::counter(names::FLEET_REQUESTS).inc();
+        telemetry::counter(names::FLEET_BYTES).add(bytes.len() as u64);
+        telemetry::histogram(names::FLEET_REQUEST_S)
+            .record(t0.elapsed().as_secs_f64());
+        Ok(bytes)
+    }
+
+    fn fetch_with_failover(&self, id: u32) -> Result<Vec<u8>> {
+        let primary = self.map.host_index(id);
+        // Candidate order: the mapped primary, then the replicas
+        // rotated by the primary index so replica load spreads evenly
+        // when several primaries are down.
+        let mut candidates: Vec<&HostEntry> =
+            Vec::with_capacity(1 + self.replicas.len());
+        candidates.push(&self.primaries[primary]);
+        let n = self.replicas.len();
+        for k in 0..n {
+            candidates.push(&self.replicas[(primary + k) % n]);
+        }
+        let mut last: Option<Error> = None;
+        // Pass 1: hosts currently believed healthy get the full retry
+        // budget; a host that exhausts it is marked down and the fetch
+        // fails over to the next candidate.
+        for entry in candidates.iter().filter(|e| !e.is_down()) {
+            match self.try_host(entry, id, self.retries) {
+                Ok(b) => return Ok(b),
+                Err(e) if transient(&e) => {
+                    entry.mark_down(self.health_interval);
+                    entry.t_failovers.inc();
+                    telemetry::counter(names::FLEET_FAILOVERS).inc();
+                    self.refresh_down_gauge();
+                    last = Some(e);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        // Pass 2: every healthy candidate failed (or none were) — probe
+        // each once regardless of its down marker. This is the last
+        // resort that keeps an epoch alive through a full flap, and it
+        // doubles as an eager health re-check.
+        for entry in &candidates {
+            match self.try_host(entry, id, 0) {
+                Ok(b) => return Ok(b),
+                Err(e) if transient(&e) => last = Some(e),
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last.expect("fleet fetch made at least one attempt"))
+    }
+
+    /// Up to `1 + retries` attempts against one host, sleeping a
+    /// jittered doubling backoff between attempts (seeded by host +
+    /// id, so concurrent workers don't stampede a recovering daemon).
+    fn try_host(&self, entry: &HostEntry, id: u32, retries: usize)
+                -> Result<Vec<u8>> {
+        let t_retries = telemetry::counter(names::FLEET_RETRIES);
+        let mut backoff =
+            Backoff::new(self.backoff, seed_for(&entry.addr, id as u64));
+        let mut last: Option<Error> = None;
+        for attempt in 0..=retries {
+            if attempt > 0 {
+                t_retries.inc();
+                std::thread::sleep(backoff.next_delay());
+            }
+            match entry.pool.with_conn(|c| c.get_video(id)) {
+                Ok(bytes) => {
+                    if entry.mark_up() {
+                        self.refresh_down_gauge();
+                    }
+                    entry.t_requests.inc();
+                    entry.t_bytes.add(bytes.len() as u64);
+                    return Ok(bytes);
+                }
+                Err(e) if transient(&e) => last = Some(e),
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last.expect("at least one attempt ran"))
+    }
+
+    fn refresh_down_gauge(&self) {
+        let down = self
+            .primaries
+            .iter()
+            .chain(self.replicas.iter())
+            .filter(|e| e.is_down())
+            .count();
+        telemetry::gauge(names::FLEET_HOSTS_DOWN).set(down as f64);
+    }
+}
+
+impl VideoProvider for FleetProvider {
+    /// Serve the stored record over the wire; `split` is only
+    /// consulted by the synthetic fallback paths, never here.
+    fn fetch(&self, _split: &Split, meta: VideoMeta)
+             -> Result<Arc<VideoData>> {
+        let bytes = self.fetch_record(meta.id)?;
+        let peer = self.map.host_of(meta.id);
+        Ok(Arc::new(decode_record(&bytes, meta, self.geometry, peer)?))
+    }
+}
+
+/// Block source striping one epoch over a fleet of serve daemons —
+/// the fleet counterpart of [`RemoteSource`](super::RemoteSource).
+pub struct FleetSource {
+    inner: PlannedSource,
+    provider: Arc<FleetProvider>,
+    manifest_seed: u64,
+}
+
+impl FleetSource {
+    /// Connect to `hosts` with default fleet knobs (no replicas) and
+    /// default [`ClientConfig`] deadlines/retries.
+    pub fn connect<F>(hosts: &[String], dcfg: &DatasetConfig,
+                      packer: &dyn Packer, pcfg: &PackingConfig,
+                      pack_seed: u64, plan_of: F) -> Result<FleetSource>
+    where
+        F: FnOnce(&PackedDataset) -> EpochPlan,
+    {
+        let fcfg = FleetConfig::with_hosts(hosts.to_vec());
+        FleetSource::connect_with(&fcfg, &ClientConfig::default(), dcfg,
+                                  packer, pcfg, pack_seed, plan_of)
+    }
+
+    /// Connect the full fleet described by `fcfg` and schedule the
+    /// served dataset with `plan_of` — the exact client-side rebuild
+    /// [`RemoteSource::connect_with`](super::RemoteSource::connect_with)
+    /// performs, so a fleet epoch is byte-identical to a single-host
+    /// or local shard replay with the same builder knobs.
+    pub fn connect_with<F>(fcfg: &FleetConfig, ccfg: &ClientConfig,
+                           dcfg: &DatasetConfig, packer: &dyn Packer,
+                           pcfg: &PackingConfig, pack_seed: u64,
+                           plan_of: F) -> Result<FleetSource>
+    where
+        F: FnOnce(&PackedDataset) -> EpochPlan,
+    {
+        let (provider, manifest) = FleetProvider::connect(fcfg, ccfg)?;
+        if manifest.geometry != (dcfg.objects, dcfg.feat_dim, dcfg.classes)
+        {
+            return Err(Error::Dataset(format!(
+                "fleet: served shard set geometry {:?} != dataset \
+                 config ({}, {}, {})",
+                manifest.geometry, dcfg.objects, dcfg.feat_dim,
+                dcfg.classes
+            )));
+        }
+        let split = Arc::new(Split {
+            videos: manifest.videos,
+            spec: GeneratorSpec::new(dcfg, manifest.seed),
+        });
+        let packed = Arc::new(pack(packer, &split, pcfg, pack_seed)?);
+        let plan = plan_of(&packed);
+        Ok(FleetSource {
+            inner: PlannedSource::new(split, packed, plan),
+            provider: Arc::new(provider),
+            manifest_seed: manifest.seed,
+        })
+    }
+
+    /// The generator seed the fleet's manifests record.
+    pub fn store_seed(&self) -> u64 {
+        self.manifest_seed
+    }
+
+    /// The routing provider fetching record bytes across the fleet.
+    pub fn provider(&self) -> &Arc<FleetProvider> {
+        &self.provider
+    }
+
+    /// The packed dataset rebuilt from the served manifest.
+    pub fn packed(&self) -> &Arc<PackedDataset> {
+        self.inner.packed()
+    }
+}
+
+impl BlockSource for FleetSource {
+    fn split(&self) -> &Arc<Split> {
+        self.inner.split()
+    }
+
+    fn block_len(&self) -> usize {
+        self.inner.block_len()
+    }
+
+    fn next_unit(&self) -> Option<WorkUnit> {
+        self.inner.next_unit()
+    }
+
+    fn claimed(&self) -> usize {
+        self.inner.claimed()
+    }
+
+    fn steps(&self) -> Option<usize> {
+        self.inner.steps()
+    }
+
+    fn video_provider(&self) -> Option<Arc<dyn VideoProvider>> {
+        Some(Arc::clone(&self.provider) as Arc<dyn VideoProvider>)
+    }
+}
+
+/// First reachable host's manifest, tried in the given order — `bload
+/// replay --fleet --verify` learns the generator seed this way even
+/// when one daemon is already dead.
+pub fn fleet_manifest(hosts: &[String], ccfg: &ClientConfig)
+                      -> Result<RemoteManifest> {
+    let mut last: Option<Error> = None;
+    for addr in hosts {
+        match remote_manifest(addr, ccfg) {
+            Ok(m) => return Ok(m),
+            Err(e) if transient(&e) => last = Some(e),
+            Err(e) => return Err(e),
+        }
+    }
+    Err(last.unwrap_or_else(|| {
+        Error::Config("fleet: no hosts given".into())
+    }))
+}
+
+/// One STATS poll per daemon; an unreachable host yields an `Err`
+/// entry instead of failing the sweep (`bload top --fleet` renders it
+/// as a down row).
+pub fn fleet_stats(hosts: &[String], ccfg: &ClientConfig)
+                   -> Vec<(String, Result<ServerStats>)> {
+    hosts
+        .iter()
+        .map(|addr| {
+            let res = RemoteClient::connect(addr, ccfg)
+                .and_then(|mut c| c.stats());
+            (addr.clone(), res)
+        })
+        .collect()
+}
+
+fn transient(e: &Error) -> bool {
+    matches!(e, Error::Io { .. } | Error::Refused(_))
+}
+
+fn check_consistent(first: &mut Option<(String, RemoteManifest)>,
+                    addr: &str, m: &RemoteManifest) -> Result<()> {
+    match first {
+        None => {
+            *first = Some((addr.to_string(), m.clone()));
+            Ok(())
+        }
+        Some((a0, m0)) => {
+            if m0.seed != m.seed
+                || m0.geometry != m.geometry
+                || m0.videos != m.videos
+            {
+                return Err(Error::Net(format!(
+                    "fleet: inconsistent shard sets: {addr} serves \
+                     seed {} with {} video(s), {a0} serves seed {} \
+                     with {} video(s) — every fleet host must serve \
+                     the same shard set",
+                    m.seed,
+                    m.videos.len(),
+                    m0.seed,
+                    m0.videos.len()
+                )));
+            }
+            Ok(())
+        }
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // Same poison policy as the rest of the data plane: a worker that
+    // panicked mid-checkout left nothing worth protecting (errored
+    // connections are dropped, never reused).
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hosts(hs: &[&str]) -> Vec<String> {
+        hs.iter().map(|h| h.to_string()).collect()
+    }
+
+    fn metas(n: u32) -> Vec<VideoMeta> {
+        (0..n).map(|id| VideoMeta { id, len: 8 }).collect()
+    }
+
+    #[test]
+    fn map_is_stable_under_host_ordering() {
+        let vids = metas(64);
+        let a =
+            FleetMap::new(&hosts(&["h1:1", "h2:2", "h3:3"]), &vids)
+                .unwrap();
+        let b =
+            FleetMap::new(&hosts(&["h3:3", "h1:1", "h2:2"]), &vids)
+                .unwrap();
+        assert_eq!(a.hosts(), b.hosts());
+        for m in &vids {
+            assert_eq!(a.host_of(m.id), b.host_of(m.id));
+        }
+    }
+
+    #[test]
+    fn map_spreads_ids_over_every_host() {
+        let vids = metas(128);
+        let map =
+            FleetMap::new(&hosts(&["a:1", "b:2", "c:3"]), &vids)
+                .unwrap();
+        let total: usize = (0..3).map(|h| map.assigned(h)).sum();
+        assert_eq!(total, 128);
+        for h in 0..3 {
+            assert!(map.assigned(h) > 0, "host {h} got no stripe");
+        }
+    }
+
+    #[test]
+    fn map_assignment_is_manifest_driven_and_deterministic() {
+        let vids = metas(32);
+        let a = FleetMap::new(&hosts(&["a:1", "b:2"]), &vids).unwrap();
+        let b = FleetMap::new(&hosts(&["a:1", "b:2"]), &vids).unwrap();
+        for m in &vids {
+            assert_eq!(a.host_index(m.id), b.host_index(m.id));
+        }
+        // Ids outside the manifest still route deterministically.
+        assert_eq!(a.host_index(9999), b.host_index(9999));
+    }
+
+    #[test]
+    fn canonical_hosts_rejects_empty_and_duplicates() {
+        assert!(canonical_hosts(&[]).is_err());
+        assert!(canonical_hosts(&hosts(&["", "  "])).is_err());
+        let err = canonical_hosts(&hosts(&["a:1", "b:2", "a:1"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate host"), "{err}");
+    }
+
+    #[test]
+    fn parse_hosts_splits_and_trims() {
+        assert_eq!(
+            parse_hosts("a:1, b:2 ,,c:3"),
+            hosts(&["a:1", "b:2", "c:3"])
+        );
+        assert!(parse_hosts("").is_empty());
+    }
+
+    #[test]
+    fn host_pool_bounds_live_connections_and_refuses_past_cap() {
+        // A listener that accepts nothing: connects succeed (backlog),
+        // so the pool's own accounting is what's under test.
+        let listener =
+            std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let ccfg = ClientConfig {
+            connect_timeout: Duration::from_millis(100),
+            io_timeout: Duration::from_millis(100),
+            retries: 0,
+            backoff: Duration::from_millis(5),
+        };
+        let pool = HostPool::new(addr, ccfg, 1);
+        let out = pool.with_conn(|_conn| {
+            // The single slot is checked out: a nested checkout must
+            // wait for the deadline and give up with the *retryable*
+            // refusal, never dial past the cap.
+            let err = pool.with_conn(|_c| Ok(())).unwrap_err();
+            assert!(matches!(err, Error::Refused(_)), "{err}");
+            assert!(
+                err.to_string().contains("pool exhausted"),
+                "{err}"
+            );
+            Ok(7u8)
+        });
+        assert_eq!(out.unwrap(), 7);
+        // The released connection is reusable afterwards.
+        assert_eq!(pool.with_conn(|_c| Ok(1u8)).unwrap(), 1);
+    }
+}

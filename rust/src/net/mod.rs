@@ -40,14 +40,25 @@
 //! Configured by the `[serve]` section ([`ServeConfig`]
 //! (crate::config::ServeConfig)) and surfaced as the `serve` metric
 //! block (`net.*` telemetry names) in `bload top`.
+//!
+//! One daemon is rarely enough for a rank fleet: [`fleet`] stripes an
+//! epoch across N daemons behind a deterministic shard map with
+//! per-host connection pools and replica failover
+//! (`DataLoaderBuilder::fleet`, `bload replay --fleet`, `bload top
+//! --fleet`), still byte-identical to a local replay. Every retry
+//! loop on this path shares the jittered doubling [`backoff`].
 
+pub mod backoff;
 pub mod client;
+pub mod fleet;
 pub mod protocol;
 pub mod server;
 pub mod source;
 
 pub use client::{connect_handshake, decode_record, remote_manifest,
                  ClientConfig, RemoteClient, RemoteManifest};
+pub use fleet::{fleet_manifest, fleet_stats, parse_hosts, FleetMap,
+                FleetProvider, FleetSource};
 pub use server::{Server, ServerStats};
 pub use source::{RemoteProvider, RemoteSource};
 
@@ -59,7 +70,8 @@ mod tests {
     use std::sync::Arc;
     use std::time::Duration;
 
-    use crate::config::{DatasetConfig, ExperimentConfig, ServeConfig};
+    use crate::config::{DatasetConfig, ExperimentConfig, FleetConfig,
+                        ServeConfig};
     use crate::dataset::shardstore::{ShardPool, ShardSetWriter};
     use crate::dataset::synthetic::generate;
     use crate::error::Error;
@@ -343,6 +355,158 @@ mod tests {
         }
         drop(src);
         server.shutdown().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fleet_source_stripes_across_two_daemons_byte_identically() {
+        use crate::loader::{BlockSource, EpochPlan};
+        use crate::packing::by_name;
+        let (dir, pool, dcfg) = shard_fixture("fleet_stripe");
+        let cfg = ExperimentConfig::default_config();
+        let s1 = Server::start(Arc::clone(&pool), &test_serve_cfg())
+            .unwrap();
+        let s2 = Server::start(Arc::clone(&pool), &test_serve_cfg())
+            .unwrap();
+        let hosts = vec![s1.addr().to_string(), s2.addr().to_string()];
+
+        let plan_of = |packed: &crate::packing::PackedDataset| {
+            EpochPlan::new(packed, 1, 0, 2, true, 7, 0)
+        };
+        let src = FleetSource::connect(&hosts, &dcfg,
+                                       by_name("bload").unwrap(),
+                                       &cfg.packing, 7, plan_of)
+            .unwrap();
+        assert_eq!(src.store_seed(), pool.seed());
+        assert_eq!(src.split().videos, pool.videos());
+        // Same split + same pack seed => blocks identical to a local
+        // pack, exactly like the single-host RemoteSource.
+        let local_split = Arc::new(crate::dataset::Split {
+            videos: pool.videos().to_vec(),
+            spec: crate::dataset::synthetic::GeneratorSpec::new(
+                &dcfg,
+                pool.seed(),
+            ),
+        });
+        let local = crate::packing::pack(by_name("bload").unwrap(),
+                                         &local_split, &cfg.packing, 7)
+            .unwrap();
+        assert_eq!(src.packed().blocks, local.blocks);
+        // Every video's content through the striped provider matches
+        // the pool byte for byte.
+        let provider = src.video_provider().unwrap();
+        for meta in pool.videos().iter() {
+            let served = provider.fetch(src.split(), *meta).unwrap();
+            assert_eq!(*served, *pool.get(meta.id).unwrap());
+        }
+        // Both daemons actually served a stripe (not all ids on one).
+        assert!(s1.stats().requests > 1, "host 1 served no stripe");
+        assert!(s2.stats().requests > 1, "host 2 served no stripe");
+        drop(src);
+        s1.shutdown().unwrap();
+        s2.shutdown().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fleet_provider_fails_over_to_replica_when_primary_dies() {
+        let (dir, pool, _dcfg) = shard_fixture("fleet_failover");
+        let primary =
+            Server::start(Arc::clone(&pool), &test_serve_cfg()).unwrap();
+        let replica =
+            Server::start(Arc::clone(&pool), &test_serve_cfg()).unwrap();
+        let mut fcfg =
+            FleetConfig::with_hosts(vec![primary.addr().to_string()]);
+        fcfg.replicas = vec![replica.addr().to_string()];
+        fcfg.health_interval = Duration::from_millis(200);
+        let (provider, manifest) =
+            FleetProvider::connect(&fcfg, &test_client_cfg()).unwrap();
+
+        let id = manifest.videos[0].id;
+        let (want, _crc) = pool.record(id).unwrap();
+        assert_eq!(provider.fetch_record(id).unwrap(), want);
+
+        let before = crate::telemetry::counter(
+            crate::telemetry::names::FLEET_FAILOVERS,
+        )
+        .get();
+        primary.shutdown().unwrap();
+        // Every fetch keeps succeeding — served by the replica now —
+        // and the failover counter moves.
+        for meta in pool.videos().iter().take(5) {
+            let (want, _crc) = pool.record(meta.id).unwrap();
+            assert_eq!(provider.fetch_record(meta.id).unwrap(), want);
+        }
+        let after = crate::telemetry::counter(
+            crate::telemetry::names::FLEET_FAILOVERS,
+        )
+        .get();
+        assert!(after > before, "no failover recorded");
+        assert!(replica.stats().requests > 1, "replica served nothing");
+        drop(provider);
+        replica.shutdown().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fleet_rejects_inconsistent_shard_sets() {
+        let (dir_a, pool_a, _dcfg) = shard_fixture("fleet_mismatch_a");
+        // A second shard set written from a different generator seed.
+        let cfg = ExperimentConfig::default_config();
+        let dcfg = cfg.dataset.scaled(0.004);
+        let ds = generate(&dcfg, 8);
+        let dir_b = std::env::temp_dir().join(format!(
+            "bload_net_fleet_mismatch_b_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir_b).ok();
+        ShardSetWriter::new(&dir_b, 8, 2)
+            .unwrap()
+            .write(&ds.train)
+            .unwrap();
+        let pool_b = Arc::new(ShardPool::open(&dir_b).unwrap());
+
+        let sa = Server::start(pool_a, &test_serve_cfg()).unwrap();
+        let sb = Server::start(pool_b, &test_serve_cfg()).unwrap();
+        let fcfg = FleetConfig::with_hosts(vec![
+            sa.addr().to_string(),
+            sb.addr().to_string(),
+        ]);
+        let err = FleetProvider::connect(&fcfg, &test_client_cfg())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("inconsistent shard sets"), "{err}");
+        sa.shutdown().unwrap();
+        sb.shutdown().unwrap();
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+
+    #[test]
+    fn fleet_requires_replicas_to_cover_a_dead_primary() {
+        let (dir, pool, _dcfg) = shard_fixture("fleet_dead_primary");
+        let live = Server::start(pool, &test_serve_cfg()).unwrap();
+        // Reserve a port that refuses connections: bind, read the
+        // address, drop the listener.
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let fcfg = FleetConfig::with_hosts(vec![
+            live.addr().to_string(),
+            dead.clone(),
+        ]);
+        let err = FleetProvider::connect(&fcfg, &test_client_cfg())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no replicas"), "{err}");
+        // With a replica covering the stripe, the same fleet connects.
+        let mut covered = fcfg.clone();
+        covered.replicas = vec![live.addr().to_string()];
+        assert!(
+            FleetProvider::connect(&covered, &test_client_cfg()).is_ok()
+        );
+        live.shutdown().unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -14,10 +14,12 @@
 //! The provider holds one connection behind a mutex — loader workers
 //! serialize on the wire, which is the right shape for a single TCP
 //! stream (replies are in-order anyway) and keeps the server's
-//! per-client cost at one handler thread. Transient transport errors
-//! (connect refused, reset, timeout — anything [`Error::Io`]) are
-//! retried with doubling backoff and a fresh connection, bumping
-//! `net.retries`; protocol violations and CRC mismatches are fatal.
+//! per-client cost at one handler thread. (The fleet path in
+//! [`super::fleet`] swaps this single mutexed connection for bounded
+//! per-host pools.) Transient transport errors (connect refused,
+//! reset, timeout — anything [`Error::Io`]) are retried with jittered
+//! doubling backoff and a fresh connection, bumping `net.retries`;
+//! protocol violations and CRC mismatches are fatal.
 //! No client-side record cache: bload packing places every video
 //! exactly once per epoch, so cached bytes would never be re-hit.
 
@@ -32,6 +34,7 @@ use crate::loader::{BlockSource, EpochPlan, PlannedSource, VideoProvider,
 use crate::packing::{pack, PackedDataset, Packer};
 use crate::telemetry::{self, names};
 
+use super::backoff::{seed_for, Backoff};
 use super::client::{decode_record, ClientConfig, RemoteClient};
 
 /// Block source over a `bload serve` daemon.
@@ -154,13 +157,13 @@ pub struct RemoteProvider {
 impl RemoteProvider {
     fn fetch_record(&self, id: u32) -> Result<Vec<u8>> {
         let t_retries = telemetry::counter(names::NET_RETRIES);
-        let mut delay = self.cfg.backoff;
+        let mut backoff =
+            Backoff::new(self.cfg.backoff, seed_for(&self.addr, id as u64));
         let mut last: Option<Error> = None;
         for attempt in 0..=self.cfg.retries {
             if attempt > 0 {
                 t_retries.inc();
-                std::thread::sleep(delay);
-                delay = delay.saturating_mul(2);
+                std::thread::sleep(backoff.next_delay());
             }
             let mut conn = lock(&self.conn);
             if conn.is_none() {

@@ -207,10 +207,38 @@ impl MetricBlock for Assault {
     }
 }
 
+/// Fleet panel: client-side striping across serve daemons — shard-map
+/// traffic, pool pressure and failover health.
+#[derive(Debug)]
+pub struct Fleet;
+
+impl MetricBlock for Fleet {
+    fn name(&self) -> &'static str {
+        "fleet"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["fanout", "shardmap"]
+    }
+
+    fn describe(&self) -> &'static str {
+        "fleet client: striped hosts up/down, requests, failovers, \
+         pool wait and request tail latency"
+    }
+
+    fn template(&self) -> &'static str {
+        "hosts {fleet.hosts} (down {fleet.hosts_down})  \
+         requests {fleet.requests}  bytes {fleet.bytes}  \
+         failovers {fleet.failovers}  retries {fleet.retries}  \
+         pool wait p95 {fleet.pool_wait_s.p95}  \
+         req p50 {fleet.request_s.p50} p95 {fleet.request_s.p95}"
+    }
+}
+
 /// Every registered metric block, in dashboard render order.
 pub fn registry() -> &'static [&'static dyn MetricBlock] {
-    static REGISTRY: [&'static dyn MetricBlock; 6] =
-        [&Ingest, &Loader, &Shardstore, &Serve, &Train, &Assault];
+    static REGISTRY: [&'static dyn MetricBlock; 7] =
+        [&Ingest, &Loader, &Shardstore, &Serve, &Fleet, &Train, &Assault];
     &REGISTRY
 }
 
@@ -336,6 +364,8 @@ mod tests {
             ("prefetch", "loader"),
             ("pool", "shardstore"),
             ("net", "serve"),
+            ("fanout", "fleet"),
+            ("shardmap", "fleet"),
             ("ddp", "train"),
             ("loadtest", "assault"),
         ] {
@@ -383,6 +413,10 @@ mod tests {
             names::NET_BYTES_SERVED,
             names::NET_CRC_FAILURES,
             names::NET_RETRIES,
+            names::FLEET_REQUESTS,
+            names::FLEET_BYTES,
+            names::FLEET_FAILOVERS,
+            names::FLEET_RETRIES,
             names::TRAIN_STEPS,
             names::TRAIN_REAL_FRAMES,
             names::TRAIN_SLOTS,
@@ -400,6 +434,8 @@ mod tests {
             names::INGEST_BLOCKS_PER_S,
             names::LOADER_WORKERS_ACTIVE,
             names::NET_CONNECTIONS_ACTIVE,
+            names::FLEET_HOSTS,
+            names::FLEET_HOSTS_DOWN,
             names::TRAIN_PADDING_PCT,
             names::ASSAULT_CLIENTS,
         ] {
@@ -411,6 +447,8 @@ mod tests {
             names::SHARD_LOCK_WAIT_S.to_string(),
             names::SHARD_SCAN_S.to_string(),
             names::NET_REQUEST_S.to_string(),
+            names::FLEET_POOL_WAIT_S.to_string(),
+            names::FLEET_REQUEST_S.to_string(),
             names::TRAIN_STEP_SKEW.to_string(),
             names::TRAIN_ALLREDUCE_S.to_string(),
             names::train_rank_step(0),

@@ -149,6 +149,39 @@ pub mod names {
     pub const ASSAULT_REQUEST_S: &str = "assault.request_s";
     /// Histogram: per-client admission (connect + handshake) latency.
     pub const ASSAULT_CONNECT_S: &str = "assault.connect_s";
+
+    /// Gauge: hosts in the fleet map (primaries + replicas).
+    pub const FLEET_HOSTS: &str = "fleet.hosts";
+    /// Gauge: hosts currently marked down by health tracking.
+    pub const FLEET_HOSTS_DOWN: &str = "fleet.hosts_down";
+    /// Counter: record fetches completed through the fleet provider.
+    pub const FLEET_REQUESTS: &str = "fleet.requests";
+    /// Counter: record payload bytes fetched across the fleet.
+    pub const FLEET_BYTES: &str = "fleet.bytes";
+    /// Counter: fetches redirected off a failing host to the next
+    /// candidate (replica or probe).
+    pub const FLEET_FAILOVERS: &str = "fleet.failovers";
+    /// Counter: same-host retries inside the fleet fetch path.
+    pub const FLEET_RETRIES: &str = "fleet.retries";
+    /// Histogram: wait to check a connection out of a host pool
+    /// (seconds).
+    pub const FLEET_POOL_WAIT_S: &str = "fleet.pool_wait_s";
+    /// Histogram: end-to-end fleet fetch latency incl. failover
+    /// (seconds).
+    pub const FLEET_REQUEST_S: &str = "fleet.request_s";
+    /// Counter name for fetches served by one fleet host (primaries
+    /// first, then replicas, in canonical order).
+    pub fn fleet_host_requests(host: usize) -> String {
+        format!("fleet.host{host}.requests")
+    }
+    /// Counter name for payload bytes served by one fleet host.
+    pub fn fleet_host_bytes(host: usize) -> String {
+        format!("fleet.host{host}.bytes")
+    }
+    /// Counter name for failovers away from one fleet host.
+    pub fn fleet_host_failovers(host: usize) -> String {
+        format!("fleet.host{host}.failovers")
+    }
 }
 
 /// Monotonic event counter (u64, atomic).

@@ -219,6 +219,118 @@ fn serve_replay_remote_round_trips_with_verify() {
 }
 
 #[test]
+fn fleet_replay_round_trips_two_daemons_with_verify() {
+    let pid = std::process::id();
+    let dir = std::env::temp_dir().join(format!("bload_cli_fleet_{pid}"));
+    std::fs::remove_dir_all(&dir).ok();
+    let dir_s = dir.to_str().unwrap().to_string();
+    assert_eq!(
+        run(&argv(&[
+            "pack", "--strategy", "bload", "--scale", "0.01", "--seed",
+            "5", "--shards", "2", "--out", &dir_s,
+        ]))
+        .unwrap(),
+        0
+    );
+
+    // Two daemons serving the same shard set, each publishing its
+    // ephemeral bound address through --addr-file.
+    let mut daemons = Vec::new();
+    let mut addrs = Vec::new();
+    let mut addr_files = Vec::new();
+    for i in 0..2 {
+        let addr_file = std::env::temp_dir()
+            .join(format!("bload_cli_fleet_{pid}_{i}.addr"));
+        std::fs::remove_file(&addr_file).ok();
+        let addr_file_s = addr_file.to_str().unwrap().to_string();
+        let serve_dir = dir_s.clone();
+        let serve_addr_file = addr_file_s.clone();
+        daemons.push(std::thread::spawn(move || {
+            run(&argv(&[
+                "serve", "--dir", &serve_dir, "--addr", "127.0.0.1:0",
+                "--addr-file", &serve_addr_file,
+            ]))
+        }));
+        let deadline = std::time::Instant::now()
+            + std::time::Duration::from_secs(10);
+        let addr = loop {
+            match std::fs::read_to_string(&addr_file) {
+                Ok(a) if !a.trim().is_empty() => break a.trim().to_string(),
+                _ if std::time::Instant::now() > deadline => {
+                    panic!("daemon {i} never published its address")
+                }
+                _ => std::thread::sleep(
+                    std::time::Duration::from_millis(10)),
+            }
+        };
+        addrs.push(addr);
+        addr_files.push(addr_file);
+    }
+    let hosts = addrs.join(",");
+
+    // The striped fleet epoch must be byte-identical to the in-memory
+    // run — the same gate the single-daemon remote replay passes.
+    assert_eq!(
+        run(&argv(&[
+            "replay", "--fleet", &hosts, "--scale", "0.01", "--seed",
+            "5", "--verify",
+        ]))
+        .unwrap(),
+        0
+    );
+
+    // `top --fleet --snapshot` polls both daemons' STATS in one frame.
+    let snap_out = std::env::temp_dir()
+        .join(format!("bload_cli_fleet_{pid}_top.json"));
+    let snap_out_s = snap_out.to_str().unwrap().to_string();
+    assert_eq!(
+        run(&argv(&[
+            "top", "--fleet", &hosts, "--snapshot", "--out", &snap_out_s,
+        ]))
+        .unwrap(),
+        0
+    );
+    let snap = std::fs::read_to_string(&snap_out).unwrap();
+    assert!(snap.contains("fleet.requests"), "{snap}");
+
+    for addr in &addrs {
+        bload::net::RemoteClient::connect(
+            addr, &bload::net::ClientConfig::default())
+        .unwrap()
+        .shutdown_server()
+        .unwrap();
+    }
+    for d in daemons {
+        assert_eq!(d.join().unwrap().unwrap(), 0);
+    }
+    for f in addr_files {
+        std::fs::remove_file(&f).ok();
+    }
+    std::fs::remove_file(&snap_out).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn replay_and_top_reject_conflicting_fleet_flags() {
+    assert!(
+        run(&argv(&[
+            "replay", "--fleet", "a:1", "--remote", "b:2",
+        ]))
+        .is_err(),
+        "--fleet and --remote are mutually exclusive"
+    );
+    assert!(
+        run(&argv(&["top", "--fleet", "a:1", "--remote", "b:2"]))
+            .is_err(),
+        "--fleet and --remote are mutually exclusive"
+    );
+    assert!(run(&argv(&["top", "--fleet", " , "])).is_err(),
+            "--fleet needs at least one host");
+    assert!(run(&argv(&["top", "--polls", "2"])).is_err(),
+            "--polls needs --remote or --fleet");
+}
+
+#[test]
 fn serve_rejects_missing_dir_and_bad_flags() {
     assert!(run(&argv(&["serve"])).is_err(), "--dir is required");
     assert!(run(&argv(&["serve", "--dir", "/nope/missing"])).is_err());

@@ -426,6 +426,195 @@ fn remote_replay_is_byte_identical_for_concurrent_clients() {
 }
 
 #[test]
+fn fleet_replay_is_byte_identical_across_striped_daemons() {
+    // The fleet acceptance bar: one epoch striped across two loopback
+    // daemons (both serving the same shard set) delivers the exact
+    // batch sequence of the in-memory offline epoch, with the traffic
+    // actually split between the hosts.
+    use bload::dataset::shardstore::{ShardPool, ShardSetWriter};
+    use bload::net::Server;
+
+    let cfg = ExperimentConfig::default_config();
+    let dcfg = cfg.dataset.scaled(0.01);
+    let gen_seed = 13u64;
+    let ds = generate(&dcfg, gen_seed);
+
+    let packed = Arc::new(
+        pack(by_name("bload").unwrap(), &ds.train, &cfg.packing, 13)
+            .unwrap(),
+    );
+    let split = Arc::new(ds.train);
+    let mut memory = DataLoaderBuilder::new()
+        .batch(2)
+        .workers(3)
+        .depth(2)
+        .seed(13)
+        .planned(Arc::clone(&split), Arc::clone(&packed), 1)
+        .unwrap();
+    let mut reference = Vec::new();
+    while let Some(b) = memory.next() {
+        reference.push(b.unwrap());
+    }
+    assert!(!reference.is_empty(), "epoch has steps");
+
+    let dir = std::env::temp_dir().join(format!(
+        "bload_fleet_replay_e2e_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    ShardSetWriter::new(&dir, gen_seed, 2)
+        .unwrap()
+        .write(&split)
+        .unwrap();
+    let mut scfg = cfg.serve.clone();
+    scfg.addr = "127.0.0.1:0".into();
+    let pool = Arc::new(ShardPool::open(&dir).unwrap());
+    let s1 = Server::start(Arc::clone(&pool), &scfg).unwrap();
+    let s2 = Server::start(Arc::clone(&pool), &scfg).unwrap();
+    let hosts = vec![s1.addr().to_string(), s2.addr().to_string()];
+
+    let mut loader = DataLoaderBuilder::new()
+        .batch(2)
+        .workers(3)
+        .depth(2)
+        .seed(13)
+        .fleet(&hosts, &dcfg, by_name("bload").unwrap(), &cfg.packing, 1)
+        .unwrap();
+    assert_eq!(loader.steps(), Some(reference.len()));
+    for (step, want) in reference.iter().enumerate() {
+        let got = loader
+            .next()
+            .unwrap_or_else(|| panic!("fleet epoch ended at step {step}"))
+            .unwrap();
+        assert_eq!(got.block_ids, want.block_ids, "step {step}");
+        assert_eq!(got.feats, want.feats, "step {step}");
+        assert_eq!(got.labels, want.labels, "step {step}");
+        assert_eq!(got.frame_mask, want.frame_mask, "step {step}");
+        assert_eq!(got.seg_ids, want.seg_ids, "step {step}");
+    }
+    assert!(loader.next().is_none());
+
+    // The shard map really striped: each daemon served part of the set.
+    assert!(s1.stats().requests > 0, "host 0 served nothing");
+    assert!(s2.stats().requests > 0, "host 1 served nothing");
+    s1.shutdown().unwrap();
+    s2.shutdown().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fleet_replay_survives_a_mid_epoch_primary_kill() {
+    // Failover acceptance: two primaries plus one replica; one primary
+    // dies *mid-epoch* and the epoch still completes byte-identical to
+    // the in-memory plan — no duplicated or dropped frame — with the
+    // dead host's stripe served by the replica.
+    use std::time::Duration;
+
+    use bload::config::FleetConfig;
+    use bload::dataset::shardstore::{ShardPool, ShardSetWriter};
+    use bload::net::{ClientConfig, Server};
+    use bload::telemetry::{self, names};
+
+    let cfg = ExperimentConfig::default_config();
+    let dcfg = cfg.dataset.scaled(0.01);
+    let gen_seed = 29u64;
+    let ds = generate(&dcfg, gen_seed);
+
+    let packed = Arc::new(
+        pack(by_name("bload").unwrap(), &ds.train, &cfg.packing, 29)
+            .unwrap(),
+    );
+    let split = Arc::new(ds.train);
+    let mut memory = DataLoaderBuilder::new()
+        .batch(2)
+        .workers(2)
+        .depth(2)
+        .seed(29)
+        .planned(Arc::clone(&split), Arc::clone(&packed), 0)
+        .unwrap();
+    let mut reference = Vec::new();
+    while let Some(b) = memory.next() {
+        reference.push(b.unwrap());
+    }
+    assert!(reference.len() >= 4, "need a mid-epoch to kill at");
+
+    let dir = std::env::temp_dir().join(format!(
+        "bload_fleet_failover_e2e_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    ShardSetWriter::new(&dir, gen_seed, 2)
+        .unwrap()
+        .write(&split)
+        .unwrap();
+    let mut scfg = cfg.serve.clone();
+    scfg.addr = "127.0.0.1:0".into();
+    let pool = Arc::new(ShardPool::open(&dir).unwrap());
+    let s1 = Server::start(Arc::clone(&pool), &scfg).unwrap();
+    let s2 = Server::start(Arc::clone(&pool), &scfg).unwrap();
+    let replica = Server::start(Arc::clone(&pool), &scfg).unwrap();
+
+    let mut fcfg = FleetConfig::with_hosts(vec![
+        s1.addr().to_string(),
+        s2.addr().to_string(),
+    ]);
+    fcfg.replicas = vec![replica.addr().to_string()];
+    fcfg.health_interval = Duration::from_millis(200);
+    let ccfg = ClientConfig {
+        connect_timeout: Duration::from_millis(500),
+        io_timeout: Duration::from_millis(500),
+        retries: 1,
+        backoff: Duration::from_millis(10),
+    };
+
+    // Counter deltas, not absolutes: telemetry is process-global and
+    // other tests in this binary may run concurrently.
+    let failovers_before =
+        telemetry::snapshot().counter(names::FLEET_FAILOVERS);
+
+    let mut loader = DataLoaderBuilder::new()
+        .batch(2)
+        .workers(2)
+        .depth(2)
+        .seed(29)
+        .fleet_with(&fcfg, &ccfg, &dcfg, by_name("bload").unwrap(),
+                    &cfg.packing, 0)
+        .unwrap();
+    assert_eq!(loader.steps(), Some(reference.len()));
+
+    let mut s2 = Some(s2);
+    for (step, want) in reference.iter().enumerate() {
+        if step == 2 {
+            // Kill primary 1 mid-epoch; its stripe must fail over.
+            s2.take().unwrap().shutdown().unwrap();
+        }
+        let got = loader
+            .next()
+            .unwrap_or_else(|| panic!("epoch ended at step {step}"))
+            .unwrap();
+        assert_eq!(got.block_ids, want.block_ids, "step {step}");
+        assert_eq!(got.feats, want.feats, "step {step}");
+        assert_eq!(got.labels, want.labels, "step {step}");
+        assert_eq!(got.frame_mask, want.frame_mask, "step {step}");
+        assert_eq!(got.seg_ids, want.seg_ids, "step {step}");
+    }
+    assert!(loader.next().is_none());
+
+    let failovers_after =
+        telemetry::snapshot().counter(names::FLEET_FAILOVERS);
+    assert!(
+        failovers_after > failovers_before,
+        "killing a primary mid-epoch must trigger failover \
+         ({failovers_before} -> {failovers_after})"
+    );
+    assert!(replica.stats().requests > 0,
+            "the replica picked up the dead primary's stripe");
+    s1.shutdown().unwrap();
+    replica.shutdown().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn sampling_chunks_cover_prefixes_only() {
     // Each video's delivered frames are exactly frames [0, k*t_block).
     let dcfg = bload::harness::scaled_dataset(80, 10, 0.6);

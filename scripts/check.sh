@@ -10,11 +10,13 @@
 # `bench-smoke` job performs — every registered suite at smoke geometry,
 # report written to BENCH_smoke.json (compare against a recorded
 # baseline with `bload bench --compare benches/baseline.json --report
-# BENCH_smoke.json`), and finally the loopback assault smoke
+# BENCH_smoke.json`), then the loopback assault smoke
 # (scripts/assault_smoke.sh: shard set -> serve daemon -> three-testcase
-# load scenario, gated on evaluator verdicts). Runtime tests/suites that
-# need AOT artifacts skip themselves when artifacts/manifest.json is
-# absent, so the gate is self-contained.
+# load scenario, gated on evaluator verdicts), and finally the fleet
+# smoke (scripts/fleet_smoke.sh: shard set -> three daemons -> striped
+# replay --verify, fleet:// assault, kill-one-primary re-verify).
+# Runtime tests/suites that need AOT artifacts skip themselves when
+# artifacts/manifest.json is absent, so the gate is self-contained.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -24,4 +26,5 @@ cargo fmt --check \
   && cargo build --benches --examples \
   && cargo test -q \
   && cargo run --release -- bench --smoke --json BENCH_smoke.json \
-  && scripts/assault_smoke.sh
+  && scripts/assault_smoke.sh \
+  && scripts/fleet_smoke.sh

@@ -1,0 +1,81 @@
+#!/usr/bin/env bash
+# Loopback fleet smoke — the striped data plane's end-to-end gate, run
+# by scripts/check.sh and CI's bench-smoke job:
+#
+#   1. pack a small shard set into a scratch directory,
+#   2. serve it from THREE daemons (two primaries + one replica), each
+#      publishing its ephemeral port through --addr-file (atomic
+#      write+rename, no bind race),
+#   3. replay one epoch striped across the primaries with --verify
+#      (byte-identity against the in-memory offline run),
+#   4. summarize every daemon's STATS in one frame (`bload top --fleet
+#      --snapshot` -> TOP_fleet.json),
+#   5. run a fleet:// assault testcase with the byte-identity evaluator
+#      (FLEET_assault.json for the artifact upload),
+#   6. kill -9 one primary and re-verify: the replica must pick up the
+#      dead host's stripe and the epoch must stay byte-identical.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=(cargo run --release --quiet --)
+WORK=$(mktemp -d)
+PIDS=()
+trap 'kill "${PIDS[@]:-0}" 2>/dev/null || true; rm -rf "$WORK"' EXIT
+
+"${BIN[@]}" pack --scale 0.004 --shards 2 --out "$WORK/agshards"
+
+ADDRS=()
+for i in 0 1 2; do
+  "${BIN[@]}" serve --dir "$WORK/agshards" --addr 127.0.0.1:0 \
+    --addr-file "$WORK/addr$i.txt" &
+  PIDS+=($!)
+done
+for i in 0 1 2; do
+  for _ in $(seq 1 100); do
+    [ -s "$WORK/addr$i.txt" ] && break
+    sleep 0.1
+  done
+  [ -s "$WORK/addr$i.txt" ] || {
+    echo "fleet_smoke: daemon $i never wrote its address" >&2
+    exit 1
+  }
+  ADDRS+=("$(cat "$WORK/addr$i.txt")")
+done
+
+cat > "$WORK/fleet.toml" <<EOF
+[fleet]
+hosts = ["${ADDRS[0]}", "${ADDRS[1]}"]
+replicas = ["${ADDRS[2]}"]
+health_interval = 500ms
+
+[assault]
+name = fleet-smoke
+
+[assault.setting]
+repeat = 4
+concurrency = 8
+timeout = 10s
+
+[[assault.testcase]]
+name = fleet-identity
+destination = "fleet://"
+evaluator = byte-identity
+EOF
+
+# Striped epoch must be byte-identical to the in-memory offline run.
+"${BIN[@]}" replay --config "$WORK/fleet.toml" --scale 0.004 --verify
+
+# One STATS frame covering the whole fleet (primaries + replica).
+"${BIN[@]}" top \
+  --fleet "${ADDRS[0]},${ADDRS[1]},${ADDRS[2]}" \
+  --snapshot --out TOP_fleet.json
+
+# The fleet:// destination drives the same striped provider.
+"${BIN[@]}" assault --config "$WORK/fleet.toml" --json FLEET_assault.json
+
+# Kill one primary outright; the replica must cover its stripe and the
+# epoch must STILL verify byte-identical.
+kill -9 "${PIDS[0]}"
+wait "${PIDS[0]}" 2>/dev/null || true
+"${BIN[@]}" replay --config "$WORK/fleet.toml" --scale 0.004 --verify
+echo "fleet_smoke: byte-identity held through primary loss"
