@@ -1,11 +1,13 @@
 //! Unified-loader throughput suite: frames/s through the builder
 //! pipeline across worker counts and prefetch depths (backpressure on),
-//! plus the per-worker video-cache capacity sweep on a chunked packing.
+//! the per-worker video-cache capacity sweep on a chunked packing, and
+//! shard-backed replay with the readahead scheduler off vs on.
 
 use std::sync::Arc;
 
 use crate::benchkit::{BenchResult, Bencher};
 use crate::config::ExperimentConfig;
+use crate::dataset::shardstore::ShardSetWriter;
 use crate::dataset::synthetic::generate;
 use crate::error::Result;
 use crate::loader::DataLoaderBuilder;
@@ -36,7 +38,8 @@ impl Suite for Loader {
             if opts.smoke { &[1] } else { &[1, 4] };
 
         let cfg = ExperimentConfig::default_config();
-        let ds = generate(&cfg.dataset.scaled(scale), 0);
+        let dcfg = cfg.dataset.scaled(scale);
+        let ds = generate(&dcfg, 0);
         let packed = Arc::new(pack(by_name("bload")?, &ds.train,
                                    &cfg.packing, 0)?);
         let split = Arc::new(ds.train);
@@ -93,6 +96,35 @@ impl Suite for Loader {
                 }));
             }
         }
+
+        // Shard-backed replay, readahead off vs on: with the window
+        // open, the claimer thread stages upcoming records into the
+        // pool cache while workers materialize the current step.
+        let shard_dir = std::env::temp_dir().join(format!(
+            "bload_bench_loader_shards_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&shard_dir).ok();
+        ShardSetWriter::new(&shard_dir, 0, 2)?.write(&split)?;
+        for readahead in [0usize, 2] {
+            let name = format!("loader/shards/readahead{readahead}");
+            out.push(bench.run(&name, frames, "frames", || {
+                let mut loader = DataLoaderBuilder::new()
+                    .batch(2)
+                    .workers(2)
+                    .depth(4)
+                    .readahead(readahead)
+                    .shards(&shard_dir, &dcfg, by_name("bload").unwrap(),
+                            &cfg.packing, 0)
+                    .unwrap();
+                let mut n = 0usize;
+                while let Some(b) = loader.next() {
+                    n += b.unwrap().real_frames;
+                }
+                n
+            }));
+        }
+        std::fs::remove_dir_all(&shard_dir).ok();
         Ok(out)
     }
 }

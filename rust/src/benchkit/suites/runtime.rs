@@ -53,6 +53,7 @@ fn fake_batch(spec: &ProfileSpec) -> DeviceBatch {
         classes: c,
         real_frames: b * t,
         slots: b * t,
+        pool: None,
     }
 }
 

@@ -1,19 +1,22 @@
 //! Sharded-store replay suite: single-file sequential `StoreReader`
 //! decode vs the concurrent `ShardPool` at several reader counts
-//! (videos/s), plus the pool-open (scan + CRC verify + index) cost.
+//! (videos/s) in both read backends (`pread` positional reads and
+//! `mmap`), the pool-open (scan + CRC verify + index) cost, and the
+//! raw slice-by-16 CRC-32 kernel the whole format leans on.
 //!
 //! The pool is opened with a cache of 1 so every `get` measures a real
-//! seek + decode; readers walk disjoint id slices, so the comparison is
-//! decode-for-decode against the sequential baseline.
+//! positional read + decode; readers walk disjoint id slices, so the
+//! comparison is decode-for-decode against the sequential baseline.
 
 use std::sync::Arc;
 
 use crate::benchkit::{BenchResult, Bencher};
 use crate::config::ExperimentConfig;
-use crate::dataset::shardstore::{ShardPool, ShardSetWriter};
+use crate::dataset::shardstore::{ShardMode, ShardPool, ShardSetWriter};
 use crate::dataset::store::{StoreReader, StoreWriter};
 use crate::dataset::synthetic::generate;
 use crate::error::Result;
+use crate::util::crc32::crc32;
 
 use super::{Suite, SuiteOptions};
 
@@ -64,6 +67,17 @@ impl Suite for ShardReplay {
         ShardSetWriter::new(&shard_dir, 0, shards)?.write(split)?;
 
         let mut out = Vec::new();
+
+        // The CRC kernel itself, off any IO path: MB/s through the
+        // slice-by-16 tables over a synthetic payload-sized buffer.
+        let crc_buf: Vec<u8> = {
+            let n = if opts.smoke { 1usize << 20 } else { 1usize << 23 };
+            (0..n).map(|i| (i.wrapping_mul(31) >> 3) as u8).collect()
+        };
+        let crc_mb = crc_buf.len() as f64 / 1e6;
+        out.push(bench.run("shard_replay/crc/slice16", crc_mb, "MB",
+                           || crc32(&crc_buf)));
+
         out.push(bench.run("shard_replay/single_file", videos, "videos",
                            || {
             let mut n = 0usize;
@@ -78,35 +92,39 @@ impl Suite for ShardReplay {
             ShardPool::open(&shard_dir).unwrap().videos().len()
         }));
 
-        let pool = Arc::new(ShardPool::open_with_cache(&shard_dir, 1)?);
         let ids: Vec<u32> = split.videos.iter().map(|v| v.id).collect();
-        for &readers in reader_counts {
-            let name = format!("shard_replay/pool/readers{readers}");
-            out.push(bench.run(&name, videos, "videos", || {
-                std::thread::scope(|s| {
-                    let mut handles = Vec::with_capacity(readers);
-                    for r in 0..readers {
-                        let pool = Arc::clone(&pool);
-                        let slice: Vec<u32> = ids
-                            .iter()
-                            .skip(r)
-                            .step_by(readers)
-                            .copied()
-                            .collect();
-                        handles.push(s.spawn(move || {
-                            let mut n = 0usize;
-                            for id in slice {
-                                n += pool.get(id).unwrap().len;
-                            }
-                            n
-                        }));
-                    }
-                    handles
-                        .into_iter()
-                        .map(|h| h.join().unwrap())
-                        .sum::<usize>()
-                })
-            }));
+        for (tag, mode) in [("pool", ShardMode::Pread),
+                            ("pool_mmap", ShardMode::Mmap)] {
+            let pool = Arc::new(ShardPool::open_with(&shard_dir, 1,
+                                                     mode)?);
+            for &readers in reader_counts {
+                let name = format!("shard_replay/{tag}/readers{readers}");
+                out.push(bench.run(&name, videos, "videos", || {
+                    std::thread::scope(|s| {
+                        let mut handles = Vec::with_capacity(readers);
+                        for r in 0..readers {
+                            let pool = Arc::clone(&pool);
+                            let slice: Vec<u32> = ids
+                                .iter()
+                                .skip(r)
+                                .step_by(readers)
+                                .copied()
+                                .collect();
+                            handles.push(s.spawn(move || {
+                                let mut n = 0usize;
+                                for id in slice {
+                                    n += pool.get(id).unwrap().len;
+                                }
+                                n
+                            }));
+                        }
+                        handles
+                            .into_iter()
+                            .map(|h| h.join().unwrap())
+                            .sum::<usize>()
+                    })
+                }));
+            }
         }
 
         std::fs::remove_dir_all(&scratch).ok();

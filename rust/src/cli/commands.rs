@@ -263,7 +263,7 @@ pub fn train(args: &mut Args) -> Result<i32> {
 /// `bload replay --store PATH|DIR [--remote HOST:PORT]
 ///               [--fleet HOST:PORT,HOST:PORT] [--config FILE]
 ///               [--strategy S] [--batch N] [--epoch N] [--seed N]
-///               [--verify [--scale F]]`
+///               [--mmap] [--readahead N] [--verify [--scale F]]`
 ///
 /// Replay a persisted dataset as a first-class training input. A file
 /// path streams back through a CRC-verified
@@ -284,7 +284,10 @@ pub fn train(args: &mut Args) -> Result<i32> {
 /// `--verify` additionally regenerates the equivalent split in memory
 /// (`--scale` must match the `gen-data` / `pack --shards` scale) and
 /// checks the store-backed batches are byte-identical to the offline
-/// in-memory run.
+/// in-memory run. `--mmap` serves sharded-store reads from memory-maps
+/// instead of positional reads, and `--readahead N` overrides the
+/// config's readahead window (both leave content byte-identical; see
+/// `docs/PERFORMANCE.md`).
 pub fn replay(args: &mut Args) -> Result<i32> {
     let store = args.flag_str("store", "agsynth.blds");
     let remote = args.flag_str("remote", "");
@@ -294,6 +297,8 @@ pub fn replay(args: &mut Args) -> Result<i32> {
     let batch = args.flag_usize("batch", 2)?;
     let epoch = args.flag_u64("epoch", 0)?;
     let seed = args.flag_u64("seed", 0)?;
+    let mmap = args.flag_bool("mmap");
+    let readahead = args.flag_str("readahead", "");
     let verify = args.flag_bool("verify");
     let scale = args.flag_f64("scale", 0.01)?;
     args.finish()?;
@@ -331,9 +336,22 @@ pub fn replay(args: &mut Args) -> Result<i32> {
     let dcfg = cfg.dataset.scaled(scale);
     let path = std::path::Path::new(&store);
     let sharded = path.is_dir();
-    let builder = DataLoaderBuilder::from_config(&cfg.loader)
+    let mut builder = DataLoaderBuilder::from_config(&cfg.loader)
         .batch(batch)
         .seed(seed);
+    if mmap {
+        builder = builder
+            .shard_mode(crate::dataset::shardstore::ShardMode::Mmap);
+    }
+    if !readahead.is_empty() {
+        let n: usize = readahead.parse().map_err(|_| {
+            Error::Config(format!(
+                "--readahead expects a non-negative integer, got \
+                 '{readahead}'"
+            ))
+        })?;
+        builder = builder.readahead(n);
+    }
     let t0 = std::time::Instant::now();
     let mut loader = if use_fleet {
         builder.fleet_with(&fcfg, &crate::net::ClientConfig::default(),
@@ -492,10 +510,10 @@ pub fn strategies(args: &mut Args) -> Result<i32> {
     Ok(0)
 }
 
-/// `bload shards --dir DIR` — inspect a sharded store: load
+/// `bload shards --dir DIR [--mmap]` — inspect a sharded store: load
 /// `shards.json`, open the [`ShardPool`] (which CRC-verifies every
-/// shard against both its footer and the manifest), and print the
-/// per-shard table.
+/// shard against both its footer and the manifest; `--mmap` opens the
+/// memory-mapped read backend), and print the per-shard table.
 ///
 /// `bload shards --bench [--scale F] [--seed N] [--shards N]
 /// [--readers N]` — run the self-contained sharded-store scenario
@@ -505,6 +523,7 @@ pub fn strategies(args: &mut Args) -> Result<i32> {
 pub fn shards_cmd(args: &mut Args) -> Result<i32> {
     let dir = args.flag_str("dir", "");
     let bench = args.flag_bool("bench");
+    let mmap = args.flag_bool("mmap");
     let defaults = shardset::ShardSetOptions::default();
     let opts = shardset::ShardSetOptions {
         scale: args.flag_f64("scale", defaults.scale)?,
@@ -535,8 +554,17 @@ pub fn shards_cmd(args: &mut Args) -> Result<i32> {
         ));
     }
     let path = std::path::Path::new(&dir);
+    let mode = if mmap {
+        crate::dataset::shardstore::ShardMode::Mmap
+    } else {
+        crate::dataset::shardstore::ShardMode::Pread
+    };
     let t0 = std::time::Instant::now();
-    let pool = ShardPool::open(path)?;
+    let pool = ShardPool::open_with(
+        path,
+        crate::dataset::shardstore::DEFAULT_POOL_CACHE,
+        mode,
+    )?;
     let dt = t0.elapsed();
     let m = pool.manifest();
     let mut t = TextTable::new(&[
@@ -555,11 +583,12 @@ pub fn shards_cmd(args: &mut Args) -> Result<i32> {
     let (o, f, c) = pool.geometry();
     println!(
         "seed {} | geometry ({o}, {f}, {c}) | {} videos / {} frames in \
-         {} shard(s); every shard CRC-verified in {}",
+         {} shard(s) [{}]; every shard CRC-verified in {}",
         pool.seed(),
         commas(m.total_videos() as u64),
         commas(m.total_frames() as u64),
         m.shards.len(),
+        pool.mode().as_str(),
         crate::util::humanize::duration(dt)
     );
     Ok(0)

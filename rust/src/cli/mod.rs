@@ -102,8 +102,9 @@ streaming support)
 --ranks N --producers N)
     replay         replay a persisted store through the loader (--store \
 PATH or shard DIR --strategy S; --remote HOST:PORT streams from a serve \
-daemon; --fleet H:P,H:P stripes across a fleet of daemons; --verify \
-checks byte-identity vs in-memory)
+daemon; --fleet H:P,H:P stripes across a fleet of daemons; --mmap maps \
+shards instead of pread; --readahead N stages upcoming records; \
+--verify checks byte-identity vs in-memory)
     shards         inspect a sharded store (--dir DIR: per-shard table, \
 CRC verification) or --bench the shard scenario (--shards N --readers N)
     serve          serve a sharded store over TCP (--dir DIR \

@@ -303,6 +303,13 @@ pub struct LoaderConfig {
     /// local shard directory ("" = local). Adopted by `bload replay
     /// --remote` and [`crate::loader::DataLoaderBuilder::remote`].
     pub remote: String,
+    /// Readahead window in work units (0 disables): stage upcoming
+    /// steps' shard records into the pool cache while the current batch
+    /// materializes.
+    pub readahead: usize,
+    /// Shard read backend, `"pread"` (positional reads, the default)
+    /// or `"mmap"` (memory-mapped shards). Byte-identical output.
+    pub shard_mode: String,
 }
 
 impl LoaderConfig {
@@ -315,6 +322,9 @@ impl LoaderConfig {
             video_cache: r.usize("video_cache",
                                  crate::loader::DEFAULT_VIDEO_CACHE)?,
             remote: r.string("remote", "")?,
+            readahead: r.usize("readahead",
+                               crate::loader::DEFAULT_READAHEAD)?,
+            shard_mode: r.string("shard_mode", "pread")?,
         };
         r.finish()?;
         if cfg.prefetch_depth == 0 || cfg.workers == 0
@@ -326,6 +336,8 @@ impl LoaderConfig {
                     .into(),
             ));
         }
+        // Fail at read time, not at first replay.
+        crate::dataset::shardstore::ShardMode::parse(&cfg.shard_mode)?;
         Ok(cfg)
     }
 }
@@ -931,6 +943,24 @@ mod tests {
         assert_eq!(cfg.loader.video_cache, 8);
         assert!(crate::config::from_str(
             "<t>", "[loader]\nvideo_cache = 0\n").is_err());
+    }
+
+    #[test]
+    fn loader_readahead_and_shard_mode_knobs_parse_and_validate() {
+        let cfg = ExperimentConfig::default_config();
+        assert_eq!(cfg.loader.readahead,
+                   crate::loader::DEFAULT_READAHEAD);
+        assert_eq!(cfg.loader.shard_mode, "pread");
+        let cfg = crate::config::from_str(
+            "<t>", "[loader]\nreadahead = 0\nshard_mode = mmap\n")
+            .unwrap();
+        assert_eq!(cfg.loader.readahead, 0); // 0 = disabled, legal
+        assert_eq!(cfg.loader.shard_mode, "mmap");
+        let err = crate::config::from_str(
+            "<t>", "[loader]\nshard_mode = direct\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("shard mode"), "{err}");
     }
 
     #[test]

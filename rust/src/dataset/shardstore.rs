@@ -22,11 +22,12 @@
 //! * [`ShardPool`] serves **random access** to decoded videos for many
 //!   simultaneous consumers: opening the pool scans every shard (in
 //!   parallel), verifying each footer CRC against both the file and the
-//!   manifest, and builds a byte-offset index; `get` then seeks straight
-//!   to a record under a per-shard lock, fronted by one shared,
-//!   capacity-bounded cache (replacing per-worker-only
-//!   [`VideoCache`](crate::loader::VideoCache) reuse for store-backed
-//!   runs).
+//!   manifest, and builds a byte-offset index; `get` then issues a
+//!   *positional* read (`pread` on Unix — no shared cursor, so readers
+//!   of one shard never serialize; see [`ShardMode`] for the optional
+//!   mmap backend), fronted by one shared, capacity-bounded cache
+//!   (replacing per-worker-only [`VideoCache`](crate::loader::VideoCache)
+//!   reuse for store-backed runs).
 //!
 //! Because shards hold contiguous ranges in the original video order
 //! (and the rolling writer preserves arrival order), concatenating the
@@ -56,7 +57,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::fs::File;
-use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::io::{BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -597,6 +598,211 @@ impl RollingShardWriter {
     }
 }
 
+/// How a [`ShardPool`] reads shard files.
+///
+/// Both modes serve byte-identical records; they differ only in the
+/// syscall profile of the hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardMode {
+    /// Positional reads (`pread` on Unix): every read carries its own
+    /// offset, so concurrent readers of one shard share no cursor and
+    /// never serialize. The default. Non-Unix targets fall back to a
+    /// seek+read under a per-shard lock.
+    #[default]
+    Pread,
+    /// Memory-map each shard read-only (private mapping) and serve
+    /// records by copying out of the page cache — no read syscall per
+    /// record at all. Falls back to [`ShardMode::Pread`] behaviour on
+    /// non-Unix targets.
+    Mmap,
+}
+
+impl ShardMode {
+    /// Parse the config/CLI spelling (`"pread"` or `"mmap"`).
+    pub fn parse(s: &str) -> Result<ShardMode> {
+        match s {
+            "pread" => Ok(ShardMode::Pread),
+            "mmap" => Ok(ShardMode::Mmap),
+            other => Err(Error::Config(format!(
+                "unknown shard mode '{other}' (expected 'pread' or \
+                 'mmap')"
+            ))),
+        }
+    }
+
+    /// The canonical spelling accepted by [`ShardMode::parse`].
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShardMode::Pread => "pread",
+            ShardMode::Mmap => "mmap",
+        }
+    }
+}
+
+/// Minimal read-only `mmap` wrapper. No libc crate is available in
+/// this environment, so the two syscalls are declared directly.
+#[cfg(unix)]
+mod mapped {
+    use std::fs::File;
+    use std::os::raw::{c_int, c_void};
+    use std::os::unix::io::AsRawFd;
+
+    extern "C" {
+        fn mmap(addr: *mut c_void, len: usize, prot: c_int,
+                flags: c_int, fd: c_int, offset: i64) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    const PROT_READ: c_int = 1;
+    const MAP_PRIVATE: c_int = 2;
+
+    /// A read-only, private, whole-file mapping.
+    pub struct Mmap {
+        ptr: *mut c_void,
+        len: usize,
+    }
+
+    // SAFETY: the mapping is PROT_READ + MAP_PRIVATE for its whole
+    // lifetime — immutable shared memory, safe to read from any thread.
+    unsafe impl Send for Mmap {}
+    unsafe impl Sync for Mmap {}
+
+    impl Mmap {
+        /// Map the first `len` bytes of `file`. A zero-length file maps
+        /// to the empty slice (`mmap` itself rejects zero-length maps).
+        pub fn map(file: &File, len: u64) -> std::io::Result<Mmap> {
+            let len = len as usize;
+            if len == 0 {
+                return Ok(Mmap {
+                    ptr: std::ptr::null_mut(),
+                    len: 0,
+                });
+            }
+            // SAFETY: a fresh private read-only mapping of an open fd;
+            // failure is reported as MAP_FAILED (-1) and checked.
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE,
+                     file.as_raw_fd(), 0)
+            };
+            if ptr as isize == -1 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(Mmap { ptr, len })
+        }
+
+        pub fn as_slice(&self) -> &[u8] {
+            if self.len == 0 {
+                return &[];
+            }
+            // SAFETY: ptr/len came from a successful mmap that lives
+            // until Drop; the memory is never written.
+            unsafe {
+                std::slice::from_raw_parts(self.ptr as *const u8,
+                                           self.len)
+            }
+        }
+    }
+
+    impl Drop for Mmap {
+        fn drop(&mut self) {
+            if self.len != 0 {
+                // SAFETY: unmapping exactly the region mapped above.
+                unsafe {
+                    munmap(self.ptr, self.len);
+                }
+            }
+        }
+    }
+}
+
+/// Positional-read file handle: `pread` on Unix (stateless, so no lock
+/// is needed), a mutex-guarded seek+read elsewhere.
+struct PositionalFile {
+    #[cfg(unix)]
+    file: File,
+    #[cfg(not(unix))]
+    file: Mutex<File>,
+}
+
+impl PositionalFile {
+    fn new(file: File) -> PositionalFile {
+        #[cfg(unix)]
+        return PositionalFile { file };
+        #[cfg(not(unix))]
+        return PositionalFile {
+            file: Mutex::new(file),
+        };
+    }
+
+    #[cfg(unix)]
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64)
+                     -> std::io::Result<()> {
+        use std::os::unix::fs::FileExt;
+        self.file.read_exact_at(buf, offset)
+    }
+
+    #[cfg(not(unix))]
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64)
+                     -> std::io::Result<()> {
+        use std::io::{Seek, SeekFrom};
+        let mut file = lock(&self.file);
+        file.seek(SeekFrom::Start(offset))?;
+        file.read_exact(buf)
+    }
+}
+
+/// One shard's read backend, per the pool's [`ShardMode`].
+enum ShardData {
+    File(PositionalFile),
+    #[cfg(unix)]
+    Mapped(mapped::Mmap),
+}
+
+impl ShardData {
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64)
+                     -> std::io::Result<()> {
+        match self {
+            ShardData::File(f) => f.read_exact_at(buf, offset),
+            #[cfg(unix)]
+            ShardData::Mapped(m) => {
+                let data = m.as_slice();
+                let start = offset as usize;
+                match start.checked_add(buf.len()) {
+                    Some(end) if end <= data.len() => {
+                        buf.copy_from_slice(&data[start..end]);
+                        Ok(())
+                    }
+                    _ => Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "read past end of mapped shard",
+                    )),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+fn shard_data(file: File, label: &str, bytes: u64, mode: ShardMode)
+              -> Result<ShardData> {
+    match mode {
+        ShardMode::Pread => {
+            Ok(ShardData::File(PositionalFile::new(file)))
+        }
+        ShardMode::Mmap => mapped::Mmap::map(&file, bytes)
+            .map(ShardData::Mapped)
+            .map_err(|e| Error::io(label, e)),
+    }
+}
+
+#[cfg(not(unix))]
+fn shard_data(file: File, _label: &str, _bytes: u64, _mode: ShardMode)
+              -> Result<ShardData> {
+    // Without pread/mmap the portable fallback is seek-under-lock for
+    // either requested mode.
+    Ok(ShardData::File(PositionalFile::new(file)))
+}
+
 /// Byte location of one video record inside the shard set.
 #[derive(Debug, Clone, Copy)]
 struct VideoLoc {
@@ -623,16 +829,17 @@ struct PoolCache {
 /// serves any video by id: a shared capacity-bounded cache in front
 /// (`Arc`-shared decoded videos — one decode feeds every loader worker,
 /// unlike the per-worker [`VideoCache`](crate::loader::VideoCache)),
-/// and on miss a `seek` + one-record read under that shard's lock, so
-/// readers of different shards proceed in parallel.
+/// and on miss one *positional* record read ([`ShardMode`]: `pread` or
+/// a mapped-memory copy) — no shared file cursor, so readers proceed in
+/// parallel even within one shard.
 pub struct ShardPool {
     manifest: ShardSetManifest,
     /// Global video order (shard scans concatenated).
     videos: Vec<VideoMeta>,
     index: HashMap<u32, VideoLoc>,
-    /// One random-access handle per shard; the lock serializes only
-    /// same-shard reads.
-    files: Vec<Mutex<File>>,
+    /// One cursor-free read backend per shard.
+    data: Vec<ShardData>,
+    mode: ShardMode,
     /// Shard paths, for error labels.
     labels: Vec<String>,
     cache: Mutex<PoolCache>,
@@ -645,20 +852,29 @@ pub struct ShardPool {
     t_reads: Arc<telemetry::Counter>,
     t_shard_reads: Vec<Arc<telemetry::Counter>>,
     t_read_s: Arc<telemetry::Histogram>,
-    t_lock_wait: Arc<telemetry::Histogram>,
+    t_read_bytes: Arc<telemetry::Counter>,
+    t_prefetch_bytes: Arc<telemetry::Counter>,
 }
 
 impl ShardPool {
     /// Open with the default cache capacity
-    /// ([`DEFAULT_POOL_CACHE`] decoded videos).
+    /// ([`DEFAULT_POOL_CACHE`] decoded videos) and the default
+    /// [`ShardMode`].
     pub fn open(dir: &Path) -> Result<ShardPool> {
         ShardPool::open_with_cache(dir, DEFAULT_POOL_CACHE)
     }
 
-    /// Open, verifying every shard, with a shared cache of `cache_cap`
-    /// decoded videos (>= 1).
+    /// Open with a shared cache of `cache_cap` decoded videos and the
+    /// default [`ShardMode`].
     pub fn open_with_cache(dir: &Path, cache_cap: usize)
                            -> Result<ShardPool> {
+        ShardPool::open_with(dir, cache_cap, ShardMode::default())
+    }
+
+    /// Open, verifying every shard, with a shared cache of `cache_cap`
+    /// decoded videos (>= 1) and the given read backend.
+    pub fn open_with(dir: &Path, cache_cap: usize, mode: ShardMode)
+                     -> Result<ShardPool> {
         let manifest = ShardSetManifest::load(dir)?;
         let t_scans = telemetry::counter(names::SHARD_SCANS);
         let t_scan_s = telemetry::histogram(names::SHARD_SCAN_S);
@@ -673,7 +889,7 @@ impl ShardPool {
         let mut videos =
             Vec::with_capacity(manifest.total_videos());
         let mut index = HashMap::with_capacity(manifest.total_videos());
-        let mut files = Vec::with_capacity(manifest.shards.len());
+        let mut data = Vec::with_capacity(manifest.shards.len());
         let mut labels = Vec::with_capacity(manifest.shards.len());
         for (i, scan) in scans.into_iter().enumerate() {
             let scan = scan?;
@@ -694,17 +910,19 @@ impl ShardPool {
                 }
                 videos.push(meta);
             }
-            files.push(Mutex::new(scan.file));
+            data.push(shard_data(scan.file, &scan.label,
+                                 manifest.shards[i].bytes, mode)?);
             labels.push(scan.label);
         }
-        let t_shard_reads = (0..files.len())
+        let t_shard_reads = (0..data.len())
             .map(|i| telemetry::counter(&names::shard_reads(i)))
             .collect();
         Ok(ShardPool {
             manifest,
             videos,
             index,
-            files,
+            data,
+            mode,
             labels,
             cache: Mutex::new(PoolCache {
                 cap: cache_cap.max(1),
@@ -718,8 +936,17 @@ impl ShardPool {
             t_reads: telemetry::counter(names::SHARD_READS),
             t_shard_reads,
             t_read_s: telemetry::histogram(names::SHARD_READ_S),
-            t_lock_wait: telemetry::histogram(names::SHARD_LOCK_WAIT_S),
+            t_read_bytes: telemetry::counter(names::SHARD_READ_BYTES),
+            t_prefetch_bytes: telemetry::counter(
+                names::SHARD_PREFETCH_BYTES,
+            ),
         })
+    }
+
+    /// The read backend this pool was opened with. On non-Unix targets
+    /// both modes execute the portable seek fallback.
+    pub fn mode(&self) -> ShardMode {
+        self.mode
     }
 
     /// The verified manifest.
@@ -768,6 +995,43 @@ impl ShardPool {
             ))
         })?;
         let video = Arc::new(self.read_video(id, loc)?);
+        self.cache_insert(id, &video);
+        Ok(video)
+    }
+
+    /// Stage one decoded video into the shared cache *without* touching
+    /// the replay path's hit/miss accounting — the readahead scheduler
+    /// ([`crate::loader`]) calls this ahead of the workers so their
+    /// subsequent [`get`](ShardPool::get) is served from memory.
+    ///
+    /// Returns `Ok(None)` when the video was already resident,
+    /// `Ok(Some(bytes))` with the record's on-disk size when it was
+    /// read and cached (counted under
+    /// [`names::SHARD_PREFETCH_BYTES`](crate::telemetry::names)).
+    pub fn warm(&self, id: u32) -> Result<Option<u64>> {
+        {
+            let cache = lock(&self.cache);
+            if cache.map.contains_key(&id) {
+                return Ok(None);
+            }
+        }
+        let loc = *self.index.get(&id).ok_or_else(|| {
+            Error::Dataset(format!(
+                "video {id} is not in the shard set"
+            ))
+        })?;
+        let video = Arc::new(self.read_video(id, loc)?);
+        let (o, f, c) = self.geometry();
+        let len = loc.len as usize;
+        let bytes = (8 + 4 * (len * o * f + len * o * c)) as u64;
+        self.t_prefetch_bytes.add(bytes);
+        self.cache_insert(id, &video);
+        Ok(Some(bytes))
+    }
+
+    /// Insert `video` into the shared cache (FIFO eviction at
+    /// capacity); a racing insert of the same id keeps the first copy.
+    fn cache_insert(&self, id: u32, video: &Arc<VideoData>) {
         let mut cache = lock(&self.cache);
         if !cache.map.contains_key(&id) {
             if cache.map.len() >= cache.cap {
@@ -775,10 +1039,9 @@ impl ShardPool {
                     cache.map.remove(&old);
                 }
             }
-            cache.map.insert(id, Arc::clone(&video));
+            cache.map.insert(id, Arc::clone(video));
             cache.order.push_back(id);
         }
-        Ok(video)
     }
 
     /// Raw encoded record bytes of one video — the 8-byte `id`/`len`
@@ -801,12 +1064,15 @@ impl ShardPool {
         Ok((buf, crc))
     }
 
-    /// Seek + read one record's raw bytes under its shard's lock. The
-    /// shard body was CRC-verified at open; this re-checks the record
-    /// header against the index so a file swapped after open fails
-    /// loudly instead of decoding garbage. IO failures carry the shard
-    /// path, byte offset and read size so a server-side disk fault is
-    /// diagnosable from the client's error string alone.
+    /// Read one record's raw bytes with a positional read (`pread` /
+    /// mapped-memory copy, per [`ShardMode`]) — no shared cursor, so
+    /// concurrent readers of one shard never serialize (the former
+    /// path seeked under a per-shard lock). The shard body was
+    /// CRC-verified at open; this re-checks the record header against
+    /// the index so a file swapped after open fails loudly instead of
+    /// decoding garbage. IO failures carry the shard path, byte offset
+    /// and read size so a server-side disk fault is diagnosable from
+    /// the client's error string alone.
     fn read_record_bytes(&self, id: u32, loc: VideoLoc)
                          -> Result<Vec<u8>> {
         let (o, f, c) = self.geometry();
@@ -816,26 +1082,22 @@ impl ShardPool {
         let label = &self.labels[loc.shard as usize];
         let mut buf = vec![0u8; 8 + 4 * (n_feats + n_labels)];
         let read_t0 = std::time::Instant::now();
-        {
-            let lock_t0 = std::time::Instant::now();
-            let mut file = lock(&self.files[loc.shard as usize]);
-            self.t_lock_wait.record(lock_t0.elapsed().as_secs_f64());
-            file.seek(SeekFrom::Start(loc.offset))
-                .and_then(|_| file.read_exact(&mut buf))
-                .map_err(|e| {
-                    Error::io(
-                        format!(
-                            "{label}: video {id} record at byte offset \
-                             {} ({} bytes)",
-                            loc.offset,
-                            buf.len()
-                        ),
-                        e,
-                    )
-                })?;
-        }
+        self.data[loc.shard as usize]
+            .read_exact_at(&mut buf, loc.offset)
+            .map_err(|e| {
+                Error::io(
+                    format!(
+                        "{label}: video {id} record at byte offset \
+                         {} ({} bytes)",
+                        loc.offset,
+                        buf.len()
+                    ),
+                    e,
+                )
+            })?;
         self.t_read_s.record(read_t0.elapsed().as_secs_f64());
         self.t_reads.inc();
+        self.t_read_bytes.add(buf.len() as u64);
         self.t_shard_reads[loc.shard as usize].inc();
         let rid = u32::from_le_bytes(buf[0..4].try_into().unwrap());
         let rlen = u32::from_le_bytes(buf[4..8].try_into().unwrap());
@@ -1182,6 +1444,78 @@ mod tests {
         // video during the warm pass, shared hits ever after.
         assert_eq!(misses, split.videos.len() as u64);
         assert_eq!(hits, (readers * split.videos.len()) as u64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pread_and_mmap_modes_serve_identical_records_concurrently() {
+        let split = tiny_split(17);
+        let dir = tmpdir("modes");
+        ShardSetWriter::new(&dir, 17, 3)
+            .unwrap()
+            .write(&split)
+            .unwrap();
+        // Cache capacity 1 forces nearly every get onto the disk path,
+        // so 8 racing readers genuinely exercise concurrent positional
+        // reads of the same shards.
+        let pread = Arc::new(
+            ShardPool::open_with(&dir, 1, ShardMode::Pread).unwrap(),
+        );
+        let mapped = Arc::new(
+            ShardPool::open_with(&dir, 1, ShardMode::Mmap).unwrap(),
+        );
+        assert_eq!(pread.mode(), ShardMode::Pread);
+        assert_eq!(mapped.mode(), ShardMode::Mmap);
+        let readers = 8;
+        std::thread::scope(|s| {
+            for r in 0..readers {
+                let pread = Arc::clone(&pread);
+                let mapped = Arc::clone(&mapped);
+                let split = &split;
+                s.spawn(move || {
+                    let n = split.videos.len();
+                    for k in 0..n {
+                        let meta = split.videos
+                            [(k + r * n / readers) % n];
+                        let a = pread.get(meta.id).unwrap();
+                        let b = mapped.get(meta.id).unwrap();
+                        assert_eq!(a.feats, b.feats,
+                                   "video {}", meta.id);
+                        assert_eq!(a.labels, b.labels);
+                        // Raw serving-path bytes + CRC must agree too.
+                        let (ra, ca) = pread.record(meta.id).unwrap();
+                        let (rb, cb) = mapped.record(meta.id).unwrap();
+                        assert_eq!(ra, rb, "video {}", meta.id);
+                        assert_eq!(ca, cb);
+                    }
+                });
+            }
+        });
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn warm_stages_records_without_touching_replay_stats() {
+        let split = tiny_split(19);
+        let dir = tmpdir("warm");
+        ShardSetWriter::new(&dir, 19, 2)
+            .unwrap()
+            .write(&split)
+            .unwrap();
+        let pool = ShardPool::open(&dir).unwrap();
+        let meta = split.videos[0];
+        let staged = pool.warm(meta.id).unwrap();
+        assert!(matches!(staged, Some(b) if b > 0), "{staged:?}");
+        // Re-warming a resident video is a no-op.
+        assert_eq!(pool.warm(meta.id).unwrap(), None);
+        // warm() must not skew the replay path's hit/miss stats...
+        assert_eq!(pool.cache_stats(), (0, 0));
+        // ...and the staged video now serves as a cache hit.
+        let got = pool.get(meta.id).unwrap();
+        assert_eq!(got.feats, split.spec.materialize(meta).feats);
+        assert_eq!(pool.cache_stats(), (1, 0));
+        // Unknown ids still fail loudly.
+        assert!(pool.warm(9_999_999).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -32,6 +32,15 @@ use super::{VideoData, VideoMeta};
 pub(crate) const MAGIC: &[u8; 4] = b"BLDS";
 const VERSION: u32 = 1;
 
+/// f32s per staged read of a record payload (256 KiB of bytes).
+const CHUNK_F32S: usize = 1 << 16;
+
+/// Ceiling on the capacity the reader's reusable byte scratch may keep
+/// between records: one full read chunk. The scratch never *fills*
+/// past this, but `Vec` growth may over-allocate — the cap stops an
+/// oversized record from pinning that excess for the stream's life.
+pub(crate) const SCRATCH_CAP_BYTES: usize = 4 * CHUNK_F32S;
+
 /// Serialize the 28-byte store header that follows the magic (shared
 /// with the sharded layout in [`crate::dataset::shardstore`]).
 pub(crate) fn encode_header(seed: u64, geometry: (u32, u32, u32),
@@ -319,10 +328,10 @@ impl<R: Read> StoreReader<R> {
     /// Read `n` f32s in bounded chunks: the vector only grows as bytes
     /// actually arrive, so a corrupt record length on a short source hits
     /// the truncation error instead of a giant upfront allocation. The
-    /// byte staging buffer is owned by the reader and reused across
-    /// videos, so steady-state replay allocates only the returned vector.
+    /// byte staging buffer is owned by the reader, reused across videos
+    /// and capped at [`SCRATCH_CAP_BYTES`], so steady-state replay
+    /// allocates only the returned vector.
     fn read_f32s(&mut self, n: usize) -> Result<Vec<f32>> {
-        const CHUNK_F32S: usize = 1 << 16; // 256 KiB per read
         let mut out = Vec::with_capacity(n.min(CHUNK_F32S));
         let mut raw = std::mem::take(&mut self.scratch);
         let need = 4 * n.min(CHUNK_F32S);
@@ -344,6 +353,10 @@ impl<R: Read> StoreReader<R> {
             );
             remaining -= take;
         }
+        // The length is chunk-bounded above, but `resize` is free to
+        // over-allocate; cap the retained capacity so one oversized
+        // record can't pin extra memory for the rest of the stream.
+        raw.shrink_to(SCRATCH_CAP_BYTES);
         self.scratch = raw;
         result.map(|()| out)
     }
@@ -622,6 +635,31 @@ mod tests {
         assert!(err.contains("truncated"), "{err}");
         assert!(err.contains("byte offset"), "{err}");
         assert!(r.next().is_none(), "reader is fused after failure");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn scratch_capacity_is_capped_after_oversized_record() {
+        // feats = 1500*4*12 = 72_000 f32s > CHUNK_F32S: the record
+        // streams through several chunk reads, and whatever capacity
+        // the scratch picked up along the way must come back under the
+        // cap before the next record.
+        let cfg = tiny_config();
+        let spec = GeneratorSpec::new(&cfg, 5);
+        let big = spec.materialize(VideoMeta { id: 0, len: 1500 });
+        let path = tmpfile("bigrec.blds");
+        let mut w = StoreWriter::create(&path, 5, (4, 12, 10), 1).unwrap();
+        w.append(&big).unwrap();
+        w.finish().unwrap();
+        let mut r = StoreReader::open(&path).unwrap();
+        let back = r.next().unwrap().unwrap();
+        assert_eq!(back.feats, big.feats);
+        assert!(
+            r.scratch.capacity() <= SCRATCH_CAP_BYTES,
+            "scratch kept {} bytes of capacity (cap {})",
+            r.scratch.capacity(),
+            SCRATCH_CAP_BYTES
+        );
         std::fs::remove_file(&path).ok();
     }
 

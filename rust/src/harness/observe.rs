@@ -12,7 +12,7 @@
 //! 2. **Shard store** — writes a shard set into a scratch directory,
 //!    then replays a shard-backed epoch (pool open = `shardstore.scans`
 //!    / `scan_s`; every video decode = `shardstore.reads`, `read_s`,
-//!    `lock_wait_s`, cache hits/misses, per-shard read counters).
+//!    `read_bytes`, cache hits/misses, per-shard read counters).
 //! 3. **Loopback serving** — starts a [`crate::net::Server`] on an
 //!    ephemeral loopback port over the leg-2 shard set and drains a
 //!    [`RemoteSource`](crate::net::RemoteSource)-backed loader through

@@ -1,5 +1,30 @@
 //! Device-batch assembly: materialize packed blocks into the dense host
 //! buffers the `grad_step` / `infer_step` artifacts consume.
+//!
+//! Every entry point funnels into one fill loop; the `*_pooled`
+//! variants draw the four `f32` planes from a shared recycled
+//! [`BufferPool`] instead of allocating per step, and the finished
+//! [`DeviceBatch`] hands them back when it drops. Content is identical
+//! either way — pooling only changes where the allocations come from.
+//!
+//! # Examples
+//!
+//! ```
+//! use bload::config::ExperimentConfig;
+//! use bload::dataset::synthetic::{generate, tiny_config};
+//! use bload::loader::materialize_batch;
+//! use bload::packing::{by_name, pack};
+//!
+//! let ds = generate(&tiny_config(), 1);
+//! let mut pcfg = ExperimentConfig::default_config().packing;
+//! pcfg.t_max = 6;
+//! let packed = pack(by_name("bload").unwrap(), &ds.train, &pcfg, 0)
+//!     .unwrap();
+//! let refs: Vec<_> = packed.blocks.iter().take(2).enumerate().collect();
+//! let batch = materialize_batch(&ds.train, &refs, 6).unwrap();
+//! assert_eq!(batch.batch, 2);
+//! assert_eq!(batch.feats.len(), 2 * 6 * 4 * 12);
+//! ```
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -8,6 +33,8 @@ use crate::dataset::shardstore::ShardPool;
 use crate::dataset::{Split, VideoData, VideoMeta};
 use crate::error::{Error, Result};
 use crate::packing::Block;
+
+use super::pool::BufferPool;
 
 /// One rank-step's worth of data, laid out exactly like the artifact
 /// inputs (row-major f32).
@@ -32,6 +59,20 @@ pub struct DeviceBatch {
     pub real_frames: usize,
     /// Total slots (real + padding) — the compute actually executed.
     pub slots: usize,
+    /// When set, the four planes recycle into this pool on drop.
+    /// Hand-built batches (tests, benches) pass `None`.
+    pub pool: Option<Arc<BufferPool>>,
+}
+
+impl Drop for DeviceBatch {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.put(std::mem::take(&mut self.feats));
+            pool.put(std::mem::take(&mut self.labels));
+            pool.put(std::mem::take(&mut self.frame_mask));
+            pool.put(std::mem::take(&mut self.seg_ids));
+        }
+    }
 }
 
 /// A source of decoded video content for batch materialization.
@@ -46,6 +87,19 @@ pub trait VideoProvider: Send + Sync + 'static {
     /// Fetch the decoded content of `meta` (shared, immutable).
     fn fetch(&self, split: &Split, meta: VideoMeta)
              -> Result<Arc<VideoData>>;
+
+    /// Stage `meta` into the provider's shared cache ahead of a
+    /// [`fetch`](Self::fetch) (the readahead scheduler's hook).
+    ///
+    /// Returns `Ok(None)` when the record was already resident (or the
+    /// provider has nothing to stage into — the default: cacheless
+    /// providers such as the network ones must NOT fetch here, or the
+    /// record would travel twice), `Ok(Some(bytes))` after actually
+    /// staging `bytes` of content.
+    fn warm(&self, _split: &Split, _meta: VideoMeta)
+            -> Result<Option<u64>> {
+        Ok(None)
+    }
 }
 
 impl VideoProvider for ShardPool {
@@ -63,6 +117,13 @@ impl VideoProvider for ShardPool {
             )));
         }
         Ok(video)
+    }
+
+    /// Positional-read the record into the pool's shared cache (a
+    /// cache hit reports `None`, leaving replay stats untouched).
+    fn warm(&self, _split: &Split, meta: VideoMeta)
+            -> Result<Option<u64>> {
+        ShardPool::warm(self, meta.id)
     }
 }
 
@@ -127,7 +188,19 @@ pub fn materialize_batch(split: &Split, blocks: &[(usize, &Block)],
 pub fn materialize_batch_cached(split: &Split, blocks: &[(usize, &Block)],
                                 block_len: usize, cache: &mut VideoCache)
                                 -> Result<DeviceBatch> {
-    fill_batch(split, blocks, block_len,
+    fill_batch(split, blocks, block_len, None,
+               &mut |meta| Ok(cache.get(split, meta)))
+}
+
+/// [`materialize_batch_cached`] drawing the batch planes from a shared
+/// recycled [`BufferPool`]; the batch returns them on drop.
+pub fn materialize_batch_cached_pooled(split: &Split,
+                                       blocks: &[(usize, &Block)],
+                                       block_len: usize,
+                                       cache: &mut VideoCache,
+                                       pool: &Arc<BufferPool>)
+                                       -> Result<DeviceBatch> {
+    fill_batch(split, blocks, block_len, Some(pool),
                &mut |meta| Ok(cache.get(split, meta)))
 }
 
@@ -139,14 +212,28 @@ pub fn materialize_batch_provider(split: &Split,
                                   block_len: usize,
                                   provider: &dyn VideoProvider)
                                   -> Result<DeviceBatch> {
-    fill_batch(split, blocks, block_len,
+    fill_batch(split, blocks, block_len, None,
+               &mut |meta| provider.fetch(split, meta))
+}
+
+/// [`materialize_batch_provider`] drawing the batch planes from a
+/// shared recycled [`BufferPool`]; the batch returns them on drop.
+pub fn materialize_batch_provider_pooled(split: &Split,
+                                         blocks: &[(usize, &Block)],
+                                         block_len: usize,
+                                         provider: &dyn VideoProvider,
+                                         pool: &Arc<BufferPool>)
+                                         -> Result<DeviceBatch> {
+    fill_batch(split, blocks, block_len, Some(pool),
                &mut |meta| provider.fetch(split, meta))
 }
 
 /// The one fill loop behind every materialization entry point; `fetch`
 /// resolves a video's decoded content (worker cache, shared pool, ...).
+/// With a `pool`, the four planes come from recycled allocations
+/// (re-filled wholesale, so content is identical to fresh `vec!`s).
 fn fill_batch(split: &Split, blocks: &[(usize, &Block)],
-              block_len: usize,
+              block_len: usize, pool: Option<&Arc<BufferPool>>,
               fetch: &mut dyn FnMut(VideoMeta) -> Result<Arc<VideoData>>)
               -> Result<DeviceBatch> {
     let spec = &split.spec;
@@ -159,11 +246,15 @@ fn fill_batch(split: &Split, blocks: &[(usize, &Block)],
         .map(|v| (v.id, v.len as usize))
         .collect();
 
+    let plane = |len: usize, fill: f32| match pool {
+        Some(p) => p.take(len, fill),
+        None => vec![fill; len],
+    };
     let mut out = DeviceBatch {
-        feats: vec![0.0; b * t * o * f],
-        labels: vec![0.0; b * t * o * c],
-        frame_mask: vec![0.0; b * t],
-        seg_ids: vec![-1.0; b * t],
+        feats: plane(b * t * o * f, 0.0),
+        labels: plane(b * t * o * c, 0.0),
+        frame_mask: plane(b * t, 0.0),
+        seg_ids: plane(b * t, -1.0),
         block_ids: blocks.iter().map(|(i, _)| *i).collect(),
         batch: b,
         block_len: t,
@@ -172,6 +263,7 @@ fn fill_batch(split: &Split, blocks: &[(usize, &Block)],
         classes: c,
         real_frames: 0,
         slots: b * t,
+        pool: pool.map(Arc::clone),
     };
 
     for (bi, (_, block)) in blocks.iter().enumerate() {

@@ -49,17 +49,31 @@
 //!
 //! [`PackedDataset`]: crate::packing::PackedDataset
 
+//! The replay hot path is zero-copy end to end: shard records arrive
+//! via positional reads or mmap
+//! ([`ShardMode`](crate::dataset::shardstore::ShardMode)), batch planes
+//! come from the recycled [`BufferPool`], and the [`readahead`]
+//! scheduler stages the next steps' records while the current batch
+//! materializes (`loader.readahead` knob). See `docs/PERFORMANCE.md`.
+
 pub mod batch;
 pub mod epoch;
+pub mod pool;
 pub mod prefetch;
+pub mod readahead;
 pub mod shard;
 pub mod source;
 
 pub use batch::{materialize_batch, materialize_batch_cached,
-                materialize_batch_provider, DeviceBatch, VideoCache,
-                VideoProvider};
+                materialize_batch_cached_pooled,
+                materialize_batch_provider,
+                materialize_batch_provider_pooled, DeviceBatch,
+                VideoCache, VideoProvider};
 pub use epoch::EpochPlan;
-pub use prefetch::{DataLoader, DataLoaderBuilder, DEFAULT_VIDEO_CACHE};
+pub use pool::BufferPool;
+pub use prefetch::{DataLoader, DataLoaderBuilder, DEFAULT_READAHEAD,
+                   DEFAULT_VIDEO_CACHE};
+pub use readahead::ReadaheadSource;
 pub use shard::shard_blocks;
 pub use source::{BlockSource, PlannedSource, ShardSource, StoreSource,
                  StreamSource, WorkUnit};

@@ -1,0 +1,145 @@
+//! Recycled batch-buffer allocator: the `Vec<f32>` planes of a
+//! [`DeviceBatch`](super::DeviceBatch) (feats, labels, frame mask,
+//! segment ids) are returned here when the batch drops and handed back
+//! out on the next materialization, so a steady-state replay loop
+//! allocates its host buffers once instead of once per step.
+//!
+//! The pool is shared (`Arc`) between the prefetch workers that fill
+//! batches and the consumer thread that drops them; recycling crosses
+//! threads through one mutex-guarded free list. Capacity is bounded:
+//! once `cap` buffers are parked, further returns are simply freed, so
+//! a burst of in-flight batches cannot pin memory forever.
+//!
+//! # Examples
+//!
+//! ```
+//! use bload::loader::BufferPool;
+//!
+//! let pool = BufferPool::new(4);
+//! let a = pool.take(8, 0.0);
+//! assert_eq!(a, vec![0.0; 8]);
+//! pool.put(a);
+//! // The parked allocation is reused and re-filled for the new shape.
+//! let b = pool.take(4, -1.0);
+//! assert_eq!(b, vec![-1.0; 4]);
+//! ```
+
+use std::sync::{Arc, Mutex};
+
+use crate::telemetry::{self, names};
+
+/// Capacity-bounded free list of `f32` buffers (see the module docs).
+#[derive(Debug)]
+pub struct BufferPool {
+    cap: usize,
+    free: Mutex<Vec<Vec<f32>>>,
+    t_hits: Arc<telemetry::Counter>,
+    t_misses: Arc<telemetry::Counter>,
+}
+
+impl BufferPool {
+    /// A pool parking at most `cap` returned buffers (>= 1).
+    pub fn new(cap: usize) -> BufferPool {
+        BufferPool {
+            cap: cap.max(1),
+            free: Mutex::new(Vec::new()),
+            t_hits: telemetry::counter(names::LOADER_BUFPOOL_HITS),
+            t_misses: telemetry::counter(names::LOADER_BUFPOOL_MISSES),
+        }
+    }
+
+    /// A buffer of exactly `len` elements, every one set to `fill` —
+    /// indistinguishable from `vec![fill; len]`, but backed by a
+    /// recycled allocation when one is parked.
+    pub fn take(&self, len: usize, fill: f32) -> Vec<f32> {
+        let recycled = lock(&self.free).pop();
+        match recycled {
+            Some(mut buf) => {
+                self.t_hits.inc();
+                buf.clear();
+                buf.resize(len, fill);
+                buf
+            }
+            None => {
+                self.t_misses.inc();
+                vec![fill; len]
+            }
+        }
+    }
+
+    /// Park `buf` for reuse; dropped on the floor once `cap` buffers
+    /// are already parked (or when it holds no allocation at all).
+    pub fn put(&self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let mut free = lock(&self.free);
+        if free.len() < self.cap {
+            free.push(buf);
+        }
+    }
+
+    /// Buffers currently parked.
+    pub fn parked(&self) -> usize {
+        lock(&self.free).len()
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    // The free list is just spare capacity; a panicking holder cannot
+    // leave it in a state worth poisoning over.
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_matches_fresh_allocation_exactly() {
+        let pool = BufferPool::new(2);
+        let a = pool.take(6, 0.0);
+        assert_eq!(a, vec![0.0; 6]);
+        pool.put(a);
+        // Recycled buffers must be re-filled wholesale — stale content
+        // from the previous batch can never leak through.
+        let b = pool.take(3, -1.0);
+        assert_eq!(b, vec![-1.0; 3]);
+        let c = pool.take(9, 0.5);
+        assert_eq!(c, vec![0.5; 9]);
+    }
+
+    #[test]
+    fn pool_is_capacity_bounded() {
+        let pool = BufferPool::new(2);
+        for _ in 0..5 {
+            pool.put(vec![0.0; 8]);
+        }
+        assert_eq!(pool.parked(), 2);
+    }
+
+    #[test]
+    fn empty_buffers_are_not_parked() {
+        let pool = BufferPool::new(2);
+        pool.put(Vec::new());
+        assert_eq!(pool.parked(), 0);
+    }
+
+    #[test]
+    fn recycling_is_thread_safe() {
+        let pool = Arc::new(BufferPool::new(8));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = Arc::clone(&pool);
+                s.spawn(move || {
+                    for i in 0..200 {
+                        let buf = pool.take(16 + (i % 3), 0.0);
+                        assert!(buf.iter().all(|&x| x == 0.0));
+                        pool.put(buf);
+                    }
+                });
+            }
+        });
+        assert!(pool.parked() <= 8);
+    }
+}

@@ -25,19 +25,28 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::config::{DatasetConfig, LoaderConfig, PackingConfig};
+use crate::dataset::shardstore::{ShardMode, ShardPool,
+                                 DEFAULT_POOL_CACHE};
 use crate::dataset::Split;
 use crate::error::{Error, Result};
 use crate::packing::{Block, PackedDataset, Packer};
 use crate::telemetry::{self, names};
 
-use super::batch::{materialize_batch_cached, materialize_batch_provider,
-                   DeviceBatch, VideoCache};
+use super::batch::{materialize_batch_cached_pooled,
+                   materialize_batch_provider_pooled, DeviceBatch,
+                   VideoCache};
 use super::epoch::EpochPlan;
+use super::pool::BufferPool;
+use super::readahead::ReadaheadSource;
 use super::source::{BlockSource, PlannedSource, ShardSource, StoreSource,
                     StreamSource};
 
 /// Default per-worker [`VideoCache`] capacity (`loader.video_cache`).
 pub const DEFAULT_VIDEO_CACHE: usize = 64;
+
+/// Default readahead window in work units (`loader.readahead`); 0
+/// disables the scheduler.
+pub const DEFAULT_READAHEAD: usize = 2;
 
 /// Every knob of the loading pipeline, in one place.
 ///
@@ -65,6 +74,8 @@ pub struct DataLoaderBuilder {
     seed: u64,
     ranks: usize,
     rank: usize,
+    readahead: usize,
+    shard_mode: ShardMode,
 }
 
 impl Default for DataLoaderBuilder {
@@ -84,19 +95,26 @@ impl DataLoaderBuilder {
             seed: 0,
             ranks: 1,
             rank: 0,
+            readahead: DEFAULT_READAHEAD,
+            shard_mode: ShardMode::default(),
         }
     }
 
     /// Adopt the `[loader]` config section (workers, prefetch depth,
-    /// shuffle, video-cache capacity). Batch size, sharding and seed stay
-    /// at their defaults — chain [`batch`](Self::batch),
-    /// [`shard`](Self::shard) and [`seed`](Self::seed) after.
+    /// shuffle, video-cache capacity, readahead window, shard read
+    /// mode). Batch size, sharding and seed stay at their defaults —
+    /// chain [`batch`](Self::batch), [`shard`](Self::shard) and
+    /// [`seed`](Self::seed) after.
     pub fn from_config(cfg: &LoaderConfig) -> DataLoaderBuilder {
         DataLoaderBuilder::new()
             .workers(cfg.workers)
             .depth(cfg.prefetch_depth)
             .video_cache(cfg.video_cache)
             .shuffle(cfg.shuffle)
+            .readahead(cfg.readahead)
+            // Config validation already rejected unknown spellings.
+            .shard_mode(ShardMode::parse(&cfg.shard_mode)
+                .unwrap_or_default())
     }
 
     /// Materialization worker threads (≥ 1).
@@ -143,6 +161,24 @@ impl DataLoaderBuilder {
     pub fn shard(mut self, ranks: usize, rank: usize) -> Self {
         self.ranks = ranks;
         self.rank = rank;
+        self
+    }
+
+    /// Readahead window in work units (0 disables): a claimer thread
+    /// stages upcoming steps' shard records into the provider's shared
+    /// cache while the current batch materializes. Only sources with a
+    /// [`VideoProvider`](super::VideoProvider) are affected; content is
+    /// byte-identical either way.
+    pub fn readahead(mut self, units: usize) -> Self {
+        self.readahead = units;
+        self
+    }
+
+    /// Shard read backend for [`shards`](Self::shards) loaders
+    /// (`pread` positional reads or `mmap`; see
+    /// [`ShardMode`]). Byte-identical output in both modes.
+    pub fn shard_mode(mut self, mode: ShardMode) -> Self {
+        self.shard_mode = mode;
         self
     }
 
@@ -215,9 +251,12 @@ impl DataLoaderBuilder {
                   packer: &dyn Packer, pcfg: &PackingConfig, epoch: u64)
                   -> Result<DataLoader> {
         self.validate()?;
-        let source = ShardSource::open(dir, dcfg, packer, pcfg,
-                                       self.seed,
-                                       |packed| self.plan(packed, epoch))?;
+        let pool = Arc::new(ShardPool::open_with(dir, DEFAULT_POOL_CACHE,
+                                                 self.shard_mode)?);
+        let source = ShardSource::from_pool(pool, dcfg, packer, pcfg,
+                                            self.seed,
+                                            |packed| self.plan(packed,
+                                                               epoch))?;
         self.spawn(Arc::new(source))
     }
 
@@ -279,12 +318,21 @@ impl DataLoaderBuilder {
     }
 
     fn spawn(&self, source: Arc<dyn BlockSource>) -> Result<DataLoader> {
+        // Provider-backed sources get a readahead claimer staging
+        // upcoming records; others come back unchanged.
+        let source = ReadaheadSource::wrap(source, self.readahead);
         let (tx, rx) = sync_channel(self.depth);
+        // One recycled plane pool shared by every worker and the
+        // consumer: capacity covers all batches that can be in flight
+        // at once (channel + workers + the consumer's reorder slack).
+        let buffers = Arc::new(BufferPool::new(
+            4 * (self.depth + self.workers + 2)));
         let mut workers = Vec::with_capacity(self.workers);
         for worker in 0..self.workers {
             let tx = tx.clone();
             let source = Arc::clone(&source);
             let cache_cap = self.video_cache;
+            let buffers = Arc::clone(&buffers);
             workers.push(std::thread::spawn(move || {
                 let split = Arc::clone(source.split());
                 let block_len = source.block_len();
@@ -311,10 +359,11 @@ impl DataLoaderBuilder {
                         .collect();
                     let t0 = std::time::Instant::now();
                     let out = match provider.as_deref() {
-                        Some(p) => materialize_batch_provider(
-                            &split, &refs, block_len, p),
-                        None => materialize_batch_cached(
-                            &split, &refs, block_len, &mut cache),
+                        Some(p) => materialize_batch_provider_pooled(
+                            &split, &refs, block_len, p, &buffers),
+                        None => materialize_batch_cached_pooled(
+                            &split, &refs, block_len, &mut cache,
+                            &buffers),
                     };
                     t_materialize.record(t0.elapsed().as_secs_f64());
                     t_batches.inc();
@@ -548,11 +597,15 @@ mod tests {
         cfg.prefetch_depth = 7;
         cfg.video_cache = 9;
         cfg.shuffle = false;
+        cfg.readahead = 6;
+        cfg.shard_mode = "mmap".into();
         let b = DataLoaderBuilder::from_config(&cfg);
         assert_eq!(b.workers, 5);
         assert_eq!(b.depth, 7);
         assert_eq!(b.video_cache, 9);
         assert!(!b.shuffle);
+        assert_eq!(b.readahead, 6);
+        assert_eq!(b.shard_mode, ShardMode::Mmap);
     }
 
     #[test]

@@ -110,6 +110,7 @@ mod tests {
             classes: 1,
             real_frames: 0,
             slots: b * t,
+            pool: None,
         }
     }
 

@@ -280,6 +280,7 @@ mod tests {
             classes: c,
             real_frames: b * t,
             slots: b * t,
+            pool: None,
         }
     }
 

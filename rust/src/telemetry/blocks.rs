@@ -90,13 +90,16 @@ impl MetricBlock for Loader {
     }
 
     fn describe(&self) -> &'static str {
-        "prefetch workers: batches, VideoCache hit/miss, materialize \
-         latency"
+        "prefetch workers: batches, VideoCache hit/miss, readahead and \
+         buffer-pool recycling, materialize latency"
     }
 
     fn template(&self) -> &'static str {
         "batches {loader.batches}  workers {loader.workers_active}  \
          cache h/m {loader.cache_hits}/{loader.cache_misses}  \
+         readahead h/m \
+         {loader.readahead_hits}/{loader.readahead_misses}  \
+         bufpool h/m {loader.bufpool_hits}/{loader.bufpool_misses}  \
          materialize p50 {loader.materialize_s.p50} \
          p95 {loader.materialize_s.p95} p99 {loader.materialize_s.p99}"
     }
@@ -116,13 +119,15 @@ impl MetricBlock for Shardstore {
     }
 
     fn describe(&self) -> &'static str {
-        "shard pool: reads, cache hit/miss, CRC scan time, lock wait"
+        "shard pool: reads, bytes (replay + prefetch), cache hit/miss, \
+         CRC scan time"
     }
 
     fn template(&self) -> &'static str {
         "reads {shardstore.reads} (p95 {shardstore.read_s.p95})  \
+         bytes {shardstore.read_bytes} \
+         (prefetch {shardstore.prefetch_bytes})  \
          cache h/m {shardstore.cache_hits}/{shardstore.cache_misses}  \
-         lock p95 {shardstore.lock_wait_s.p95}  \
          scans {shardstore.scans} (mean {shardstore.scan_s.mean})"
     }
 }
@@ -404,7 +409,13 @@ mod tests {
             names::LOADER_BATCHES,
             names::LOADER_CACHE_HITS,
             names::LOADER_CACHE_MISSES,
+            names::LOADER_READAHEAD_HITS,
+            names::LOADER_READAHEAD_MISSES,
+            names::LOADER_BUFPOOL_HITS,
+            names::LOADER_BUFPOOL_MISSES,
             names::SHARD_READS,
+            names::SHARD_READ_BYTES,
+            names::SHARD_PREFETCH_BYTES,
             names::SHARD_CACHE_HITS,
             names::SHARD_CACHE_MISSES,
             names::SHARD_SCANS,
@@ -444,7 +455,6 @@ mod tests {
         for h in [
             names::LOADER_MATERIALIZE_S.to_string(),
             names::SHARD_READ_S.to_string(),
-            names::SHARD_LOCK_WAIT_S.to_string(),
             names::SHARD_SCAN_S.to_string(),
             names::NET_REQUEST_S.to_string(),
             names::FLEET_POOL_WAIT_S.to_string(),

@@ -72,6 +72,17 @@ pub mod names {
     pub const LOADER_CACHE_MISSES: &str = "loader.cache_misses";
     /// Histogram: batch-materialize latency (seconds).
     pub const LOADER_MATERIALIZE_S: &str = "loader.materialize_s";
+    /// Counter: readahead warms that found the record already resident
+    /// in the shared content cache (or the provider had nothing to
+    /// stage — remote providers without a cache warm as no-ops).
+    pub const LOADER_READAHEAD_HITS: &str = "loader.readahead_hits";
+    /// Counter: readahead warms that staged new content ahead of the
+    /// workers (the overlap the scheduler exists for).
+    pub const LOADER_READAHEAD_MISSES: &str = "loader.readahead_misses";
+    /// Counter: batch buffers served from the recycled pool.
+    pub const LOADER_BUFPOOL_HITS: &str = "loader.bufpool_hits";
+    /// Counter: batch buffers freshly allocated (pool empty).
+    pub const LOADER_BUFPOOL_MISSES: &str = "loader.bufpool_misses";
     /// Counter name for one prefetch worker's batches.
     pub fn loader_worker_batches(worker: usize) -> String {
         format!("loader.worker{worker}.batches")
@@ -86,7 +97,14 @@ pub mod names {
     pub const SHARD_CACHE_HITS: &str = "shardstore.cache_hits";
     /// Counter: `ShardPool` cache misses.
     pub const SHARD_CACHE_MISSES: &str = "shardstore.cache_misses";
+    /// Counter: record bytes read off shard files (pread/mmap path).
+    pub const SHARD_READ_BYTES: &str = "shardstore.read_bytes";
+    /// Counter: record bytes staged ahead of the workers by
+    /// `ShardPool::warm` (the readahead scheduler's prefetches).
+    pub const SHARD_PREFETCH_BYTES: &str = "shardstore.prefetch_bytes";
     /// Histogram: wait to acquire a shard file lock (seconds).
+    /// Retained for snapshot compatibility — the positional-read path
+    /// (pread/mmap) is lock-free and no longer records it.
     pub const SHARD_LOCK_WAIT_S: &str = "shardstore.lock_wait_s";
     /// Counter: full-shard CRC verification scans.
     pub const SHARD_SCANS: &str = "shardstore.scans";

@@ -328,6 +328,80 @@ fn shard_replay_is_byte_identical_for_any_shard_count() {
 }
 
 #[test]
+fn zero_copy_knobs_replay_byte_identical() {
+    // The zero-copy acceptance bar: every combination of the shard
+    // read backend (pread / mmap) and the readahead window (off / on)
+    // replays the exact batch sequence of the in-memory offline epoch.
+    // The knobs may only move *where and when* bytes are read.
+    use bload::dataset::shardstore::{ShardMode, ShardSetWriter};
+    let cfg = ExperimentConfig::default_config();
+    let dcfg = cfg.dataset.scaled(0.01);
+    let gen_seed = 17u64;
+    let ds = generate(&dcfg, gen_seed);
+
+    let builder = DataLoaderBuilder::new()
+        .batch(2)
+        .workers(3)
+        .depth(2)
+        .seed(17);
+    let packed = Arc::new(
+        pack(by_name("bload").unwrap(), &ds.train, &cfg.packing, 17)
+            .unwrap(),
+    );
+    let split = Arc::new(ds.train);
+    let mut memory = builder
+        .planned(Arc::clone(&split), Arc::clone(&packed), 0)
+        .unwrap();
+    let mut reference = Vec::new();
+    while let Some(b) = memory.next() {
+        reference.push(b.unwrap());
+    }
+    assert!(!reference.is_empty(), "epoch has steps");
+
+    let dir = std::env::temp_dir().join(format!(
+        "bload_zero_copy_e2e_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    ShardSetWriter::new(&dir, gen_seed, 3)
+        .unwrap()
+        .write(&split)
+        .unwrap();
+
+    for mode in [ShardMode::Pread, ShardMode::Mmap] {
+        for readahead in [0usize, 3] {
+            let tag = format!("{} readahead {readahead}", mode.as_str());
+            let mut loader = builder
+                .clone()
+                .shard_mode(mode)
+                .readahead(readahead)
+                .shards(&dir, &dcfg, by_name("bload").unwrap(),
+                        &cfg.packing, 0)
+                .unwrap();
+            assert_eq!(loader.steps(), Some(reference.len()), "{tag}");
+            for (step, want) in reference.iter().enumerate() {
+                let got = loader
+                    .next()
+                    .unwrap_or_else(|| {
+                        panic!("{tag}: ended at step {step}")
+                    })
+                    .unwrap();
+                assert_eq!(got.block_ids, want.block_ids,
+                           "{tag}, step {step}");
+                assert_eq!(got.feats, want.feats, "{tag}, step {step}");
+                assert_eq!(got.labels, want.labels, "{tag}, step {step}");
+                assert_eq!(got.frame_mask, want.frame_mask,
+                           "{tag}, step {step}");
+                assert_eq!(got.seg_ids, want.seg_ids,
+                           "{tag}, step {step}");
+            }
+            assert!(loader.next().is_none(), "{tag}");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn remote_replay_is_byte_identical_for_concurrent_clients() {
     // The net acceptance bar, extending
     // `shard_replay_is_byte_identical_for_any_shard_count` across the

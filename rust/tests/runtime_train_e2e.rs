@@ -83,6 +83,7 @@ fn ddp_gradients_match_single_rank_math() {
         classes: c,
         real_frames: b * t,
         slots: b * t,
+        pool: None,
     };
     let state = vec![0.0; b * spec.state_dim];
     let g = engine.grad_step(&params, &batch, &state).unwrap();
@@ -157,6 +158,7 @@ fn reset_table_blocks_cross_video_leakage_through_runtime() {
             classes: c,
             real_frames: b * t,
             slots: b * t,
+            pool: None,
         }
     };
     let state = vec![0.0; b * spec.state_dim];

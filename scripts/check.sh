@@ -4,7 +4,10 @@
 #   scripts/check.sh
 #
 # Mirrors CI: formatting, lints as errors, rustdoc with warnings as
-# errors (broken intra-doc links rot silently otherwise), compile-check
+# errors (broken intra-doc links rot silently otherwise), the rustdoc
+# examples as tests (`cargo test --doc` — the docs/ book and module
+# docs promise these compile AND run), the markdown link check over
+# README.md + docs/ (scripts/linkcheck.sh), compile-check
 # of every non-test target (benches + examples don't build under `cargo
 # test`), the full test suite, then the bench-smoke run CI's
 # `bench-smoke` job performs — every registered suite at smoke geometry,
@@ -23,6 +26,8 @@ cd "$(dirname "$0")/.."
 cargo fmt --check \
   && cargo clippy -- -D warnings \
   && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps \
+  && cargo test --doc \
+  && scripts/linkcheck.sh \
   && cargo build --benches --examples \
   && cargo test -q \
   && cargo run --release -- bench --smoke --json BENCH_smoke.json \

@@ -1,0 +1,47 @@
+#!/usr/bin/env bash
+# Markdown link check, no dependencies: every relative link target in
+# README.md and docs/*.md must exist on disk. External links
+# (http/https/mailto) are skipped — CI must not depend on the network —
+# and pure-anchor links (#section) are skipped; a `FILE#anchor` target
+# checks only FILE. Exits nonzero listing every broken link.
+#
+#   scripts/linkcheck.sh [FILE.md ...]     # default: README.md docs/*.md
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+files=("$@")
+if [ "${#files[@]}" -eq 0 ]; then
+  files=(README.md docs/*.md)
+fi
+
+broken=0
+for f in "${files[@]}"; do
+  [ -f "$f" ] || { echo "linkcheck: no such file: $f" >&2; broken=1; continue; }
+  dir=$(dirname "$f")
+  # Inline links: capture the (...) target of every [text](target).
+  # Good enough for this repo's markdown; code fences don't use the
+  # [..](..) shape so false positives don't arise in practice.
+  while IFS= read -r target; do
+    case "$target" in
+      http://*|https://*|mailto:*) continue ;;
+      '#'*) continue ;;
+    esac
+    path="${target%%#*}"
+    [ -n "$path" ] || continue
+    case "$path" in
+      /*) resolved="$path" ;;
+      *)  resolved="$dir/$path" ;;
+    esac
+    if [ ! -e "$resolved" ]; then
+      echo "linkcheck: $f -> $target (missing: $resolved)" >&2
+      broken=1
+    fi
+  done < <(grep -o '\[[^][]*\]([^()[:space:]]*)' "$f" \
+             | sed 's/.*(\(.*\))/\1/' || true)
+done
+
+if [ "$broken" -ne 0 ]; then
+  echo "linkcheck: FAILED" >&2
+  exit 1
+fi
+echo "linkcheck: OK (${#files[@]} file(s))"
